@@ -1,0 +1,144 @@
+//! End-to-end serving driver (the full-system validation run — recorded
+//! in EXPERIMENTS.md §E2E).
+//!
+//! Loads the small real model from `artifacts/`, stands up the threaded
+//! serving loop (inference thread owns the engine; concurrent clients
+//! submit over channels), replays a full dataset user's query stream
+//! with idle-time population between requests, and reports latency /
+//! throughput + cache statistics.
+//!
+//! Run: `cargo run --release --example e2e_serve -- [--dataset mised]
+//!       [--user 0] [--method percache] [--clients 2]`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use percache::baselines;
+use percache::config::PerCacheConfig;
+use percache::datasets;
+use percache::metrics::{Recorder, ServePath};
+use percache::server;
+use percache::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("e2e_serve — threaded end-to-end serving driver")
+        .flag("dataset", "mised", "dataset family")
+        .flag("user", "0", "user index")
+        .flag("method", "percache", "method name")
+        .flag("clients", "2", "concurrent client threads");
+    let a = cli.parse_env(0);
+    let dataset = a.get("dataset").to_string();
+    let user = a.get_usize("user");
+    let method = a.get("method").to_string();
+    let clients = a.get_usize("clients").max(1);
+
+    let data = datasets::generate(&dataset, user);
+    let queries: Vec<String> = data.queries.iter().map(|q| q.text.clone()).collect();
+    println!(
+        "[e2e] {} user{}: {} docs, {} queries, method={}, {} clients",
+        dataset,
+        user,
+        data.documents.len(),
+        queries.len(),
+        baselines::label(&method),
+        clients
+    );
+
+    // Inference thread builds runtime + engine locally (PJRT state is not
+    // Send); clients talk to it through the server handle.
+    let docs = data.documents.clone();
+    let method2 = method.clone();
+    let (handle, join) = server::spawn_with(
+        move || {
+            let rt = Box::leak(Box::new(percache::runtime::Runtime::load_default()?));
+            let base = PerCacheConfig::default();
+            let mut eng = baselines::build_method(rt, &method2, &base)?;
+            for d in &docs {
+                eng.add_document(d)?;
+            }
+            // warm idle rounds (knowledge-based prediction, like §5.3)
+            eng.idle_tick()?;
+            eng.idle_tick()?;
+            Ok(eng)
+        },
+        |eng, q| eng.serve(q),
+        |eng| {
+            let _ = eng.idle_tick();
+        },
+    );
+
+    // Concurrent clients pull from a shared queue.  A single mobile user
+    // is sequential, but the service must be correct under concurrent
+    // submission — that is what this exercises.
+    let next = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    for _ in 0..clients {
+        let h = handle.clone();
+        let queries = queries.clone();
+        let next = Arc::clone(&next);
+        workers.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= queries.len() {
+                    break;
+                }
+                let resp = h.query(i, &queries[i]).expect("query failed");
+                let _ = h.idle_tick();
+                out.push(resp);
+            }
+            out
+        }));
+    }
+
+    let mut rec = Recorder::new();
+    let mut e2e = Vec::new();
+    for w in workers {
+        for resp in w.join().unwrap() {
+            e2e.push(resp.e2e_ms);
+            rec.push(resp.record);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    handle.shutdown();
+    join.join().unwrap()?;
+
+    e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let qa_hits = rec
+        .records
+        .iter()
+        .filter(|r| r.path == ServePath::QaHit)
+        .count();
+    println!("\n== e2e results ==");
+    println!("queries served      : {}", rec.len());
+    println!("wall clock          : {wall_s:.2} s");
+    println!(
+        "throughput          : {:.2} queries/s",
+        rec.len() as f64 / wall_s
+    );
+    println!("mean serve latency  : {:.1} ms", rec.mean_total_ms());
+    println!(
+        "p50 / p95 e2e       : {:.1} / {:.1} ms",
+        percache::util::bench::percentile(&e2e, 50.0),
+        percache::util::bench::percentile(&e2e, 95.0)
+    );
+    println!(
+        "qa hits             : {} / {} ({:.0}%)",
+        qa_hits,
+        rec.len(),
+        rec.qa_hit_rate() * 100.0
+    );
+    println!(
+        "qkv hit rate        : {:.0}%  (segment reuse {:.0}%)",
+        rec.qkv_hit_rate() * 100.0,
+        rec.segment_reuse_ratio() * 100.0
+    );
+    println!(
+        "total LLM flops     : {:.1} GFLOP",
+        rec.total_flops() as f64 / 1e9
+    );
+    anyhow::ensure!(rec.len() == queries.len(), "all queries must be served");
+    Ok(())
+}

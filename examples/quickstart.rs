@@ -1,0 +1,63 @@
+//! Quickstart: the whole PerCache pipeline in ~40 lines of API use.
+//!
+//!   1. load the PJRT runtime from `artifacts/` (build once: `make artifacts`)
+//!   2. create a PerCache engine
+//!   3. add personal data (it's chunked, embedded and indexed)
+//!   4. run an idle tick — query prediction pre-populates both cache layers
+//!   5. serve queries and watch the serve paths
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use percache::config::PerCacheConfig;
+use percache::engine::PerCache;
+use percache::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let mut engine = PerCache::new(&rt, PerCacheConfig::default())?;
+
+    // personal data: a couple of "meeting memos"
+    engine.add_document(
+        "the quarterly budget review is scheduled for thursday at 3pm in room \
+         alpha. sarah is responsible for the budget review and will prepare \
+         the summary. they decided to move forward with the budget review \
+         after sarah confirmed the details.",
+    )?;
+    engine.add_document(
+        "the product launch rehearsal is scheduled for friday at 10am in the \
+         boardroom. miguel is responsible for the product launch rehearsal. \
+         the team walked through the agenda and raised open issues.",
+    )?;
+    println!("knowledge bank: {} chunks", engine.kb.len());
+
+    // idle time: predictive population (knowledge-based prediction)
+    let report = engine.idle_tick()?;
+    println!(
+        "idle tick: predicted {} queries, populated {} (QA bank {} entries, \
+         QKV tree {} slices, {:.1} GFLOP spent off the critical path)",
+        report.predicted,
+        report.populated,
+        engine.qa.len(),
+        engine.tree.slice_count(),
+        report.flops as f64 / 1e9,
+    );
+
+    // serve queries — cache hits at different layers
+    for q in [
+        "when is the budget review scheduled",     // likely QA-bank hit
+        "who is responsible for the product launch rehearsal",
+        "what did they decide about the budget review",
+    ] {
+        let r = engine.serve(q)?;
+        println!(
+            "[{:?}] {:>7.1} ms  (prefill {:.1}, decode {:.1}, reused {}/{} segments)  {q}",
+            r.path,
+            r.total_ms(),
+            r.prefill_ms,
+            r.decode_ms,
+            r.matched_segments,
+            r.n_segments.saturating_sub(1),
+        );
+    }
+    Ok(())
+}

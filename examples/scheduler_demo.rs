@@ -1,0 +1,80 @@
+//! Scheduler walkthrough: watch the cache scheduler react to runtime
+//! changes — τ_query crossing the cutoff (population strategy switch +
+//! QKV→QA conversion) and a storage-budget increase (QA→QKV restore).
+//!
+//! Run: `cargo run --release --example scheduler_demo`
+
+use percache::config::PerCacheConfig;
+use percache::datasets;
+use percache::engine::PerCache;
+use percache::runtime::Runtime;
+use percache::scheduler::PopulationStrategy;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let data = datasets::generate("mised", 0);
+    let mut cfg = PerCacheConfig::default();
+    cfg.tau_query = 0.85;
+    let mut eng = PerCache::new(&rt, cfg)?;
+    for doc in &data.documents {
+        eng.add_document(doc)?;
+    }
+
+    let show = |eng: &PerCache, tag: &str| {
+        println!(
+            "{tag}: strategy={:?} qa={} entries ({} undecoded)  tree={} slices  \
+             population={:.1} GFLOP",
+            eng.scheduler.strategy(),
+            eng.qa.len(),
+            eng.qa.undecoded().len(),
+            eng.tree.slice_count(),
+            eng.population_flops as f64 / 1e9,
+        );
+    };
+
+    println!("== phase 1: τ=0.85 (below cutoff) — full population ==");
+    let r = eng.idle_tick()?;
+    println!("idle: predicted={} populated={}", r.predicted, r.populated);
+    show(&eng, "after tick");
+    assert_eq!(eng.scheduler.strategy(), PopulationStrategy::PrefillAndDecode);
+
+    println!("\n== phase 2: τ raised to 0.92 — scheduler switches to prefill-only ==");
+    eng.set_tau_query(0.92);
+    assert_eq!(eng.scheduler.strategy(), PopulationStrategy::PrefillOnly);
+    let r = eng.idle_tick()?;
+    println!("idle: predicted={} populated={}", r.predicted, r.populated);
+    show(&eng, "after tick");
+
+    println!("\n== phase 3: τ back to 0.85 — pending entries get decoded ==");
+    eng.set_tau_query(0.85);
+    let r = eng.idle_tick()?;
+    println!(
+        "idle: populated={} decoded_pending={}",
+        r.populated, r.decoded_pending
+    );
+    show(&eng, "after tick");
+
+    println!("\n== phase 4: shrink then grow QKV storage — restore kicks in ==");
+    let slice = 4 * 3 * 64 * 256 * 4 + 16;
+    eng.set_qkv_storage(3 * slice);
+    show(&eng, "after shrink to 3 slices");
+    eng.set_qkv_storage(12 * slice);
+    let r = eng.idle_tick()?;
+    println!("idle: restored_paths={}", r.restored_paths);
+    show(&eng, "after grow to 12 slices");
+
+    // serve a few queries to see the effect
+    println!("\n== serving ==");
+    for q in data.queries.iter().take(4) {
+        let rec = eng.serve(&q.text)?;
+        println!(
+            "[{:?}] {:>6.1} ms reused {}/{}  {}",
+            rec.path,
+            rec.total_ms(),
+            rec.matched_segments,
+            rec.n_segments.saturating_sub(1),
+            q.text
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,375 @@
+"""AOT compile path: lower every model entry point to HLO *text* artifacts.
+
+Run once via `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs (all consumed by the rust runtime, never by python at serve time):
+
+* <model>_<entry>.hlo.txt       — HLO text per shape bucket (NOT serialized
+                                  protos: jax ≥ 0.5 emits 64-bit instruction
+                                  ids that xla_extension 0.5.1 rejects; the
+                                  text parser reassigns ids cleanly).
+* weights_<model>.bin           — little-endian f32 parameter blob.
+* manifest.json                 — model dims, artifact index, weight layout,
+                                  input orderings (rust reads dims from here,
+                                  never hard-codes them).
+* goldens.json                  — sample inputs/outputs for rust numerics
+                                  integration tests.
+* tokenizer_fixtures.json       — python↔rust tokenizer parity vectors.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, tokenizer
+from .configs import (DECODE_CTX, DECODE_GEN_TOKENS, EMBED, MODELS,
+                      N_SEGMENTS, PAD, ROPE_THETA, SEGMENT_TOKENS, VOCAB)
+
+REUSE_VARIANTS = ("reuse_qkv", "reuse_kv")
+
+# Tokens decoded per device-side block (perf path; see make_decode_block).
+DECODE_BLOCK = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format).
+
+    print_large_constants=True is load-bearing: the default printer elides
+    big constants as `{...}`, which XLA 0.5.1's text parser silently reads
+    as zeros (bit us via the embed model's stopword table).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_to_file(fn, arg_specs, path: str) -> int:
+    t0 = time.time()
+    text = to_hlo_text(jax.jit(fn).lower(*arg_specs))
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {os.path.basename(path):48s} {len(text):>9d} B  "
+          f"({time.time() - t0:.1f}s)")
+    return len(text)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def weight_specs(weights: dict) -> list:
+    return [spec(w.shape, w.dtype) for w in weights.values()]
+
+
+def dump_weights_bin(weights: dict, path: str) -> list[dict]:
+    """Concatenate f32 tensors; return manifest entries with float offsets."""
+    entries = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, arr in weights.items():
+            a = np.asarray(arr, dtype=np.float32)
+            f.write(a.tobytes(order="C"))
+            entries.append({
+                "name": name,
+                "shape": list(a.shape),
+                "offset": offset,
+                "len": int(a.size),
+            })
+            offset += int(a.size)
+    return entries
+
+
+def build_model_artifacts(cfg, out_dir: str) -> dict:
+    """Lower the full bucket grid for one model config."""
+    print(f"[{cfg.name}] ({cfg.stands_for}) layers={cfg.layers} "
+          f"d={cfg.d_model} heads={cfg.heads} ffn={cfg.ffn}")
+    weights = model.init_weights(cfg)
+    wspecs = weight_specs(weights)
+    wentries = dump_weights_bin(weights, os.path.join(
+        out_dir, f"weights_{cfg.name}.bin"))
+
+    artifacts = {}
+
+    # prefill_full_n{2..5}
+    for n in N_SEGMENTS:
+        s = n * SEGMENT_TOKENS
+        name = f"prefill_full_n{n}"
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        lower_to_file(model.make_prefill_full(cfg, n),
+                      [spec((s,), jnp.int32), *wspecs],
+                      os.path.join(out_dir, fname))
+        artifacts[name] = {
+            "file": fname, "kind": "prefill_full", "n_seg": n,
+            "inputs": ["tokens"],
+            "outputs": ["logits", "qkv"],
+        }
+
+    # prefill_reuse_{qkv,kv}_p{1..n-1}_n{2..5}
+    for variant in REUSE_VARIANTS:
+        for n in N_SEGMENTS:
+            s = n * SEGMENT_TOKENS
+            for p in range(1, n):
+                pp = p * SEGMENT_TOKENS
+                name = f"prefill_{variant}_p{p}_n{n}"
+                fname = f"{cfg.name}_{name}.hlo.txt"
+                lower_to_file(
+                    model.make_prefill_reuse(cfg, p, n, variant),
+                    [spec((s,), jnp.int32),
+                     spec((cfg.layers, 3, pp, cfg.d_model)), *wspecs],
+                    os.path.join(out_dir, fname))
+                artifacts[name] = {
+                    "file": fname, "kind": f"prefill_{variant}",
+                    "p_seg": p, "n_seg": n,
+                    "inputs": ["tokens", "prefix_qkv"],
+                    "outputs": ["logits", "qkv"],
+                }
+
+    # decode_step
+    name, fname = "decode_step", f"{cfg.name}_decode_step.hlo.txt"
+    lower_to_file(
+        model.make_decode_step(cfg),
+        [spec((), jnp.int32), spec((), jnp.int32),
+         spec((cfg.layers, 2, DECODE_CTX, cfg.d_model)),
+         spec((DECODE_CTX,)), *wspecs],
+        os.path.join(out_dir, fname))
+    artifacts[name] = {
+        "file": fname, "kind": "decode_step", "ctx": DECODE_CTX,
+        "inputs": ["token", "pos", "kv", "kv_valid"],
+        "outputs": ["logits", "new_k", "new_v"],
+    }
+
+    # decode_block (perf path: one KV upload per `block` tokens)
+    name, fname = "decode_block", f"{cfg.name}_decode_block.hlo.txt"
+    lower_to_file(
+        model.make_decode_block(cfg, DECODE_BLOCK),
+        [spec((), jnp.int32), spec((), jnp.int32),
+         spec((cfg.layers, 2, DECODE_CTX, cfg.d_model)),
+         spec((DECODE_CTX,)), *wspecs],
+        os.path.join(out_dir, fname))
+    artifacts[name] = {
+        "file": fname, "kind": "decode_block", "ctx": DECODE_CTX,
+        "block": DECODE_BLOCK,
+        "inputs": ["token", "pos", "kv", "kv_valid"],
+        "outputs": ["tokens", "new_k", "new_v", "next_token"],
+    }
+
+    return {
+        "stands_for": cfg.stands_for,
+        "layers": cfg.layers,
+        "d_model": cfg.d_model,
+        "heads": cfg.heads,
+        "head_dim": cfg.head_dim,
+        "ffn": cfg.ffn,
+        "vocab": cfg.vocab,
+        "weights_bin": f"weights_{cfg.name}.bin",
+        "weights": wentries,
+        "artifacts": artifacts,
+    }
+
+
+def build_embed_artifact(out_dir: str) -> dict:
+    ecfg = EMBED
+    print(f"[embed] ({ecfg.stands_for}) d_out={ecfg.d_out}")
+    weights = model.init_embed_weights(ecfg)
+    wentries = dump_weights_bin(weights, os.path.join(
+        out_dir, "weights_embed.bin"))
+    fname = "embed.hlo.txt"
+    lower_to_file(model.make_embed(ecfg),
+                  [spec((SEGMENT_TOKENS,), jnp.int32), *weight_specs(weights)],
+                  os.path.join(out_dir, fname))
+    return {
+        "stands_for": ecfg.stands_for,
+        "d_embed": ecfg.d_embed,
+        "d_hidden": ecfg.d_hidden,
+        "d_out": ecfg.d_out,
+        "vocab": ecfg.vocab,
+        "weights_bin": "weights_embed.bin",
+        "weights": wentries,
+        "artifact": fname,
+        "inputs": ["tokens"],
+        "outputs": ["embedding"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Goldens + tokenizer fixtures (rust integration-test vectors)
+# ---------------------------------------------------------------------------
+
+GOLDEN_TEXTS = [
+    "You are a helpful mobile assistant answering from personal data.",
+    "The quarterly budget review meeting is moved to Thursday at 3pm "
+    "in conference room B with the finance team and project leads.",
+    "When will the presentation rehearsal take place?",
+]
+
+
+def build_goldens(manifest: dict, out_dir: str) -> None:
+    """Run a handful of cases through the jax reference and record outputs
+    for the rust runtime to reproduce bit-for-bit (f32 tolerance)."""
+    goldens: dict = {"cases": []}
+
+    for mname in ("llama", "qwen"):
+        cfg = MODELS[mname]
+        weights = model.init_weights(cfg)
+        fw = model.weights_tuple(cfg, weights)
+
+        # full prompt: sysprompt + chunk + query (n=3)
+        segs = [tokenizer.encode_segment(t) for t in GOLDEN_TEXTS]
+        toks = np.array(sum(segs, []), dtype=np.int32)
+        n = 3
+        fn = model.make_prefill_full(cfg, n)
+        logits, qkv = fn(jnp.array(toks), *fw)
+        logits = np.asarray(logits)
+        qkv_np = np.asarray(qkv)
+        goldens["cases"].append({
+            "model": mname, "artifact": f"prefill_full_n{n}",
+            "tokens": toks.tolist(),
+            "argmax": int(np.argmax(logits)),
+            "logits_head": [float(x) for x in logits[:8]],
+            "qkv_sum": float(qkv_np.sum()),
+            "qkv_absmax": float(np.abs(qkv_np).max()),
+        })
+
+        # reuse path (p=2 of n=3) with prefix tensors from the full run —
+        # lets rust verify reuse == full end-to-end through PJRT.
+        p = 2
+        fn_r = model.make_prefill_reuse(cfg, p, n, "reuse_qkv")
+        pq = qkv_np[:, :, : p * SEGMENT_TOKENS, :]
+        logits_r, _ = fn_r(jnp.array(toks), jnp.array(pq), *fw)
+        goldens["cases"].append({
+            "model": mname, "artifact": f"prefill_reuse_qkv_p{p}_n{n}",
+            "tokens": toks.tolist(),
+            "argmax": int(np.argmax(np.asarray(logits_r))),
+            "logits_head": [float(x) for x in np.asarray(logits_r)[:8]],
+        })
+
+        # one decode step after the prompt
+        kv = np.zeros((cfg.layers, 2, DECODE_CTX, cfg.d_model), np.float32)
+        slen = n * SEGMENT_TOKENS
+        kv[:, 0, :slen, :] = qkv_np[:, 1]
+        kv[:, 1, :slen, :] = qkv_np[:, 2]
+        valid = np.zeros(DECODE_CTX, np.float32)
+        valid[:slen] = (toks != PAD).astype(np.float32)
+        pos = slen
+        valid[pos] = 1.0
+        dec = model.make_decode_step(cfg)
+        tok0 = int(np.argmax(logits))
+        dl, dk, dv = dec(jnp.int32(tok0), jnp.int32(pos), jnp.array(kv),
+                         jnp.array(valid), *fw)
+        goldens["cases"].append({
+            "model": mname, "artifact": "decode_step",
+            "token": tok0, "pos": pos,
+            "prompt_tokens": toks.tolist(),
+            "argmax": int(np.argmax(np.asarray(dl))),
+            "logits_head": [float(x) for x in np.asarray(dl)[:8]],
+            "new_k_head": [float(x) for x in np.asarray(dk)[0, :4]],
+            "new_v_head": [float(x) for x in np.asarray(dv)[0, :4]],
+        })
+
+    # embedding goldens + a similarity sanity pair
+    ew = model.init_embed_weights(EMBED)
+    efn = model.make_embed(EMBED)
+    etup = tuple(ew[n] for n in model.embed_weight_names(EMBED))
+    texts = [
+        "When will the presentation rehearsal take place?",
+        "Is time of presentation rehearsal given?",
+        "What did the finance team decide about the budget?",
+    ]
+    embs = []
+    for t in texts:
+        toks = np.array(tokenizer.encode_segment(t), dtype=np.int32)
+        e = np.asarray(efn(jnp.array(toks), *etup))
+        embs.append(e)
+        goldens["cases"].append({
+            "model": "embed", "artifact": "embed", "text": t,
+            "tokens": toks.tolist(),
+            "embedding_head": [float(x) for x in e[:8]],
+            "norm": float(np.linalg.norm(e)),
+        })
+    goldens["similarity"] = {
+        "pair_similar": float(embs[0] @ embs[1]),
+        "pair_dissimilar": float(embs[0] @ embs[2]),
+    }
+
+    with open(os.path.join(out_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+    print(f"  goldens.json: {len(goldens['cases'])} cases; "
+          f"sim(similar)={goldens['similarity']['pair_similar']:.3f} "
+          f"sim(dissimilar)={goldens['similarity']['pair_dissimilar']:.3f}")
+
+
+FIXTURE_TEXTS = [
+    "",
+    "hello world",
+    "Hello, WORLD!!",
+    "meeting at 3pm — room B-12",
+    "  multiple   spaces\tand\nnewlines  ",
+    "ünïcödé tokens straße 北京 café",
+    "a",
+    "1234567890 numbers 42x7",
+    "don't stop-believing (mid_word) splits",
+    "The quarterly budget review meeting is moved to Thursday at 3pm in "
+    "conference room B with the finance team and project leads.",
+    "word " * 100,  # > one segment, exercises truncation
+]
+
+
+def build_tokenizer_fixtures(out_dir: str) -> None:
+    fixtures = []
+    for t in FIXTURE_TEXTS:
+        fixtures.append({
+            "text": t,
+            "ids": tokenizer.encode(t),
+            "segment": tokenizer.encode_segment(t),
+        })
+    with open(os.path.join(out_dir, "tokenizer_fixtures.json"), "w") as f:
+        json.dump(fixtures, f, indent=1)
+    print(f"  tokenizer_fixtures.json: {len(fixtures)} cases")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="llama,qwen",
+                    help="comma-separated subset, for faster dev iterations")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    manifest = {
+        "segment_tokens": SEGMENT_TOKENS,
+        "n_segments": list(N_SEGMENTS),
+        "decode_ctx": DECODE_CTX,
+        "decode_gen_tokens": DECODE_GEN_TOKENS,
+        "vocab": VOCAB,
+        "pad": PAD,
+        "rope_theta": ROPE_THETA,
+        "models": {},
+    }
+    for mname in args.models.split(","):
+        manifest["models"][mname] = build_model_artifacts(
+            MODELS[mname], args.out)
+    manifest["embed"] = build_embed_artifact(args.out)
+
+    build_goldens(manifest, args.out)
+    build_tokenizer_fixtures(args.out)
+
+    # manifest last: its presence marks a complete artifact build (Makefile
+    # uses it as the stamp target).
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts complete in {time.time() - t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

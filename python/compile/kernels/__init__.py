@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU) + pure-jnp oracle."""
+
+from .attention import pallas_attention
+from .projection import pallas_qkv_project
+
+__all__ = ["pallas_attention", "pallas_qkv_project"]

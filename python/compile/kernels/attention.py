@@ -1,0 +1,102 @@
+"""Pallas blocked causal multi-head attention (Layer 1 hot-spot, part 1).
+
+TPU-shaped blocking (run here with interpret=True — see DESIGN.md
+§Hardware-Adaptation): the grid walks (head, query-segment); each program
+holds one 64-token query block resident in VMEM while the full K/V for its
+head streams in as a single block (prompt K/V is at most 5 segments = 320
+tokens ≈ 40 KB/head — comfortably VMEM-sized, so one block instead of a
+flash-style inner loop; the 64-token block unit is exactly one QKV-cache
+tree node).
+
+Semantics are defined by ref.attention_ref; pytest sweeps shapes/seeds.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SEG = 64  # query block rows == one prompt segment == one cache-tree node
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, kvalid_ref,
+                      o_ref, *, scale: float):
+    """One (head, q-block) program.
+
+    q_ref:      [SEG, hd]   query block (post-RoPE)
+    k_ref:      [S_k, hd]   full keys for this head (post-RoPE)
+    v_ref:      [S_k, hd]   full values for this head
+    qpos_ref:   [SEG]       absolute positions of query rows (i32)
+    kpos_ref:   [S_k]       absolute positions of key rows (i32)
+    kvalid_ref: [S_k]       1.0 for real tokens, 0.0 for PAD
+    o_ref:      [SEG, hd]   attention output block
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    qpos = qpos_ref[...]
+    kpos = kpos_ref[...]
+    kvalid = kvalid_ref[...]
+
+    # [SEG, S_k] scores on the MXU; f32 accumulate.
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+
+    causal = qpos[:, None] >= kpos[None, :]
+    mask = jnp.logical_and(causal, kvalid[None, :] > 0.5)
+    scores = jnp.where(mask, scores, -1e30)
+
+    # Numerically-stable softmax across keys.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    o_ref[...] = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def pallas_attention(
+    q: jax.Array,            # [S_q, d_model] post-RoPE
+    k: jax.Array,            # [S_k, d_model] post-RoPE
+    v: jax.Array,            # [S_k, d_model]
+    q_positions: jax.Array,  # [S_q] i32
+    k_positions: jax.Array,  # [S_k] i32
+    k_valid: jax.Array,      # [S_k] f32 (1.0 valid / 0.0 PAD)
+    heads: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked causal MHA.  S_q must be a multiple of SEG.  Returns
+    [S_q, d_model].  Matches ref.attention_ref exactly (same masking and
+    softmax shape; reduction order differs only within f32 tolerance)."""
+    sq, d = q.shape
+    sk = k.shape[0]
+    assert sq % SEG == 0, f"S_q={sq} not a multiple of {SEG}"
+    hd = d // heads
+
+    qh = q.reshape(sq, heads, hd).transpose(1, 0, 2)  # [H, Sq, hd]
+    kh = k.reshape(sk, heads, hd).transpose(1, 0, 2)
+    vh = v.reshape(sk, heads, hd).transpose(1, 0, 2)
+
+    grid = (heads, sq // SEG)
+    kernel = functools.partial(_attention_kernel, scale=1.0 / float(hd) ** 0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, SEG, hd), lambda h, i: (h, i, 0)),  # q block
+            pl.BlockSpec((None, sk, hd), lambda h, i: (h, 0, 0)),   # k full
+            pl.BlockSpec((None, sk, hd), lambda h, i: (h, 0, 0)),   # v full
+            pl.BlockSpec((SEG,), lambda h, i: (i,)),                # qpos
+            pl.BlockSpec((sk,), lambda h, i: (0,)),                 # kpos
+            pl.BlockSpec((sk,), lambda h, i: (0,)),                 # kvalid
+        ],
+        out_specs=pl.BlockSpec((None, SEG, hd), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, sq, hd), jnp.float32),
+        interpret=interpret,
+    )(qh, kh, vh, q_positions, k_positions, k_valid)
+
+    return out.transpose(1, 0, 2).reshape(sq, d)

@@ -1,0 +1,96 @@
+"""Pallas fused suffix-QKV-projection + offset-RoPE (Layer 1 hot-spot, part 2).
+
+This is the computation PerCache's QKV cache *removes* for cached prefixes
+and the one it must run for the suffix: project Q/K/V for the suffix rows
+only and rotate Q/K at their *absolute* positions (the paper's App. B.1
+position-counter offset).  Fusing projection + RoPE keeps the projected
+block in VMEM instead of round-tripping to HBM between the two steps.
+
+Grid walks 64-row row-blocks (one prompt segment per program); the three
+weight matrices stay resident across programs (d×d ≤ 256 KB each for the
+`llama` config — VMEM-friendly).  Semantics: ref.qkv_project_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import ROPE_THETA
+
+SEG = 64  # row-block == one prompt segment
+
+
+def _qkv_kernel(x_ref, wq_ref, wk_ref, wv_ref, pos_ref,
+                q_ref, k_ref, v_ref, *, heads: int):
+    """One 64-row program: project, then rotate q/k at absolute positions."""
+    x = x_ref[...]              # [SEG, d]
+    pos = pos_ref[...]          # [SEG] i32
+    d = x.shape[1]
+    hd = d // heads
+
+    q = jax.lax.dot_general(x, wq_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    k = jax.lax.dot_general(x, wk_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    v = jax.lax.dot_general(x, wv_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # RoPE (rotate-half) at absolute positions, matching ref.rope_rotate.
+    half = hd // 2
+    inv_freq = ROPE_THETA ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / hd)
+    ang = pos.astype(jnp.float32)[:, None] * inv_freq      # [SEG, hd/2]
+    cos = jnp.cos(ang)[:, None, :]                          # [SEG, 1, hd/2]
+    sin = jnp.sin(ang)[:, None, :]
+
+    def rotate(t):
+        th = t.reshape(SEG, heads, hd)
+        t1 = th[..., :half]
+        t2 = th[..., half:]
+        rot = jnp.concatenate([t1 * cos - t2 * sin, t2 * cos + t1 * sin],
+                              axis=-1)
+        return rot.reshape(SEG, d)
+
+    q_ref[...] = rotate(q)
+    k_ref[...] = rotate(k)
+    v_ref[...] = v
+
+
+def pallas_qkv_project(
+    x: jax.Array,          # [S, d_model] normalized hidden states
+    wq: jax.Array,         # [d_model, d_model]
+    wk: jax.Array,
+    wv: jax.Array,
+    positions: jax.Array,  # [S] i32 absolute positions
+    heads: int,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused QKV projection + RoPE.  S must be a multiple of SEG.
+    Returns (q, k, v) each [S, d_model]; q/k post-RoPE, v raw."""
+    s, d = x.shape
+    assert s % SEG == 0, f"S={s} not a multiple of {SEG}"
+
+    kernel = functools.partial(_qkv_kernel, heads=heads)
+    shape = jax.ShapeDtypeStruct((s, d), jnp.float32)
+
+    q, k, v = pl.pallas_call(
+        kernel,
+        grid=(s // SEG,),
+        in_specs=[
+            pl.BlockSpec((SEG, d), lambda i: (i, 0)),  # x row-block
+            pl.BlockSpec((d, d), lambda i: (0, 0)),    # wq resident
+            pl.BlockSpec((d, d), lambda i: (0, 0)),    # wk resident
+            pl.BlockSpec((d, d), lambda i: (0, 0)),    # wv resident
+            pl.BlockSpec((SEG,), lambda i: (i,)),      # positions
+        ],
+        out_specs=[
+            pl.BlockSpec((SEG, d), lambda i: (i, 0)),
+            pl.BlockSpec((SEG, d), lambda i: (i, 0)),
+            pl.BlockSpec((SEG, d), lambda i: (i, 0)),
+        ],
+        out_shape=[shape, shape, shape],
+        interpret=interpret,
+    )(x, wq, wk, wv, positions)
+
+    return q, k, v

@@ -1,0 +1,117 @@
+"""Pure-jnp reference implementations (the correctness oracle).
+
+Every Pallas kernel in this package has its semantics defined here first;
+pytest asserts allclose between kernel and reference across shape/seed
+sweeps (python/tests/test_kernels.py), and model.py can be built entirely
+from these functions (use_pallas=False) for model-level equivalence tests.
+
+All math is f32.  RoPE uses the rotate-half (GPT-NeoX) convention.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ROPE_THETA
+
+
+# ---------------------------------------------------------------------------
+# Elementary blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope_angles(positions: jax.Array, head_dim: int) -> tuple[jax.Array, jax.Array]:
+    """(cos, sin) tables of shape [*positions.shape, head_dim // 2]."""
+    half = head_dim // 2
+    inv_freq = ROPE_THETA ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / head_dim)
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_rotate(x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: [S, H, head_dim]; positions: [S] absolute token positions.
+    Rotate-half convention: (x1, x2) -> (x1*cos - x2*sin, x2*cos + x1*sin).
+    """
+    head_dim = x.shape[-1]
+    cos, sin = rope_angles(positions, head_dim)  # [S, hd/2]
+    cos = cos[:, None, :]  # [S, 1, hd/2] broadcasting over heads
+    sin = sin[:, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Kernel references
+# ---------------------------------------------------------------------------
+
+def qkv_project_ref(
+    x: jax.Array,          # [S, d_model] normalized hidden states
+    wq: jax.Array,         # [d_model, d_model]
+    wk: jax.Array,
+    wv: jax.Array,
+    positions: jax.Array,  # [S] absolute positions (prefix offset applied)
+    heads: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused QKV projection + RoPE.  Returns (q, k, v), each [S, d_model];
+    q and k are post-RoPE, v is raw.  This is the computation the paper's
+    QKV cache *skips* for cached prefixes."""
+    s, d = x.shape
+    hd = d // heads
+    q = (x @ wq).reshape(s, heads, hd)
+    k = (x @ wk).reshape(s, heads, hd)
+    v = x @ wv
+    q = rope_rotate(q, positions).reshape(s, d)
+    k = rope_rotate(k, positions).reshape(s, d)
+    return q, k, v
+
+
+def attention_ref(
+    q: jax.Array,            # [S_q, d_model] post-RoPE
+    k: jax.Array,            # [S_k, d_model] post-RoPE
+    v: jax.Array,            # [S_k, d_model]
+    q_positions: jax.Array,  # [S_q] absolute positions of query rows
+    k_positions: jax.Array,  # [S_k] absolute positions of key rows
+    k_valid: jax.Array,      # [S_k] bool — False for PAD positions
+    heads: int,
+) -> jax.Array:
+    """Causal multi-head attention with PAD masking.  Returns [S_q, d_model].
+
+    Causality is expressed via absolute positions so the same reference
+    covers full prefill (q_positions == k_positions) and decode (single
+    query row at position p attending to a KV cache)."""
+    sq, d = q.shape
+    sk = k.shape[0]
+    hd = d // heads
+    qh = q.reshape(sq, heads, hd).transpose(1, 0, 2)   # [H, Sq, hd]
+    kh = k.reshape(sk, heads, hd).transpose(1, 0, 2)
+    vh = v.reshape(sk, heads, hd).transpose(1, 0, 2)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum("hqd,hkd->hqk", qh, kh) * scale
+    causal = q_positions[:, None] >= k_positions[None, :]       # [Sq, Sk]
+    mask = jnp.logical_and(causal, k_valid[None, :])
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", probs, vh)                 # [H, Sq, hd]
+    return out.transpose(1, 0, 2).reshape(sq, d)
+
+
+# ---------------------------------------------------------------------------
+# Model-level helpers shared by model.py
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array) -> jax.Array:
+    """SwiGLU MLP: (silu(x @ wg) * (x @ wu)) @ wd."""
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+def mean_pool(emb: jax.Array, valid: jax.Array) -> jax.Array:
+    """Mean over valid rows; denominator clamped for all-PAD inputs."""
+    vf = valid.astype(jnp.float32)[:, None]
+    denom = jnp.maximum(jnp.sum(vf), 1.0)
+    return jnp.sum(emb * vf, axis=0) / denom

@@ -1,0 +1,428 @@
+"""Layer-2 JAX model: decoder-only transformer + embedding encoder.
+
+Five entry-point families, each lowered per shape-bucket by aot.py:
+
+* prefill_full        — whole prompt, produces logits + per-layer QKV
+                        (the tensors PerCache's knowledge bank caches).
+* prefill_reuse_qkv   — PerCache reuse: Q, K and V projections are skipped
+                        for the cached prefix (loaded from the cache tree);
+                        attention/MLP still run full-length, exactly like
+                        the paper's mllm implementation (App. B.1).
+* prefill_reuse_kv    — RAGCache-style baseline: only K/V projections are
+                        skipped; Q is recomputed for the full sequence.
+* decode_step         — one-token decode against a KV cache.
+* embed               — mean-pool encoder for semantic similarity.
+
+All prefill variants are numerically *identical* given matching inputs
+(causal attention makes cached-prefix reuse exact); python/tests asserts
+close agreement and rust integration tests re-check through PJRT.
+
+Prompt layout: [system prompt | chunk₁ … chunkₖ | query], each a 64-token
+PAD-padded segment (configs.SEGMENT_TOKENS).  PAD keys are masked out of
+attention, so numerics are invariant to intra-segment padding.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import (DECODE_CTX, PAD, SEGMENT_TOKENS, STOPWORDS,
+                      EmbedConfig, ModelConfig)
+from .kernels import pallas_attention, pallas_qkv_project
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def weight_names(cfg: ModelConfig) -> list[str]:
+    """Deterministic parameter order — mirrored in artifacts/manifest.json
+    and by the rust weights loader."""
+    names = ["tok_emb"]
+    for l in range(cfg.layers):
+        names += [
+            f"attn_norm.{l}", f"wq.{l}", f"wk.{l}", f"wv.{l}", f"wo.{l}",
+            f"mlp_norm.{l}", f"wg.{l}", f"wu.{l}", f"wd.{l}",
+        ]
+    names.append("final_norm")
+    return names
+
+
+def weight_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    d, f, v = cfg.d_model, cfg.ffn, cfg.vocab
+    shapes: dict[str, tuple[int, ...]] = {"tok_emb": (v, d)}
+    for l in range(cfg.layers):
+        shapes[f"attn_norm.{l}"] = (d,)
+        shapes[f"wq.{l}"] = (d, d)
+        shapes[f"wk.{l}"] = (d, d)
+        shapes[f"wv.{l}"] = (d, d)
+        shapes[f"wo.{l}"] = (d, d)
+        shapes[f"mlp_norm.{l}"] = (d,)
+        shapes[f"wg.{l}"] = (d, f)
+        shapes[f"wu.{l}"] = (d, f)
+        shapes[f"wd.{l}"] = (f, d)
+    shapes["final_norm"] = (d,)
+    return shapes
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for b in s.encode():
+        h = ((h ^ b) * 16777619) & 0xFFFFFFFF
+    return h
+
+
+def init_weights(cfg: ModelConfig) -> dict[str, jax.Array]:
+    """Deterministic random init: normal(0, 1/sqrt(fan_in)); norms = 1."""
+    shapes = weight_shapes(cfg)
+    out: dict[str, jax.Array] = {}
+    for name in weight_names(cfg):
+        shape = shapes[name]
+        if len(shape) == 1:
+            out[name] = jnp.ones(shape, jnp.float32)
+            continue
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                                 _stable_hash(name))
+        fan_in = shape[0]
+        out[name] = (jax.random.normal(key, shape, jnp.float32)
+                     / jnp.sqrt(jnp.float32(fan_in)))
+    return out
+
+
+def weights_tuple(cfg: ModelConfig, w: dict[str, jax.Array]) -> tuple:
+    return tuple(w[n] for n in weight_names(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Transformer internals
+# ---------------------------------------------------------------------------
+
+def _wdict(cfg: ModelConfig, flat: tuple) -> dict[str, jax.Array]:
+    return dict(zip(weight_names(cfg), flat))
+
+
+def _layer_qkv(cfg, w, l, x, positions, prefix_qkv_l, variant, use_pallas):
+    """Compute (q, k, v) each [S, d] for one layer under a reuse variant.
+
+    x: normalized hidden states [S, d];  prefix_qkv_l: [3, P, d] or None.
+    variant: 'full' | 'reuse_qkv' | 'reuse_kv'.
+    """
+    heads = cfg.heads
+    if use_pallas:
+        project = functools.partial(pallas_qkv_project, heads=heads)
+    else:
+        def project(xx, wq_, wk_, wv_, pos_):
+            return ref.qkv_project_ref(xx, wq_, wk_, wv_, pos_, heads)
+
+    wq, wk, wv = w[f"wq.{l}"], w[f"wk.{l}"], w[f"wv.{l}"]
+
+    if variant == "full":
+        return project(x, wq, wk, wv, positions)
+
+    p = prefix_qkv_l.shape[1]
+    x_suf = x[p:]
+    pos_suf = positions[p:]
+    q_suf, k_suf, v_suf = project(x_suf, wq, wk, wv, pos_suf)
+
+    if variant == "reuse_qkv":
+        # PerCache: all three projections skipped for the prefix.
+        q = jnp.concatenate([prefix_qkv_l[0], q_suf], axis=0)
+        k = jnp.concatenate([prefix_qkv_l[1], k_suf], axis=0)
+        v = jnp.concatenate([prefix_qkv_l[2], v_suf], axis=0)
+        return q, k, v
+
+    assert variant == "reuse_kv"
+    # RAGCache baseline: K/V skipped for the prefix, but Q must be
+    # recomputed there (the full-length pipeline consumes prefix rows).
+    q_pre = ref.rope_rotate(
+        (x[:p] @ wq).reshape(p, heads, cfg.head_dim), positions[:p]
+    ).reshape(p, cfg.d_model)
+    q = jnp.concatenate([q_pre, q_suf], axis=0)
+    k = jnp.concatenate([prefix_qkv_l[1], k_suf], axis=0)
+    v = jnp.concatenate([prefix_qkv_l[2], v_suf], axis=0)
+    return q, k, v
+
+
+def _prefill(cfg: ModelConfig, tokens: jax.Array, prefix_qkv, variant: str,
+             use_pallas: bool, flat_weights: tuple):
+    """Shared prefill body.  tokens: [S] i32 (full sequence, incl. prefix —
+    prefix token ids are needed for embeddings/residuals and PAD masking;
+    the *projections* are what reuse skips).  Returns (logits[V],
+    qkv[L, 3, S, d])."""
+    w = _wdict(cfg, flat_weights)
+    s = tokens.shape[0]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    valid = tokens != PAD
+    k_valid = valid.astype(jnp.float32)
+
+    h = w["tok_emb"][tokens]  # [S, d]
+    per_layer_qkv = []
+    for l in range(cfg.layers):
+        x = ref.rmsnorm(h, w[f"attn_norm.{l}"])
+        pq = None if prefix_qkv is None else prefix_qkv[l]
+        q, k, v = _layer_qkv(cfg, w, l, x, positions, pq, variant, use_pallas)
+        per_layer_qkv.append(jnp.stack([q, k, v]))  # [3, S, d]
+        if use_pallas:
+            attn = pallas_attention(q, k, v, positions, positions, k_valid,
+                                    cfg.heads)
+        else:
+            attn = ref.attention_ref(q, k, v, positions, positions, valid,
+                                     cfg.heads)
+        h = h + attn @ w[f"wo.{l}"]
+        x2 = ref.rmsnorm(h, w[f"mlp_norm.{l}"])
+        h = h + ref.swiglu(x2, w[f"wg.{l}"], w[f"wu.{l}"], w[f"wd.{l}"])
+
+    hn = ref.rmsnorm(h, w["final_norm"])
+    last = jnp.max(jnp.arange(s, dtype=jnp.int32) * valid.astype(jnp.int32))
+    logits = hn[last] @ w["tok_emb"].T  # tied LM head, [V]
+    return logits, jnp.stack(per_layer_qkv)  # [L, 3, S, d]
+
+
+# ---------------------------------------------------------------------------
+# Entry points (closures over static bucket shapes, built per artifact)
+# ---------------------------------------------------------------------------
+
+def make_prefill_full(cfg: ModelConfig, n_seg: int, use_pallas: bool = True):
+    """fn(tokens[S], *weights) -> (logits[V], qkv[L,3,S,d]); S = n_seg*64."""
+    s = n_seg * SEGMENT_TOKENS
+
+    def fn(tokens, *flat_weights):
+        assert tokens.shape == (s,)
+        return _prefill(cfg, tokens, None, "full", use_pallas, flat_weights)
+
+    fn.__name__ = f"prefill_full_n{n_seg}_{cfg.name}"
+    return fn
+
+
+def make_prefill_reuse(cfg: ModelConfig, p_seg: int, n_seg: int,
+                       variant: str, use_pallas: bool = True):
+    """fn(tokens[S], prefix_qkv[L,3,P,d], *weights) -> (logits, qkv).
+
+    tokens is the FULL padded prompt (prefix token ids are retained by the
+    coordinator alongside the cached tensors — it has the chunk text anyway);
+    prefix_qkv holds the cached per-layer tensors for the first P positions.
+    variant: 'reuse_qkv' (PerCache) or 'reuse_kv' (RAGCache baseline).
+    """
+    assert 0 < p_seg < n_seg
+    s = n_seg * SEGMENT_TOKENS
+    p = p_seg * SEGMENT_TOKENS
+
+    def fn(tokens, prefix_qkv, *flat_weights):
+        assert tokens.shape == (s,)
+        assert prefix_qkv.shape == (cfg.layers, 3, p, cfg.d_model)
+        return _prefill(cfg, tokens, prefix_qkv, variant, use_pallas,
+                        flat_weights)
+
+    fn.__name__ = f"prefill_{variant}_p{p_seg}_n{n_seg}_{cfg.name}"
+    return fn
+
+
+def make_decode_step(cfg: ModelConfig, ctx: int = DECODE_CTX):
+    """fn(token[], pos[], kv[L,2,C,d], kv_valid[C], *weights)
+       -> (logits[V], new_k[L,d], new_v[L,d]).
+
+    kv row i holds the (post-RoPE) K / V for absolute position i; kv_valid
+    is 1.0 for occupied rows and MUST already include the current position
+    (the coordinator sets valid[pos] = 1 before the call).  The new token's
+    K/V are returned for the coordinator to write back into its host-side
+    cache (row = pos).
+    """
+
+    def fn(token, pos, kv, kv_valid, *flat_weights):
+        w = _wdict(cfg, flat_weights)
+        d = cfg.d_model
+        heads = cfg.heads
+        hd = cfg.head_dim
+
+        h = w["tok_emb"][token]  # [d]
+        pos1 = jnp.reshape(pos, (1,)).astype(jnp.int32)
+        kpos = jnp.arange(ctx, dtype=jnp.int32)
+        new_ks, new_vs = [], []
+        for l in range(cfg.layers):
+            x = ref.rmsnorm(h, w[f"attn_norm.{l}"])[None, :]  # [1, d]
+            q = ref.rope_rotate((x @ w[f"wq.{l}"]).reshape(1, heads, hd),
+                                pos1).reshape(1, d)
+            k_new = ref.rope_rotate((x @ w[f"wk.{l}"]).reshape(1, heads, hd),
+                                    pos1).reshape(1, d)
+            v_new = x @ w[f"wv.{l}"]
+            new_ks.append(k_new[0])
+            new_vs.append(v_new[0])
+
+            k_all = jax.lax.dynamic_update_slice(kv[l, 0], k_new,
+                                                 (pos, jnp.int32(0)))
+            v_all = jax.lax.dynamic_update_slice(kv[l, 1], v_new,
+                                                 (pos, jnp.int32(0)))
+            attn = ref.attention_ref(q, k_all, v_all, pos1, kpos,
+                                     kv_valid > 0.5, heads)  # [1, d]
+            h = h + (attn @ w[f"wo.{l}"])[0]
+            x2 = ref.rmsnorm(h, w[f"mlp_norm.{l}"])
+            h = h + ref.swiglu(x2[None, :], w[f"wg.{l}"], w[f"wu.{l}"],
+                               w[f"wd.{l}"])[0]
+
+        hn = ref.rmsnorm(h, w["final_norm"])
+        logits = hn @ w["tok_emb"].T
+        return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+    fn.__name__ = f"decode_step_{cfg.name}"
+    return fn
+
+
+def make_decode_block(cfg: ModelConfig, block: int, ctx: int = DECODE_CTX):
+    """Device-side multi-token greedy decode (perf path — EXPERIMENTS.md
+    §Perf).  One call decodes `block` tokens with the KV cache carried
+    inside a lax.scan, so the host uploads the cache once per block
+    instead of once per token (the per-step upload dominates decode wall
+    time through PJRT).
+
+    fn(first_token[], start_pos[], kv[L,2,C,d], kv_valid[C], *weights) ->
+       (tokens[T] i32, new_k[T,L,d], new_v[T,L,d], next_token[] i32)
+
+    Selection matches the rust host loop exactly: greedy argmax with the
+    immediate-repeat guard (top-2 fallback).  The host writes the returned
+    K/V rows back and issues the next block with `next_token`.
+    """
+
+    def fn(first_token, start_pos, kv, kv_valid, *flat_weights):
+        w = _wdict(cfg, flat_weights)
+        d = cfg.d_model
+        heads = cfg.heads
+        hd = cfg.head_dim
+        # Generated-token K/V live in small side buffers [block, L, d]
+        # carried through the scan; the big prompt cache `kv` stays a
+        # loop-invariant *input* (v1 carried it and XLA materialized a
+        # full copy per step — 2× slower than the host step loop; see
+        # EXPERIMENTS.md §Perf for the measured history).
+        def step(carry, t):
+            tok, gen_k, gen_v = carry
+            pos = start_pos + t
+            pos1 = jnp.reshape(pos, (1,)).astype(jnp.int32)
+            # generated rows visible so far: i <= t (self included)
+            gen_valid = (jnp.arange(block, dtype=jnp.int32) <= t)
+
+            h = w["tok_emb"][tok]
+            for l in range(cfg.layers):
+                x = ref.rmsnorm(h, w[f"attn_norm.{l}"])[None, :]
+                q = ref.rope_rotate((x @ w[f"wq.{l}"]).reshape(1, heads, hd),
+                                    pos1).reshape(1, d)
+                k_new = ref.rope_rotate(
+                    (x @ w[f"wk.{l}"]).reshape(1, heads, hd), pos1
+                ).reshape(1, d)
+                v_new = x @ w[f"wv.{l}"]
+                gen_k = gen_k.at[t, l].set(k_new[0])
+                gen_v = gen_v.at[t, l].set(v_new[0])
+
+                # split attention: scores against the (loop-invariant)
+                # prompt cache and the small generated buffer are merged
+                # at the score level — no 384-row K/V concat per step
+                qh = q.reshape(heads, hd)
+                scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+                kp = kv[l, 0].reshape(ctx, heads, hd)
+                kg = gen_k[:, l, :].reshape(block, heads, hd)
+                s_p = jnp.einsum("hd,khd->hk", qh, kp) * scale
+                s_g = jnp.einsum("hd,khd->hk", qh, kg) * scale
+                s_p = jnp.where((kv_valid > 0.5)[None, :], s_p, -1e30)
+                s_g = jnp.where(gen_valid[None, :], s_g, -1e30)
+                s = jnp.concatenate([s_p, s_g], axis=1)  # [H, ctx+block]
+                p = jax.nn.softmax(s, axis=-1)
+                vp = kv[l, 1].reshape(ctx, heads, hd)
+                vg = gen_v[:, l, :].reshape(block, heads, hd)
+                out = (jnp.einsum("hk,khd->hd", p[:, :ctx], vp)
+                       + jnp.einsum("hk,khd->hd", p[:, ctx:], vg))
+                attn = out.reshape(1, d)
+                h = h + (attn @ w[f"wo.{l}"])[0]
+                x2 = ref.rmsnorm(h, w[f"mlp_norm.{l}"])
+                h = h + ref.swiglu(x2[None, :], w[f"wg.{l}"], w[f"wu.{l}"],
+                                   w[f"wd.{l}"])[0]
+
+            hn = ref.rmsnorm(h, w["final_norm"])
+            logits = hn @ w["tok_emb"].T
+            # greedy with immediate-repeat guard (== rust argmax_antirepeat).
+            # two-pass argmax instead of lax.top_k: XLA 0.5.1's HLO-text
+            # parser rejects the `largest=` attribute newer jax emits.
+            best = jnp.argmax(logits).astype(jnp.int32)
+            masked = jnp.where(
+                jnp.arange(logits.shape[0], dtype=jnp.int32) == best,
+                -jnp.inf, logits)
+            second = jnp.argmax(masked).astype(jnp.int32)
+            next_tok = jnp.where(best == tok, second, best)
+            return (next_tok, gen_k, gen_v), tok
+
+        gen_k0 = jnp.zeros((block, cfg.layers, d), jnp.float32)
+        gen_v0 = jnp.zeros((block, cfg.layers, d), jnp.float32)
+        (next_tok, ks, vs), toks = jax.lax.scan(
+            step, (first_token.astype(jnp.int32), gen_k0, gen_v0),
+            jnp.arange(block, dtype=jnp.int32))
+        return toks, ks, vs, next_tok
+
+    # NOTE: the prompt rows of `kv` at positions >= start_pos must be
+    # zero/invalid (kv_valid masks them), since generated rows live in the
+    # side buffers, not in `kv`.
+
+    fn.__name__ = f"decode_block{block}_{cfg.name}"
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Embedding encoder
+# ---------------------------------------------------------------------------
+
+def embed_weight_names(ecfg: EmbedConfig) -> list[str]:
+    return ["tok_emb", "w1", "b1", "w2", "b2"]
+
+
+def embed_weight_shapes(ecfg: EmbedConfig) -> dict[str, tuple[int, ...]]:
+    return {
+        "tok_emb": (ecfg.vocab, ecfg.d_embed),
+        "w1": (ecfg.d_embed, ecfg.d_hidden),
+        "b1": (ecfg.d_hidden,),
+        "w2": (ecfg.d_hidden, ecfg.d_out),
+        "b2": (ecfg.d_out,),
+    }
+
+
+def init_embed_weights(ecfg: EmbedConfig) -> dict[str, jax.Array]:
+    shapes = embed_weight_shapes(ecfg)
+    out: dict[str, jax.Array] = {}
+    for name in embed_weight_names(ecfg):
+        shape = shapes[name]
+        key = jax.random.fold_in(jax.random.PRNGKey(ecfg.seed),
+                                 _stable_hash(name))
+        if len(shape) == 1:
+            out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            out[name] = (jax.random.normal(key, shape, jnp.float32)
+                         / jnp.sqrt(jnp.float32(shape[0])))
+    return out
+
+
+def stopword_ids() -> jnp.ndarray:
+    """Token ids of function words, baked into the embed artifact."""
+    from . import tokenizer as tok
+    ids = sorted({tok.word_id(w) for w in STOPWORDS})
+    return jnp.array(ids, dtype=jnp.int32)
+
+
+def make_embed(ecfg: EmbedConfig, seg: int = SEGMENT_TOKENS):
+    """fn(tokens[64], *weights) -> unit-norm embedding [d_out].
+
+    PAD and function-word tokens are excluded from the mean-pool (constant
+    stopword id set) so cosine similarity tracks *content*-word overlap —
+    see configs.STOPWORDS.
+    """
+    stops = stopword_ids()
+
+    def fn(tokens, tok_emb, w1, b1, w2, b2):
+        valid = tokens != PAD
+        is_stop = jnp.any(tokens[:, None] == stops[None, :], axis=1)
+        content = jnp.logical_and(valid, jnp.logical_not(is_stop))
+        # fall back to all valid tokens if the text is pure stopwords
+        use = jnp.where(jnp.any(content), content, valid)
+        pooled = ref.mean_pool(tok_emb[tokens], use)        # [d_embed]
+        hdn = jnp.tanh(pooled @ w1 + b1)
+        e = hdn @ w2 + b2
+        return e / jnp.maximum(jnp.linalg.norm(e), 1e-6)
+
+    fn.__name__ = f"embed_{ecfg.name}"
+    return fn

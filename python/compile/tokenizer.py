@@ -1,0 +1,58 @@
+"""Deterministic hashing word tokenizer.
+
+Mirrored byte-for-byte by rust/src/tokenizer/mod.rs — parity is enforced by
+fixtures dumped at AOT time (artifacts/tokenizer_fixtures.json) and checked
+from both pytest and cargo test.
+
+Scheme: lowercase the text, split into runs of [a-z0-9] (everything else is
+a separator), map each word to FNV-1a-64(word) % (VOCAB - RESERVED) +
+RESERVED.  Reserved ids: 0 PAD, 1 BOS, 2 EOS, 3 UNK, 4..15 held back for
+future specials.  Deterministic, no vocabulary file, identical in any
+language runtime — which is the point.
+"""
+
+from .configs import PAD, SEGMENT_TOKENS, VOCAB
+
+RESERVED = 16
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    h = _FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * _FNV_PRIME) & _MASK64
+    return h
+
+
+def words(text: str) -> list[str]:
+    """Split into lowercase alphanumeric runs (ASCII fast path, like rust)."""
+    out: list[str] = []
+    cur: list[str] = []
+    for ch in text.lower():
+        if ("a" <= ch <= "z") or ("0" <= ch <= "9"):
+            cur.append(ch)
+        else:
+            if cur:
+                out.append("".join(cur))
+                cur = []
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def word_id(word: str) -> int:
+    return fnv1a64(word.encode("utf-8")) % (VOCAB - RESERVED) + RESERVED
+
+
+def encode(text: str) -> list[int]:
+    return [word_id(w) for w in words(text)]
+
+
+def encode_segment(text: str, seg_tokens: int = SEGMENT_TOKENS) -> list[int]:
+    """Encode into exactly one segment: truncate or right-pad with PAD."""
+    ids = encode(text)[:seg_tokens]
+    return ids + [PAD] * (seg_tokens - len(ids))

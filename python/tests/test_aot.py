@@ -1,0 +1,84 @@
+"""Artifact-build sanity: manifest structure, weight blob sizes, HLO files.
+
+Skipped when artifacts/ hasn't been built (run `make artifacts` first);
+the full numerics of the artifacts are exercised from rust
+(rust/tests/runtime_numerics.rs) — this side just validates the contract.
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_top_level_contract(manifest):
+    assert manifest["segment_tokens"] == 64
+    assert manifest["decode_ctx"] == 384
+    assert manifest["pad"] == 0
+    assert set(manifest["models"]) == {"llama", "qwen"}
+    assert manifest["embed"]["artifact"] == "embed.hlo.txt"
+
+
+@pytest.mark.parametrize("mname", ["llama", "qwen"])
+def test_weights_bin_size(manifest, mname):
+    m = manifest["models"][mname]
+    total = sum(w["len"] for w in m["weights"])
+    path = os.path.join(ART, m["weights_bin"])
+    assert os.path.getsize(path) == total * 4
+    # offsets are contiguous and ordered
+    off = 0
+    for w in m["weights"]:
+        assert w["offset"] == off
+        prod = 1
+        for s in w["shape"]:
+            prod *= s
+        assert prod == w["len"]
+        off += w["len"]
+
+
+@pytest.mark.parametrize("mname", ["llama", "qwen"])
+def test_artifact_grid_complete(manifest, mname):
+    arts = manifest["models"][mname]["artifacts"]
+    for n in (2, 3, 4, 5):
+        assert f"prefill_full_n{n}" in arts
+        for p in range(1, n):
+            assert f"prefill_reuse_qkv_p{p}_n{n}" in arts
+            assert f"prefill_reuse_kv_p{p}_n{n}" in arts
+    assert "decode_step" in arts
+    for a in arts.values():
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head
+
+
+def test_goldens_exist_and_consistent(manifest):
+    with open(os.path.join(ART, "goldens.json")) as f:
+        g = json.load(f)
+    models = {c["model"] for c in g["cases"]}
+    assert {"llama", "qwen", "embed"} <= models
+    assert g["similarity"]["pair_similar"] > g["similarity"]["pair_dissimilar"]
+
+
+def test_tokenizer_fixtures_match_current_tokenizer():
+    from compile import tokenizer
+    with open(os.path.join(ART, "tokenizer_fixtures.json")) as f:
+        fixtures = json.load(f)
+    assert len(fixtures) >= 10
+    for fx in fixtures:
+        assert tokenizer.encode(fx["text"]) == fx["ids"]
+        assert tokenizer.encode_segment(fx["text"]) == fx["segment"]

@@ -1,0 +1,95 @@
+"""decode_block (device-side multi-token decode) == sequential decode_step.
+
+The perf path must be token-exact with the step loop, including the
+immediate-repeat guard, so switching the rust engine to blocks cannot
+change any answer."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import DECODE_CTX, QWEN, SEGMENT_TOKENS
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = QWEN
+    w = model.init_weights(cfg)
+    fw = model.weights_tuple(cfg, w)
+    rng = np.random.default_rng(99)
+    s = 2 * SEGMENT_TOKENS
+    toks = rng.integers(16, 8192, size=s).astype(np.int32)
+    lf, qf = model.make_prefill_full(cfg, 2)(jnp.array(toks), *fw)
+    kv = np.zeros((cfg.layers, 2, DECODE_CTX, cfg.d_model), np.float32)
+    kv[:, 0, :s, :] = np.asarray(qf)[:, 1]
+    kv[:, 1, :s, :] = np.asarray(qf)[:, 2]
+    valid = np.zeros(DECODE_CTX, np.float32)
+    valid[:s] = 1.0
+    first = int(np.argmax(np.asarray(lf)))
+    return cfg, fw, kv, valid, first, s
+
+
+def run_step_loop(cfg, fw, kv, valid, first, s, steps):
+    dec = model.make_decode_step(cfg)
+    kv = kv.copy()
+    valid = valid.copy()
+    toks = []
+    tok, pos = first, s
+    for _ in range(steps):
+        toks.append(tok)
+        valid[pos] = 1.0
+        lg, nk, nv = dec(jnp.int32(tok), jnp.int32(pos), jnp.array(kv),
+                         jnp.array(valid), *fw)
+        kv[:, 0, pos, :] = np.asarray(nk)
+        kv[:, 1, pos, :] = np.asarray(nv)
+        lg = np.asarray(lg)
+        order = np.argsort(-lg)
+        tok = int(order[1] if order[0] == tok else order[0])
+        pos += 1
+    return toks, kv
+
+
+def test_block_matches_step_loop(setup):
+    cfg, fw, kv, valid, first, s = setup
+    T = 8
+    want_toks, want_kv = run_step_loop(cfg, fw, kv, valid, first, s, T)
+
+    blk = model.make_decode_block(cfg, T)
+    toks, ks, vs, next_tok = blk(jnp.int32(first), jnp.int32(s),
+                                 jnp.array(kv), jnp.array(valid), *fw)
+    assert np.asarray(toks).tolist() == want_toks
+
+    # returned K/V rows equal the step loop's cache writes
+    ks = np.asarray(ks)  # [T, L, d]
+    vs = np.asarray(vs)
+    for t in range(T):
+        np.testing.assert_allclose(ks[t], want_kv[:, 0, s + t, :],
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(vs[t], want_kv[:, 1, s + t, :],
+                                   atol=1e-5, rtol=1e-5)
+
+    # chaining: next_tok continues the same sequence
+    want_more, _ = run_step_loop(cfg, fw, kv, valid, first, s, T + 1)
+    assert int(next_tok) == want_more[-1]
+
+
+def test_two_chained_blocks_match_long_step_loop(setup):
+    cfg, fw, kv, valid, first, s = setup
+    T = 8
+    want, _ = run_step_loop(cfg, fw, kv, valid, first, s, 2 * T)
+
+    blk = model.make_decode_block(cfg, T)
+    kv1 = kv.copy()
+    valid1 = valid.copy()
+    toks1, ks, vs, nxt = blk(jnp.int32(first), jnp.int32(s),
+                             jnp.array(kv1), jnp.array(valid1), *fw)
+    ks, vs = np.asarray(ks), np.asarray(vs)
+    for t in range(T):
+        kv1[:, 0, s + t, :] = ks[t]
+        kv1[:, 1, s + t, :] = vs[t]
+        valid1[s + t] = 1.0
+    toks2, _, _, _ = blk(jnp.int32(int(nxt)), jnp.int32(s + T),
+                         jnp.array(kv1), jnp.array(valid1), *fw)
+    got = np.asarray(toks1).tolist() + np.asarray(toks2).tolist()
+    assert got == want

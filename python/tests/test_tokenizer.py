@@ -1,0 +1,60 @@
+"""Tokenizer unit tests + hypothesis properties (rust parity is checked on
+the rust side against artifacts/tokenizer_fixtures.json)."""
+
+from hypothesis import given, settings, strategies as st
+
+from compile import tokenizer
+from compile.configs import PAD, SEGMENT_TOKENS, VOCAB
+
+
+def test_empty():
+    assert tokenizer.encode("") == []
+    assert tokenizer.encode_segment("") == [PAD] * SEGMENT_TOKENS
+
+
+def test_case_and_punct_insensitive():
+    assert tokenizer.encode("Hello, WORLD!") == tokenizer.encode("hello world")
+
+
+def test_known_fnv_vector():
+    # FNV-1a 64 of "a" is 0xaf63dc4c8601ec8c — pins the exact hash function
+    # so rust and python cannot silently diverge.
+    assert tokenizer.fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert tokenizer.fnv1a64(b"") == 0xCBF29CE484222325
+
+
+def test_segment_shape_and_padding():
+    seg = tokenizer.encode_segment("one two three")
+    assert len(seg) == SEGMENT_TOKENS
+    assert seg[3:] == [PAD] * (SEGMENT_TOKENS - 3)
+    assert all(t >= tokenizer.RESERVED for t in seg[:3])
+
+
+def test_segment_truncates():
+    seg = tokenizer.encode_segment("w " * 200)
+    assert len(seg) == SEGMENT_TOKENS
+    assert PAD not in seg
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.text(max_size=300))
+def test_ids_in_range_and_deterministic(text):
+    ids = tokenizer.encode(text)
+    assert ids == tokenizer.encode(text)
+    for t in ids:
+        assert tokenizer.RESERVED <= t < VOCAB
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.sampled_from(["budget", "meeting", "q3", "review"]),
+                max_size=10))
+def test_word_count_matches(wordlist):
+    text = " ".join(wordlist)
+    assert len(tokenizer.encode(text)) == len(wordlist)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.text(max_size=120))
+def test_whitespace_form_irrelevant(text):
+    squished = " ".join(tokenizer.words(text))
+    assert tokenizer.encode(text) == tokenizer.encode(squished)

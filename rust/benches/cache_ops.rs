@@ -1,0 +1,112 @@
+//! Coordinator-side micro-benchmarks: everything on the serve path that
+//! is NOT a PJRT call.  L3 must never be the bottleneck (DESIGN.md §9
+//! target: non-PJRT overhead < 5% of end-to-end).
+//!
+//! `cargo bench --bench cache_ops`
+
+use percache::cache::{slice_prompt, QaBank, QkvTree, SliceStore};
+use percache::kb::KnowledgeBank;
+use percache::llm::QkvTensor;
+use percache::retrieval::Retriever;
+use percache::tokenizer;
+use percache::util::bench::Bench;
+use percache::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(42);
+
+    // -- tokenizer ---------------------------------------------------------
+    let text = "the quarterly budget review meeting is moved to thursday at \
+                3pm in conference room b with the finance team and leads";
+    b.bench("tokenizer/encode_segment", || tokenizer::encode_segment(text));
+
+    // -- qa bank matching at paper-ish sizes --------------------------------
+    for n in [32usize, 256, 1024] {
+        let mut qa = QaBank::new(1 << 30);
+        for i in 0..n {
+            let emb: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+            qa.insert(&format!("query number {i}"), emb, Some(vec![1, 2, 3]), false);
+        }
+        let probe: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        b.bench(&format!("qa_bank/match_{n}_entries"), || {
+            qa.best_similarity(&probe)
+        });
+    }
+
+    // -- qkv tree match + insert --------------------------------------------
+    let mut store = SliceStore::memory();
+    let mut tree = QkvTree::new(1 << 30);
+    let tensor = || {
+        let mut t = QkvTensor::zeros(4, 256, 64);
+        t.data[0] = 1.0;
+        t
+    };
+    for path in 0..64u64 {
+        tree.insert_path(
+            &[1, path + 10, path + 1000],
+            vec![tensor(), tensor(), tensor()],
+            &mut store,
+        )
+        .unwrap();
+    }
+    b.bench("qkv_tree/match_depth3_64paths", || {
+        tree.match_prefix(&[1, 20, 1010])
+    });
+
+    // -- slicer ---------------------------------------------------------------
+    let qkv = QkvTensor::zeros(4, 256, 4 * 64);
+    let keys = [11u64, 22, 33, 99];
+    b.bench("slicer/slice_n4_prompt", || slice_prompt(&qkv, &keys));
+    let a = qkv.slice_segments(0, 1);
+    let c = qkv.slice_segments(1, 2);
+    let d = qkv.slice_segments(2, 3);
+    b.bench("qkv/concat_3_segments", || {
+        QkvTensor::concat(&[&a, &c, &d])
+    });
+
+    // -- slice store (memory + disk) ------------------------------------------
+    let mut mem = SliceStore::memory();
+    let (mid, _) = mem.put(tensor()).unwrap();
+    b.bench("store/memory_get", || mem.get(mid).unwrap());
+    let dir = std::env::temp_dir().join(format!("percache_bench_{}", std::process::id()));
+    let mut disk = SliceStore::disk(dir.clone()).unwrap();
+    let (did, _) = disk.put(tensor()).unwrap();
+    b.bench("store/disk_get (load-on-demand)", || disk.get(did).unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // -- retrieval over a realistic bank ---------------------------------------
+    let mut kb = KnowledgeBank::new();
+    let mut retr = Retriever::new(0.5);
+    let vocabs = [
+        "budget", "meeting", "travel", "invoice", "flight", "doctor", "gym",
+        "launch", "review", "deadline", "summary", "thursday", "office",
+    ];
+    for i in 0..64 {
+        let words: Vec<&str> = (0..40).map(|_| *rng.pick(&vocabs)).collect();
+        let text = format!("chunk {i} {}", words.join(" "));
+        let id = kb.len();
+        kb.test_insert_chunk(percache::kb::Chunk {
+            id,
+            text: text.clone(),
+            tokens: tokenizer::encode_segment(&text),
+            embedding: (0..64).map(|_| rng.normal() as f32).collect(),
+            key: tokenizer::fnv1a64(text.as_bytes()),
+        });
+        retr.index_chunk(id, &text);
+    }
+    let qemb: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+    b.bench("retrieval/hybrid_top2_64chunks", || {
+        retr.retrieve("when is the budget meeting", &qemb, &kb, 2)
+    });
+
+    // -- metrics ------------------------------------------------------------------
+    b.bench("metrics/rouge_l_24_tokens", || {
+        percache::metrics::text::rouge_l(
+            "t1 t2 t3 t4 t5 t6 t7 t8 t9 t10 t11 t12 t13 t14 t15 t16 t17 t18 t19 t20 t21 t22 t23 t24",
+            "t1 t2 t9 t4 t5 t6 t7 t8 t3 t10 t11 t12 t13 t14 t15 t16 t17 t18 t19 t20 t23 t22 t21 t24",
+        )
+    });
+
+    print!("{}", b.summary());
+}

@@ -1,0 +1,90 @@
+//! Hot-path micro-benchmarks: every PJRT operation on the serve path.
+//!
+//! `cargo bench --bench hotpath` — prefill (full vs reuse_kv vs reuse_qkv
+//! per bucket), decode step, decode loop, embedding.  These are the
+//! numbers behind Fig 13/Table 1 and the §Perf iteration log.
+
+use percache::llm::{LlmEngine, ReuseVariant};
+use percache::runtime::Runtime;
+use percache::tokenizer;
+use percache::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let mut b = Bench::new();
+
+    for model in ["llama", "qwen"] {
+        let eng = LlmEngine::new(&rt, model)?;
+
+        // n=4 prompt (sys + 2 chunks + query), the paper's top-2 shape
+        let mut tokens = Vec::new();
+        for s in 0..4 {
+            tokens.extend(tokenizer::encode_segment(&format!(
+                "segment {s} quarterly budget review meeting thursday room finance team"
+            )));
+        }
+        let full = eng.prefill(&tokens, None)?;
+
+        b.bench(&format!("{model}/prefill_full_n4"), || {
+            eng.prefill(&tokens, None).unwrap()
+        });
+        for p in [1usize, 2, 3] {
+            let prefix = full.qkv.slice_segments(0, p);
+            b.bench(&format!("{model}/prefill_reuse_kv_p{p}_n4"), || {
+                eng.prefill(&tokens, Some((&prefix, ReuseVariant::Kv))).unwrap()
+            });
+            b.bench(&format!("{model}/prefill_reuse_qkv_p{p}_n4"), || {
+                eng.prefill(&tokens, Some((&prefix, ReuseVariant::Qkv))).unwrap()
+            });
+        }
+
+        // decode: per-token step loop vs device-side block (the §Perf
+        // optimization — one KV upload per block instead of per token)
+        b.bench(&format!("{model}/decode_steps_8_tokens"), || {
+            eng.decode_steps(&tokens, &full, 8).unwrap()
+        });
+        b.bench(&format!("{model}/decode_block_8_tokens"), || {
+            eng.decode_blocks(&tokens, &full, 8).unwrap()
+        });
+        b.bench(&format!("{model}/decode_steps_24_tokens"), || {
+            eng.decode_steps(&tokens, &full, 24).unwrap()
+        });
+        b.bench(&format!("{model}/decode_block_24_tokens"), || {
+            eng.decode_blocks(&tokens, &full, 24).unwrap()
+        });
+    }
+
+    b.bench("embed/segment", || {
+        rt.exec_embed(&tokenizer::encode_segment(
+            "when is the quarterly budget review meeting scheduled",
+        ))
+        .unwrap()
+    });
+
+    print!("{}", b.summary());
+
+    // headline ratio for EXPERIMENTS.md §Perf: reuse_qkv vs full at p=3/n=4
+    let rs = b.results();
+    let find = |name: &str| {
+        rs.iter()
+            .find(|s| s.name == name)
+            .map(|s| s.mean_ns)
+            .unwrap_or(f64::NAN)
+    };
+    let full_ns = find("llama/prefill_full_n4");
+    let qkv_ns = find("llama/prefill_reuse_qkv_p3_n4");
+    let kv_ns = find("llama/prefill_reuse_kv_p3_n4");
+    println!(
+        "\nprefill speedup @ p=3/n=4 (llama): reuse_qkv {:.2}x, reuse_kv {:.2}x \
+         (QKV must beat KV — the paper's Q-tensor claim)",
+        full_ns / qkv_ns,
+        full_ns / kv_ns
+    );
+    let steps = find("llama/decode_steps_24_tokens");
+    let block = find("llama/decode_block_24_tokens");
+    println!(
+        "decode speedup (24 tokens, llama): block path {:.2}x over step loop",
+        steps / block
+    );
+    Ok(())
+}

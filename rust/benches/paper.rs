@@ -1,0 +1,72 @@
+//! End-to-end paper benchmark: one full Fig 14-style cell per method
+//! (mised user0 replay), so `cargo bench` regenerates the headline
+//! comparison alongside the micro-benches.
+//!
+//! `cargo bench --bench paper` — a fast single-user version of
+//! `percache exp fig14` (the full grid lives in the exp harness).
+
+use percache::baselines::{label, METHODS};
+use percache::config::PerCacheConfig;
+use percache::datasets;
+use percache::exp::common::{replay_user, ReplayOpts};
+use percache::runtime::Runtime;
+use percache::sim;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    // warm all llama artifacts so compile time stays out of the numbers
+    let names: Vec<String> = rt
+        .manifest
+        .model("llama")?
+        .artifacts
+        .keys()
+        .cloned()
+        .collect();
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    rt.warm("llama", &refs)?;
+
+    let base = PerCacheConfig::default();
+    let data = datasets::generate("mised", 0);
+    println!(
+        "paper bench: mised user0, {} queries, pixel7-scaled\n",
+        data.queries.len()
+    );
+
+    let opts = ReplayOpts {
+        device: Some(&sim::PIXEL7),
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    for m in METHODS {
+        let t0 = std::time::Instant::now();
+        let out = replay_user(&rt, m, &base, &data, &opts)?;
+        let mean = out.recorder.mean_total_ms();
+        println!(
+            "{:<22} mean {:>8.1} ms   qa-hit {:>3.0}%  qkv-hit {:>3.0}%  seg-reuse {:>3.0}%  \
+             (population {:>6.1} GF, replay {:.1}s)",
+            label(m),
+            mean,
+            out.recorder.qa_hit_rate() * 100.0,
+            out.recorder.qkv_hit_rate() * 100.0,
+            out.recorder.segment_reuse_ratio() * 100.0,
+            out.population_flops as f64 / 1e9,
+            t0.elapsed().as_secs_f64(),
+        );
+        rows.push((m, mean));
+    }
+
+    let pc = rows.iter().find(|(m, _)| *m == "percache").unwrap().1;
+    let best = rows
+        .iter()
+        .filter(|(m, _)| *m != "percache")
+        .map(|(_, v)| *v)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "\nPerCache vs best baseline: {:.1} vs {:.1} ms → {:.1}% reduction \
+         (paper: 12.55% avg; up to 34.4%/51.94% per-user)",
+        pc,
+        best,
+        (1.0 - pc / best) * 100.0
+    );
+    Ok(())
+}

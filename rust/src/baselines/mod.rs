@@ -1,0 +1,162 @@
+//! Baselines (paper §5.2): every method is the *same* engine under a
+//! different configuration — which is exactly what each baseline is:
+//!
+//! | method              | QA bank | QKV cache | population  | scheduler |
+//! |---------------------|---------|-----------|-------------|-----------|
+//! | Naive               |   off   |    off    | —           |    off    |
+//! | RAGCache            |   off   |  KV-only  | reactive    |    off    |
+//! | MeanCache           |   on    |    off    | reactive    |    off    |
+//! | Sleep-time Compute  |   on    |    off    | predictive  |    off    |
+//! | RAGCache+MeanCache  |   on    |  KV-only  | reactive    |    off    |
+//! | RAGCache+SC         |   on    |  KV-only  | predictive  |    off    |
+//! | PerCache            |   on    |  Q+K+V    | predictive  |    on     |
+//!
+//! Sharing one engine keeps the comparison honest: identical retrieval,
+//! prompts, decode budget and measurement points.
+
+use anyhow::Result;
+
+use crate::config::{PerCacheConfig, PopulationMode};
+use crate::engine::PerCache;
+use crate::llm::ReuseVariant;
+use crate::runtime::Runtime;
+
+/// All method names, in the paper's presentation order.
+pub const METHODS: [&str; 7] = [
+    "naive",
+    "ragcache",
+    "meancache",
+    "sleeptime",
+    "ragcache+meancache",
+    "ragcache+sleeptime",
+    "percache",
+];
+
+/// Build the configuration for a named method, starting from `base`
+/// (so experiments can sweep τ/stride/storage uniformly).
+pub fn method_config(method: &str, base: &PerCacheConfig) -> Result<PerCacheConfig> {
+    let mut c = base.clone();
+    match method {
+        "naive" => {
+            c.qa_enabled = false;
+            c.qkv_enabled = false;
+            c.population = PopulationMode::Reactive;
+            c.scheduler_enabled = false;
+        }
+        "ragcache" => {
+            c.qa_enabled = false;
+            c.qkv_enabled = true;
+            c.reuse_variant = ReuseVariant::Kv;
+            c.population = PopulationMode::Reactive;
+            c.scheduler_enabled = false;
+        }
+        "meancache" => {
+            c.qa_enabled = true;
+            c.qkv_enabled = false;
+            c.population = PopulationMode::Reactive;
+            c.scheduler_enabled = false;
+        }
+        "sleeptime" => {
+            c.qa_enabled = true;
+            c.qkv_enabled = false;
+            c.population = PopulationMode::Predictive;
+            c.scheduler_enabled = false;
+        }
+        "ragcache+meancache" => {
+            c.qa_enabled = true;
+            c.qkv_enabled = true;
+            c.reuse_variant = ReuseVariant::Kv;
+            c.population = PopulationMode::Reactive;
+            c.scheduler_enabled = false;
+        }
+        "ragcache+sleeptime" => {
+            c.qa_enabled = true;
+            c.qkv_enabled = true;
+            c.reuse_variant = ReuseVariant::Kv;
+            c.population = PopulationMode::Predictive;
+            c.scheduler_enabled = false;
+        }
+        "percache" => {
+            c.qa_enabled = true;
+            c.qkv_enabled = true;
+            c.reuse_variant = ReuseVariant::Qkv;
+            c.population = PopulationMode::Predictive;
+            c.scheduler_enabled = true;
+        }
+        other => anyhow::bail!("unknown method '{other}' (expected one of {METHODS:?})"),
+    }
+    Ok(c)
+}
+
+/// Construct an engine for a named method.
+pub fn build_method<'rt>(
+    rt: &'rt Runtime,
+    method: &str,
+    base: &PerCacheConfig,
+) -> Result<PerCache<'rt>> {
+    PerCache::new(rt, method_config(method, base)?)
+}
+
+/// Pretty label used in tables (matches the paper's legend).
+pub fn label(method: &str) -> &'static str {
+    match method {
+        "naive" => "Naive",
+        "ragcache" => "RAGCache",
+        "meancache" => "MeanCache",
+        "sleeptime" => "Sleep-time Compute",
+        "ragcache+meancache" => "RAGCache+MeanCache",
+        "ragcache+sleeptime" => "RAGCache+SC",
+        "percache" => "PerCache",
+        _ => "?",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_methods_configure() {
+        let base = PerCacheConfig::default();
+        for m in METHODS {
+            let c = method_config(m, &base).unwrap();
+            c.validate().unwrap();
+        }
+        assert!(method_config("bogus", &base).is_err());
+    }
+
+    #[test]
+    fn percache_is_the_full_system() {
+        let c = method_config("percache", &PerCacheConfig::default()).unwrap();
+        assert!(c.qa_enabled && c.qkv_enabled && c.scheduler_enabled);
+        assert_eq!(c.reuse_variant, ReuseVariant::Qkv);
+        assert_eq!(c.population, PopulationMode::Predictive);
+    }
+
+    #[test]
+    fn ragcache_is_kv_only_reactive() {
+        let c = method_config("ragcache", &PerCacheConfig::default()).unwrap();
+        assert!(!c.qa_enabled && c.qkv_enabled);
+        assert_eq!(c.reuse_variant, ReuseVariant::Kv);
+        assert_eq!(c.population, PopulationMode::Reactive);
+    }
+
+    #[test]
+    fn base_sweeps_propagate() {
+        let mut base = PerCacheConfig::default();
+        base.tau_query = 0.6;
+        base.prediction_stride = 2;
+        for m in METHODS {
+            let c = method_config(m, &base).unwrap();
+            assert_eq!(c.tau_query, 0.6);
+            assert_eq!(c.prediction_stride, 2);
+        }
+    }
+
+    #[test]
+    fn labels_cover_methods() {
+        for m in METHODS {
+            assert_ne!(label(m), "?");
+        }
+    }
+}

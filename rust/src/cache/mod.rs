@@ -1,0 +1,18 @@
+//! The hierarchical cache (the paper's central data structure):
+//!
+//! * [`qa_bank`] — layer 1: semantic query→answer cache (skips all
+//!   inference on a hit);
+//! * [`qkv_tree`] — layer 2: prefix tree of per-chunk QKV tensor slices
+//!   (skips Q/K/V projections of cached prompt prefixes);
+//! * [`slicer`] — splits whole-prompt QKV tensors into tree-node slices;
+//! * [`store`] — slice persistence (memory or on-disk, load-on-demand).
+
+pub mod qa_bank;
+pub mod qkv_tree;
+pub mod slicer;
+pub mod store;
+
+pub use qa_bank::{QaBank, QaEntry, QaId, QaMatch};
+pub use qkv_tree::{PrefixMatch, QkvTree, SegKey};
+pub use slicer::{slice_prompt, SegmentSlice};
+pub use store::{Backend, SliceId, SliceStore};

@@ -1,0 +1,344 @@
+//! The QA bank: semantic cache of (query, embedding, answer) entries
+//! (paper §4.1.1 / §4.2.1).
+//!
+//! Matching is cosine similarity against all stored queries; above
+//! τ_query the cached answer is returned and the whole LLM inference is
+//! skipped.  Entries may exist *without* an answer — that's the
+//! scheduler's prefill-only population strategy (§4.3.2); the QKV→QA
+//! conversion decodes them later.  LFU eviction under a byte budget.
+
+use crate::embedding::{cosine, Embedding};
+
+pub type QaId = u64;
+
+#[derive(Debug, Clone)]
+pub struct QaEntry {
+    pub id: QaId,
+    pub query: String,
+    pub embedding: Embedding,
+    /// Generated answer tokens; None = not yet decoded (strategy-1
+    /// population or refreshed-stale entry).
+    pub answer: Option<Vec<i32>>,
+    /// Whether this entry came from query prediction (vs a real query).
+    pub predicted: bool,
+    pub freq: u64,
+}
+
+impl QaEntry {
+    /// Approximate storage footprint (paper Table 1: ~4 KB/entry).
+    pub fn bytes(&self) -> usize {
+        self.query.len()
+            + self.embedding.len() * 4
+            + self.answer.as_ref().map(|a| a.len() * 4).unwrap_or(0)
+            + 64
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QaMatch {
+    pub id: QaId,
+    pub similarity: f64,
+    pub has_answer: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct QaBank {
+    entries: Vec<QaEntry>,
+    byte_limit: usize,
+    bytes_used: usize,
+    next_id: QaId,
+    pub evictions: u64,
+}
+
+impl QaBank {
+    pub fn new(byte_limit: usize) -> Self {
+        QaBank {
+            byte_limit,
+            next_id: 1,
+            ..Default::default()
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn bytes_used(&self) -> usize {
+        self.bytes_used
+    }
+
+    pub fn byte_limit(&self) -> usize {
+        self.byte_limit
+    }
+
+    pub fn set_byte_limit(&mut self, limit: usize) {
+        self.byte_limit = limit;
+        self.enforce_budget(&[]);
+    }
+
+    pub fn entries(&self) -> &[QaEntry] {
+        &self.entries
+    }
+
+    pub fn get(&self, id: QaId) -> Option<&QaEntry> {
+        self.entries.iter().find(|e| e.id == id)
+    }
+
+    /// Best match regardless of threshold (analysis / Fig 6).
+    pub fn best_similarity(&self, emb: &Embedding) -> Option<QaMatch> {
+        self.entries
+            .iter()
+            .map(|e| QaMatch {
+                id: e.id,
+                similarity: cosine(emb, &e.embedding) as f64,
+                has_answer: e.answer.is_some(),
+            })
+            .max_by(|a, b| a.similarity.partial_cmp(&b.similarity).unwrap())
+    }
+
+    /// Cache-hit check: best *answered* entry with similarity ≥ τ.
+    /// Bumps the LFU counter on hit.
+    pub fn match_query(&mut self, emb: &Embedding, tau: f64) -> Option<(QaMatch, Vec<i32>)> {
+        let best = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.answer.is_some())
+            .map(|(i, e)| (i, cosine(emb, &e.embedding) as f64))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        if best.1 < tau {
+            return None;
+        }
+        let (i, sim) = best;
+        self.entries[i].freq += 1;
+        Some((
+            QaMatch {
+                id: self.entries[i].id,
+                similarity: sim,
+                has_answer: true,
+            },
+            self.entries[i].answer.clone().unwrap(),
+        ))
+    }
+
+    /// Insert or update.  An (almost) identical query — similarity >
+    /// 0.999 — updates the existing entry instead of duplicating it.
+    pub fn insert(
+        &mut self,
+        query: &str,
+        emb: Embedding,
+        answer: Option<Vec<i32>>,
+        predicted: bool,
+    ) -> QaId {
+        if let Some(pos) = self
+            .entries
+            .iter()
+            .position(|e| e.query == query || cosine(&e.embedding, &emb) > 0.9995)
+        {
+            let old = self.entries[pos].bytes();
+            if answer.is_some() {
+                self.entries[pos].answer = answer;
+            }
+            self.entries[pos].predicted &= predicted;
+            let new = self.entries[pos].bytes();
+            self.bytes_used = self.bytes_used + new - old;
+            let id = self.entries[pos].id;
+            self.enforce_budget(&[id]);
+            return id;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let e = QaEntry {
+            id,
+            query: query.to_string(),
+            embedding: emb,
+            answer,
+            predicted,
+            freq: 0,
+        };
+        self.bytes_used += e.bytes();
+        self.entries.push(e);
+        self.enforce_budget(&[id]);
+        id
+    }
+
+    /// Entries lacking answers (conversion QKV→QA decodes these, §4.3.3).
+    pub fn undecoded(&self) -> Vec<QaId> {
+        self.entries
+            .iter()
+            .filter(|e| e.answer.is_none())
+            .map(|e| e.id)
+            .collect()
+    }
+
+    pub fn set_answer(&mut self, id: QaId, answer: Vec<i32>) -> bool {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
+            let old = e.bytes();
+            e.answer = Some(answer);
+            let new = e.bytes();
+            self.bytes_used = self.bytes_used + new - old;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Dynamic cache refresh (§4.1.3): when a new chunk arrives, entries
+    /// whose queries rank it in their top-k become stale — their answers
+    /// are cleared so idle-time decoding regenerates them against the
+    /// updated knowledge.  Returns the ids invalidated.
+    pub fn refresh_for_chunk(&mut self, chunk_emb: &Embedding, k_refresh: usize) -> Vec<QaId> {
+        let mut sims: Vec<(usize, f64)> = self
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (i, cosine(chunk_emb, &e.embedding) as f64))
+            .collect();
+        sims.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut out = Vec::new();
+        for &(i, sim) in sims.iter().take(k_refresh) {
+            if sim > 0.3 && self.entries[i].answer.is_some() {
+                let old = self.entries[i].bytes();
+                self.entries[i].answer = None;
+                let new = self.entries[i].bytes();
+                self.bytes_used = self.bytes_used + new - old;
+                out.push(self.entries[i].id);
+            }
+        }
+        out
+    }
+
+    fn enforce_budget(&mut self, protect: &[QaId]) {
+        while self.bytes_used > self.byte_limit && !self.entries.is_empty() {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| !protect.contains(&e.id))
+                .min_by(|(_, a), (_, b)| a.freq.cmp(&b.freq).then(a.id.cmp(&b.id)))
+                .map(|(i, _)| i)
+                .or_else(|| {
+                    self.entries
+                        .iter()
+                        .enumerate()
+                        .min_by(|(_, a), (_, b)| a.freq.cmp(&b.freq).then(a.id.cmp(&b.id)))
+                        .map(|(i, _)| i)
+                });
+            match victim {
+                Some(i) => {
+                    let e = self.entries.remove(i);
+                    self.bytes_used -= e.bytes();
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Byte-accounting invariant for property tests.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        let sum: usize = self.entries.iter().map(|e| e.bytes()).sum();
+        anyhow::ensure!(
+            sum == self.bytes_used,
+            "qa bank byte drift: {sum} vs {}",
+            self.bytes_used
+        );
+        anyhow::ensure!(
+            self.bytes_used <= self.byte_limit || self.entries.len() <= 1,
+            "qa bank over budget"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn emb(x: f32, y: f32) -> Embedding {
+        let n = (x * x + y * y).sqrt().max(1e-9);
+        vec![x / n, y / n, 0.0, 0.0]
+    }
+
+    #[test]
+    fn match_respects_threshold_and_answers() {
+        let mut qa = QaBank::new(1 << 20);
+        qa.insert("budget meeting", emb(1.0, 0.0), Some(vec![10, 11]), false);
+        qa.insert("unanswered", emb(0.0, 1.0), None, true);
+
+        // identical direction → sim 1.0 ≥ 0.85: hit
+        let (m, ans) = qa.match_query(&emb(1.0, 0.0), 0.85).unwrap();
+        assert_eq!(ans, vec![10, 11]);
+        assert!(m.similarity > 0.999);
+
+        // orthogonal query: no hit even though an entry exists there
+        // (it has no answer)
+        assert!(qa.match_query(&emb(0.0, 1.0), 0.85).is_none());
+
+        // sub-threshold: no hit
+        assert!(qa.match_query(&emb(0.6, 0.8), 0.99).is_none());
+    }
+
+    #[test]
+    fn duplicate_insert_updates_in_place() {
+        let mut qa = QaBank::new(1 << 20);
+        let a = qa.insert("q1", emb(1.0, 0.0), None, true);
+        let b = qa.insert("q1", emb(1.0, 0.0), Some(vec![5]), false);
+        assert_eq!(a, b);
+        assert_eq!(qa.len(), 1);
+        assert_eq!(qa.get(a).unwrap().answer, Some(vec![5]));
+        assert!(!qa.get(a).unwrap().predicted, "real query overrides predicted");
+        qa.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lfu_eviction_under_budget() {
+        let mut qa = QaBank::new(500); // fits ~2 entries of ~220 B
+        qa.insert("hot query", emb(1.0, 0.0), Some(vec![1; 32]), false);
+        qa.insert("cold query", emb(0.0, 1.0), Some(vec![2; 32]), false);
+        for _ in 0..5 {
+            qa.match_query(&emb(1.0, 0.0), 0.9).unwrap();
+        }
+        qa.insert("newcomer", emb(0.7, 0.7), Some(vec![3; 32]), false);
+        assert!(qa.bytes_used() <= 500);
+        assert!(qa.evictions >= 1);
+        // hot survives
+        assert!(qa.match_query(&emb(1.0, 0.0), 0.9).is_some());
+        qa.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn undecoded_and_set_answer() {
+        let mut qa = QaBank::new(1 << 20);
+        let a = qa.insert("pending", emb(1.0, 0.0), None, true);
+        assert_eq!(qa.undecoded(), vec![a]);
+        assert!(qa.set_answer(a, vec![7, 8]));
+        assert!(qa.undecoded().is_empty());
+        assert!(!qa.set_answer(999, vec![0]));
+        qa.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn refresh_invalidates_topk_similar() {
+        let mut qa = QaBank::new(1 << 20);
+        let a = qa.insert("about budget", emb(1.0, 0.1), Some(vec![1]), false);
+        let _b = qa.insert("about travel", emb(0.0, 1.0), Some(vec![2]), false);
+        let stale = qa.refresh_for_chunk(&emb(1.0, 0.0), 1);
+        assert_eq!(stale, vec![a]);
+        assert_eq!(qa.undecoded(), vec![a]);
+        qa.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn best_similarity_reports_unanswered_too() {
+        let mut qa = QaBank::new(1 << 20);
+        qa.insert("no answer yet", emb(1.0, 0.0), None, true);
+        let m = qa.best_similarity(&emb(1.0, 0.0)).unwrap();
+        assert!(!m.has_answer);
+        assert!(m.similarity > 0.999);
+    }
+}

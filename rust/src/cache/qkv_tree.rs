@@ -1,0 +1,403 @@
+//! The QKV cache prefix tree (paper §4.1.1 / §4.2.2, after RAGCache [26]).
+//!
+//! Each node is one knowledge-bank segment (system prompt or chunk),
+//! keyed by its content hash; each root-to-node path is a chunk list some
+//! prompt used.  A node *may* hold a QKV tensor slice (it can be evicted
+//! independently); prefix matching walks from the root and stops at the
+//! first key miss or slice-less node, mirroring the paper's sequential
+//! match ("continues until a mismatch is encountered").
+//!
+//! Eviction is LFU over slice-bearing nodes (paper keeps a retrieval
+//! counter per cached layer), tie-broken deepest-first so shallow prefixes
+//! — which serve the most paths — survive longest.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::store::{SliceId, SliceStore};
+use crate::llm::QkvTensor;
+
+/// Content key of a segment (fnv1a64 of the raw text).
+pub type SegKey = u64;
+
+#[derive(Debug)]
+struct Node {
+    key: SegKey,
+    depth: usize,
+    slice: Option<SliceId>,
+    slice_bytes: usize,
+    children: HashMap<SegKey, usize>,
+    freq: u64,
+}
+
+/// Result of a prefix match.
+#[derive(Debug, Clone)]
+pub struct PrefixMatch {
+    /// Matched slice ids, in path order (contiguous from the root).
+    pub slices: Vec<SliceId>,
+}
+
+impl PrefixMatch {
+    pub fn len(&self) -> usize {
+        self.slices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slices.is_empty()
+    }
+}
+
+#[derive(Debug)]
+pub struct QkvTree {
+    nodes: Vec<Node>,
+    roots: HashMap<SegKey, usize>,
+    byte_limit: usize,
+    bytes_used: usize,
+    /// Eviction/metric counters.
+    pub evictions: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl QkvTree {
+    pub fn new(byte_limit: usize) -> Self {
+        QkvTree {
+            nodes: Vec::new(),
+            roots: HashMap::new(),
+            byte_limit,
+            bytes_used: 0,
+            evictions: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn bytes_used(&self) -> usize {
+        self.bytes_used
+    }
+
+    pub fn byte_limit(&self) -> usize {
+        self.byte_limit
+    }
+
+    /// Change the storage budget at runtime (Fig 15c / Fig 18); shrinking
+    /// evicts immediately.
+    pub fn set_byte_limit(&mut self, limit: usize, store: &mut SliceStore) {
+        self.byte_limit = limit;
+        self.enforce_budget(store, &[]);
+    }
+
+    pub fn slice_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.slice.is_some()).count()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Longest cached prefix for a path of segment keys.  Stops at the
+    /// first missing node *or* missing slice; bumps LFU counters on the
+    /// matched nodes.
+    pub fn match_prefix(&mut self, keys: &[SegKey]) -> PrefixMatch {
+        let mut slices = Vec::new();
+        let mut level = &self.roots;
+        let mut matched_nodes = Vec::new();
+        for key in keys {
+            match level.get(key) {
+                Some(&idx) if self.nodes[idx].slice.is_some() => {
+                    slices.push(self.nodes[idx].slice.unwrap());
+                    matched_nodes.push(idx);
+                    level = &self.nodes[idx].children;
+                }
+                _ => break,
+            }
+        }
+        for idx in matched_nodes {
+            self.nodes[idx].freq += 1;
+        }
+        if slices.is_empty() {
+            self.misses += 1;
+        } else {
+            self.hits += 1;
+        }
+        PrefixMatch { slices }
+    }
+
+    /// Longest structural prefix (nodes exist, slices may be evicted) —
+    /// used by the QA→QKV conversion to find restore candidates.
+    pub fn structural_match(&self, keys: &[SegKey]) -> usize {
+        let mut level = &self.roots;
+        let mut n = 0;
+        for key in keys {
+            match level.get(key) {
+                Some(&idx) => {
+                    n += 1;
+                    level = &self.nodes[idx].children;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+
+    /// How many leading segments of `keys` have *slices* present, without
+    /// touching LFU counters (scheduler probes).
+    pub fn cached_prefix_len(&self, keys: &[SegKey]) -> usize {
+        let mut level = &self.roots;
+        let mut n = 0;
+        for key in keys {
+            match level.get(key) {
+                Some(&idx) if self.nodes[idx].slice.is_some() => {
+                    n += 1;
+                    level = &self.nodes[idx].children;
+                }
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// Insert (or refresh) a path of segments with their QKV slices.
+    /// Existing nodes keep their stored slice (first write wins — tensors
+    /// for the same content at the same depth are identical by
+    /// construction); missing slices are (re)attached.
+    pub fn insert_path(
+        &mut self,
+        keys: &[SegKey],
+        slices: Vec<QkvTensor>,
+        store: &mut SliceStore,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            keys.len() == slices.len(),
+            "keys/slices length mismatch: {} vs {}",
+            keys.len(),
+            slices.len()
+        );
+        let mut inserted_nodes = Vec::with_capacity(keys.len());
+        let mut parent: Option<usize> = None;
+        for (depth, (key, tensor)) in keys.iter().zip(slices).enumerate() {
+            let level = match parent {
+                None => &mut self.roots,
+                Some(p) => &mut self.nodes[p].children,
+            };
+            let idx = match level.get(key) {
+                Some(&idx) => idx,
+                None => {
+                    let idx = self.nodes.len();
+                    match parent {
+                        None => {
+                            self.roots.insert(*key, idx);
+                        }
+                        Some(p) => {
+                            self.nodes[p].children.insert(*key, idx);
+                        }
+                    }
+                    self.nodes.push(Node {
+                        key: *key,
+                        depth,
+                        slice: None,
+                        slice_bytes: 0,
+                        children: HashMap::new(),
+                        freq: 0,
+                    });
+                    idx
+                }
+            };
+            if self.nodes[idx].slice.is_none() {
+                let (sid, bytes) = store.put(tensor)?;
+                self.nodes[idx].slice = Some(sid);
+                self.nodes[idx].slice_bytes = bytes;
+                self.bytes_used += bytes;
+            }
+            inserted_nodes.push(idx);
+            parent = Some(idx);
+        }
+        self.enforce_budget(store, &inserted_nodes);
+        Ok(())
+    }
+
+    /// LFU eviction until under budget.  `protect` shields the nodes of
+    /// the path just inserted (otherwise a large insert could evict
+    /// itself mid-flight).  If everything is protected, protection is
+    /// dropped (budget wins).
+    fn enforce_budget(&mut self, store: &mut SliceStore, protect: &[usize]) {
+        while self.bytes_used > self.byte_limit {
+            let candidate = self.pick_eviction(protect).or_else(|| self.pick_eviction(&[]));
+            match candidate {
+                Some(idx) => self.evict_slice(idx, store),
+                None => break, // nothing evictable
+            }
+        }
+    }
+
+    fn pick_eviction(&self, protect: &[usize]) -> Option<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, n)| n.slice.is_some() && !protect.contains(i))
+            .min_by(|(_, a), (_, b)| {
+                a.freq
+                    .cmp(&b.freq)
+                    .then(b.depth.cmp(&a.depth)) // deeper evicts first
+                    .then(a.key.cmp(&b.key))
+            })
+            .map(|(i, _)| i)
+    }
+
+    fn evict_slice(&mut self, idx: usize, store: &mut SliceStore) {
+        if let Some(sid) = self.nodes[idx].slice.take() {
+            store.remove(sid);
+            self.bytes_used -= self.nodes[idx].slice_bytes;
+            self.nodes[idx].slice_bytes = 0;
+            self.evictions += 1;
+        }
+    }
+
+    /// Internal-consistency check for property tests: byte accounting must
+    /// equal the sum over slice-bearing nodes, and every child edge must
+    /// point at a node of depth parent+1 with the matching key.
+    pub fn check_invariants(&self) -> Result<()> {
+        let sum: usize = self
+            .nodes
+            .iter()
+            .filter(|n| n.slice.is_some())
+            .map(|n| n.slice_bytes)
+            .sum();
+        anyhow::ensure!(
+            sum == self.bytes_used,
+            "byte accounting drift: sum={sum} used={}",
+            self.bytes_used
+        );
+        anyhow::ensure!(
+            self.bytes_used <= self.byte_limit || self.slice_count() == 0,
+            "over budget with evictable slices"
+        );
+        for (key, &idx) in &self.roots {
+            anyhow::ensure!(self.nodes[idx].key == *key, "root key mismatch");
+            anyhow::ensure!(self.nodes[idx].depth == 0, "root depth != 0");
+        }
+        for node in &self.nodes {
+            for (key, &cidx) in &node.children {
+                anyhow::ensure!(self.nodes[cidx].key == *key, "child key mismatch");
+                anyhow::ensure!(
+                    self.nodes[cidx].depth == node.depth + 1,
+                    "child depth mismatch"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(tag: f32) -> QkvTensor {
+        let mut t = QkvTensor::zeros(1, 4, 64);
+        t.data[0] = tag;
+        t
+    }
+
+    fn bytes_one() -> usize {
+        tensor(0.0).byte_size() + 16
+    }
+
+    #[test]
+    fn insert_then_match_full_path() {
+        let mut store = SliceStore::memory();
+        let mut tree = QkvTree::new(10 * bytes_one());
+        tree.insert_path(&[1, 2, 3], vec![tensor(1.0), tensor(2.0), tensor(3.0)], &mut store)
+            .unwrap();
+        let m = tree.match_prefix(&[1, 2, 3]);
+        assert_eq!(m.len(), 3);
+        assert_eq!(store.get(m.slices[0]).unwrap().data[0], 1.0);
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_match_stops_at_divergence() {
+        let mut store = SliceStore::memory();
+        let mut tree = QkvTree::new(10 * bytes_one());
+        tree.insert_path(&[1, 2, 3], vec![tensor(1.0), tensor(2.0), tensor(3.0)], &mut store)
+            .unwrap();
+        assert_eq!(tree.match_prefix(&[1, 2, 99]).len(), 2);
+        assert_eq!(tree.match_prefix(&[1, 99]).len(), 1);
+        assert_eq!(tree.match_prefix(&[99]).len(), 0);
+        // order matters: [2,1] is not a prefix
+        assert_eq!(tree.match_prefix(&[2, 1]).len(), 0);
+    }
+
+    #[test]
+    fn shared_prefix_merges() {
+        let mut store = SliceStore::memory();
+        let mut tree = QkvTree::new(10 * bytes_one());
+        tree.insert_path(&[1, 2], vec![tensor(1.0), tensor(2.0)], &mut store).unwrap();
+        tree.insert_path(&[1, 5], vec![tensor(1.0), tensor(5.0)], &mut store).unwrap();
+        // node 1 is shared: 3 slices total, not 4
+        assert_eq!(tree.slice_count(), 3);
+        assert_eq!(tree.match_prefix(&[1, 5]).len(), 2);
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_respects_lfu_and_budget() {
+        let mut store = SliceStore::memory();
+        let mut tree = QkvTree::new(3 * bytes_one());
+        tree.insert_path(&[1, 2, 3], vec![tensor(1.0), tensor(2.0), tensor(3.0)], &mut store)
+            .unwrap();
+        // heat up the prefix
+        for _ in 0..5 {
+            tree.match_prefix(&[1, 2]);
+        }
+        // inserting a new root forces one eviction; node 3 (cold, deepest)
+        // must be the victim
+        tree.insert_path(&[9], vec![tensor(9.0)], &mut store).unwrap();
+        assert!(tree.bytes_used() <= tree.byte_limit());
+        assert_eq!(tree.match_prefix(&[1, 2, 3]).len(), 2, "3 evicted");
+        assert_eq!(tree.match_prefix(&[9]).len(), 1);
+        assert_eq!(tree.evictions, 1);
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn match_stops_at_evicted_slice_then_restore_reattaches() {
+        let mut store = SliceStore::memory();
+        let mut tree = QkvTree::new(2 * bytes_one());
+        tree.insert_path(&[1, 2], vec![tensor(1.0), tensor(2.0)], &mut store).unwrap();
+        for _ in 0..3 {
+            tree.match_prefix(&[1]);
+        }
+        tree.insert_path(&[7], vec![tensor(7.0)], &mut store).unwrap(); // evicts node 2
+        assert_eq!(tree.match_prefix(&[1, 2]).len(), 1);
+        assert_eq!(tree.structural_match(&[1, 2]), 2, "node survives eviction");
+        // restore: re-insert the same path reattaches the missing slice
+        tree.set_byte_limit(3 * bytes_one(), &mut store);
+        tree.insert_path(&[1, 2], vec![tensor(1.0), tensor(2.0)], &mut store).unwrap();
+        assert_eq!(tree.match_prefix(&[1, 2]).len(), 2);
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shrinking_budget_evicts_immediately() {
+        let mut store = SliceStore::memory();
+        let mut tree = QkvTree::new(4 * bytes_one());
+        tree.insert_path(&[1, 2, 3, 4],
+                         vec![tensor(1.0), tensor(2.0), tensor(3.0), tensor(4.0)],
+                         &mut store).unwrap();
+        assert_eq!(tree.slice_count(), 4);
+        tree.set_byte_limit(2 * bytes_one(), &mut store);
+        assert_eq!(tree.slice_count(), 2);
+        assert!(tree.bytes_used() <= 2 * bytes_one());
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn empty_tree_matches_nothing() {
+        let mut tree = QkvTree::new(1 << 20);
+        assert!(tree.match_prefix(&[1, 2]).is_empty());
+        assert_eq!(tree.structural_match(&[1]), 0);
+        tree.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,88 @@
+//! Cache slicer (paper §4.1.1): splits a whole-prompt QKV tensor into
+//! per-segment slices keyed by segment content, ready for tree insertion.
+//!
+//! The paper's slicer computes chunk start/end positions via the
+//! tokenizer; here segments are fixed 64-token units so positions are
+//! implicit — the interesting part is *which* segments are cacheable: the
+//! system prompt and the knowledge chunks are; the query segment (always
+//! last) is not, since query text varies (its tensors would never be
+//! prefix-matched again — predicted duplicates hit the QA bank instead).
+//!
+//! Tokenization-boundary note (paper App. B.2): the paper's BPE tokenizer
+//! can merge subwords across chunk boundaries, forcing them to drop
+//! trailing tokens of the last matched node.  Our word-hash tokenizer is
+//! context-free — a word's id never depends on neighbours — so sliced
+//! tensors are exactly the tensors a fresh prefill would produce
+//! (guaranteed by the reuse-exactness tests) and no boundary trimming is
+//! needed.  Documented as a substitution in DESIGN.md §3.
+
+use crate::llm::QkvTensor;
+use crate::tokenizer::SEGMENT_TOKENS;
+
+/// One cacheable slice: the segment's content key plus its tensors.
+#[derive(Debug, Clone)]
+pub struct SegmentSlice {
+    pub key: u64,
+    pub tensor: QkvTensor,
+}
+
+/// Split a whole-prompt QKV tensor into cacheable segment slices.
+///
+/// `seg_keys` are the content keys for ALL prompt segments, in order
+/// (sysprompt, chunks…, query); the final (query) segment is skipped.
+pub fn slice_prompt(qkv: &QkvTensor, seg_keys: &[u64]) -> Vec<SegmentSlice> {
+    assert_eq!(
+        qkv.seq,
+        seg_keys.len() * SEGMENT_TOKENS,
+        "QKV length disagrees with segment count"
+    );
+    let cacheable = seg_keys.len().saturating_sub(1);
+    (0..cacheable)
+        .map(|s| SegmentSlice {
+            key: seg_keys[s],
+            tensor: qkv.slice_segments(s, s + 1),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tagged(n_seg: usize) -> QkvTensor {
+        let mut t = QkvTensor::zeros(2, 4, n_seg * SEGMENT_TOKENS);
+        for s in 0..n_seg {
+            // mark the first element of each segment's first row
+            let off = s * SEGMENT_TOKENS * 4;
+            t.data[off] = (s + 1) as f32;
+        }
+        t
+    }
+
+    #[test]
+    fn slices_all_but_query_segment() {
+        let qkv = tagged(4);
+        let keys = [11, 22, 33, 99]; // 99 = query
+        let slices = slice_prompt(&qkv, &keys);
+        assert_eq!(slices.len(), 3);
+        assert_eq!(slices[0].key, 11);
+        assert_eq!(slices[2].key, 33);
+        for (i, s) in slices.iter().enumerate() {
+            assert_eq!(s.tensor.seq, SEGMENT_TOKENS);
+            assert_eq!(s.tensor.data[0], (i + 1) as f32, "segment content");
+        }
+    }
+
+    #[test]
+    fn single_segment_prompt_yields_nothing() {
+        let qkv = tagged(1);
+        assert!(slice_prompt(&qkv, &[42]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "disagrees")]
+    fn length_mismatch_panics() {
+        let qkv = tagged(3);
+        slice_prompt(&qkv, &[1, 2]);
+    }
+}

@@ -1,0 +1,200 @@
+//! QKV slice storage backend: in-memory or on-disk (load-on-demand, like
+//! the paper's implementation — Table 1 measures slice loading separately
+//! from matching, which this split makes possible).
+//!
+//! Disk format per slice: 16-byte header (magic, layers, d_model, seq as
+//! u32 LE) followed by raw f32 LE data.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::llm::QkvTensor;
+
+pub type SliceId = u64;
+
+const MAGIC: u32 = 0x51_4B_56_01; // "QKV\x01"
+
+#[derive(Debug, Clone)]
+pub enum Backend {
+    Memory,
+    Disk(PathBuf),
+}
+
+/// Slice store with exact byte accounting (the tree enforces the budget).
+pub struct SliceStore {
+    backend: Backend,
+    mem: HashMap<SliceId, QkvTensor>,
+    sizes: HashMap<SliceId, usize>,
+    next_id: SliceId,
+    /// Counters for Table 1-style reporting.
+    pub loads: u64,
+    pub stores: u64,
+}
+
+impl SliceStore {
+    pub fn memory() -> Self {
+        Self::new(Backend::Memory)
+    }
+
+    pub fn disk(dir: PathBuf) -> Result<Self> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating slice dir {}", dir.display()))?;
+        Ok(Self::new(Backend::Disk(dir)))
+    }
+
+    fn new(backend: Backend) -> Self {
+        SliceStore {
+            backend,
+            mem: HashMap::new(),
+            sizes: HashMap::new(),
+            next_id: 1,
+            loads: 0,
+            stores: 0,
+        }
+    }
+
+    fn path(&self, id: SliceId) -> Option<PathBuf> {
+        match &self.backend {
+            Backend::Memory => None,
+            Backend::Disk(dir) => Some(dir.join(format!("slice_{id:016x}.qkv"))),
+        }
+    }
+
+    /// Persist a slice; returns its id and byte size.
+    pub fn put(&mut self, tensor: QkvTensor) -> Result<(SliceId, usize)> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let bytes = tensor.byte_size() + 16;
+        self.sizes.insert(id, bytes);
+        self.stores += 1;
+        match self.path(id) {
+            None => {
+                self.mem.insert(id, tensor);
+            }
+            Some(p) => {
+                let mut buf = Vec::with_capacity(bytes);
+                buf.extend_from_slice(&MAGIC.to_le_bytes());
+                buf.extend_from_slice(&(tensor.layers as u32).to_le_bytes());
+                buf.extend_from_slice(&(tensor.d_model as u32).to_le_bytes());
+                buf.extend_from_slice(&(tensor.seq as u32).to_le_bytes());
+                for v in &tensor.data {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+                std::fs::write(&p, &buf)
+                    .with_context(|| format!("writing {}", p.display()))?;
+            }
+        }
+        Ok((id, bytes))
+    }
+
+    /// Load a slice (on-demand from disk for the Disk backend).
+    pub fn get(&mut self, id: SliceId) -> Result<QkvTensor> {
+        self.loads += 1;
+        match self.path(id) {
+            None => self
+                .mem
+                .get(&id)
+                .cloned()
+                .with_context(|| format!("slice {id} missing from memory store")),
+            Some(p) => {
+                let buf =
+                    std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?;
+                anyhow::ensure!(buf.len() >= 16, "slice file too short");
+                let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+                anyhow::ensure!(magic == MAGIC, "bad slice magic");
+                let layers = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+                let d_model = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+                let seq = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+                let n = layers * 3 * seq * d_model;
+                anyhow::ensure!(buf.len() == 16 + n * 4, "slice file size mismatch");
+                let mut data = vec![0f32; n];
+                for (i, c) in buf[16..].chunks_exact(4).enumerate() {
+                    data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                Ok(QkvTensor::from_flat(layers, d_model, seq, data))
+            }
+        }
+    }
+
+    /// Delete a slice; returns the bytes freed.
+    pub fn remove(&mut self, id: SliceId) -> usize {
+        let bytes = self.sizes.remove(&id).unwrap_or(0);
+        match self.path(id) {
+            None => {
+                self.mem.remove(&id);
+            }
+            Some(p) => {
+                let _ = std::fs::remove_file(p);
+            }
+        }
+        bytes
+    }
+
+    pub fn size_of(&self, id: SliceId) -> Option<usize> {
+        self.sizes.get(&id).copied()
+    }
+
+    pub fn count(&self) -> usize {
+        self.sizes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(seed: f32) -> QkvTensor {
+        let mut t = QkvTensor::zeros(2, 8, 64);
+        for (i, v) in t.data.iter_mut().enumerate() {
+            *v = seed + i as f32 * 0.5;
+        }
+        t
+    }
+
+    #[test]
+    fn memory_roundtrip() {
+        let mut s = SliceStore::memory();
+        let t = tensor(1.0);
+        let (id, bytes) = s.put(t.clone()).unwrap();
+        assert_eq!(bytes, t.byte_size() + 16);
+        assert_eq!(s.get(id).unwrap(), t);
+        assert_eq!(s.remove(id), bytes);
+        assert!(s.get(id).is_err());
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn disk_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("percache_store_{}", std::process::id()));
+        let mut s = SliceStore::disk(dir.clone()).unwrap();
+        let t = tensor(-3.25);
+        let (id, _) = s.put(t.clone()).unwrap();
+        let loaded = s.get(id).unwrap();
+        assert_eq!(loaded, t);
+        assert_eq!(s.loads, 1);
+        s.remove(id);
+        assert!(s.get(id).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_detects_corruption() {
+        let dir = std::env::temp_dir().join(format!("percache_corrupt_{}", std::process::id()));
+        let mut s = SliceStore::disk(dir.clone()).unwrap();
+        let (id, _) = s.put(tensor(0.0)).unwrap();
+        let p = dir.join(format!("slice_{id:016x}.qkv"));
+        std::fs::write(&p, b"garbage data here").unwrap();
+        assert!(s.get(id).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let mut s = SliceStore::memory();
+        let (a, _) = s.put(tensor(0.0)).unwrap();
+        let (b, _) = s.put(tensor(1.0)).unwrap();
+        assert_ne!(a, b);
+    }
+}

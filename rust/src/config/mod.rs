@@ -1,0 +1,265 @@
+//! Runtime configuration for the PerCache engine and all baselines.
+//!
+//! Mirrors the paper's knobs: τ_query (QA-bank similarity threshold),
+//! τ_scheduler (population-strategy cutoff), prediction stride, top-k
+//! retrieval, per-layer storage limits.  Loadable from a JSON file so the
+//! launcher (`percache serve --config …`) and the experiment harness share
+//! one format.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::llm::ReuseVariant;
+use crate::util::json::Json;
+
+/// When the caches are populated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopulationMode {
+    /// Update caches only from served user queries (RAGCache/MeanCache).
+    Reactive,
+    /// Also run query prediction during idle time (PerCache, Sleep-time
+    /// Compute).
+    Predictive,
+}
+
+#[derive(Debug, Clone)]
+pub struct PerCacheConfig {
+    /// Model config name from the manifest ("llama" / "qwen").
+    pub model: String,
+
+    // -- hierarchical cache -------------------------------------------------
+    /// QA-bank cosine-similarity threshold τ_query (paper default 0.85).
+    pub tau_query: f64,
+    /// Enable the QA bank layer (ablation switch).
+    pub qa_enabled: bool,
+    /// Enable the QKV cache layer (ablation switch).
+    pub qkv_enabled: bool,
+    /// Q+K+V reuse (PerCache) vs K/V-only (RAGCache baseline).
+    pub reuse_variant: ReuseVariant,
+    /// QA bank storage budget in bytes (paper: ~100 MB, scaled here).
+    pub qa_storage_bytes: usize,
+    /// QKV cache storage budget in bytes (paper: 6–12 GB, scaled here).
+    pub qkv_storage_bytes: usize,
+
+    // -- prediction ----------------------------------------------------------
+    pub population: PopulationMode,
+    /// Queries generated per prediction round (paper: 1–5, default 5).
+    pub prediction_stride: usize,
+
+    // -- scheduler ------------------------------------------------------------
+    /// Enable the cache scheduler (adaptive population + conversions).
+    pub scheduler_enabled: bool,
+    /// τ_scheduler: above this threshold, population skips decoding.
+    pub tau_scheduler: f64,
+
+    // -- RAG pipeline ----------------------------------------------------------
+    /// Chunks retrieved per query (paper uses top-2; grid allows up to 3).
+    pub top_k: usize,
+    /// Hybrid retrieval weight: score = α·BM25 + (1-α)·cosine.
+    pub hybrid_alpha: f64,
+    /// k_refresh for dynamic cache refresh (§4.1.3).
+    pub refresh_top_k: usize,
+
+    // -- generation --------------------------------------------------------------
+    /// Decode budget per answer.
+    pub decode_tokens: usize,
+
+    /// System prompt prepended to every RAG prompt (one segment).
+    pub system_prompt: String,
+}
+
+impl Default for PerCacheConfig {
+    fn default() -> Self {
+        PerCacheConfig {
+            model: "llama".to_string(),
+            tau_query: 0.85,
+            qa_enabled: true,
+            qkv_enabled: true,
+            reuse_variant: ReuseVariant::Qkv,
+            // scaled budgets: one llama chunk slice is ~786 KB; defaults
+            // hold ~100 slices (paper-equivalent ≈ 8.7 GB of 87 MB slices)
+            qa_storage_bytes: 1 << 20,        // 1 MB
+            qkv_storage_bytes: 80 << 20,      // 80 MB
+            population: PopulationMode::Predictive,
+            prediction_stride: 5,
+            scheduler_enabled: true,
+            tau_scheduler: 0.87,
+            top_k: 2,
+            hybrid_alpha: 0.5,
+            refresh_top_k: 2,
+            decode_tokens: 24,
+            system_prompt: "you are a smartphone assistant answer the user \
+                            question using the retrieved personal data"
+                .to_string(),
+        }
+    }
+}
+
+impl PerCacheConfig {
+    /// Parse from JSON; any omitted field keeps its default.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = PerCacheConfig::default();
+        if let Some(s) = j.get("model").as_str() {
+            c.model = s.to_string();
+        }
+        if let Some(v) = j.get("tau_query").as_f64() {
+            c.tau_query = v;
+        }
+        if let Some(b) = j.get("qa_enabled").as_bool() {
+            c.qa_enabled = b;
+        }
+        if let Some(b) = j.get("qkv_enabled").as_bool() {
+            c.qkv_enabled = b;
+        }
+        if let Some(s) = j.get("reuse_variant").as_str() {
+            c.reuse_variant = match s {
+                "qkv" => ReuseVariant::Qkv,
+                "kv" => ReuseVariant::Kv,
+                other => anyhow::bail!("reuse_variant must be qkv|kv, got {other}"),
+            };
+        }
+        if let Some(v) = j.get("qa_storage_bytes").as_usize() {
+            c.qa_storage_bytes = v;
+        }
+        if let Some(v) = j.get("qkv_storage_bytes").as_usize() {
+            c.qkv_storage_bytes = v;
+        }
+        if let Some(s) = j.get("population").as_str() {
+            c.population = match s {
+                "reactive" => PopulationMode::Reactive,
+                "predictive" => PopulationMode::Predictive,
+                other => anyhow::bail!("population must be reactive|predictive, got {other}"),
+            };
+        }
+        if let Some(v) = j.get("prediction_stride").as_usize() {
+            c.prediction_stride = v;
+        }
+        if let Some(b) = j.get("scheduler_enabled").as_bool() {
+            c.scheduler_enabled = b;
+        }
+        if let Some(v) = j.get("tau_scheduler").as_f64() {
+            c.tau_scheduler = v;
+        }
+        if let Some(v) = j.get("top_k").as_usize() {
+            c.top_k = v;
+        }
+        if let Some(v) = j.get("hybrid_alpha").as_f64() {
+            c.hybrid_alpha = v;
+        }
+        if let Some(v) = j.get("refresh_top_k").as_usize() {
+            c.refresh_top_k = v;
+        }
+        if let Some(v) = j.get("decode_tokens").as_usize() {
+            c.decode_tokens = v;
+        }
+        if let Some(s) = j.get("system_prompt").as_str() {
+            c.system_prompt = s.to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing config json")?;
+        Self::from_json(&j)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.tau_query),
+            "tau_query must be in [0,1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.hybrid_alpha),
+            "hybrid_alpha must be in [0,1]"
+        );
+        anyhow::ensure!(self.prediction_stride >= 1, "prediction_stride >= 1");
+        anyhow::ensure!(
+            (1..=crate::llm::MAX_SEGMENTS - 2).contains(&self.top_k),
+            "top_k must fit the bucket grid (1..={})",
+            crate::llm::MAX_SEGMENTS - 2
+        );
+        anyhow::ensure!(self.decode_tokens >= 1, "decode_tokens >= 1");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("model", self.model.as_str());
+        o.insert("tau_query", self.tau_query);
+        o.insert("qa_enabled", self.qa_enabled);
+        o.insert("qkv_enabled", self.qkv_enabled);
+        o.insert(
+            "reuse_variant",
+            match self.reuse_variant {
+                ReuseVariant::Qkv => "qkv",
+                ReuseVariant::Kv => "kv",
+            },
+        );
+        o.insert("qa_storage_bytes", self.qa_storage_bytes);
+        o.insert("qkv_storage_bytes", self.qkv_storage_bytes);
+        o.insert(
+            "population",
+            match self.population {
+                PopulationMode::Reactive => "reactive",
+                PopulationMode::Predictive => "predictive",
+            },
+        );
+        o.insert("prediction_stride", self.prediction_stride);
+        o.insert("scheduler_enabled", self.scheduler_enabled);
+        o.insert("tau_scheduler", self.tau_scheduler);
+        o.insert("top_k", self.top_k);
+        o.insert("hybrid_alpha", self.hybrid_alpha);
+        o.insert("refresh_top_k", self.refresh_top_k);
+        o.insert("decode_tokens", self.decode_tokens);
+        o.insert("system_prompt", self.system_prompt.as_str());
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        PerCacheConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = PerCacheConfig::default();
+        c.tau_query = 0.8;
+        c.model = "qwen".into();
+        c.population = PopulationMode::Reactive;
+        c.reuse_variant = ReuseVariant::Kv;
+        let j = c.to_json();
+        let c2 = PerCacheConfig::from_json(&j).unwrap();
+        assert_eq!(c2.tau_query, 0.8);
+        assert_eq!(c2.model, "qwen");
+        assert_eq!(c2.population, PopulationMode::Reactive);
+        assert_eq!(c2.reuse_variant, ReuseVariant::Kv);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"tau_query": 0.9}"#).unwrap();
+        let c = PerCacheConfig::from_json(&j).unwrap();
+        assert_eq!(c.tau_query, 0.9);
+        assert_eq!(c.model, "llama");
+        assert_eq!(c.prediction_stride, 5);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let j = Json::parse(r#"{"tau_query": 1.5}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"top_k": 9}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"reuse_variant": "bogus"}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+    }
+}

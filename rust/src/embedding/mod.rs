@@ -1,0 +1,109 @@
+//! Semantic-embedding engine over the `embed` artifact + cosine utilities.
+//!
+//! Embeddings are unit-norm (the artifact L2-normalizes), so cosine
+//! similarity is a dot product.  A small memo cache keeps repeated texts
+//! (system prompts, re-checked queries) off the PJRT path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::tokenizer;
+
+pub type Embedding = Vec<f32>;
+
+/// Cosine similarity; inputs need not be normalized.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "embedding dim mismatch");
+    let (mut dot, mut na, mut nb) = (0f32, 0f32, 0f32);
+    for i in 0..a.len() {
+        dot += a[i] * b[i];
+        na += a[i] * a[i];
+        nb += b[i] * b[i];
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+pub struct Embedder<'rt> {
+    rt: &'rt Runtime,
+    cache: RefCell<HashMap<String, Embedding>>,
+    pub cache_hits: RefCell<u64>,
+    pub cache_misses: RefCell<u64>,
+}
+
+impl<'rt> Embedder<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        Embedder {
+            rt,
+            cache: RefCell::new(HashMap::new()),
+            cache_hits: RefCell::new(0),
+            cache_misses: RefCell::new(0),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.rt.manifest.embed.d_out
+    }
+
+    /// Embed one text (memoized).
+    pub fn embed(&self, text: &str) -> Result<Embedding> {
+        if let Some(e) = self.cache.borrow().get(text) {
+            *self.cache_hits.borrow_mut() += 1;
+            return Ok(e.clone());
+        }
+        *self.cache_misses.borrow_mut() += 1;
+        let tokens = tokenizer::encode_segment(text);
+        let e = self.rt.exec_embed(&tokens)?;
+        self.cache.borrow_mut().insert(text.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Embed without the memo cache (used by benches to measure the
+    /// raw artifact latency).
+    pub fn embed_uncached(&self, text: &str) -> Result<Embedding> {
+        let tokens = tokenizer::encode_segment(text);
+        self.rt.exec_embed(&tokens)
+    }
+
+    pub fn clear_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_identities() {
+        let a = vec![1.0, 0.0, 0.0];
+        let b = vec![0.0, 1.0, 0.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-6);
+        assert!(cosine(&a, &b).abs() < 1e-6);
+        let c = vec![-1.0, 0.0, 0.0];
+        assert!((cosine(&a, &c) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_scale_invariant() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![2.0, 4.0, 6.0];
+        assert!((cosine(&a, &b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_zero_vector_is_zero() {
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn cosine_checks_dims() {
+        cosine(&[1.0], &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,482 @@
+//! The PerCache engine (paper Fig 7): hierarchical cache reuse on the
+//! serve path, predictive population + conversions on the idle path.
+//!
+//! Serve path (§4.2):
+//! ```text
+//! query → embed → QA-bank match ──hit──▶ cached answer (no inference)
+//!                    │ miss
+//!                    ▼
+//!         hybrid retrieve top-k → tree prefix match → load slices
+//!         → reuse prefill (skips prefix Q/K/V projections) → decode
+//!         → [post-response] slice & insert QKV, insert QA entry
+//! ```
+//!
+//! Idle path (§4.1.2 / §4.3): scheduler-planned — query prediction +
+//! population (strategy-gated decode), QKV→QA decoding of pending
+//! entries, QA→QKV restoration after storage growth.
+
+use anyhow::{Context, Result};
+
+use crate::cache::{slice_prompt, QaBank, QkvTree, SliceStore};
+use crate::config::{PerCacheConfig, PopulationMode};
+use crate::embedding::Embedder;
+use crate::kb::KnowledgeBank;
+use crate::llm::{LlmEngine, QkvTensor};
+use crate::metrics::{blank_record, QueryRecord, ServePath, Stage};
+use crate::predict::QueryPredictor;
+use crate::retrieval::Retriever;
+use crate::runtime::Runtime;
+use crate::scheduler::{CacheScheduler, IdleAction, PopulationStrategy};
+use crate::tokenizer::{self, SEGMENT_TOKENS};
+
+/// Dedup threshold: a predicted query this close to an existing QA entry
+/// is not re-populated.  Near-1.0 so only (near-)verbatim repeats of
+/// earlier predictions are skipped — distinct paraphrases still populate
+/// (they are what makes future QA-bank hits possible).
+const PREDICT_DEDUP_SIM: f64 = 0.995;
+/// Idle-tick work budgets (keep a tick bounded, like a real idle window).
+const DECODE_PENDING_BUDGET: usize = 8;
+const RESTORE_BUDGET: usize = 8;
+
+#[derive(Debug, Clone, Default)]
+pub struct IdleReport {
+    pub predicted: usize,
+    pub populated: usize,
+    pub decoded_pending: usize,
+    pub restored_paths: usize,
+    pub flops: u64,
+}
+
+pub struct PerCache<'rt> {
+    pub cfg: PerCacheConfig,
+    pub llm: LlmEngine<'rt>,
+    pub embedder: Embedder<'rt>,
+    pub kb: KnowledgeBank,
+    pub retriever: Retriever,
+    pub qa: QaBank,
+    pub tree: QkvTree,
+    pub store: SliceStore,
+    pub predictor: QueryPredictor,
+    pub scheduler: CacheScheduler,
+    sys_tokens: Vec<i32>,
+    sys_key: u64,
+    query_counter: usize,
+    /// Cumulative idle-side (population) compute — the paper's Fig 15a /
+    /// Fig 20 accounting.
+    pub population_flops: u64,
+    pub population_events: u64,
+}
+
+impl<'rt> PerCache<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: PerCacheConfig) -> Result<Self> {
+        cfg.validate()?;
+        let llm = LlmEngine::new(rt, &cfg.model)?;
+        let embedder = Embedder::new(rt);
+        let scheduler = CacheScheduler::new(cfg.scheduler_enabled, cfg.tau_scheduler, cfg.tau_query);
+        let sys_tokens = tokenizer::encode_segment(&cfg.system_prompt);
+        let sys_key = tokenizer::fnv1a64(cfg.system_prompt.as_bytes());
+        Ok(PerCache {
+            retriever: Retriever::new(cfg.hybrid_alpha),
+            qa: QaBank::new(cfg.qa_storage_bytes),
+            tree: QkvTree::new(cfg.qkv_storage_bytes),
+            store: SliceStore::memory(),
+            predictor: QueryPredictor::new(0xCAC4E5EED),
+            scheduler,
+            kb: KnowledgeBank::new(),
+            sys_tokens,
+            sys_key,
+            query_counter: 0,
+            population_flops: 0,
+            population_events: 0,
+            llm,
+            embedder,
+            cfg,
+        })
+    }
+
+    /// Use an on-disk slice store (paper-faithful load-on-demand).
+    pub fn with_disk_store(mut self, dir: std::path::PathBuf) -> Result<Self> {
+        self.store = SliceStore::disk(dir)?;
+        Ok(self)
+    }
+
+    // ------------------------------------------------------------------
+    // knowledge management
+    // ------------------------------------------------------------------
+
+    /// Add personal data; chunks it, indexes it, and runs the dynamic
+    /// cache refresh (§4.1.3) against the QA bank.
+    pub fn add_document(&mut self, text: &str) -> Result<Vec<usize>> {
+        let ids = self.kb.add_document(text, &self.embedder)?;
+        for &id in &ids {
+            let chunk_text = self.kb.chunk(id).text.clone();
+            self.retriever.index_chunk(id, &chunk_text);
+            let emb = self.kb.chunk(id).embedding.clone();
+            self.qa.refresh_for_chunk(&emb, self.cfg.refresh_top_k);
+        }
+        Ok(ids)
+    }
+
+    // ------------------------------------------------------------------
+    // dynamic reconfiguration (scheduler triggers)
+    // ------------------------------------------------------------------
+
+    pub fn set_tau_query(&mut self, tau: f64) {
+        self.cfg.tau_query = tau;
+        self.scheduler.on_tau_change(tau);
+    }
+
+    pub fn set_qkv_storage(&mut self, bytes: usize) {
+        let old = self.tree.byte_limit();
+        self.tree.set_byte_limit(bytes, &mut self.store);
+        self.cfg.qkv_storage_bytes = bytes;
+        self.scheduler.on_storage_change(old, bytes);
+    }
+
+    // ------------------------------------------------------------------
+    // serve path
+    // ------------------------------------------------------------------
+
+    /// Serve one user query, returning the full stage-timed record.
+    pub fn serve(&mut self, query: &str) -> Result<QueryRecord> {
+        let qid = self.query_counter;
+        self.query_counter += 1;
+        let mut rec = blank_record(qid);
+
+        // 1. embed
+        let t = Stage::start();
+        let emb = self.embedder.embed(query)?;
+        rec.embed_ms = t.ms();
+
+        // 2. QA bank match
+        if self.cfg.qa_enabled {
+            let t = Stage::start();
+            let hit = self.qa.match_query(&emb, self.cfg.tau_query);
+            rec.qa_match_ms = t.ms();
+            if let Some((_m, answer)) = hit {
+                rec.path = ServePath::QaHit;
+                rec.answer = tokens_to_text(&answer);
+                self.predictor.observe(query);
+                return Ok(rec);
+            }
+        }
+
+        // 3. retrieval
+        let t = Stage::start();
+        let retrieved = self
+            .retriever
+            .retrieve(query, &emb, &self.kb, self.cfg.top_k);
+        rec.retrieval_ms = t.ms();
+
+        // 4. prompt assembly + tree match
+        let (tokens, seg_keys) = self.assemble_prompt(query, &retrieved);
+        rec.n_segments = seg_keys.len();
+
+        let mut prefix: Option<QkvTensor> = None;
+        if self.cfg.qkv_enabled && seg_keys.len() > 1 {
+            let t = Stage::start();
+            let m = self.tree.match_prefix(&seg_keys[..seg_keys.len() - 1]);
+            rec.tree_match_ms = t.ms();
+            if !m.is_empty() {
+                let t = Stage::start();
+                let mut parts = Vec::with_capacity(m.len());
+                for sid in &m.slices {
+                    parts.push(self.store.get(*sid).context("loading cached slice")?);
+                }
+                let refs: Vec<&QkvTensor> = parts.iter().collect();
+                prefix = Some(QkvTensor::concat(&refs));
+                rec.cache_load_ms = t.ms();
+            }
+        }
+
+        // 5. prefill (+6. decode)
+        let t = Stage::start();
+        let pre = self
+            .llm
+            .prefill(&tokens, prefix.as_ref().map(|p| (p, self.cfg.reuse_variant)))?;
+        rec.prefill_ms = t.ms();
+        rec.matched_segments = pre.reused_segments;
+        rec.path = if pre.reused_segments > 0 {
+            ServePath::QkvHit
+        } else {
+            ServePath::Full
+        };
+        rec.flops = pre.flops;
+
+        let t = Stage::start();
+        let dec = self.llm.decode(&tokens, &pre, self.cfg.decode_tokens)?;
+        rec.decode_ms = t.ms();
+        rec.flops += dec.flops;
+        rec.answer = tokens_to_text(&dec.tokens);
+
+        // 7. post-response population (reactive; free — reuses the
+        //    tensors this inference already produced)
+        if self.cfg.qkv_enabled {
+            let slices = slice_prompt(&pre.qkv, &seg_keys);
+            let keys: Vec<u64> = slices.iter().map(|s| s.key).collect();
+            let tensors: Vec<QkvTensor> = slices.into_iter().map(|s| s.tensor).collect();
+            self.tree.insert_path(&keys, tensors, &mut self.store)?;
+        }
+        if self.cfg.qa_enabled {
+            self.qa.insert(query, emb, Some(dec.tokens.clone()), false);
+        }
+        self.predictor.observe(query);
+        Ok(rec)
+    }
+
+    /// Assemble `[sysprompt | chunk… | query]` tokens + segment keys.
+    fn assemble_prompt(
+        &self,
+        query: &str,
+        retrieved: &[crate::retrieval::Retrieved],
+    ) -> (Vec<i32>, Vec<u64>) {
+        let mut tokens = self.sys_tokens.clone();
+        let mut keys = vec![self.sys_key];
+        for r in retrieved {
+            let c = self.kb.chunk(r.chunk);
+            tokens.extend_from_slice(&c.tokens);
+            keys.push(c.key);
+        }
+        tokens.extend(tokenizer::encode_segment(query));
+        keys.push(tokenizer::fnv1a64(query.as_bytes()));
+        debug_assert_eq!(tokens.len(), keys.len() * SEGMENT_TOKENS);
+        (tokens, keys)
+    }
+
+    // ------------------------------------------------------------------
+    // population path (idle time)
+    // ------------------------------------------------------------------
+
+    /// Populate the caches with one (predicted) query.  Returns FLOPs
+    /// spent, or None if deduped away.
+    pub fn populate_query(
+        &mut self,
+        query: &str,
+        strategy: PopulationStrategy,
+        predicted: bool,
+    ) -> Result<Option<u64>> {
+        let emb = self.embedder.embed(query)?;
+        if predicted {
+            if let Some(m) = self.qa.best_similarity(&emb) {
+                if m.similarity >= PREDICT_DEDUP_SIM {
+                    return Ok(None); // already covered
+                }
+            }
+        }
+        let retrieved = self
+            .retriever
+            .retrieve(query, &emb, &self.kb, self.cfg.top_k);
+        let (tokens, seg_keys) = self.assemble_prompt(query, &retrieved);
+
+        // reuse whatever prefix already exists — population itself
+        // benefits from the cache
+        let mut prefix: Option<QkvTensor> = None;
+        if self.cfg.qkv_enabled && seg_keys.len() > 1 {
+            let m = self.tree.match_prefix(&seg_keys[..seg_keys.len() - 1]);
+            if !m.is_empty() {
+                let mut parts = Vec::with_capacity(m.len());
+                for sid in &m.slices {
+                    parts.push(self.store.get(*sid)?);
+                }
+                let refs: Vec<&QkvTensor> = parts.iter().collect();
+                prefix = Some(QkvTensor::concat(&refs));
+            }
+        }
+
+        let pre = self
+            .llm
+            .prefill(&tokens, prefix.as_ref().map(|p| (p, self.cfg.reuse_variant)))?;
+        let mut flops = pre.flops;
+
+        if self.cfg.qkv_enabled {
+            let slices = slice_prompt(&pre.qkv, &seg_keys);
+            let keys: Vec<u64> = slices.iter().map(|s| s.key).collect();
+            let tensors: Vec<QkvTensor> = slices.into_iter().map(|s| s.tensor).collect();
+            self.tree.insert_path(&keys, tensors, &mut self.store)?;
+        }
+
+        if self.cfg.qa_enabled {
+            let answer = match strategy {
+                PopulationStrategy::PrefillAndDecode => {
+                    let dec = self.llm.decode(&tokens, &pre, self.cfg.decode_tokens)?;
+                    flops += dec.flops;
+                    Some(dec.tokens)
+                }
+                PopulationStrategy::PrefillOnly => None,
+            };
+            self.qa.insert(query, emb, answer, predicted);
+        }
+
+        self.population_flops += flops;
+        self.population_events += 1;
+        Ok(Some(flops))
+    }
+
+    /// One idle-time tick: run the scheduler's plan.
+    pub fn idle_tick(&mut self) -> Result<IdleReport> {
+        let mut report = IdleReport::default();
+        let flops_before = self.population_flops;
+
+        for action in self.scheduler.plan_idle() {
+            match action {
+                IdleAction::PredictAndPopulate => {
+                    if self.cfg.population != PopulationMode::Predictive {
+                        continue;
+                    }
+                    // knowledge-abstract upkeep: batch-summarize pending
+                    // chunks (LLM cost charged as one prefill over the
+                    // abstract context)
+                    if !self.kb.pending_abstract_chunks().is_empty() {
+                        let ctx = self.predictor.prediction_context(&self.kb);
+                        self.charge_prediction_prompt(&ctx)?;
+                        self.kb.mark_abstract_refreshed();
+                    }
+                    let stride = self.cfg.prediction_stride;
+                    let mut qs = self.predictor.predict_from_knowledge(&self.kb, stride);
+                    qs.extend(self.predictor.predict_from_history(stride));
+                    report.predicted += qs.len();
+                    let strategy = self.scheduler.strategy();
+                    for q in qs {
+                        if self.populate_query(&q, strategy, true)?.is_some() {
+                            report.populated += 1;
+                        }
+                    }
+                }
+                IdleAction::DecodePending => {
+                    report.decoded_pending += self.decode_pending(DECODE_PENDING_BUDGET)?;
+                }
+                IdleAction::RestoreQkv => {
+                    report.restored_paths += self.restore_qkv(RESTORE_BUDGET)?;
+                }
+            }
+        }
+        report.flops = self.population_flops - flops_before;
+        Ok(report)
+    }
+
+    /// Charge the prediction/summarization prompt's LLM cost: one prefill
+    /// over `[sys | context]` (substitution: the paper prompts the LLM;
+    /// we run the same-shape compute and use its wall-clock/FLOPs).
+    fn charge_prediction_prompt(&mut self, context: &str) -> Result<()> {
+        let mut tokens = self.sys_tokens.clone();
+        tokens.extend(tokenizer::encode_segment(context));
+        let pre = self.llm.prefill(&tokens, None)?;
+        self.population_flops += pre.flops;
+        Ok(())
+    }
+
+    /// QKV→QA conversion (§4.3.3): decode answers for entries stored
+    /// without one.  Returns how many were decoded.
+    pub fn decode_pending(&mut self, budget: usize) -> Result<usize> {
+        let pending = self.qa.undecoded();
+        let mut done = 0;
+        for id in pending.into_iter().take(budget) {
+            let query = match self.qa.get(id) {
+                Some(e) => e.query.clone(),
+                None => continue,
+            };
+            let emb = self.embedder.embed(&query)?;
+            let retrieved = self
+                .retriever
+                .retrieve(&query, &emb, &self.kb, self.cfg.top_k);
+            let (tokens, seg_keys) = self.assemble_prompt(&query, &retrieved);
+
+            let mut prefix: Option<QkvTensor> = None;
+            if self.cfg.qkv_enabled && seg_keys.len() > 1 {
+                let m = self.tree.match_prefix(&seg_keys[..seg_keys.len() - 1]);
+                if !m.is_empty() {
+                    let mut parts = Vec::with_capacity(m.len());
+                    for sid in &m.slices {
+                        parts.push(self.store.get(*sid)?);
+                    }
+                    let refs: Vec<&QkvTensor> = parts.iter().collect();
+                    prefix = Some(QkvTensor::concat(&refs));
+                }
+            }
+            let pre = self
+                .llm
+                .prefill(&tokens, prefix.as_ref().map(|p| (p, self.cfg.reuse_variant)))?;
+            let dec = self.llm.decode(&tokens, &pre, self.cfg.decode_tokens)?;
+            self.population_flops += pre.flops + dec.flops;
+            self.qa.set_answer(id, dec.tokens);
+            done += 1;
+        }
+        Ok(done)
+    }
+
+    /// QA→QKV conversion (§4.3.3): re-prefill QA-bank queries whose tree
+    /// slices were evicted, while storage headroom remains.
+    pub fn restore_qkv(&mut self, budget: usize) -> Result<usize> {
+        if !self.cfg.qkv_enabled {
+            return Ok(0);
+        }
+        let queries: Vec<String> = self
+            .qa
+            .entries()
+            .iter()
+            .map(|e| e.query.clone())
+            .collect();
+        let mut restored = 0;
+        for query in queries {
+            if restored >= budget {
+                break;
+            }
+            let emb = self.embedder.embed(&query)?;
+            let retrieved = self
+                .retriever
+                .retrieve(&query, &emb, &self.kb, self.cfg.top_k);
+            let (tokens, seg_keys) = self.assemble_prompt(&query, &retrieved);
+            let path = &seg_keys[..seg_keys.len() - 1];
+            let cached = self.tree.cached_prefix_len(path);
+            if cached >= path.len() {
+                continue; // fully present
+            }
+            // headroom check: one segment slice per missing node
+            let missing = path.len() - cached;
+            let slice_bytes = self.llm.dims.layers * 3 * SEGMENT_TOKENS * self.llm.dims.d_model * 4;
+            if self.tree.bytes_used() + missing * slice_bytes > self.tree.byte_limit() {
+                continue;
+            }
+            let pre = self.llm.prefill(&tokens, None)?;
+            self.population_flops += pre.flops;
+            let slices = slice_prompt(&pre.qkv, &seg_keys);
+            let keys: Vec<u64> = slices.iter().map(|s| s.key).collect();
+            let tensors: Vec<QkvTensor> = slices.into_iter().map(|s| s.tensor).collect();
+            self.tree.insert_path(&keys, tensors, &mut self.store)?;
+            restored += 1;
+        }
+        Ok(restored)
+    }
+
+    /// Probe: cached-prefix length a query would see right now (no LFU
+    /// side effects).  Used by Fig 5 / scheduler analyses.
+    pub fn probe_prefix(&self, query: &str, emb: &[f32]) -> (usize, usize) {
+        let retrieved = self
+            .retriever
+            .retrieve(query, &emb.to_vec(), &self.kb, self.cfg.top_k);
+        let (_, seg_keys) = self.assemble_prompt(query, &retrieved);
+        let path = &seg_keys[..seg_keys.len() - 1];
+        (self.tree.cached_prefix_len(path), path.len())
+    }
+}
+
+/// Render generated token ids as comparable pseudo-text ("t123 t456 …")
+/// — answers are sequences either way; ROUGE/BLEU operate on the tokens.
+pub fn tokens_to_text(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|t| format!("t{t}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_to_text_roundtrip_shape() {
+        assert_eq!(tokens_to_text(&[1, 22, 333]), "t1 t22 t333");
+        assert_eq!(tokens_to_text(&[]), "");
+    }
+}

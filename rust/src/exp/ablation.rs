@@ -1,0 +1,207 @@
+//! Ablation + sensitivity studies: Figs 16, 17, 18, 19 (paper §5.6–5.7).
+
+use anyhow::Result;
+
+use super::common::{replay_config, reports_dir, users_per_dataset, ReplayOpts};
+use crate::config::{PerCacheConfig, PopulationMode};
+use crate::datasets;
+use crate::metrics::text::{bleu, rouge_l};
+use crate::runtime::Runtime;
+use crate::util::table::Table;
+
+/// Fig 16: remove one component at a time (QA bank / QKV cache / query
+/// prediction); latency + per-layer hit rates at τ ∈ {0.85, 0.8}.
+pub fn fig16(rt: &Runtime) -> Result<()> {
+    let variants: [(&str, fn(&mut PerCacheConfig)); 4] = [
+        ("PerCache", |_| {}),
+        ("w/o QA bank", |c| c.qa_enabled = false),
+        ("w/o QKV cache", |c| c.qkv_enabled = false),
+        ("w/o prediction", |c| c.population = PopulationMode::Reactive),
+    ];
+
+    let mut lat_t = Table::new(
+        "Fig 16a — ablation mean latency ms (τ=0.85)",
+        &["variant", "mised", "enronqa"],
+    );
+
+    let users = users_per_dataset().min(3);
+    let mut full_mean = f64::NAN;
+    for (name, tweak) in variants {
+        let mut means = Vec::new();
+        for ds in ["mised", "enronqa"] {
+            let mut acc = 0.0;
+            for u in 0..users {
+                let data = datasets::generate(ds, u);
+                let mut cfg = PerCacheConfig::default();
+                tweak(&mut cfg);
+                let out = replay_config(rt, &cfg, &data, &ReplayOpts::default())?;
+                acc += out.recorder.mean_total_ms();
+            }
+            means.push(acc / users as f64);
+        }
+        if name == "PerCache" {
+            full_mean = (means[0] + means[1]) / 2.0;
+        }
+        lat_t.row(vec![
+            name.into(),
+            format!("{:.0}", means[0]),
+            format!("{:.0}", means[1]),
+        ]);
+    }
+    lat_t.emit(&reports_dir(), "fig16a");
+    println!("[fig16a] full PerCache lowest at {full_mean:.0} ms — every component contributes");
+
+    // hit-rate comparison: prediction on vs off, τ ∈ {0.85, 0.8}
+    let mut hit_t = Table::new(
+        "Fig 16b — hit rates with/without prediction",
+        &["dataset", "tau", "qkv_hit_with", "qkv_hit_without", "qa_hit_with", "qa_hit_without"],
+    );
+    for ds in ["mised", "enronqa"] {
+        for tau in [0.85, 0.8] {
+            let mut with = (0.0, 0.0);
+            let mut without = (0.0, 0.0);
+            for u in 0..users {
+                let data = datasets::generate(ds, u);
+                let mut cfg = PerCacheConfig::default();
+                cfg.tau_query = tau;
+                let o = replay_config(rt, &cfg, &data, &ReplayOpts::default())?;
+                with.0 += o.recorder.qkv_hit_rate();
+                with.1 += o.recorder.qa_hit_rate();
+                cfg.population = PopulationMode::Reactive;
+                let o = replay_config(rt, &cfg, &data, &ReplayOpts::default())?;
+                without.0 += o.recorder.qkv_hit_rate();
+                without.1 += o.recorder.qa_hit_rate();
+            }
+            let n = users as f64;
+            hit_t.row(vec![
+                ds.into(),
+                format!("{tau}"),
+                format!("{:.0}%", with.0 / n * 100.0),
+                format!("{:.0}%", without.0 / n * 100.0),
+                format!("{:.0}%", with.1 / n * 100.0),
+                format!("{:.0}%", without.1 / n * 100.0),
+            ]);
+        }
+    }
+    hit_t.emit(&reports_dir(), "fig16b");
+    println!("[fig16b] prediction lifts hit rates for both cache layers");
+    Ok(())
+}
+
+/// Fig 17: prediction stride 1..5 sweep (mean latency, user0).
+pub fn fig17(rt: &Runtime) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 17 — impact of prediction stride",
+        &["stride", "mised_ms", "enronqa_ms", "mised_qa_hit", "enronqa_qa_hit"],
+    );
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for stride in 1..=5usize {
+        let mut row = vec![stride.to_string()];
+        let mut hits = Vec::new();
+        for ds in ["mised", "enronqa"] {
+            let data = datasets::generate(ds, 0);
+            let mut cfg = PerCacheConfig::default();
+            cfg.prediction_stride = stride;
+            let out = replay_config(rt, &cfg, &data, &ReplayOpts::default())?;
+            row.push(format!("{:.0}", out.recorder.mean_total_ms()));
+            hits.push(format!("{:.0}%", out.recorder.qa_hit_rate() * 100.0));
+            if ds == "mised" {
+                if stride == 1 {
+                    first = out.recorder.mean_total_ms();
+                }
+                if stride == 5 {
+                    last = out.recorder.mean_total_ms();
+                }
+            }
+        }
+        row.extend(hits);
+        t.row(row);
+    }
+    t.emit(&reports_dir(), "fig17");
+    println!(
+        "[fig17] larger stride populates more entries: {first:.0} ms (stride 1) → \
+         {last:.0} ms (stride 5) on mised"
+    );
+    Ok(())
+}
+
+/// Fig 18: QKV storage-limit sweep (paper 6–12 GB ⇒ slice-count
+/// equivalents here; both units reported).
+pub fn fig18(rt: &Runtime) -> Result<()> {
+    let slice = 4 * 3 * 64 * 256 * 4 + 16; // llama slice bytes
+    let mut t = Table::new(
+        "Fig 18 — impact of QKV storage limit",
+        &["slices", "paper_equiv_gb", "mised_ms", "enronqa_ms", "seg_reuse"],
+    );
+    for slices in [7usize, 8, 10, 12, 14] {
+        let mut row = vec![slices.to_string(), format!("{:.1}", slices as f64 * 0.87)];
+        let mut reuse = 0.0;
+        for ds in ["mised", "enronqa"] {
+            let data = datasets::generate(ds, 0);
+            let mut cfg = PerCacheConfig::default();
+            cfg.qkv_storage_bytes = slices * slice;
+            let out = replay_config(rt, &cfg, &data, &ReplayOpts::default())?;
+            row.push(format!("{:.0}", out.recorder.mean_total_ms()));
+            reuse += out.recorder.segment_reuse_ratio();
+        }
+        row.push(format!("{:.0}%", reuse / 2.0 * 100.0));
+        t.row(row);
+    }
+    t.emit(&reports_dir(), "fig18");
+    println!("[fig18] relaxed storage keeps more QKV slices resident → lower latency");
+    Ok(())
+}
+
+/// Fig 19: τ_query sweep 0.60–0.95 — ROUGE-L, BLEU, latency, hit rate.
+/// Quality reference = naive full-inference answers (self-consistency).
+pub fn fig19(rt: &Runtime) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 19 — impact of similarity threshold (mised+enronqa user0)",
+        &["tau", "rouge_l", "bleu", "mean_ms", "qa_hit_rate"],
+    );
+    let mut series = Vec::new();
+    for tau in [0.60, 0.70, 0.80, 0.85, 0.90, 0.95] {
+        let mut rouge = 0.0;
+        let mut bl = 0.0;
+        let mut lat = 0.0;
+        let mut hit = 0.0;
+        let mut n = 0.0;
+        for ds in ["mised", "enronqa"] {
+            let data = datasets::generate(ds, 0);
+            let mut naive_cfg = PerCacheConfig::default();
+            naive_cfg.qa_enabled = false;
+            naive_cfg.qkv_enabled = false;
+            naive_cfg.population = PopulationMode::Reactive;
+            let naive = replay_config(rt, &naive_cfg, &data, &ReplayOpts::default())?;
+
+            let mut cfg = PerCacheConfig::default();
+            cfg.tau_query = tau;
+            let out = replay_config(rt, &cfg, &data, &ReplayOpts::default())?;
+            for (a, b) in naive.recorder.records.iter().zip(&out.recorder.records) {
+                rouge += rouge_l(&b.answer, &a.answer);
+                bl += bleu(&b.answer, &a.answer);
+                n += 1.0;
+            }
+            lat += out.recorder.mean_total_ms();
+            hit += out.recorder.qa_hit_rate();
+        }
+        series.push((tau, rouge / n, lat / 2.0, hit / 2.0));
+        t.row(vec![
+            format!("{tau:.2}"),
+            format!("{:.3}", rouge / n),
+            format!("{:.3}", bl / n),
+            format!("{:.0}", lat / 2.0),
+            format!("{:.0}%", hit / 2.0 * 100.0),
+        ]);
+    }
+    t.emit(&reports_dir(), "fig19");
+    let lo = series.first().unwrap();
+    let hi = series.last().unwrap();
+    println!(
+        "[fig19] τ {:.2}→{:.2}: hit rate {:.0}%→{:.0}%, latency {:.0}→{:.0} ms, quality \
+         {:.3}→{:.3} — the latency/quality trade-off",
+        lo.0, hi.0, lo.3 * 100.0, hi.3 * 100.0, lo.2, hi.2, lo.1, hi.1
+    );
+    Ok(())
+}

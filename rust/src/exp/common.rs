@@ -1,0 +1,195 @@
+//! Shared experiment machinery: the canonical user-replay loop, device
+//! scaling, report output paths.
+//!
+//! Replay protocol (mirrors the paper's §5.3 setup): personal data is
+//! ingested first; predictive methods then run two knowledge-based
+//! prediction rounds ("PerCache performs knowledge-based query prediction
+//! twice"); user queries are processed sequentially, with an idle tick
+//! (history-based prediction + conversions) after each query.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::config::{PerCacheConfig, PopulationMode};
+use crate::datasets::{self, UserData};
+use crate::engine::PerCache;
+use crate::metrics::{QueryRecord, Recorder};
+use crate::runtime::Runtime;
+use crate::sim::DeviceProfile;
+
+/// Where CSVs land ($PERCACHE_REPORTS or ./reports).
+pub fn reports_dir() -> PathBuf {
+    std::env::var("PERCACHE_REPORTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("reports"))
+}
+
+/// Fast mode trims user counts for quick iterations
+/// (PERCACHE_FAST=1).
+pub fn fast_mode() -> bool {
+    std::env::var("PERCACHE_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn users_per_dataset() -> usize {
+    if fast_mode() {
+        2
+    } else {
+        datasets::USERS_PER_DATASET
+    }
+}
+
+/// Upfront knowledge-prediction rounds before queries arrive (paper §5.3).
+pub const WARM_PREDICTION_ROUNDS: usize = 2;
+
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    pub recorder: Recorder,
+    /// Idle-side compute (population/prediction/conversions).
+    pub population_flops: u64,
+    /// Per-query cumulative population FLOPs snapshots (Fig 15a series).
+    pub population_flops_series: Vec<u64>,
+}
+
+/// Options that individual experiments tweak.
+#[derive(Clone)]
+pub struct ReplayOpts {
+    pub device: Option<&'static DeviceProfile>,
+    /// Idle tick after every n-th query (0 = never).
+    pub idle_every: usize,
+    /// τ_query schedule: (query_index, new_tau) applied *before* that query.
+    pub tau_schedule: Vec<(usize, f64)>,
+    /// QKV storage schedule: (query_index, new_bytes).
+    pub storage_schedule: Vec<(usize, usize)>,
+}
+
+impl Default for ReplayOpts {
+    fn default() -> Self {
+        ReplayOpts {
+            device: None,
+            idle_every: 1,
+            tau_schedule: Vec::new(),
+            storage_schedule: Vec::new(),
+        }
+    }
+}
+
+/// Build an engine for `method`, ingest the user's documents.
+pub fn build_engine<'rt>(
+    rt: &'rt Runtime,
+    method: &str,
+    base: &PerCacheConfig,
+    data: &UserData,
+) -> Result<PerCache<'rt>> {
+    let mut eng = baselines::build_method(rt, method, base)?;
+    for doc in &data.documents {
+        eng.add_document(doc)?;
+    }
+    Ok(eng)
+}
+
+/// The canonical replay: warm prediction (predictive methods only), then
+/// serve each query with optional idle ticks and schedule events.
+pub fn replay_user(
+    rt: &Runtime,
+    method: &str,
+    base: &PerCacheConfig,
+    data: &UserData,
+    opts: &ReplayOpts,
+) -> Result<ReplayOutcome> {
+    let cfg = baselines::method_config(method, base)?;
+    replay_config(rt, &cfg, data, opts)
+}
+
+/// Replay with an explicit configuration (ablations/sweeps that aren't a
+/// named method).
+pub fn replay_config(
+    rt: &Runtime,
+    cfg: &PerCacheConfig,
+    data: &UserData,
+    opts: &ReplayOpts,
+) -> Result<ReplayOutcome> {
+    let mut eng = PerCache::new(rt, cfg.clone())?;
+    for doc in &data.documents {
+        eng.add_document(doc)?;
+    }
+
+    if eng.cfg.population == PopulationMode::Predictive {
+        for _ in 0..WARM_PREDICTION_ROUNDS {
+            eng.idle_tick()?;
+        }
+    }
+
+    let mut recorder = Recorder::new();
+    let mut series = Vec::with_capacity(data.queries.len());
+    for (i, q) in data.queries.iter().enumerate() {
+        for (qi, tau) in &opts.tau_schedule {
+            if *qi == i {
+                eng.set_tau_query(*tau);
+            }
+        }
+        for (qi, bytes) in &opts.storage_schedule {
+            if *qi == i {
+                eng.set_qkv_storage(*bytes);
+            }
+        }
+        let r = eng.serve(&q.text)?;
+        recorder.push(scale(&r, opts.device));
+        if opts.idle_every > 0 && (i + 1) % opts.idle_every == 0 {
+            eng.idle_tick()?;
+        }
+        series.push(eng.population_flops);
+    }
+    Ok(ReplayOutcome {
+        recorder,
+        population_flops: eng.population_flops,
+        population_flops_series: series,
+    })
+}
+
+pub fn scale(r: &QueryRecord, device: Option<&DeviceProfile>) -> QueryRecord {
+    match device {
+        Some(d) => d.scale_record(r),
+        None => r.clone(),
+    }
+}
+
+/// Mean latency over a user replay for a (method, dataset, user) cell —
+/// the unit of Figs 14/21/22.
+pub fn user_mean_latency(
+    rt: &Runtime,
+    method: &str,
+    base: &PerCacheConfig,
+    data: &UserData,
+    device: Option<&'static DeviceProfile>,
+) -> Result<(f64, Recorder)> {
+    let opts = ReplayOpts {
+        device,
+        ..Default::default()
+    };
+    let out = replay_user(rt, method, base, data, &opts)?;
+    Ok((out.recorder.mean_total_ms(), out.recorder))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_dir_env_override() {
+        std::env::set_var("PERCACHE_REPORTS", "/tmp/percache-reports-test");
+        assert_eq!(
+            reports_dir(),
+            PathBuf::from("/tmp/percache-reports-test")
+        );
+        std::env::remove_var("PERCACHE_REPORTS");
+    }
+
+    #[test]
+    fn default_opts_sane() {
+        let o = ReplayOpts::default();
+        assert_eq!(o.idle_every, 1);
+        assert!(o.tau_schedule.is_empty());
+    }
+}

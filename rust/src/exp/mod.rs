@@ -1,0 +1,17 @@
+//! Paper-figure/table reproduction harness.
+//!
+//! One module per evaluation section; `runner` maps experiment ids
+//! (fig2…fig23, table1) to implementations.  Each experiment prints a
+//! plain-text table (the paper's rows/series) and writes a CSV under
+//! reports/.  See DESIGN.md §5 for the full experiment index.
+
+pub mod ablation;
+pub mod common;
+pub mod motivation;
+pub mod overall;
+pub mod overhead;
+pub mod runner;
+pub mod scheduler_exp;
+pub mod showcase;
+
+pub use runner::{run_all, run_experiment, APPENDIX, EXPERIMENTS};

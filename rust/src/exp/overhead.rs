@@ -1,0 +1,167 @@
+//! System overhead: Fig 20 (battery) and Table 1 (per-operation latency,
+//! per-item storage) — paper §5.8 / App A.4.
+
+use anyhow::Result;
+
+use super::common::{reports_dir, ReplayOpts};
+use crate::config::PerCacheConfig;
+use crate::datasets;
+use crate::engine::PerCache;
+use crate::runtime::Runtime;
+use crate::scheduler::PopulationStrategy;
+use crate::sim::{Battery, ONEPLUS_ACE6};
+use crate::util::table::Table;
+
+/// Fig 20: battery level vs cache-population count (OnePlus Ace 6
+/// energy model; one population = embed + retrieve + match + prefill +
+/// decode + save, like the paper's measured loop).
+pub fn fig20(rt: &Runtime) -> Result<()> {
+    let data = datasets::generate("mised", 0);
+    let cfg = PerCacheConfig::default();
+    let mut eng = PerCache::new(rt, cfg)?;
+    for doc in &data.documents {
+        eng.add_document(doc)?;
+    }
+
+    let mut battery = Battery::new(ONEPLUS_ACE6);
+    // Paper-equivalent column: scale measured FLOPs by the 3B/our-model
+    // parameter ratio and use an NPU-class energy constant (~0.03 J/GFLOP)
+    // — the *shape* (linear in population count) is the reproducible
+    // claim; magnitude depends on these two documented constants.
+    let params_ratio = 3.0e9 / eng.llm.dims.params() as f64;
+    let npu_j_per_gflop = 0.03;
+    let mut paper_joules = 0.0f64;
+    let battery_joules = 6100.0 * 3.85;
+
+    let mut t = Table::new(
+        "Fig 20 — battery level vs cache populations (OnePlus Ace 6 model)",
+        &["populations", "battery_%", "paper_equiv_%_used"],
+    );
+    t.row(vec!["0".into(), "100.0".into(), "0.00".into()]);
+
+    // repeatedly populate with fresh synthetic queries (the paper reruns
+    // one query's full population; we vary text to avoid dedup while
+    // keeping the same prompt shape)
+    let mut count = 0;
+    for round in 0..60 {
+        let q = format!(
+            "population probe {round} about the {} status",
+            ["budget", "roadmap", "sprint", "design"][round % 4]
+        );
+        let before = eng.population_flops;
+        if eng
+            .populate_query(&q, PopulationStrategy::PrefillAndDecode, false)?
+            .is_some()
+        {
+            count += 1;
+            let delta = eng.population_flops - before;
+            battery.consume_flops(delta);
+            paper_joules += delta as f64 / 1e9 * params_ratio * npu_j_per_gflop;
+        }
+        if count % 10 == 0 && count > 0 {
+            t.row(vec![
+                count.to_string(),
+                format!("{:.2}", battery.level_percent()),
+                format!("{:.2}", paper_joules / battery_joules * 100.0),
+            ]);
+        }
+    }
+    t.emit(&reports_dir(), "fig20");
+    println!(
+        "[fig20] {count} populations drain {:.2}% battery at our model scale; \
+         {:.1}% at 3B-equivalent FLOPs — linear in count \
+         (paper: 51 populations ≈ 10%; 1–5 predictions ≈ 1–2%)",
+        battery.consumed_percent(),
+        paper_joules / battery_joules * 100.0
+    );
+    Ok(())
+}
+
+/// Table 1: per-operation latency + per-item storage.
+pub fn table1(rt: &Runtime) -> Result<()> {
+    let data = datasets::generate("enronqa", 0);
+    let cfg = PerCacheConfig::default();
+    let mut eng = PerCache::new(rt, cfg)?;
+    for doc in &data.documents {
+        eng.add_document(doc)?;
+    }
+    // warm caches so matching/loading paths are exercised
+    eng.idle_tick()?;
+    eng.idle_tick()?;
+
+    // measure each stage over the user's queries
+    let mut sums = [0.0f64; 7]; // embed, qa, retr, tree, load, prefill, decode
+    let mut n = 0.0f64;
+    for q in &data.queries {
+        let r = eng.serve(&q.text)?;
+        if r.path == crate::metrics::ServePath::QaHit {
+            continue; // paper's table measures the full pipeline ops
+        }
+        sums[0] += r.embed_ms;
+        sums[1] += r.qa_match_ms;
+        sums[2] += r.retrieval_ms;
+        sums[3] += r.tree_match_ms;
+        sums[4] += r.cache_load_ms;
+        sums[5] += r.prefill_ms;
+        sums[6] += r.decode_ms;
+        n += 1.0;
+    }
+    for s in &mut sums {
+        *s /= n.max(1.0);
+    }
+    let total: f64 = sums.iter().sum();
+
+    // storage per item
+    let qa_item = eng
+        .qa
+        .entries()
+        .iter()
+        .map(|e| e.bytes())
+        .sum::<usize>()
+        .max(1)
+        / eng.qa.len().max(1);
+    let dims = eng.llm.dims;
+    let qkv_item = dims.layers * 3 * crate::tokenizer::SEGMENT_TOKENS * dims.d_model * 4 + 16;
+    let chunk_item = eng.kb.bytes() / eng.kb.len().max(1);
+
+    let mut t = Table::new(
+        "Table 1 — system overhead (llama config, cpu-baseline ms)",
+        &["operation", "time_ms", "% of total", "component", "size"],
+    );
+    let names = [
+        "matching question (embed+QA)",
+        "qa match",
+        "knowledge retrieval",
+        "matching QKV cache",
+        "QKV cache loading",
+        "LLM prefilling",
+        "LLM decoding",
+    ];
+    let sizes = [
+        format!("QA bank {qa_item} B/entry"),
+        String::new(),
+        String::new(),
+        format!("QKV slice {:.2} MB/chunk", qkv_item as f64 / 1e6),
+        String::new(),
+        format!("knowledge chunk {chunk_item} B"),
+        String::new(),
+    ];
+    for i in 0..7 {
+        t.row(vec![
+            names[i].into(),
+            format!("{:.3}", sums[i]),
+            format!("{:.1}%", sums[i] / total * 100.0),
+            sizes[i].clone(),
+            String::new(),
+        ]);
+    }
+    t.emit(&reports_dir(), "table1");
+    println!(
+        "[table1] prefill {:.0}% + decode {:.0}% of pipeline latency (paper: 77.9% + 13.7%); \
+         QKV slice dominates storage (paper: 87 MB/chunk at 3B scale)",
+        sums[5] / total * 100.0,
+        sums[6] / total * 100.0
+    );
+    let _ = ReplayOpts::default();
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Experiment registry + dispatcher: every table and figure in the
+//! paper's evaluation maps to one entry here (`percache exp <id>`).
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+
+use super::{ablation, motivation, overall, overhead, scheduler_exp, showcase};
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: [&str; 18] = [
+    "fig2", "fig3", "fig4", "fig5", "fig6",
+    "fig11", "fig12", "fig13",
+    "fig14",
+    "fig15a", "fig15b", "fig15c",
+    "fig16", "fig17", "fig18", "fig19",
+    "fig20", "table1",
+];
+
+/// Appendix experiments (heavier; included in `exp all` but also
+/// runnable individually).
+pub const APPENDIX: [&str; 3] = ["fig21", "fig22", "fig23"];
+
+pub fn run_experiment(rt: &Runtime, name: &str) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    println!("\n=== {name} ===");
+    match name {
+        "fig2" => motivation::fig2(rt)?,
+        "fig3" => motivation::fig3(rt)?,
+        "fig4" => motivation::fig4(rt)?,
+        "fig5" => motivation::fig5(rt)?,
+        "fig6" => motivation::fig6(rt)?,
+        "fig11" => showcase::fig11(rt)?,
+        "fig12" => showcase::fig12(rt)?,
+        "fig13" => showcase::fig13(rt)?,
+        "fig14" => overall::fig14(rt)?,
+        "fig15a" => scheduler_exp::fig15a(rt)?,
+        "fig15b" => scheduler_exp::fig15b(rt)?,
+        "fig15c" => scheduler_exp::fig15c(rt)?,
+        "fig16" => ablation::fig16(rt)?,
+        "fig17" => ablation::fig17(rt)?,
+        "fig18" => ablation::fig18(rt)?,
+        "fig19" => ablation::fig19(rt)?,
+        "fig20" => overhead::fig20(rt)?,
+        "fig21" => overall::fig21(rt)?,
+        "fig22" => overall::fig22(rt)?,
+        "fig23" => overall::fig23(rt)?,
+        "table1" => overhead::table1(rt)?,
+        other => anyhow::bail!(
+            "unknown experiment '{other}' — known: {:?} + {:?}",
+            EXPERIMENTS,
+            APPENDIX
+        ),
+    }
+    println!("[{name}] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Everything, in order (the `exp all` target).
+pub fn run_all(rt: &Runtime) -> Result<()> {
+    for name in EXPERIMENTS.iter().chain(APPENDIX.iter()) {
+        run_experiment(rt, name)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_every_paper_artifact() {
+        // §2: figs 2–6 (motivation); §5: figs 11–20 + table 1; appendix:
+        // figs 21–23.  Fig 7–10 are architecture diagrams (no data).
+        for id in ["fig2", "fig14", "fig15a", "fig19", "fig20", "table1"] {
+            assert!(EXPERIMENTS.contains(&id), "{id} missing");
+        }
+        for id in ["fig21", "fig22", "fig23"] {
+            assert!(APPENDIX.contains(&id), "{id} missing");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Cache-scheduler micro-benchmarks: Figs 15a/15b/15c (paper §5.5),
+//! on the MISeD user0 subset like the paper.
+
+use anyhow::Result;
+
+use super::common::{replay_config, reports_dir, ReplayOpts};
+use crate::config::PerCacheConfig;
+use crate::datasets;
+use crate::runtime::Runtime;
+use crate::util::table::Table;
+
+/// Fig 15a: τ_query raised 0.85 → 0.90 after query 2; with the scheduler,
+/// population switches to prefill-only and accumulated TFLOPs flatten.
+pub fn fig15a(rt: &Runtime) -> Result<()> {
+    let data = datasets::generate("mised", 0);
+    let mut base = PerCacheConfig::default();
+    base.tau_query = 0.85;
+
+    let opts = ReplayOpts {
+        tau_schedule: vec![(3, 0.90)],
+        ..Default::default()
+    };
+
+    let run = |scheduler_on: bool| -> Result<(Vec<u64>, Vec<f64>)> {
+        let mut cfg = base.clone();
+        cfg.scheduler_enabled = scheduler_on;
+        let out = replay_config(rt, &cfg, &data, &opts)?;
+        let lat: Vec<f64> = out.recorder.records.iter().map(|r| r.total_ms()).collect();
+        Ok((out.population_flops_series, lat))
+    };
+
+    let (with_sched, lat_on) = run(true)?;
+    let (without, lat_off) = run(false)?;
+
+    let mut t = Table::new(
+        "Fig 15a — accumulated population TFLOPs (τ 0.85→0.90 after q2)",
+        &["query", "with_scheduler", "without_scheduler", "lat_with_ms", "lat_without_ms"],
+    );
+    for i in 0..with_sched.len().min(without.len()) {
+        t.row(vec![
+            format!("q{i}"),
+            format!("{:.3}", with_sched[i] as f64 / 1e12),
+            format!("{:.3}", without[i] as f64 / 1e12),
+            format!("{:.0}", lat_on[i]),
+            format!("{:.0}", lat_off[i]),
+        ]);
+    }
+    t.emit(&reports_dir(), "fig15a");
+
+    let last = with_sched.len() - 1;
+    let saving = 1.0 - with_sched[last] as f64 / without[last].max(1) as f64;
+    println!(
+        "[fig15a] scheduler saves {:.1}% population compute after q{last} \
+         (paper: 14.12% after Query9) with comparable latency",
+        saving * 100.0
+    );
+    anyhow::ensure!(
+        with_sched[last] < without[last],
+        "scheduler must reduce population compute at high τ"
+    );
+    Ok(())
+}
+
+/// Fig 15b: τ_query dropped 0.90 → 0.85 after query 5; the scheduler
+/// decodes the pending (answer-less) QA entries so later queries hit.
+pub fn fig15b(rt: &Runtime) -> Result<()> {
+    let data = datasets::generate("mised", 0);
+    let mut base = PerCacheConfig::default();
+    base.tau_query = 0.90; // start high: population is prefill-only
+
+    let opts = ReplayOpts {
+        tau_schedule: vec![(5, 0.85)],
+        ..Default::default()
+    };
+
+    let mut with_cfg = base.clone();
+    with_cfg.scheduler_enabled = true;
+    let with_sched = replay_config(rt, &with_cfg, &data, &opts)?;
+
+    // baseline without scheduler: always prefill+decode population
+    let mut without_cfg = base.clone();
+    without_cfg.scheduler_enabled = false;
+    let without = replay_config(rt, &without_cfg, &data, &opts)?;
+
+    let mut t = Table::new(
+        "Fig 15b — per-query latency after τ 0.90→0.85 at q5 (QKV→QA conversion)",
+        &["query", "scheduler_ms", "no_scheduler_ms"],
+    );
+    for (i, (a, b)) in with_sched
+        .recorder
+        .records
+        .iter()
+        .zip(&without.recorder.records)
+        .enumerate()
+    {
+        t.row(vec![
+            format!("q{i}"),
+            format!("{:.0}", a.total_ms()),
+            format!("{:.0}", b.total_ms()),
+        ]);
+    }
+    t.emit(&reports_dir(), "fig15b");
+
+    let mean_with = with_sched.recorder.mean_total_ms();
+    let mean_without = without.recorder.mean_total_ms();
+    println!(
+        "[fig15b] scheduler {:.0} ms vs always-decode {:.0} ms — comparable latency \
+         with less upfront compute (paper: 'comparable to the baseline')",
+        mean_with, mean_without
+    );
+    Ok(())
+}
+
+/// Fig 15c: QKV storage relaxed mid-stream; the scheduler restores
+/// evicted slices from QA-bank queries, and later queries match more
+/// cached segments.
+pub fn fig15c(rt: &Runtime) -> Result<()> {
+    let data = datasets::generate("mised", 0);
+    let mut base = PerCacheConfig::default();
+    // tight budget ≈ 6 "GB" paper-equivalent: only the most recent path
+    // survives, so eviction churn is severe before the relax point
+    let slice = 4 * 3 * 64 * 256 * 4 + 16;
+    base.qkv_storage_bytes = 3 * slice;
+    // isolate the QA→QKV *conversion*: reactive population (prediction
+    // would refill the tree in both runs) and τ above any paraphrase so
+    // every query exercises the QKV path (the layer §5.5.3 measures)
+    base.population = crate::config::PopulationMode::Reactive;
+    base.tau_query = 0.99;
+
+    let grow = |on: bool| -> Result<(Vec<f64>, Vec<usize>)> {
+        let mut cfg = base.clone();
+        cfg.scheduler_enabled = on;
+        let opts = ReplayOpts {
+            storage_schedule: vec![(6, 12 * slice)], // 6GB→8GB analogue
+            ..Default::default()
+        };
+        let out = replay_config(rt, &cfg, &data, &opts)?;
+        Ok((
+            out.recorder.records.iter().map(|r| r.total_ms()).collect(),
+            out.recorder.records.iter().map(|r| r.matched_segments).collect(),
+        ))
+    };
+
+    let (lat_on, seg_on) = grow(true)?;
+    let (lat_off, seg_off) = grow(false)?;
+
+    let mut t = Table::new(
+        "Fig 15c — storage relaxed at q6 (QA→QKV restore)",
+        &["query", "sched_ms", "sched_matched", "nosched_ms", "nosched_matched"],
+    );
+    for i in 0..lat_on.len().min(lat_off.len()) {
+        t.row(vec![
+            format!("q{i}"),
+            format!("{:.0}", lat_on[i]),
+            seg_on[i].to_string(),
+            format!("{:.0}", lat_off[i]),
+            seg_off[i].to_string(),
+        ]);
+    }
+    t.emit(&reports_dir(), "fig15c");
+
+    let tail_on: usize = seg_on[7.min(seg_on.len() - 1)..].iter().sum();
+    let tail_off: usize = seg_off[7.min(seg_off.len() - 1)..].iter().sum();
+    println!(
+        "[fig15c] matched segments after relax: scheduler {tail_on} vs no-scheduler {tail_off} \
+         (paper: 2 chunks vs 1 chunk matched for q7..q9)"
+    );
+    Ok(())
+}

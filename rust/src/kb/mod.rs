@@ -1,0 +1,257 @@
+//! Knowledge bank: the user's personal data, segmented into fixed-length
+//! chunks with embeddings, plus the knowledge abstract used by
+//! knowledge-based query prediction (paper §4.1.1–4.1.2).
+//!
+//! A chunk is exactly one 64-token prompt segment; the chunk is also the
+//! node unit of the QKV cache tree, so "chunk" and "cacheable segment" are
+//! the same thing throughout the system.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::embedding::{Embedder, Embedding};
+use crate::tokenizer::{self, SEGMENT_TOKENS};
+
+pub type ChunkId = usize;
+
+/// Words per chunk when splitting documents.  Kept below SEGMENT_TOKENS so
+/// the encoded segment never truncates (the paper fixes 100-word chunks
+/// for a larger token budget; the ratio is the same).
+pub const CHUNK_WORDS: usize = 48;
+
+#[derive(Debug, Clone)]
+pub struct Chunk {
+    pub id: ChunkId,
+    pub text: String,
+    /// Segment-padded token ids (length SEGMENT_TOKENS).
+    pub tokens: Vec<i32>,
+    pub embedding: Embedding,
+    /// Content hash — the QKV tree's node key (§4.2.2 matches by text).
+    pub key: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct KnowledgeBank {
+    chunks: Vec<Chunk>,
+    /// Document-frequency table over chunk words (for TF-IDF abstracts).
+    df: HashMap<String, usize>,
+    /// Chunks added since the last abstract refresh (batch processing —
+    /// §4.1.2 "batch-processes multiple chunks").
+    pending_abstract: Vec<ChunkId>,
+}
+
+impl KnowledgeBank {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Split a document into CHUNK_WORDS-word chunks and add each.
+    pub fn add_document(&mut self, text: &str, embedder: &Embedder) -> Result<Vec<ChunkId>> {
+        let words = tokenizer::words(text);
+        let mut ids = Vec::new();
+        for window in words.chunks(CHUNK_WORDS) {
+            let chunk_text = window.join(" ");
+            ids.push(self.add_chunk(&chunk_text, embedder)?);
+        }
+        Ok(ids)
+    }
+
+    /// Add one pre-chunked text.
+    pub fn add_chunk(&mut self, text: &str, embedder: &Embedder) -> Result<ChunkId> {
+        let id = self.chunks.len();
+        let tokens = tokenizer::encode_segment(text);
+        let embedding = embedder.embed(text)?;
+        let key = tokenizer::fnv1a64(text.as_bytes());
+        let mut seen = std::collections::HashSet::new();
+        for w in tokenizer::words(text) {
+            if seen.insert(w.clone()) {
+                *self.df.entry(w).or_insert(0) += 1;
+            }
+        }
+        self.chunks.push(Chunk {
+            id,
+            text: text.to_string(),
+            tokens,
+            embedding,
+            key,
+        });
+        self.pending_abstract.push(id);
+        Ok(id)
+    }
+
+    /// Insert a pre-built chunk without an embedder — for tests and for
+    /// dataset tooling that computes embeddings in batch elsewhere.
+    #[doc(hidden)]
+    pub fn test_insert_chunk(&mut self, chunk: Chunk) {
+        assert_eq!(chunk.id, self.chunks.len(), "chunk id must be dense");
+        let mut seen = std::collections::HashSet::new();
+        for w in tokenizer::words(&chunk.text) {
+            if seen.insert(w.clone()) {
+                *self.df.entry(w).or_insert(0) += 1;
+            }
+        }
+        self.pending_abstract.push(chunk.id);
+        self.chunks.push(chunk);
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    pub fn chunk(&self, id: ChunkId) -> &Chunk {
+        &self.chunks[id]
+    }
+
+    pub fn chunks(&self) -> &[Chunk] {
+        &self.chunks
+    }
+
+    /// Estimated storage of the raw knowledge bank (text + tokens +
+    /// embeddings), for Table 1's per-item numbers.
+    pub fn bytes(&self) -> usize {
+        self.chunks
+            .iter()
+            .map(|c| c.text.len() + SEGMENT_TOKENS * 4 + c.embedding.len() * 4)
+            .sum()
+    }
+
+    // -- knowledge abstract ---------------------------------------------------
+
+    /// Chunks whose content hasn't been folded into the abstract yet.
+    pub fn pending_abstract_chunks(&self) -> &[ChunkId] {
+        &self.pending_abstract
+    }
+
+    /// Mark pending chunks processed (the engine charges the LLM
+    /// summarization cost when it calls this).
+    pub fn mark_abstract_refreshed(&mut self) -> usize {
+        let n = self.pending_abstract.len();
+        self.pending_abstract.clear();
+        n
+    }
+
+    /// The knowledge abstract: top-`n` TF-IDF terms across the bank.  This
+    /// is the "collection of key content" the paper's LLM summarizer
+    /// produces; here key terms are extracted statistically (DESIGN.md §3
+    /// substitution) and the LLM cost is still charged by the engine.
+    pub fn abstract_terms(&self, n: usize) -> Vec<String> {
+        let total = self.chunks.len().max(1) as f64;
+        let mut tf: HashMap<String, usize> = HashMap::new();
+        for c in &self.chunks {
+            for w in tokenizer::words(&c.text) {
+                *tf.entry(w).or_insert(0) += 1;
+            }
+        }
+        let mut scored: Vec<(f64, String)> = tf
+            .into_iter()
+            .map(|(w, f)| {
+                let df = self.df.get(&w).copied().unwrap_or(1) as f64;
+                let idf = (total / df).ln() + 1.0;
+                (f as f64 * idf, w)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        scored
+            .into_iter()
+            .filter(|(_, w)| w.len() > 2) // drop degenerate fragments
+            .take(n)
+            .map(|(_, w)| w)
+            .collect()
+    }
+
+    /// Top terms of a single chunk (detail questions in prediction).
+    pub fn chunk_terms(&self, id: ChunkId, n: usize) -> Vec<String> {
+        let total = self.chunks.len().max(1) as f64;
+        let mut tf: HashMap<String, usize> = HashMap::new();
+        for w in tokenizer::words(&self.chunks[id].text) {
+            *tf.entry(w).or_insert(0) += 1;
+        }
+        let mut scored: Vec<(f64, String)> = tf
+            .into_iter()
+            .map(|(w, f)| {
+                let df = self.df.get(&w).copied().unwrap_or(1) as f64;
+                let idf = (total / df).ln() + 1.0;
+                (f as f64 * idf, w)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        scored
+            .into_iter()
+            .filter(|(_, w)| w.len() > 2)
+            .take(n)
+            .map(|(_, w)| w)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests that need an Embedder run in rust/tests/ (they require
+    // artifacts); here we exercise the embedder-free logic through a
+    // manual chunk constructor.
+    fn push_raw(kb: &mut KnowledgeBank, text: &str) {
+        let id = kb.chunks.len();
+        let mut seen = std::collections::HashSet::new();
+        for w in tokenizer::words(text) {
+            if seen.insert(w.clone()) {
+                *kb.df.entry(w).or_insert(0) += 1;
+            }
+        }
+        kb.chunks.push(Chunk {
+            id,
+            text: text.to_string(),
+            tokens: tokenizer::encode_segment(text),
+            embedding: vec![0.0; 4],
+            key: tokenizer::fnv1a64(text.as_bytes()),
+        });
+        kb.pending_abstract.push(id);
+    }
+
+    #[test]
+    fn abstract_terms_prefer_distinctive_words() {
+        let mut kb = KnowledgeBank::new();
+        push_raw(&mut kb, "the meeting covered budget budget budget topics");
+        push_raw(&mut kb, "the meeting covered travel plans for the offsite");
+        push_raw(&mut kb, "the meeting covered hiring for the design team");
+        let terms = kb.abstract_terms(4);
+        assert!(terms.contains(&"budget".to_string()), "{terms:?}");
+        // "meeting"/"covered" appear in every chunk → low idf, high tf;
+        // budget (tf 3, df 1) must outrank "the" is filtered by len? no,
+        // 'the' has len 3 and df 3 → low idf. Just check budget is first.
+        assert_eq!(terms[0], "budget");
+    }
+
+    #[test]
+    fn chunk_keys_differ_by_content() {
+        let mut kb = KnowledgeBank::new();
+        push_raw(&mut kb, "alpha beta");
+        push_raw(&mut kb, "alpha gamma");
+        assert_ne!(kb.chunk(0).key, kb.chunk(1).key);
+    }
+
+    #[test]
+    fn pending_abstract_batching() {
+        let mut kb = KnowledgeBank::new();
+        push_raw(&mut kb, "one");
+        push_raw(&mut kb, "two");
+        assert_eq!(kb.pending_abstract_chunks().len(), 2);
+        assert_eq!(kb.mark_abstract_refreshed(), 2);
+        assert!(kb.pending_abstract_chunks().is_empty());
+    }
+
+    #[test]
+    fn chunk_terms_top_n() {
+        let mut kb = KnowledgeBank::new();
+        push_raw(&mut kb, "flight booking reference code xk42 flight departs monday");
+        let t = kb.chunk_terms(0, 3);
+        assert!(t.contains(&"flight".to_string()));
+        assert!(t.len() <= 3);
+    }
+}

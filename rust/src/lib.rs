@@ -1,0 +1,42 @@
+//! # PerCache
+//!
+//! Reproduction of *"PerCache: Predictive Hierarchical Cache for RAG
+//! Applications on Mobile Devices"* as a three-layer rust + JAX + Pallas
+//! system: the rust coordinator here (Layer 3) serves every request from
+//! AOT-compiled HLO artifacts (Layers 2/1, built once by
+//! `python/compile/aot.py`) through the PJRT C API.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`runtime`] / [`llm`] / [`embedding`] — PJRT artifact execution.
+//! * [`cache`] — the hierarchical cache: QA bank + QKV prefix tree.
+//! * [`retrieval`] / [`kb`] — hybrid BM25+dense retrieval over the
+//!   knowledge bank.
+//! * [`predict`] — predictive cache population (knowledge/history views).
+//! * [`scheduler`] — adaptive population strategy + cross-layer conversion.
+//! * [`engine`] — the PerCache facade (serve + populate pipelines).
+//! * [`baselines`] — Naive / RAGCache / MeanCache / Sleep-time Compute and
+//!   combinations, behind one `CachePolicy` trait.
+//! * [`datasets`] / [`sim`] — synthetic workloads and device models.
+//! * [`exp`] — the paper-figure/table reproduction harness.
+//! * [`util`] / [`testkit`] / [`tokenizer`] / [`metrics`] — substrates.
+
+pub mod baselines;
+pub mod cache;
+pub mod config;
+pub mod datasets;
+pub mod embedding;
+pub mod engine;
+pub mod exp;
+pub mod kb;
+pub mod llm;
+pub mod metrics;
+pub mod predict;
+pub mod retrieval;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod testkit;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,116 @@
+//! Shape-bucket planner: maps (total segments, cached-prefix segments) to
+//! the AOT artifact that serves the request.
+//!
+//! HLO artifacts are static-shape; the grid is `prefill_full_n{2..5}` and
+//! `prefill_reuse_{qkv,kv}_p{1..n-1}_n{2..5}` (DESIGN.md §2).  The planner
+//! is pure logic — unit-testable without a runtime.
+
+/// Reuse flavor (PerCache stores Q too; RAGCache baseline stores only K/V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReuseVariant {
+    Qkv,
+    Kv,
+}
+
+impl ReuseVariant {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ReuseVariant::Qkv => "reuse_qkv",
+            ReuseVariant::Kv => "reuse_kv",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketPlan {
+    pub artifact: String,
+    pub n_seg: usize,
+    /// Cached-prefix segments actually used (may be clamped below the
+    /// match length when no exact bucket exists).
+    pub p_seg: usize,
+}
+
+/// Grid bounds (must match configs.N_SEGMENTS).
+pub const MIN_SEGMENTS: usize = 2;
+pub const MAX_SEGMENTS: usize = 5;
+
+/// Plan a prefill call.
+///
+/// `n_seg` — total prompt segments (sysprompt + chunks + query);
+/// `matched_seg` — cache-tree prefix match length in segments.
+///
+/// Returns None if the prompt doesn't fit the grid (caller must re-chunk).
+pub fn plan_prefill(n_seg: usize, matched_seg: usize, variant: ReuseVariant) -> Option<BucketPlan> {
+    if !(MIN_SEGMENTS..=MAX_SEGMENTS).contains(&n_seg) {
+        return None;
+    }
+    // Reuse buckets exist for every p in 1..n, so the only clamping is
+    // p <= n-1 (a full-prefix match still needs the query segment computed —
+    // the query text is fresh by definition, but a predicted duplicate can
+    // match all n; serve it from p = n-1).
+    let p = matched_seg.min(n_seg - 1);
+    if p == 0 {
+        return Some(BucketPlan {
+            artifact: format!("prefill_full_n{n_seg}"),
+            n_seg,
+            p_seg: 0,
+        });
+    }
+    Some(BucketPlan {
+        artifact: format!("prefill_{}_p{p}_n{n_seg}", variant.tag()),
+        n_seg,
+        p_seg: p,
+    })
+}
+
+/// Clamp a desired chunk count so that sysprompt + chunks + query fits the
+/// bucket grid: chunks <= MAX_SEGMENTS - 2.
+pub fn max_chunks() -> usize {
+    MAX_SEGMENTS - 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_prefill_when_no_match() {
+        let p = plan_prefill(4, 0, ReuseVariant::Qkv).unwrap();
+        assert_eq!(p.artifact, "prefill_full_n4");
+        assert_eq!(p.p_seg, 0);
+    }
+
+    #[test]
+    fn reuse_bucket_names() {
+        let p = plan_prefill(4, 2, ReuseVariant::Qkv).unwrap();
+        assert_eq!(p.artifact, "prefill_reuse_qkv_p2_n4");
+        let p = plan_prefill(3, 1, ReuseVariant::Kv).unwrap();
+        assert_eq!(p.artifact, "prefill_reuse_kv_p1_n3");
+    }
+
+    #[test]
+    fn full_match_clamped_to_n_minus_1() {
+        let p = plan_prefill(3, 3, ReuseVariant::Qkv).unwrap();
+        assert_eq!(p.p_seg, 2);
+        assert_eq!(p.artifact, "prefill_reuse_qkv_p2_n3");
+        let p = plan_prefill(5, 99, ReuseVariant::Qkv).unwrap();
+        assert_eq!(p.p_seg, 4);
+    }
+
+    #[test]
+    fn out_of_grid_rejected() {
+        assert!(plan_prefill(1, 0, ReuseVariant::Qkv).is_none());
+        assert!(plan_prefill(6, 0, ReuseVariant::Qkv).is_none());
+    }
+
+    #[test]
+    fn every_grid_point_plans() {
+        for n in MIN_SEGMENTS..=MAX_SEGMENTS {
+            for m in 0..=n {
+                let p = plan_prefill(n, m, ReuseVariant::Qkv).unwrap();
+                assert!(p.p_seg < n);
+                assert!(p.p_seg <= m);
+            }
+        }
+    }
+}

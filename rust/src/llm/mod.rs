@@ -1,0 +1,340 @@
+//! LLM engine: prefill (full / reuse) + greedy decode over the PJRT
+//! artifacts.  This is the compute the hierarchical cache exists to skip.
+
+pub mod bucket;
+pub mod qkv;
+
+use anyhow::{Context, Result};
+
+pub use bucket::{plan_prefill, BucketPlan, ReuseVariant, MAX_SEGMENTS, MIN_SEGMENTS};
+pub use qkv::QkvTensor;
+
+use crate::metrics::ModelDims;
+use crate::runtime::{Input, Runtime};
+use crate::tokenizer::{EOS, PAD, SEGMENT_TOKENS};
+
+#[derive(Debug, Clone)]
+pub struct PrefillResult {
+    pub logits: Vec<f32>,
+    pub qkv: QkvTensor,
+    /// Analytic FLOPs of the executed artifact.
+    pub flops: u64,
+    /// Bucket actually used (artifact name), for metrics/debug.
+    pub artifact: String,
+    pub reused_segments: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeResult {
+    pub tokens: Vec<i32>,
+    pub flops: u64,
+}
+
+/// Engine bound to one model config of a Runtime.
+pub struct LlmEngine<'rt> {
+    rt: &'rt Runtime,
+    pub model: String,
+    pub dims: ModelDims,
+    pub decode_ctx: usize,
+    pub gen_tokens: usize,
+}
+
+impl<'rt> LlmEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str) -> Result<Self> {
+        let mm = rt.manifest.model(model)?;
+        Ok(LlmEngine {
+            rt,
+            model: model.to_string(),
+            dims: mm.dims,
+            decode_ctx: rt.manifest.decode_ctx,
+            gen_tokens: rt.manifest.decode_gen_tokens,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+
+    /// Prefill a segment-padded prompt.  `prefix` supplies cached QKV
+    /// tensors for the first `prefix.n_segments()` segments; the planner
+    /// clamps to the available bucket grid.
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        prefix: Option<(&QkvTensor, ReuseVariant)>,
+    ) -> Result<PrefillResult> {
+        anyhow::ensure!(
+            tokens.len() % SEGMENT_TOKENS == 0,
+            "prompt must be segment-padded (got {} tokens)",
+            tokens.len()
+        );
+        let n_seg = tokens.len() / SEGMENT_TOKENS;
+        let matched = prefix.map(|(t, _)| t.n_segments()).unwrap_or(0);
+        let variant = prefix.map(|(_, v)| v).unwrap_or(ReuseVariant::Qkv);
+        let plan = plan_prefill(n_seg, matched, variant)
+            .with_context(|| format!("prompt of {n_seg} segments outside bucket grid"))?;
+
+        let mut inputs = vec![Input::I32(tokens.to_vec(), vec![tokens.len()])];
+        if plan.p_seg > 0 {
+            let (qkv, _) = prefix.unwrap();
+            // clamp the prefix tensor to the planned bucket length
+            let p_tokens = plan.p_seg * SEGMENT_TOKENS;
+            let clamped;
+            let pref_data: &QkvTensor = if qkv.seq == p_tokens {
+                qkv
+            } else {
+                clamped = qkv.slice_positions(0, p_tokens);
+                &clamped
+            };
+            inputs.push(Input::f32_slice(&pref_data.data, pref_data.dims()));
+            let out = self.rt.exec_model(&self.model, &plan.artifact, &inputs)?;
+            self.unpack_prefill(out, tokens.len(), &plan, variant)
+        } else {
+            let out = self.rt.exec_model(&self.model, &plan.artifact, &inputs)?;
+            self.unpack_prefill(out, tokens.len(), &plan, variant)
+        }
+    }
+
+    fn unpack_prefill(
+        &self,
+        out: Vec<xla::Literal>,
+        seq: usize,
+        plan: &BucketPlan,
+        variant: ReuseVariant,
+    ) -> Result<PrefillResult> {
+        anyhow::ensure!(out.len() == 2, "prefill returns (logits, qkv)");
+        let logits = out[0].to_vec::<f32>().context("logits")?;
+        let qkv_flat = out[1].to_vec::<f32>().context("qkv")?;
+        let qkv = QkvTensor::from_flat(self.dims.layers, self.dims.d_model, seq, qkv_flat);
+        let p = plan.p_seg * SEGMENT_TOKENS;
+        let flops = match (plan.p_seg, variant) {
+            (0, _) => self.dims.prefill_full(seq),
+            (_, ReuseVariant::Qkv) => self.dims.prefill_reuse_qkv(p, seq),
+            (_, ReuseVariant::Kv) => self.dims.prefill_reuse_kv(p, seq),
+        };
+        Ok(PrefillResult {
+            logits,
+            qkv,
+            flops,
+            artifact: plan.artifact.clone(),
+            reused_segments: plan.p_seg,
+        })
+    }
+
+    /// Greedy decode after a prefill.  `prompt_tokens` provides the PAD
+    /// mask for the KV rows; generation stops at EOS or `max_tokens`.
+    ///
+    /// Uses the device-side `decode_block` artifact when the manifest has
+    /// one (one KV upload per block instead of per token — see
+    /// EXPERIMENTS.md §Perf); falls back to the per-token step loop
+    /// otherwise.  Both paths are token-exact (pinned by python tests and
+    /// `decode_paths_agree` below).
+    pub fn decode(
+        &self,
+        prompt_tokens: &[i32],
+        prefill: &PrefillResult,
+        max_tokens: usize,
+    ) -> Result<DecodeResult> {
+        let has_block = self
+            .rt
+            .manifest
+            .model(&self.model)
+            .map(|m| m.artifacts.contains_key("decode_block"))
+            .unwrap_or(false);
+        if has_block {
+            self.decode_blocks(prompt_tokens, prefill, max_tokens)
+        } else {
+            self.decode_steps(prompt_tokens, prefill, max_tokens)
+        }
+    }
+
+    /// Per-token decode loop (fallback / comparison path).
+    pub fn decode_steps(
+        &self,
+        prompt_tokens: &[i32],
+        prefill: &PrefillResult,
+        max_tokens: usize,
+    ) -> Result<DecodeResult> {
+        let ctx = self.decode_ctx;
+        let d = self.dims.d_model;
+        let layers = self.dims.layers;
+        let s = prompt_tokens.len();
+        anyhow::ensure!(s <= ctx, "prompt {s} exceeds decode ctx {ctx}");
+
+        let mut kv = prefill.qkv.to_kv_cache(ctx);
+        let mut valid = vec![0f32; ctx];
+        for (i, &t) in prompt_tokens.iter().enumerate() {
+            valid[i] = if t != PAD { 1.0 } else { 0.0 };
+        }
+
+        let mut tokens = Vec::with_capacity(max_tokens);
+        let mut tok = argmax_antirepeat(&prefill.logits, None);
+        let mut pos = s;
+        let mut flops = 0u64;
+        let budget = max_tokens.min(ctx - s);
+        for _ in 0..budget {
+            tokens.push(tok);
+            if tok == EOS {
+                break;
+            }
+            valid[pos] = 1.0;
+            let out = self.rt.exec_model(
+                &self.model,
+                "decode_step",
+                &[
+                    Input::I32Scalar(tok),
+                    Input::I32Scalar(pos as i32),
+                    Input::f32_slice(&kv, vec![layers, 2, ctx, d]),
+                    Input::F32(valid.clone(), vec![ctx]),
+                ],
+            )?;
+            flops += self.dims.decode_step(ctx);
+            anyhow::ensure!(out.len() == 3, "decode returns (logits, k, v)");
+            let logits = out[0].to_vec::<f32>()?;
+            let new_k = out[1].to_vec::<f32>()?;
+            let new_v = out[2].to_vec::<f32>()?;
+            // write new K/V rows into the host cache at `pos`
+            for l in 0..layers {
+                let k0 = ((l * 2) * ctx + pos) * d;
+                kv[k0..k0 + d].copy_from_slice(&new_k[l * d..(l + 1) * d]);
+                let v0 = ((l * 2 + 1) * ctx + pos) * d;
+                kv[v0..v0 + d].copy_from_slice(&new_v[l * d..(l + 1) * d]);
+            }
+            pos += 1;
+            tok = argmax_antirepeat(&logits, Some(tok));
+        }
+        Ok(DecodeResult { tokens, flops })
+    }
+
+    /// Block decode: one `decode_block` execution per `block` tokens.
+    pub fn decode_blocks(
+        &self,
+        prompt_tokens: &[i32],
+        prefill: &PrefillResult,
+        max_tokens: usize,
+    ) -> Result<DecodeResult> {
+        let ctx = self.decode_ctx;
+        let d = self.dims.d_model;
+        let layers = self.dims.layers;
+        let s = prompt_tokens.len();
+        anyhow::ensure!(s <= ctx, "prompt {s} exceeds decode ctx {ctx}");
+        let mm = self.rt.manifest.model(&self.model)?;
+        let block = mm
+            .artifact("decode_block")?
+            .block
+            .context("decode_block artifact missing block size")?;
+
+        let mut kv = prefill.qkv.to_kv_cache(ctx);
+        let mut valid = vec![0f32; ctx];
+        for (i, &t) in prompt_tokens.iter().enumerate() {
+            valid[i] = if t != PAD { 1.0 } else { 0.0 };
+        }
+
+        let mut tokens = Vec::with_capacity(max_tokens);
+        let mut tok = argmax_antirepeat(&prefill.logits, None);
+        let mut pos = s;
+        let mut flops = 0u64;
+        let budget = max_tokens.min(ctx - s);
+
+        'outer: while tokens.len() < budget {
+            if pos + block > ctx {
+                break; // cannot fit another block (budget clamp above
+                       // makes this unreachable in practice)
+            }
+            let out = self.rt.exec_model(
+                &self.model,
+                "decode_block",
+                &[
+                    Input::I32Scalar(tok),
+                    Input::I32Scalar(pos as i32),
+                    Input::f32_slice(&kv, vec![layers, 2, ctx, d]),
+                    Input::F32(valid.clone(), vec![ctx]),
+                ],
+            )?;
+            flops += (block as u64) * self.dims.decode_step(ctx);
+            anyhow::ensure!(out.len() == 4, "decode_block returns 4 outputs");
+            let toks = out[0].to_vec::<i32>()?;
+            let ks = out[1].to_vec::<f32>()?; // [T, L, d]
+            let vs = out[2].to_vec::<f32>()?;
+            let next = out[3].get_first_element::<i32>()?;
+
+            for (t, &tk) in toks.iter().enumerate().take(block) {
+                tokens.push(tk);
+                // write back this step's K/V rows for the next block call
+                for l in 0..layers {
+                    let src = (t * layers + l) * d;
+                    let k0 = ((l * 2) * ctx + pos) * d;
+                    kv[k0..k0 + d].copy_from_slice(&ks[src..src + d]);
+                    let v0 = ((l * 2 + 1) * ctx + pos) * d;
+                    kv[v0..v0 + d].copy_from_slice(&vs[src..src + d]);
+                }
+                valid[pos] = 1.0;
+                pos += 1;
+                if tk == EOS || tokens.len() >= budget {
+                    break 'outer;
+                }
+            }
+            tok = next;
+        }
+        Ok(DecodeResult { tokens, flops })
+    }
+
+    /// Convenience: prefill + decode in one call (the "full inference"
+    /// path of the naive baseline).
+    pub fn generate(
+        &self,
+        tokens: &[i32],
+        prefix: Option<(&QkvTensor, ReuseVariant)>,
+        max_tokens: usize,
+    ) -> Result<(PrefillResult, DecodeResult)> {
+        let pre = self.prefill(tokens, prefix)?;
+        let dec = self.decode(tokens, &pre, max_tokens)?;
+        Ok((pre, dec))
+    }
+}
+
+/// Greedy argmax with an immediate-repeat guard: a random-weight model can
+/// fall into single-token attractors; picking the runner-up on immediate
+/// repeats keeps generated "answers" token-diverse enough for ROUGE/BLEU
+/// comparisons to be meaningful, while staying fully deterministic.
+pub fn argmax_antirepeat(logits: &[f32], last: Option<i32>) -> i32 {
+    let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
+    let (mut second, mut second_v) = (0usize, f32::NEG_INFINITY);
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            second = best;
+            second_v = best_v;
+            best = i;
+            best_v = v;
+        } else if v > second_v {
+            second = i;
+            second_v = v;
+        }
+    }
+    match last {
+        Some(l) if l as usize == best && logits.len() > 1 => second as i32,
+        _ => best as i32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax_antirepeat(&[0.1, 0.9, 0.5], None), 1);
+    }
+
+    #[test]
+    fn argmax_antirepeat_picks_second() {
+        assert_eq!(argmax_antirepeat(&[0.1, 0.9, 0.5], Some(1)), 2);
+        // different last token: keep the max
+        assert_eq!(argmax_antirepeat(&[0.1, 0.9, 0.5], Some(0)), 1);
+    }
+
+    #[test]
+    fn argmax_single_element() {
+        assert_eq!(argmax_antirepeat(&[1.0], Some(0)), 0);
+    }
+}

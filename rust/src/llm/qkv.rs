@@ -1,0 +1,194 @@
+//! QKV tensor container + segment slicing/concatenation.
+//!
+//! Layout matches the artifacts: `[layers, 3(q/k/v), seq, d_model]`, f32,
+//! row-major.  The cache slicer (paper §4.1.1) cuts per-segment slices out
+//! of a whole-prompt tensor; the reuse path concatenates matched slices
+//! back into a prefix tensor.
+
+use crate::tokenizer::SEGMENT_TOKENS;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct QkvTensor {
+    pub layers: usize,
+    pub d_model: usize,
+    pub seq: usize,
+    /// `[layers][3][seq][d_model]` row-major.
+    pub data: Vec<f32>,
+}
+
+impl QkvTensor {
+    pub fn zeros(layers: usize, d_model: usize, seq: usize) -> Self {
+        QkvTensor {
+            layers,
+            d_model,
+            seq,
+            data: vec![0.0; layers * 3 * seq * d_model],
+        }
+    }
+
+    pub fn from_flat(layers: usize, d_model: usize, seq: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), layers * 3 * seq * d_model, "flat size mismatch");
+        QkvTensor {
+            layers,
+            d_model,
+            seq,
+            data,
+        }
+    }
+
+    pub fn n_segments(&self) -> usize {
+        debug_assert_eq!(self.seq % SEGMENT_TOKENS, 0);
+        self.seq / SEGMENT_TOKENS
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        vec![self.layers, 3, self.seq, self.d_model]
+    }
+
+    #[inline]
+    fn row_offset(&self, layer: usize, plane: usize, pos: usize) -> usize {
+        ((layer * 3 + plane) * self.seq + pos) * self.d_model
+    }
+
+    /// One `[d_model]` row (q/k/v of one position in one layer).
+    pub fn row(&self, layer: usize, plane: usize, pos: usize) -> &[f32] {
+        let o = self.row_offset(layer, plane, pos);
+        &self.data[o..o + self.d_model]
+    }
+
+    /// Copy out positions `[start, end)` into a new tensor (strided over
+    /// layers/planes).
+    pub fn slice_positions(&self, start: usize, end: usize) -> QkvTensor {
+        assert!(start <= end && end <= self.seq, "slice out of range");
+        let sub = end - start;
+        let mut out = QkvTensor::zeros(self.layers, self.d_model, sub);
+        for l in 0..self.layers {
+            for p in 0..3 {
+                let src0 = self.row_offset(l, p, start);
+                let dst0 = out.row_offset(l, p, 0);
+                let n = sub * self.d_model;
+                out.data[dst0..dst0 + n].copy_from_slice(&self.data[src0..src0 + n]);
+            }
+        }
+        out
+    }
+
+    /// Slice of whole segments `[seg_start, seg_end)`.
+    pub fn slice_segments(&self, seg_start: usize, seg_end: usize) -> QkvTensor {
+        self.slice_positions(seg_start * SEGMENT_TOKENS, seg_end * SEGMENT_TOKENS)
+    }
+
+    /// Concatenate along the sequence axis (all parts must agree on
+    /// layers/d_model).
+    pub fn concat(parts: &[&QkvTensor]) -> QkvTensor {
+        assert!(!parts.is_empty());
+        let (layers, d) = (parts[0].layers, parts[0].d_model);
+        let seq: usize = parts.iter().map(|p| p.seq).sum();
+        let mut out = QkvTensor::zeros(layers, d, seq);
+        for l in 0..layers {
+            for plane in 0..3 {
+                let mut pos = 0;
+                for part in parts {
+                    assert_eq!(part.layers, layers);
+                    assert_eq!(part.d_model, d);
+                    let src0 = part.row_offset(l, plane, 0);
+                    let n = part.seq * d;
+                    let dst0 = out.row_offset(l, plane, pos);
+                    out.data[dst0..dst0 + n].copy_from_slice(&part.data[src0..src0 + n]);
+                    pos += part.seq;
+                }
+            }
+        }
+        out
+    }
+
+    /// Build a decode KV cache `[layers, 2, ctx, d_model]` from planes 1/2
+    /// (K and V), zero-padded to `ctx` rows.
+    pub fn to_kv_cache(&self, ctx: usize) -> Vec<f32> {
+        assert!(self.seq <= ctx, "prompt longer than decode ctx");
+        let d = self.d_model;
+        let mut kv = vec![0f32; self.layers * 2 * ctx * d];
+        for l in 0..self.layers {
+            for (dst_plane, src_plane) in [(0usize, 1usize), (1, 2)] {
+                let src0 = self.row_offset(l, src_plane, 0);
+                let n = self.seq * d;
+                let dst0 = ((l * 2 + dst_plane) * ctx) * d;
+                kv[dst0..dst0 + n].copy_from_slice(&self.data[src0..src0 + n]);
+            }
+        }
+        kv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_tensor(layers: usize, d: usize, seq: usize) -> QkvTensor {
+        // data[l][p][s][i] = encode a unique value per coordinate
+        let mut t = QkvTensor::zeros(layers, d, seq);
+        for l in 0..layers {
+            for p in 0..3 {
+                for s in 0..seq {
+                    for i in 0..d {
+                        let o = ((l * 3 + p) * seq + s) * d + i;
+                        t.data[o] = (l * 1_000_000 + p * 100_000 + s * 100 + i) as f32;
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn slice_then_concat_roundtrips() {
+        let t = seq_tensor(2, 8, 3 * SEGMENT_TOKENS);
+        let a = t.slice_segments(0, 1);
+        let b = t.slice_segments(1, 2);
+        let c = t.slice_segments(2, 3);
+        let back = QkvTensor::concat(&[&a, &b, &c]);
+        assert_eq!(back, t);
+        assert_eq!(a.n_segments(), 1);
+    }
+
+    #[test]
+    fn slice_positions_values() {
+        let t = seq_tensor(1, 4, 10);
+        let s = t.slice_positions(3, 7);
+        assert_eq!(s.seq, 4);
+        assert_eq!(s.row(0, 2, 0), t.row(0, 2, 3));
+        assert_eq!(s.row(0, 1, 3), t.row(0, 1, 6));
+    }
+
+    #[test]
+    fn kv_cache_layout() {
+        let t = seq_tensor(2, 4, 6);
+        let ctx = 10;
+        let kv = t.to_kv_cache(ctx);
+        assert_eq!(kv.len(), 2 * 2 * ctx * 4);
+        // layer 1, K plane (src plane 1), position 5, dim 2
+        let src = t.row(1, 1, 5)[2];
+        let dst = kv[((1 * 2 + 0) * ctx + 5) * 4 + 2];
+        assert_eq!(src, dst);
+        // padding rows are zero
+        assert_eq!(kv[((0 * 2 + 0) * ctx + 9) * 4], 0.0);
+    }
+
+    #[test]
+    fn byte_size() {
+        let t = QkvTensor::zeros(4, 256, SEGMENT_TOKENS);
+        // one segment slice for the llama config: 4*3*64*256*4 B = 786 KB
+        assert_eq!(t.byte_size(), 4 * 3 * 64 * 256 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "slice out of range")]
+    fn slice_bounds_checked() {
+        let t = seq_tensor(1, 4, 8);
+        t.slice_positions(4, 9);
+    }
+}

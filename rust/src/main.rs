@@ -1,0 +1,179 @@
+//! `percache` — leader binary: serve queries, run experiments, inspect
+//! the system.
+//!
+//! ```text
+//! percache serve  [--model llama] [--dataset mised] [--user 0] …
+//! percache exp    <fig2|…|table1|all> [--out reports]
+//! percache info
+//! ```
+
+use anyhow::Result;
+use percache::util::cli::Cli;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let sub = args.next().unwrap_or_else(|| "help".to_string());
+    match sub.as_str() {
+        "serve" => cmd_serve(),
+        "exp" => cmd_exp(),
+        "info" => cmd_info(),
+        _ => {
+            println!(
+                "percache — predictive hierarchical cache for on-device RAG\n\n\
+                 subcommands:\n  \
+                 serve   run the interactive serving demo over a dataset user\n  \
+                 exp     reproduce a paper figure/table (or `all`)\n  \
+                 info    print manifest / artifact summary\n\n\
+                 run `percache <subcommand> --help` for flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = percache::runtime::Runtime::load_default()?;
+    let m = &rt.manifest;
+    println!("artifacts: {}", m.dir.display());
+    println!(
+        "segment_tokens={} decode_ctx={} vocab={}",
+        m.segment_tokens, m.decode_ctx, m.vocab
+    );
+    for (name, mm) in &m.models {
+        println!(
+            "model {name}: {} — layers={} d_model={} heads={} ffn={} ({} artifacts, {} params)",
+            mm.stands_for,
+            mm.dims.layers,
+            mm.dims.d_model,
+            mm.dims.heads,
+            mm.dims.ffn,
+            mm.artifacts.len(),
+            mm.dims.params(),
+        );
+    }
+    println!("embed: {} d_out={}", m.embed.stands_for, m.embed.d_out);
+    Ok(())
+}
+
+fn cmd_serve() -> Result<()> {
+    let cli = Cli::new("percache serve — demo serving loop on a dataset user")
+        .flag("model", "llama", "model config (llama|qwen)")
+        .flag("dataset", "mised", "dataset family")
+        .flag("user", "0", "user index")
+        .flag("method", "percache", "method (percache or a baseline)")
+        .flag("tau", "0.85", "QA-bank similarity threshold")
+        .flag("idle-every", "1", "idle ticks between queries (0 = none)")
+        .switch("verbose", "per-query breakdown");
+    let a = cli.parse_env(1);
+
+    let rt = percache::runtime::Runtime::load_default()?;
+    let mut base = percache::config::PerCacheConfig::default();
+    base.model = a.get("model").to_string();
+    base.tau_query = a.get_f64("tau");
+    let mut eng = percache::baselines::build_method(&rt, a.get("method"), &base)?;
+
+    let data = percache::datasets::generate(a.get("dataset"), a.get_usize("user"));
+    for doc in &data.documents {
+        eng.add_document(doc)?;
+    }
+    println!(
+        "[serve] {} user {}: {} chunks, {} queries, method={}",
+        data.dataset,
+        data.user,
+        eng.kb.len(),
+        data.queries.len(),
+        percache::baselines::label(a.get("method"))
+    );
+
+    let idle_every = a.get_usize("idle-every");
+    if idle_every > 0 {
+        let rep = eng.idle_tick()?;
+        println!(
+            "[idle] predicted={} populated={} flops={:.2} GF",
+            rep.predicted,
+            rep.populated,
+            rep.flops as f64 / 1e9
+        );
+    }
+
+    let mut rec = percache::metrics::Recorder::new();
+    for (i, q) in data.queries.iter().enumerate() {
+        let r = eng.serve(&q.text)?;
+        if a.get_bool("verbose") {
+            println!(
+                "  q{i:02} [{:?}] total={:.1}ms prefill={:.1} decode={:.1} reused={}/{}  {}",
+                r.path,
+                r.total_ms(),
+                r.prefill_ms,
+                r.decode_ms,
+                r.matched_segments,
+                r.n_segments,
+                q.text
+            );
+        }
+        rec.push(r);
+        if idle_every > 0 && (i + 1) % idle_every == 0 {
+            eng.idle_tick()?;
+        }
+    }
+    println!(
+        "[done] mean={:.1}ms p95={:.1}ms qa_hit={:.0}% qkv_hit={:.0}% seg_reuse={:.0}%",
+        rec.mean_total_ms(),
+        rec.percentile_total_ms(95.0),
+        rec.qa_hit_rate() * 100.0,
+        rec.qkv_hit_rate() * 100.0,
+        rec.segment_reuse_ratio() * 100.0,
+    );
+    Ok(())
+}
+
+fn cmd_exp() -> Result<()> {
+    let cli = Cli::new("percache exp — reproduce paper figures/tables")
+        .flag("out", "reports", "CSV output directory");
+    let a = cli.parse_env(1);
+    let which = a
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    std::env::set_var("PERCACHE_REPORTS", a.get("out"));
+
+    let rt = percache::runtime::Runtime::load_default()?;
+    // Pre-compile every artifact the experiments touch so first-call PJRT
+    // compilation never pollutes a latency measurement.
+    warm_all(&rt)?;
+    if which == "all" {
+        percache::exp::run_all(&rt)
+    } else {
+        percache::exp::run_experiment(&rt, &which)
+    }
+}
+
+fn warm_all(rt: &percache::runtime::Runtime) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    for model in ["llama", "qwen"] {
+        let names: Vec<String> = rt
+            .manifest
+            .model(model)?
+            .artifacts
+            .keys()
+            .cloned()
+            .collect();
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        rt.warm(model, &refs)?;
+    }
+    let _ = rt.exec_embed(&vec![0i32; 64])?;
+    eprintln!(
+        "[warm] {} executables compiled in {:.1}s",
+        rt.compiled_count(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! Analytic FLOP accounting for the transformer artifacts.
+//!
+//! Exact for the configured model (2·M·N·K per matmul, attention over the
+//! padded bucket length — the same work XLA actually executes).  Drives
+//! the paper's TFLOPs plots (Fig 15a) and the battery/energy model
+//! (Fig 20) via sim::battery.
+
+/// Model dimensions, read from artifacts/manifest.json by the runtime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelDims {
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+}
+
+impl ModelDims {
+    /// Total parameter count (tied LM head).
+    pub fn params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.ffn as u64;
+        let v = self.vocab as u64;
+        let per_layer = 4 * d * d + 3 * d * f + 2 * d; // attn + swiglu + norms
+        v * d + self.layers as u64 * per_layer + d
+    }
+
+    fn matmul(m: u64, n: u64, k: u64) -> u64 {
+        2 * m * n * k
+    }
+
+    /// FLOPs of attention internals (scores + weighted sum) for `s_q`
+    /// query rows against `s_k` key rows, all heads together.
+    fn attn_core(&self, s_q: u64, s_k: u64) -> u64 {
+        // scores: [H, s_q, hd] x [H, s_k, hd] -> 2*s_q*s_k*d total
+        // probs@v: same again
+        2 * Self::matmul(s_q, s_k, self.d_model as u64)
+    }
+
+    fn mlp(&self, s: u64) -> u64 {
+        3 * Self::matmul(s, self.ffn as u64, self.d_model as u64)
+    }
+
+    fn lm_head(&self) -> u64 {
+        Self::matmul(1, self.vocab as u64, self.d_model as u64)
+    }
+
+    /// Q/K/V + output projections for `s_proj` projected rows out of `s`
+    /// total rows (reuse skips prefix projections but not wo/attention/mlp).
+    fn layer(&self, s: u64, q_rows: u64, kv_rows: u64) -> u64 {
+        let d = self.d_model as u64;
+        Self::matmul(q_rows, d, d)             // wq
+            + 2 * Self::matmul(kv_rows, d, d)  // wk, wv
+            + Self::matmul(s, d, d)            // wo (full length)
+            + self.attn_core(s, s)
+            + self.mlp(s)
+    }
+
+    /// Full prefill over `s` tokens.
+    pub fn prefill_full(&self, s: usize) -> u64 {
+        let s = s as u64;
+        self.layers as u64 * self.layer(s, s, s) + self.lm_head()
+    }
+
+    /// PerCache reuse: Q, K and V projected only for the suffix.
+    pub fn prefill_reuse_qkv(&self, p: usize, s: usize) -> u64 {
+        let (p, s) = (p as u64, s as u64);
+        let suf = s - p;
+        self.layers as u64 * self.layer(s, suf, suf) + self.lm_head()
+    }
+
+    /// RAGCache-style reuse: K/V suffix-only, Q recomputed full-length.
+    pub fn prefill_reuse_kv(&self, p: usize, s: usize) -> u64 {
+        let (p, s) = (p as u64, s as u64);
+        let suf = s - p;
+        self.layers as u64 * self.layer(s, s, suf) + self.lm_head()
+    }
+
+    /// One decode step against a KV cache of `ctx` rows (padded bucket).
+    pub fn decode_step(&self, ctx: usize) -> u64 {
+        let d = self.d_model as u64;
+        let per_layer = 3 * Self::matmul(1, d, d)      // qkv for 1 token
+            + Self::matmul(1, d, d)                    // wo
+            + self.attn_core(1, ctx as u64)
+            + self.mlp(1);
+        self.layers as u64 * per_layer + self.lm_head()
+    }
+
+    /// Q/K/V projection FLOPs alone — the quantity Fig 13 breaks down.
+    pub fn projection_flops(&self, q_rows: usize, kv_rows: usize) -> (u64, u64, u64) {
+        let d = self.d_model as u64;
+        let q = Self::matmul(q_rows as u64, d, d);
+        let k = Self::matmul(kv_rows as u64, d, d);
+        (q, k, k)
+    }
+}
+
+/// Embedding encoder FLOPs (tiny; included for completeness of the
+/// battery model).
+pub fn embed_flops(seg: usize, d_embed: usize, d_hidden: usize, d_out: usize) -> u64 {
+    (2 * seg * d_embed + 2 * d_embed * d_hidden + 2 * d_hidden * d_out) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn llama() -> ModelDims {
+        ModelDims { layers: 4, d_model: 256, heads: 8, ffn: 1024, vocab: 8192 }
+    }
+
+    #[test]
+    fn params_order_of_magnitude() {
+        let p = llama().params();
+        // 8192*256 + 4*(4*256² + 3*256*1024 + 512) + 256 ≈ 7.3M
+        assert!(p > 6_000_000 && p < 9_000_000, "{p}");
+    }
+
+    #[test]
+    fn reuse_strictly_cheaper_and_ordered() {
+        let m = llama();
+        let (p, s) = (128, 256);
+        let full = m.prefill_full(s);
+        let kv = m.prefill_reuse_kv(p, s);
+        let qkv = m.prefill_reuse_qkv(p, s);
+        assert!(qkv < kv, "qkv reuse must beat kv reuse: {qkv} vs {kv}");
+        assert!(kv < full, "kv reuse must beat full: {kv} vs {full}");
+    }
+
+    #[test]
+    fn reuse_saving_matches_projection_arithmetic() {
+        let m = llama();
+        let (p, s) = (192, 256);
+        let diff = m.prefill_full(s) - m.prefill_reuse_qkv(p, s);
+        // exactly the skipped q/k/v projections of the prefix
+        let d = 256u64;
+        let expect = m.layers as u64 * 3 * 2 * (p as u64) * d * d;
+        assert_eq!(diff, expect);
+    }
+
+    #[test]
+    fn zero_prefix_equals_full() {
+        let m = llama();
+        assert_eq!(m.prefill_reuse_qkv(0, 192), m.prefill_full(192));
+        assert_eq!(m.prefill_reuse_kv(0, 192), m.prefill_full(192));
+    }
+
+    #[test]
+    fn decode_scales_with_ctx() {
+        let m = llama();
+        assert!(m.decode_step(384) > m.decode_step(128));
+        // decode ≪ prefill
+        assert!(m.decode_step(384) * 20 < m.prefill_full(256));
+    }
+
+    #[test]
+    fn projection_split() {
+        let m = llama();
+        let (q, k, v) = m.projection_flops(256, 64);
+        assert_eq!(q, 2 * 256 * 256 * 256);
+        assert_eq!(k, v);
+        assert_eq!(k, 2 * 64 * 256 * 256);
+    }
+}

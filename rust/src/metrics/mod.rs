@@ -1,0 +1,8 @@
+//! Measurement substrate: latency recording, analytic FLOPs, text quality.
+
+pub mod flops;
+pub mod recorder;
+pub mod text;
+
+pub use flops::ModelDims;
+pub use recorder::{blank_record, QueryRecord, Recorder, ServePath, Stage};

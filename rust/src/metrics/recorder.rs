@@ -1,0 +1,232 @@
+//! Per-query latency/stage recording and aggregate statistics.
+//!
+//! Every policy (PerCache and all baselines) reports through this type so
+//! the experiment harness compares identical measurements.  Latencies are
+//! wall-clock over the PJRT hot path; FLOPs are analytic (metrics::flops);
+//! `scale` lets sim::DeviceProfile map measured CPU time onto a device
+//! profile without touching the recording sites.
+
+use std::time::Instant;
+
+/// How a query was ultimately served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServePath {
+    /// QA-bank hit: cached answer returned, no LLM inference.
+    QaHit,
+    /// QKV-cache hit: reuse prefill with `matched_segments` cached segments.
+    QkvHit,
+    /// Full inference, nothing reused.
+    Full,
+}
+
+/// One query's measurement record.
+#[derive(Debug, Clone)]
+pub struct QueryRecord {
+    pub query_id: usize,
+    pub path: ServePath,
+    /// prompt segments total / cached-prefix segments matched
+    pub n_segments: usize,
+    pub matched_segments: usize,
+    // stage latencies, milliseconds (already device-scaled)
+    pub embed_ms: f64,
+    pub qa_match_ms: f64,
+    pub retrieval_ms: f64,
+    pub tree_match_ms: f64,
+    pub cache_load_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub flops: u64,
+    pub answer: String,
+}
+
+impl QueryRecord {
+    pub fn total_ms(&self) -> f64 {
+        self.embed_ms
+            + self.qa_match_ms
+            + self.retrieval_ms
+            + self.tree_match_ms
+            + self.cache_load_ms
+            + self.prefill_ms
+            + self.decode_ms
+    }
+}
+
+/// Stage timer helper: `let t = Stage::start(); ...; rec.prefill_ms = t.ms()`.
+pub struct Stage(Instant);
+
+impl Stage {
+    pub fn start() -> Self {
+        Stage(Instant::now())
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Aggregates across a query stream.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    pub records: Vec<QueryRecord>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: QueryRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn mean_total_ms(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.total_ms()).sum::<f64>() / self.records.len() as f64
+    }
+
+    pub fn qa_hit_rate(&self) -> f64 {
+        self.rate(|r| r.path == ServePath::QaHit)
+    }
+
+    /// QKV hit rate among queries that reached the knowledge bank
+    /// (the paper reports layer hit rates independently).
+    pub fn qkv_hit_rate(&self) -> f64 {
+        let misses: Vec<_> = self
+            .records
+            .iter()
+            .filter(|r| r.path != ServePath::QaHit)
+            .collect();
+        if misses.is_empty() {
+            return 0.0;
+        }
+        misses.iter().filter(|r| r.path == ServePath::QkvHit).count() as f64
+            / misses.len() as f64
+    }
+
+    /// Fraction of prompt segments served from the QKV cache, over all
+    /// LLM-inference queries (a finer-grained reuse measure).
+    pub fn segment_reuse_ratio(&self) -> f64 {
+        let (mut matched, mut total) = (0usize, 0usize);
+        for r in &self.records {
+            if r.path != ServePath::QaHit {
+                matched += r.matched_segments;
+                total += r.n_segments;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            matched as f64 / total as f64
+        }
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.records.iter().map(|r| r.flops).sum()
+    }
+
+    pub fn mean_stage(&self, f: impl Fn(&QueryRecord) -> f64) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(&f).sum::<f64>() / self.records.len() as f64
+    }
+
+    fn rate(&self, pred: impl Fn(&QueryRecord) -> bool) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().filter(|r| pred(r)).count() as f64 / self.records.len() as f64
+    }
+
+    pub fn percentile_total_ms(&self, p: f64) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = self.records.iter().map(|r| r.total_ms()).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::bench::percentile(&v, p)
+    }
+}
+
+pub fn blank_record(query_id: usize) -> QueryRecord {
+    QueryRecord {
+        query_id,
+        path: ServePath::Full,
+        n_segments: 0,
+        matched_segments: 0,
+        embed_ms: 0.0,
+        qa_match_ms: 0.0,
+        retrieval_ms: 0.0,
+        tree_match_ms: 0.0,
+        cache_load_ms: 0.0,
+        prefill_ms: 0.0,
+        decode_ms: 0.0,
+        flops: 0,
+        answer: String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, path: ServePath, prefill: f64, decode: f64) -> QueryRecord {
+        let mut r = blank_record(id);
+        r.path = path;
+        r.prefill_ms = prefill;
+        r.decode_ms = decode;
+        r.n_segments = 4;
+        r.matched_segments = if path == ServePath::QkvHit { 2 } else { 0 };
+        r.flops = 100;
+        r
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut rc = Recorder::new();
+        rc.push(rec(0, ServePath::QaHit, 0.0, 0.0));
+        rc.push(rec(1, ServePath::QkvHit, 10.0, 5.0));
+        rc.push(rec(2, ServePath::Full, 20.0, 5.0));
+        rc.push(rec(3, ServePath::Full, 30.0, 5.0));
+
+        assert!((rc.mean_total_ms() - 18.75).abs() < 1e-9);
+        assert!((rc.qa_hit_rate() - 0.25).abs() < 1e-9);
+        assert!((rc.qkv_hit_rate() - (1.0 / 3.0)).abs() < 1e-9);
+        assert!((rc.segment_reuse_ratio() - (2.0 / 12.0)).abs() < 1e-9);
+        assert_eq!(rc.total_flops(), 400);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let rc = Recorder::new();
+        assert_eq!(rc.mean_total_ms(), 0.0);
+        assert_eq!(rc.qa_hit_rate(), 0.0);
+        assert_eq!(rc.qkv_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn stage_timer_positive() {
+        let t = Stage::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.ms() >= 1.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut rc = Recorder::new();
+        for i in 0..100 {
+            rc.push(rec(i, ServePath::Full, i as f64, 0.0));
+        }
+        assert!(rc.percentile_total_ms(50.0) <= rc.percentile_total_ms(95.0));
+    }
+}

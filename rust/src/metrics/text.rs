@@ -1,0 +1,156 @@
+//! Text-quality metrics: ROUGE-L and BLEU (paper Figs 19 & 23).
+//!
+//! Implemented over the shared word split (tokenizer::words) so cached
+//! answers and fresh generations are compared in the same token space.
+
+use crate::tokenizer;
+
+/// ROUGE-L F1 between candidate and reference texts.
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let c = tokenizer::words(candidate);
+    let r = tokenizer::words(reference);
+    rouge_l_tokens(&c, &r)
+}
+
+pub fn rouge_l_tokens<T: PartialEq>(c: &[T], r: &[T]) -> f64 {
+    if c.is_empty() || r.is_empty() {
+        return if c.is_empty() && r.is_empty() { 1.0 } else { 0.0 };
+    }
+    let l = lcs_len(c, r) as f64;
+    if l == 0.0 {
+        return 0.0;
+    }
+    let prec = l / c.len() as f64;
+    let rec = l / r.len() as f64;
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Longest common subsequence length, O(|a|·|b|) with rolling rows.
+fn lcs_len<T: PartialEq>(a: &[T], b: &[T]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for ai in a {
+        for (j, bj) in b.iter().enumerate() {
+            cur[j + 1] = if ai == bj {
+                prev[j] + 1
+            } else {
+                cur[j].max(prev[j + 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// BLEU-4 with add-one smoothing and brevity penalty.
+pub fn bleu(candidate: &str, reference: &str) -> f64 {
+    let c = tokenizer::words(candidate);
+    let r = tokenizer::words(reference);
+    bleu_tokens(&c, &r)
+}
+
+pub fn bleu_tokens(c: &[String], r: &[String]) -> f64 {
+    if c.is_empty() || r.is_empty() {
+        return if c.is_empty() && r.is_empty() { 1.0 } else { 0.0 };
+    }
+    let max_n = 4.min(c.len()).min(r.len());
+    let mut log_sum = 0.0;
+    for n in 1..=max_n {
+        let cand = ngram_counts(c, n);
+        let refs = ngram_counts(r, n);
+        let mut matched = 0usize;
+        let mut total = 0usize;
+        for (g, &cnt) in &cand {
+            total += cnt;
+            matched += cnt.min(refs.get(g).copied().unwrap_or(0));
+        }
+        // add-one smoothing keeps zero-match orders finite
+        let p = (matched as f64 + 1.0) / (total as f64 + 1.0);
+        log_sum += p.ln();
+    }
+    let geo = (log_sum / max_n as f64).exp();
+    let bp = if c.len() >= r.len() {
+        1.0
+    } else {
+        (1.0 - r.len() as f64 / c.len() as f64).exp()
+    };
+    bp * geo
+}
+
+fn ngram_counts(tokens: &[String], n: usize) -> std::collections::HashMap<&[String], usize> {
+    let mut m = std::collections::HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rouge_identical_is_one() {
+        assert!((rouge_l("the budget meeting", "the budget meeting") - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_disjoint_is_zero() {
+        assert_eq!(rouge_l("alpha beta", "gamma delta"), 0.0);
+    }
+
+    #[test]
+    fn rouge_partial_ordering() {
+        let r = "the meeting moved to thursday at 3pm";
+        let near = rouge_l("meeting moved to thursday", r);
+        let far = rouge_l("thursday", r);
+        assert!(near > far && far > 0.0);
+    }
+
+    #[test]
+    fn rouge_empty_cases() {
+        assert_eq!(rouge_l("", ""), 1.0);
+        assert_eq!(rouge_l("a", ""), 0.0);
+        assert_eq!(rouge_l("", "a"), 0.0);
+    }
+
+    #[test]
+    fn lcs_known_value() {
+        let a = ["a", "b", "c", "d", "e"];
+        let b = ["b", "x", "d", "e", "y"];
+        assert_eq!(lcs_len(&a, &b), 3); // b d e
+    }
+
+    #[test]
+    fn bleu_identical_is_one() {
+        let s = "the quarterly budget review meeting is moved";
+        assert!((bleu(s, s) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bleu_order_sensitivity() {
+        let r = "the budget review meeting on thursday";
+        let good = bleu("the budget review meeting on thursday", r);
+        let scrambled = bleu("thursday on meeting review budget the", r);
+        assert!(good > scrambled);
+    }
+
+    #[test]
+    fn bleu_brevity_penalty() {
+        let r = "one two three four five six seven eight";
+        let short = bleu("one two", r);
+        let long = bleu("one two three four five six seven eight", r);
+        assert!(long > short);
+    }
+
+    #[test]
+    fn bleu_short_sequences_finite() {
+        assert!(bleu("a", "a") > 0.9);
+        assert!(bleu("a", "b") >= 0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Hybrid retrieval: BM25 (Robertson–Zaragoza) + dense cosine, following
+//! the paper's §4.2.2 hybrid strategy [13].
+//!
+//! BM25 scores are min-max normalized per query before mixing with the
+//! cosine term: `score = α·bm25̂ + (1-α)·cos`.  The index updates
+//! incrementally as chunks are added.
+
+use std::collections::HashMap;
+
+use crate::embedding::{cosine, Embedding};
+use crate::kb::{ChunkId, KnowledgeBank};
+use crate::tokenizer;
+
+const K1: f64 = 1.2;
+const B: f64 = 0.75;
+
+/// Incremental BM25 index over chunk word bags.
+#[derive(Debug, Default)]
+pub struct Bm25Index {
+    /// Per-document term frequencies.
+    docs: Vec<HashMap<String, usize>>,
+    doc_len: Vec<usize>,
+    df: HashMap<String, usize>,
+    total_len: usize,
+}
+
+impl Bm25Index {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_document(&mut self, text: &str) -> usize {
+        let words = tokenizer::words(text);
+        let mut tf = HashMap::new();
+        for w in &words {
+            *tf.entry(w.clone()).or_insert(0) += 1;
+        }
+        for w in tf.keys() {
+            *self.df.entry(w.clone()).or_insert(0) += 1;
+        }
+        self.total_len += words.len();
+        self.doc_len.push(words.len());
+        self.docs.push(tf);
+        self.docs.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    fn avgdl(&self) -> f64 {
+        if self.docs.is_empty() {
+            return 1.0;
+        }
+        (self.total_len as f64 / self.docs.len() as f64).max(1.0)
+    }
+
+    fn idf(&self, term: &str) -> f64 {
+        let n = self.docs.len() as f64;
+        let df = self.df.get(term).copied().unwrap_or(0) as f64;
+        // BM25+ style floor keeps common terms from going negative.
+        (((n - df + 0.5) / (df + 0.5)) + 1.0).ln()
+    }
+
+    pub fn score(&self, query_words: &[String], doc: usize) -> f64 {
+        let tf = &self.docs[doc];
+        let dl = self.doc_len[doc] as f64;
+        let avgdl = self.avgdl();
+        let mut s = 0.0;
+        for term in query_words {
+            let f = tf.get(term).copied().unwrap_or(0) as f64;
+            if f > 0.0 {
+                s += self.idf(term) * f * (K1 + 1.0) / (f + K1 * (1.0 - B + B * dl / avgdl));
+            }
+        }
+        s
+    }
+
+    pub fn scores(&self, query: &str) -> Vec<f64> {
+        let qw = tokenizer::words(query);
+        (0..self.docs.len()).map(|d| self.score(&qw, d)).collect()
+    }
+}
+
+/// Hybrid retriever over a knowledge bank.
+pub struct Retriever {
+    bm25: Bm25Index,
+    /// α weight for the (normalized) BM25 term.
+    pub alpha: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Retrieved {
+    pub chunk: ChunkId,
+    pub score: f64,
+}
+
+impl Retriever {
+    pub fn new(alpha: f64) -> Self {
+        Retriever {
+            bm25: Bm25Index::new(),
+            alpha,
+        }
+    }
+
+    /// Must be called once per chunk, in chunk-id order (asserts to catch
+    /// drift between the index and the bank).
+    pub fn index_chunk(&mut self, id: ChunkId, text: &str) {
+        let got = self.bm25.add_document(text);
+        assert_eq!(got, id, "retriever out of sync with knowledge bank");
+    }
+
+    /// Top-k chunks by hybrid score, ties broken by chunk id for
+    /// determinism.  `query_emb` must come from the same embedder as the
+    /// chunk embeddings.
+    pub fn retrieve(
+        &self,
+        query: &str,
+        query_emb: &Embedding,
+        kb: &KnowledgeBank,
+        top_k: usize,
+    ) -> Vec<Retrieved> {
+        if kb.is_empty() {
+            return Vec::new();
+        }
+        let bm = self.bm25.scores(query);
+        let bm_max = bm.iter().cloned().fold(0.0f64, f64::max);
+        let mut scored: Vec<Retrieved> = kb
+            .chunks()
+            .iter()
+            .map(|c| {
+                let bmn = if bm_max > 0.0 { bm[c.id] / bm_max } else { 0.0 };
+                let cos = cosine(query_emb, &c.embedding) as f64;
+                Retrieved {
+                    chunk: c.id,
+                    score: self.alpha * bmn + (1.0 - self.alpha) * cos,
+                }
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap()
+                .then(a.chunk.cmp(&b.chunk))
+        });
+        scored.truncate(top_k);
+        scored
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx(texts: &[&str]) -> Bm25Index {
+        let mut i = Bm25Index::new();
+        for t in texts {
+            i.add_document(t);
+        }
+        i
+    }
+
+    #[test]
+    fn bm25_prefers_matching_terms() {
+        let i = idx(&[
+            "budget review meeting thursday",
+            "travel booking flight monday",
+            "budget budget budget numbers",
+        ]);
+        let s = i.scores("budget review");
+        assert!(s[0] > s[1], "{s:?}");
+        assert!(s[2] > s[1], "{s:?}");
+        // doc 0 matches both terms; doc 2 matches one term thrice —
+        // two distinct matches should win
+        assert!(s[0] > s[2], "{s:?}");
+    }
+
+    #[test]
+    fn bm25_rare_terms_weigh_more() {
+        let i = idx(&[
+            "meeting meeting alpha",
+            "meeting meeting beta",
+            "meeting meeting gamma",
+        ]);
+        let s_rare = i.scores("alpha");
+        let s_common = i.scores("meeting");
+        assert!(s_rare[0] > s_common[0]);
+        assert_eq!(s_rare[1], 0.0);
+    }
+
+    #[test]
+    fn bm25_length_normalization() {
+        let mut i = Bm25Index::new();
+        i.add_document("budget");
+        i.add_document(&format!("budget {}", "filler ".repeat(50)));
+        let s = i.scores("budget");
+        assert!(s[0] > s[1], "shorter doc should score higher: {s:?}");
+    }
+
+    #[test]
+    fn empty_query_scores_zero() {
+        let i = idx(&["alpha beta"]);
+        assert_eq!(i.scores("")[0], 0.0);
+        assert_eq!(i.scores("zzz unknown")[0], 0.0);
+    }
+
+    #[test]
+    fn retriever_sync_assertion() {
+        let mut r = Retriever::new(0.5);
+        r.index_chunk(0, "a");
+        r.index_chunk(1, "b");
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            r.index_chunk(5, "skip");
+        }));
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! artifacts/manifest.json parsing.
+//!
+//! The manifest is the single source of truth for model dimensions, the
+//! artifact grid, and weight-blob layout — rust never hard-codes any of
+//! them (DESIGN.md §2).  Produced by python/compile/aot.py.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::ModelDims;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize, // in f32 elements
+    pub len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub n_seg: Option<usize>,
+    pub p_seg: Option<usize>,
+    /// Tokens per call for decode_block artifacts.
+    pub block: Option<usize>,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub stands_for: String,
+    pub dims: ModelDims,
+    pub head_dim: usize,
+    pub weights_bin: String,
+    pub weights: Vec<WeightEntry>,
+    pub artifacts: HashMap<String, ArtifactEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EmbedManifest {
+    pub stands_for: String,
+    pub d_embed: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+    pub weights_bin: String,
+    pub weights: Vec<WeightEntry>,
+    pub artifact: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub segment_tokens: usize,
+    pub n_segments: Vec<usize>,
+    pub decode_ctx: usize,
+    pub decode_gen_tokens: usize,
+    pub vocab: usize,
+    pub pad: i32,
+    pub models: HashMap<String, ModelManifest>,
+    pub embed: EmbedManifest,
+}
+
+fn parse_weights(j: &Json) -> Result<Vec<WeightEntry>> {
+    let arr = j.as_arr().context("weights must be an array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for w in arr {
+        out.push(WeightEntry {
+            name: w.get("name").as_str().context("weight name")?.to_string(),
+            shape: w
+                .get("shape")
+                .as_arr()
+                .context("weight shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            offset: w.get("offset").as_usize().context("weight offset")?,
+            len: w.get("len").as_usize().context("weight len")?,
+        });
+    }
+    Ok(out)
+}
+
+fn parse_str_list(j: &Json) -> Vec<String> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|s| s.as_str().map(|x| x.to_string()))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = HashMap::new();
+        let mobj = j
+            .get("models")
+            .as_obj()
+            .context("manifest missing models")?;
+        for (mname, mj) in mobj.iter() {
+            let mut artifacts = HashMap::new();
+            let aobj = mj
+                .get("artifacts")
+                .as_obj()
+                .with_context(|| format!("model {mname} missing artifacts"))?;
+            for (aname, aj) in aobj.iter() {
+                artifacts.insert(
+                    aname.to_string(),
+                    ArtifactEntry {
+                        name: aname.to_string(),
+                        file: aj.get("file").as_str().context("artifact file")?.to_string(),
+                        kind: aj.get("kind").as_str().context("artifact kind")?.to_string(),
+                        n_seg: aj.get("n_seg").as_usize(),
+                        p_seg: aj.get("p_seg").as_usize(),
+                        block: aj.get("block").as_usize(),
+                        inputs: parse_str_list(aj.get("inputs")),
+                        outputs: parse_str_list(aj.get("outputs")),
+                    },
+                );
+            }
+            let dims = ModelDims {
+                layers: mj.get("layers").as_usize().context("layers")?,
+                d_model: mj.get("d_model").as_usize().context("d_model")?,
+                heads: mj.get("heads").as_usize().context("heads")?,
+                ffn: mj.get("ffn").as_usize().context("ffn")?,
+                vocab: mj.get("vocab").as_usize().context("vocab")?,
+            };
+            models.insert(
+                mname.to_string(),
+                ModelManifest {
+                    name: mname.to_string(),
+                    stands_for: mj.get("stands_for").as_str().unwrap_or("").to_string(),
+                    dims,
+                    head_dim: mj.get("head_dim").as_usize().unwrap_or(dims.d_model / dims.heads),
+                    weights_bin: mj
+                        .get("weights_bin")
+                        .as_str()
+                        .context("weights_bin")?
+                        .to_string(),
+                    weights: parse_weights(mj.get("weights"))?,
+                    artifacts,
+                },
+            );
+        }
+        if models.is_empty() {
+            bail!("manifest has no models");
+        }
+
+        let ej = j.get("embed");
+        let embed = EmbedManifest {
+            stands_for: ej.get("stands_for").as_str().unwrap_or("").to_string(),
+            d_embed: ej.get("d_embed").as_usize().context("embed d_embed")?,
+            d_hidden: ej.get("d_hidden").as_usize().context("embed d_hidden")?,
+            d_out: ej.get("d_out").as_usize().context("embed d_out")?,
+            weights_bin: ej
+                .get("weights_bin")
+                .as_str()
+                .context("embed weights_bin")?
+                .to_string(),
+            weights: parse_weights(ej.get("weights"))?,
+            artifact: ej.get("artifact").as_str().context("embed artifact")?.to_string(),
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            segment_tokens: j.get("segment_tokens").as_usize().context("segment_tokens")?,
+            n_segments: j
+                .get("n_segments")
+                .as_arr()
+                .context("n_segments")?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            decode_ctx: j.get("decode_ctx").as_usize().context("decode_ctx")?,
+            decode_gen_tokens: j.get("decode_gen_tokens").as_usize().unwrap_or(64),
+            vocab: j.get("vocab").as_usize().context("vocab")?,
+            pad: j.get("pad").as_i64().context("pad")? as i32,
+            models,
+            embed,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest"))
+    }
+
+    /// Default artifacts directory: $PERCACHE_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PERCACHE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+impl ModelManifest {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not built for model {}", self.name))
+    }
+
+    pub fn total_weight_floats(&self) -> usize {
+        self.weights.iter().map(|w| w.len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny synthetic manifest to validate parsing without
+    /// requiring artifacts (the real file is covered by integration tests).
+    #[test]
+    fn parses_synthetic_manifest() {
+        let text = r#"{
+          "segment_tokens": 64, "n_segments": [2,3], "decode_ctx": 384,
+          "decode_gen_tokens": 64, "vocab": 8192, "pad": 0,
+          "models": {
+            "m": {
+              "stands_for": "X", "layers": 2, "d_model": 64, "heads": 2,
+              "head_dim": 32, "ffn": 128, "vocab": 8192,
+              "weights_bin": "w.bin",
+              "weights": [{"name":"tok_emb","shape":[8192,64],"offset":0,"len":524288}],
+              "artifacts": {
+                "prefill_full_n2": {"file":"f.hlo.txt","kind":"prefill_full",
+                  "n_seg":2,"inputs":["tokens"],"outputs":["logits","qkv"]}
+              }
+            }
+          },
+          "embed": {
+            "stands_for":"E","d_embed":64,"d_hidden":128,"d_out":64,
+            "weights_bin":"we.bin","weights":[],"artifact":"embed.hlo.txt",
+            "inputs":["tokens"],"outputs":["embedding"]
+          }
+        }"#;
+        let dir = std::env::temp_dir().join("percache_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.segment_tokens, 64);
+        let mm = m.model("m").unwrap();
+        assert_eq!(mm.dims.layers, 2);
+        assert_eq!(mm.artifact("prefill_full_n2").unwrap().n_seg, Some(2));
+        assert!(mm.artifact("nope").is_err());
+        assert!(m.model("nope").is_err());
+        assert_eq!(mm.total_weight_floats(), 524288);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_is_error_with_hint() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,266 @@
+//! PJRT runtime: loads HLO-text artifacts and executes them on the CPU
+//! client (the serve-time half of the AOT bridge — python never runs here).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! Perf-relevant design points:
+//! * executables compile lazily on first use and are cached by name;
+//! * model weights upload to device **once** (`PjRtBuffer`s) and every call
+//!   uses `execute_b`, so the hot path transfers only the small data inputs;
+//! * outputs come back as literals; helpers unwrap the `return_tuple=True`
+//!   convention used by aot.py.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use manifest::{ArtifactEntry, EmbedManifest, Manifest, ModelManifest, WeightEntry};
+
+/// Data input for an artifact call.
+pub enum Input {
+    I32Scalar(i32),
+    I32(Vec<i32>, Vec<usize>),
+    F32(Vec<f32>, Vec<usize>),
+    /// Borrowed f32 tensor (avoids copying big QKV/KV caches).
+    F32Ref(*const f32, usize, Vec<usize>),
+}
+
+impl Input {
+    pub fn f32_slice(data: &[f32], dims: Vec<usize>) -> Input {
+        Input::F32Ref(data.as_ptr(), data.len(), dims)
+    }
+}
+
+struct ModelState {
+    weights: Vec<xla::PjRtBuffer>,
+    /// Host-side float count, kept for tests/debug introspection.
+    host_floats: usize,
+}
+
+/// The PJRT runtime: client + manifest + compiled-executable cache +
+/// per-model device-resident weights.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    models: RefCell<HashMap<String, ModelState>>,
+    embed_state: RefCell<Option<ModelState>>,
+    /// Cumulative executions, for metrics/tests.
+    pub exec_count: RefCell<u64>,
+}
+
+impl Runtime {
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            executables: RefCell::new(HashMap::new()),
+            models: RefCell::new(HashMap::new()),
+            embed_state: RefCell::new(None),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    // -- weights -----------------------------------------------------------
+
+    fn read_weights_bin(&self, bin: &str, expect_floats: usize) -> Result<Vec<f32>> {
+        let path = self.manifest.dir.join(bin);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == expect_floats * 4,
+            "weights blob {} has {} bytes, manifest expects {}",
+            bin,
+            bytes.len(),
+            expect_floats * 4
+        );
+        let mut floats = vec![0f32; expect_floats];
+        for (i, c) in bytes.chunks_exact(4).enumerate() {
+            floats[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(floats)
+    }
+
+    fn upload_weights(&self, entries: &[WeightEntry], bin: &str) -> Result<ModelState> {
+        let total: usize = entries.iter().map(|w| w.len).sum();
+        let floats = self.read_weights_bin(bin, total)?;
+        let mut bufs = Vec::with_capacity(entries.len());
+        for w in entries {
+            let slice = &floats[w.offset..w.offset + w.len];
+            let buf = self
+                .client
+                .buffer_from_host_buffer(slice, &w.shape, None)
+                .with_context(|| format!("uploading weight {}", w.name))?;
+            bufs.push(buf);
+        }
+        Ok(ModelState {
+            weights: bufs,
+            host_floats: total,
+        })
+    }
+
+    fn ensure_model(&self, model: &str) -> Result<()> {
+        if !self.models.borrow().contains_key(model) {
+            let mm = self.manifest.model(model)?.clone();
+            let state = self.upload_weights(&mm.weights, &mm.weights_bin)?;
+            self.models.borrow_mut().insert(model.to_string(), state);
+        }
+        Ok(())
+    }
+
+    fn ensure_embed(&self) -> Result<()> {
+        if self.embed_state.borrow().is_none() {
+            let em = self.manifest.embed.clone();
+            let state = self.upload_weights(&em.weights, &em.weights_bin)?;
+            *self.embed_state.borrow_mut() = Some(state);
+        }
+        Ok(())
+    }
+
+    /// Host-side float count of a model's uploaded weights (test hook).
+    pub fn model_weight_floats(&self, model: &str) -> Result<usize> {
+        self.ensure_model(model)?;
+        Ok(self.models.borrow()[model].host_floats)
+    }
+
+    // -- executables ---------------------------------------------------------
+
+    fn ensure_executable(&self, key: &str, file: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(key) {
+            return Ok(());
+        }
+        let path = self.manifest.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        self.executables.borrow_mut().insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of artifacts (used at startup to keep first-query
+    /// compile time out of the latency measurements).
+    pub fn warm(&self, model: &str, artifact_names: &[&str]) -> Result<()> {
+        self.ensure_model(model)?;
+        let mm = self.manifest.model(model)?.clone();
+        for a in artifact_names {
+            let art = mm.artifact(a)?;
+            self.ensure_executable(&format!("{model}/{a}"), &art.file)?;
+        }
+        Ok(())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.executables.borrow().len()
+    }
+
+    // -- execution ---------------------------------------------------------
+
+    fn upload_input(&self, input: &Input) -> Result<xla::PjRtBuffer> {
+        match input {
+            Input::I32Scalar(v) => self
+                .client
+                .buffer_from_host_buffer(&[*v], &[], None)
+                .context("uploading i32 scalar"),
+            Input::I32(data, dims) => self
+                .client
+                .buffer_from_host_buffer(data, dims, None)
+                .context("uploading i32 tensor"),
+            Input::F32(data, dims) => self
+                .client
+                .buffer_from_host_buffer(data, dims, None)
+                .context("uploading f32 tensor"),
+            Input::F32Ref(ptr, len, dims) => {
+                let slice = unsafe { std::slice::from_raw_parts(*ptr, *len) };
+                self.client
+                    .buffer_from_host_buffer(slice, dims, None)
+                    .context("uploading f32 ref tensor")
+            }
+        }
+    }
+
+    /// Execute a model artifact: uploads `data_inputs`, appends the
+    /// device-resident weights, returns the decomposed output tuple.
+    pub fn exec_model(
+        &self,
+        model: &str,
+        artifact: &str,
+        data_inputs: &[Input],
+    ) -> Result<Vec<xla::Literal>> {
+        self.ensure_model(model)?;
+        let mm = self.manifest.model(model)?.clone();
+        let art = mm.artifact(artifact)?;
+        anyhow::ensure!(
+            data_inputs.len() == art.inputs.len(),
+            "artifact {artifact} expects {} data inputs ({:?}), got {}",
+            art.inputs.len(),
+            art.inputs,
+            data_inputs.len()
+        );
+        let key = format!("{model}/{artifact}");
+        self.ensure_executable(&key, &art.file)?;
+
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(data_inputs.len());
+        for inp in data_inputs {
+            args.push(self.upload_input(inp)?);
+        }
+        let models = self.models.borrow();
+        let state = &models[model];
+        let execs = self.executables.borrow();
+        let exe = &execs[&key];
+
+        let mut all: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        all.extend(state.weights.iter());
+        let out = exe
+            .execute_b(&all)
+            .with_context(|| format!("executing {key}"))?;
+        *self.exec_count.borrow_mut() += 1;
+        let lit = out[0][0].to_literal_sync().context("downloading result")?;
+        lit.to_tuple().context("decomposing output tuple")
+    }
+
+    /// Execute the embedding artifact on one token segment.
+    pub fn exec_embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.ensure_embed()?;
+        let em = self.manifest.embed.clone();
+        let key = "embed".to_string();
+        self.ensure_executable(&key, &em.artifact)?;
+
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(tokens, &[tokens.len()], None)?;
+        let state_ref = self.embed_state.borrow();
+        let state = state_ref.as_ref().unwrap();
+        let execs = self.executables.borrow();
+        let exe = &execs[&key];
+
+        let mut all: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        all.extend(state.weights.iter());
+        let out = exe.execute_b(&all).context("executing embed")?;
+        *self.exec_count.borrow_mut() += 1;
+        let lit = out[0][0].to_literal_sync()?;
+        let e = lit.to_tuple1().context("embed output tuple")?;
+        e.to_vec::<f32>().context("embed output to_vec")
+    }
+}
+
+/// Extract an f32 tensor from a literal.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}

@@ -1,0 +1,168 @@
+//! The cache scheduler (paper §4.3): elastic use of compute and storage.
+//!
+//! Three mechanisms, all driven from here and executed by the engine's
+//! idle path:
+//!
+//! 1. **Adaptive population** (§4.3.2) — when τ_query > τ_scheduler,
+//!    QA-bank hits are unlikely, so populating answers (decoding) wastes
+//!    compute; the scheduler switches population to prefill-only.
+//! 2. **QKV→QA conversion** (§4.3.3) — when τ_query drops below the
+//!    cutoff, previously-undecoded QA entries become valuable; decode
+//!    them during idle time.
+//! 3. **QA→QKV conversion** (§4.3.3) — when QKV storage is relaxed,
+//!    re-prefill QA-bank queries whose tree slices were evicted, restoring
+//!    prefix-match coverage.
+
+/// What population does for a predicted/new query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopulationStrategy {
+    /// Strategy 1: prefill only — populate the QKV tree and store the
+    /// query in the QA bank *without* an answer.
+    PrefillOnly,
+    /// Strategy 2: prefill + decode — populate both layers fully.
+    PrefillAndDecode,
+}
+
+/// Idle-time work items the scheduler can emit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IdleAction {
+    /// Run query prediction and populate with the current strategy.
+    PredictAndPopulate,
+    /// Decode QA entries that lack answers (QKV→QA conversion).
+    DecodePending,
+    /// Re-prefill QA queries to restore evicted QKV slices (QA→QKV).
+    RestoreQkv,
+}
+
+#[derive(Debug, Clone)]
+pub struct CacheScheduler {
+    pub enabled: bool,
+    pub tau_cutoff: f64,
+    /// Latched τ_query (updated by the engine when config changes).
+    tau_query: f64,
+    /// Set when τ_query crossed downward since the last idle tick.
+    tau_dropped: bool,
+    /// Set when the QKV storage budget grew since the last idle tick.
+    storage_grew: bool,
+}
+
+impl CacheScheduler {
+    pub fn new(enabled: bool, tau_cutoff: f64, tau_query: f64) -> Self {
+        CacheScheduler {
+            enabled,
+            tau_cutoff,
+            tau_query,
+            tau_dropped: false,
+            storage_grew: false,
+        }
+    }
+
+    /// Current population strategy (paper Fig 10's switch).
+    pub fn strategy(&self) -> PopulationStrategy {
+        if self.enabled && self.tau_query > self.tau_cutoff {
+            PopulationStrategy::PrefillOnly
+        } else {
+            PopulationStrategy::PrefillAndDecode
+        }
+    }
+
+    /// Notify a τ_query change; detects downward crossings of the cutoff.
+    pub fn on_tau_change(&mut self, new_tau: f64) {
+        let was_above = self.tau_query > self.tau_cutoff;
+        let now_above = new_tau > self.tau_cutoff;
+        if was_above && !now_above {
+            self.tau_dropped = true;
+        }
+        self.tau_query = new_tau;
+    }
+
+    /// Notify a QKV storage-budget change.
+    pub fn on_storage_change(&mut self, old_bytes: usize, new_bytes: usize) {
+        if new_bytes > old_bytes {
+            self.storage_grew = true;
+        }
+    }
+
+    /// Plan the next idle tick's actions (consumes the latched events).
+    /// Prediction always runs; conversions run when their trigger fired.
+    pub fn plan_idle(&mut self) -> Vec<IdleAction> {
+        let mut actions = vec![IdleAction::PredictAndPopulate];
+        if !self.enabled {
+            return actions;
+        }
+        if self.tau_dropped
+            || self.strategy() == PopulationStrategy::PrefillAndDecode && self.tau_dropped
+        {
+            actions.push(IdleAction::DecodePending);
+        }
+        // Even without an explicit drop event, decode pending entries when
+        // the current strategy wants answers (keeps the bank converging
+        // after a period of prefill-only population).
+        if self.strategy() == PopulationStrategy::PrefillAndDecode
+            && !actions.contains(&IdleAction::DecodePending)
+        {
+            actions.push(IdleAction::DecodePending);
+        }
+        if self.storage_grew {
+            actions.push(IdleAction::RestoreQkv);
+        }
+        self.tau_dropped = false;
+        self.storage_grew = false;
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_switches_at_cutoff() {
+        let mut s = CacheScheduler::new(true, 0.87, 0.85);
+        assert_eq!(s.strategy(), PopulationStrategy::PrefillAndDecode);
+        s.on_tau_change(0.90);
+        assert_eq!(s.strategy(), PopulationStrategy::PrefillOnly);
+        s.on_tau_change(0.85);
+        assert_eq!(s.strategy(), PopulationStrategy::PrefillAndDecode);
+    }
+
+    #[test]
+    fn disabled_scheduler_always_decodes() {
+        let mut s = CacheScheduler::new(false, 0.87, 0.95);
+        assert_eq!(s.strategy(), PopulationStrategy::PrefillAndDecode);
+        let plan = s.plan_idle();
+        assert_eq!(plan, vec![IdleAction::PredictAndPopulate]);
+    }
+
+    #[test]
+    fn tau_drop_triggers_decode_pending() {
+        let mut s = CacheScheduler::new(true, 0.87, 0.90);
+        assert_eq!(s.strategy(), PopulationStrategy::PrefillOnly);
+        let plan = s.plan_idle();
+        assert!(!plan.contains(&IdleAction::DecodePending), "{plan:?}");
+
+        s.on_tau_change(0.85); // crosses downward
+        let plan = s.plan_idle();
+        assert!(plan.contains(&IdleAction::DecodePending));
+        // event is consumed but strategy still wants decoding
+        let plan2 = s.plan_idle();
+        assert!(plan2.contains(&IdleAction::DecodePending));
+    }
+
+    #[test]
+    fn storage_growth_triggers_restore_once() {
+        let mut s = CacheScheduler::new(true, 0.87, 0.90);
+        s.on_storage_change(6 << 20, 8 << 20);
+        let plan = s.plan_idle();
+        assert!(plan.contains(&IdleAction::RestoreQkv));
+        let plan2 = s.plan_idle();
+        assert!(!plan2.contains(&IdleAction::RestoreQkv), "latched event consumed");
+    }
+
+    #[test]
+    fn storage_shrink_does_not_restore() {
+        let mut s = CacheScheduler::new(true, 0.87, 0.90);
+        s.on_storage_change(8 << 20, 6 << 20);
+        assert!(!s.plan_idle().contains(&IdleAction::RestoreQkv));
+    }
+}

@@ -1,0 +1,206 @@
+//! Request-serving loop: a dedicated inference thread owns the engine
+//! (PJRT executables are not Sync; mobile inference is single-device
+//! anyway) and client threads submit queries over a channel — the
+//! coordination shape of a real on-device assistant service.
+//!
+//! Used by `examples/e2e_serve.rs` and the `percache serve` subcommand.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use crate::metrics::QueryRecord;
+
+/// A request travelling to the inference thread.
+pub struct Request {
+    pub id: usize,
+    pub query: String,
+    /// Queue timestamp, for end-to-end (queueing + serving) latency.
+    pub submitted: Instant,
+    pub respond: mpsc::Sender<Response>,
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub id: usize,
+    pub record: QueryRecord,
+    /// Total time including queueing.
+    pub e2e_ms: f64,
+}
+
+/// Commands accepted by the serving loop.
+pub enum Command {
+    Serve(Request),
+    /// Run one idle tick (population/conversions).
+    IdleTick,
+    Shutdown,
+}
+
+/// Handle held by clients.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Command>,
+}
+
+impl ServerHandle {
+    /// Blocking query: submit and wait for the answer.
+    pub fn query(&self, id: usize, query: &str) -> anyhow::Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Command::Serve(Request {
+                id,
+                query: query.to_string(),
+                submitted: Instant::now(),
+                respond: rtx,
+            }))
+            .map_err(|_| anyhow::anyhow!("server is down"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+
+    pub fn idle_tick(&self) -> anyhow::Result<()> {
+        self.tx
+            .send(Command::IdleTick)
+            .map_err(|_| anyhow::anyhow!("server is down"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Command::Shutdown);
+    }
+}
+
+/// Run a serving loop on the CURRENT thread, with `serve_fn` handling
+/// each query and `idle_fn` handling idle ticks.  Returns when Shutdown
+/// arrives.  (The engine stays on this thread; see `spawn_with`.)
+pub fn run_loop(
+    rx: mpsc::Receiver<Command>,
+    mut serve_fn: impl FnMut(&str) -> anyhow::Result<QueryRecord>,
+    mut idle_fn: impl FnMut(),
+) {
+    for cmd in rx {
+        match cmd {
+            Command::Serve(req) => {
+                let record = serve_fn(&req.query).unwrap_or_else(|e| {
+                    let mut r = crate::metrics::blank_record(req.id);
+                    r.answer = format!("error: {e:#}");
+                    r
+                });
+                let e2e_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+                let _ = req.respond.send(Response {
+                    id: req.id,
+                    record,
+                    e2e_ms,
+                });
+            }
+            Command::IdleTick => idle_fn(),
+            Command::Shutdown => break,
+        }
+    }
+}
+
+/// Spawn a server thread whose state is built *inside* the thread by
+/// `make_state` (so non-Send engine state never crosses threads), then
+/// serve with the provided handlers.
+pub fn spawn_with<S: 'static>(
+    make_state: impl FnOnce() -> anyhow::Result<S> + Send + 'static,
+    serve_fn: impl Fn(&mut S, &str) -> anyhow::Result<QueryRecord> + Send + 'static,
+    idle_fn: impl Fn(&mut S) + Send + 'static,
+) -> (ServerHandle, thread::JoinHandle<anyhow::Result<()>>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::Builder::new()
+        .name("percache-server".into())
+        .spawn(move || -> anyhow::Result<()> {
+            let state = std::cell::RefCell::new(make_state()?);
+            run_loop(
+                rx,
+                |q| serve_fn(&mut state.borrow_mut(), q),
+                || idle_fn(&mut state.borrow_mut()),
+            );
+            Ok(())
+        })
+        .expect("spawn server thread");
+    (ServerHandle { tx }, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::blank_record;
+
+    #[test]
+    fn serve_roundtrip_and_shutdown() {
+        let (handle, join) = spawn_with(
+            || Ok(0usize),
+            |count, q| {
+                *count += 1;
+                let mut r = blank_record(*count);
+                r.answer = format!("echo {q}");
+                r.prefill_ms = 1.0;
+                Ok(r)
+            },
+            |_| {},
+        );
+        let resp = handle.query(1, "hello").unwrap();
+        assert_eq!(resp.record.answer, "echo hello");
+        assert!(resp.e2e_ms >= 0.0);
+        handle.shutdown();
+        join.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients_serialize_on_engine() {
+        let (handle, join) = spawn_with(
+            || Ok(Vec::<usize>::new()),
+            |seen, q| {
+                let n: usize = q.parse().unwrap();
+                seen.push(n);
+                Ok(blank_record(n))
+            },
+            |_| {},
+        );
+        let mut clients = Vec::new();
+        for i in 0..8 {
+            let h = handle.clone();
+            clients.push(std::thread::spawn(move || {
+                h.query(i, &i.to_string()).unwrap().id
+            }));
+        }
+        let mut got: Vec<usize> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+        got.sort();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+        handle.shutdown();
+        join.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn idle_tick_reaches_state() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let ticks = Arc::new(AtomicUsize::new(0));
+        let t2 = Arc::clone(&ticks);
+        let (handle, join) = spawn_with(
+            || Ok(()),
+            |_, _| Ok(blank_record(0)),
+            move |_| {
+                t2.fetch_add(1, Ordering::SeqCst);
+            },
+        );
+        handle.idle_tick().unwrap();
+        handle.idle_tick().unwrap();
+        handle.shutdown();
+        join.join().unwrap().unwrap();
+        assert_eq!(ticks.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn error_in_serve_becomes_error_answer() {
+        let (handle, join) = spawn_with(
+            || Ok(()),
+            |_, _| anyhow::bail!("boom"),
+            |_| {},
+        );
+        let resp = handle.query(0, "x").unwrap();
+        assert!(resp.record.answer.contains("boom"));
+        handle.shutdown();
+        join.join().unwrap().unwrap();
+    }
+}

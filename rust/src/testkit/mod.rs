@@ -1,0 +1,113 @@
+//! Mini property-testing framework (no `proptest` in the vendored set).
+//!
+//! Seeded generation + first-failure reporting.  Used by the coordinator
+//! invariants suite (rust/tests/properties.rs) and module unit tests.
+//!
+//! ```ignore
+//! forall(200, |rng| rng.range(0, 100), |&n| {
+//!     check(n < 100, format!("n={n} out of range"))
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` property checks over generated inputs.  On failure, panics
+/// with the case index, the generating seed and the debug form of the
+/// input — enough to replay deterministically.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let base_seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}):\n  \
+                 input: {input:?}\n  reason: {msg}\n  \
+                 replay with PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+/// Assertion helper returning PropResult.
+pub fn check(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality helper.
+pub fn check_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    check(
+        (a - b).abs() <= tol,
+        format!("{what}: {a} vs {b} (tol {tol})"),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+const WORDS: &[&str] = &[
+    "budget", "meeting", "review", "thursday", "launch", "product", "email",
+    "schedule", "report", "quarterly", "deadline", "project", "team", "room",
+    "rehearsal", "presentation", "invoice", "travel", "flight", "dinner",
+    "doctor", "appointment", "contract", "client", "design", "metrics",
+];
+
+/// Random word from a small realistic vocabulary.
+pub fn gen_word(rng: &mut Rng) -> String {
+    (*rng.pick(WORDS)).to_string()
+}
+
+/// Random sentence of `lo..=hi` vocabulary words.
+pub fn gen_sentence(rng: &mut Rng, lo: usize, hi: usize) -> String {
+    let n = rng.range(lo, hi);
+    (0..n).map(|_| gen_word(rng)).collect::<Vec<_>>().join(" ")
+}
+
+/// Random unit-ish embedding vector (not normalized).
+pub fn gen_vec(rng: &mut Rng, dim: usize) -> Vec<f32> {
+    (0..dim).map(|_| rng.normal() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall(50, |rng| rng.range(1, 10), |&n| check(n >= 1 && n <= 10, "range"));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(50, |rng| rng.range(0, 100), |&n| check(n < 90, format!("n={n}")));
+    }
+
+    #[test]
+    fn generators_deterministic_per_seed() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        assert_eq!(gen_sentence(&mut a, 3, 8), gen_sentence(&mut b, 3, 8));
+    }
+
+    #[test]
+    fn check_close_tolerance() {
+        assert!(check_close(1.0, 1.0005, 1e-3, "x").is_ok());
+        assert!(check_close(1.0, 1.1, 1e-3, "x").is_err());
+    }
+}

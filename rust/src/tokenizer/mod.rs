@@ -1,0 +1,126 @@
+//! Deterministic hashing word tokenizer — byte-identical mirror of
+//! `python/compile/tokenizer.py`.
+//!
+//! Parity is enforced two ways: a pinned FNV test vector here, and the
+//! `artifacts/tokenizer_fixtures.json` vectors generated at AOT time and
+//! replayed by `rust/tests/integration.rs`.  The tokenizer must never
+//! drift between the build path (python encodes goldens/fixtures) and the
+//! serve path (rust encodes every prompt).
+
+/// Reserved token ids (must match python/compile/configs.py).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+pub const RESERVED: i32 = 16;
+
+pub const VOCAB: i32 = 8192;
+
+/// One prompt segment in tokens (system prompt / chunk / query unit).
+pub const SEGMENT_TOKENS: usize = 64;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x1_0000_0001_B3;
+
+/// FNV-1a 64-bit over raw bytes.
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Lowercase alphanumeric word split (mirror of tokenizer.words).
+pub fn words(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars().flat_map(|c| c.to_lowercase()) {
+        if ch.is_ascii_lowercase() || ch.is_ascii_digit() {
+            cur.push(ch);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Stable id for one word.
+pub fn word_id(word: &str) -> i32 {
+    (fnv1a64(word.as_bytes()) % (VOCAB - RESERVED) as u64) as i32 + RESERVED
+}
+
+/// Encode text to token ids (no padding).
+pub fn encode(text: &str) -> Vec<i32> {
+    words(text).iter().map(|w| word_id(w)).collect()
+}
+
+/// Encode into exactly one segment: truncate or right-pad with PAD.
+pub fn encode_segment(text: &str) -> Vec<i32> {
+    let mut ids = encode(text);
+    ids.truncate(SEGMENT_TOKENS);
+    ids.resize(SEGMENT_TOKENS, PAD);
+    ids
+}
+
+/// Number of real (non-PAD) tokens in a segment-padded slice.
+pub fn real_len(tokens: &[i32]) -> usize {
+    tokens.iter().filter(|&&t| t != PAD).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_pinned_vectors() {
+        // Same vectors as python/tests/test_tokenizer.py — pins the hash.
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+    }
+
+    #[test]
+    fn case_and_punct_insensitive() {
+        assert_eq!(encode("Hello, WORLD!"), encode("hello world"));
+    }
+
+    #[test]
+    fn splits_numbers_and_words() {
+        assert_eq!(words("meeting at 3pm room B-12"),
+                   vec!["meeting", "at", "3pm", "room", "b", "12"]);
+    }
+
+    #[test]
+    fn segment_pads_and_truncates() {
+        let seg = encode_segment("one two three");
+        assert_eq!(seg.len(), SEGMENT_TOKENS);
+        assert_eq!(&seg[3..], vec![PAD; SEGMENT_TOKENS - 3].as_slice());
+        let long = encode_segment(&"w ".repeat(200));
+        assert_eq!(long.len(), SEGMENT_TOKENS);
+        assert!(!long.contains(&PAD));
+    }
+
+    #[test]
+    fn ids_in_range() {
+        for id in encode("the quick brown fox 42 jumps") {
+            assert!((RESERVED..VOCAB).contains(&id));
+        }
+    }
+
+    #[test]
+    fn unicode_words_filtered_consistently() {
+        // Only ASCII alnum survives; multi-byte letters act as separators.
+        assert_eq!(words("café straße 北京"), vec!["caf", "stra", "e"]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(encode("").is_empty());
+        assert_eq!(encode_segment(""), vec![PAD; SEGMENT_TOKENS]);
+        assert_eq!(real_len(&encode_segment("")), 0);
+    }
+}

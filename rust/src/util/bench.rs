@@ -1,0 +1,205 @@
+//! Criterion-lite benchmark harness (no `criterion` in the vendored set).
+//!
+//! Drives the `cargo bench` targets (`harness = false`): warmup, adaptive
+//! iteration count, mean/median/p95, and a plain-text report compatible
+//! with redirecting into bench_output.txt.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub std_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn throughput_per_s(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p95 {:>12}  ±{:>9}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.std_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Harness with a global time budget per benchmark.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`; the closure's return value is black-boxed to prevent
+    /// the optimizer from deleting the work.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Stats {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            black_box(f());
+            warm_iters += 1;
+        }
+
+        // Measure individual iterations until the budget runs out.
+        let mut samples: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.measure || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: percentile(&samples, 50.0),
+            p95_ns: percentile(&samples, 95.0),
+            min_ns: samples[0],
+            max_ns: samples[n - 1],
+            std_ns: var.sqrt(),
+        };
+        println!("{}", stats.report_line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = String::from("\n== summary ==\n");
+        for r in &self.results {
+            s.push_str(&r.report_line());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Percentile over a pre-sorted sample vector (linear interpolation).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// `std::hint::black_box` stand-in stable across toolchains.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::quick();
+        let s = b.bench("noop-ish", || (0..100).sum::<u64>());
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.median_ns <= s.p95_ns + 1.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&v, 0.0), 0.0);
+        assert_eq!(percentile(&v, 100.0), 40.0);
+        assert_eq!(percentile(&v, 50.0), 20.0);
+        assert_eq!(percentile(&v, 25.0), 10.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn summary_contains_all() {
+        let mut b = Bench::quick();
+        b.bench("a", || 1 + 1);
+        b.bench("b", || 2 + 2);
+        let s = b.summary();
+        assert!(s.contains("a") && s.contains("b"));
+        assert_eq!(b.results().len(), 2);
+    }
+}

@@ -1,0 +1,255 @@
+//! Declarative command-line parser (no `clap` in the vendored set).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, and auto-generated `--help`.  Just enough structure for the
+//! `percache` binary, examples and bench harness to share.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_switch: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} needs a value")]
+    MissingValue(String),
+    #[error("help requested")]
+    Help,
+}
+
+impl Cli {
+    pub fn new(about: &'static str) -> Self {
+        Cli {
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_switch: false,
+        });
+        self
+    }
+
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            is_switch: false,
+        });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some("false".to_string()),
+            is_switch: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nflags:\n", self.about);
+        for f in &self.flags {
+            let d = match (&f.default, f.is_switch) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) if !d.is_empty() => format!(" (default: {d})"),
+                _ => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse an argv slice (excluding the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                values.insert(f.name.to_string(), d.clone());
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+                let value = if let Some(v) = inline {
+                    v
+                } else if spec.is_switch {
+                    "true".to_string()
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                };
+                values.insert(name, value);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { values, positional })
+    }
+
+    /// Parse process args after a number of already-consumed positionals.
+    pub fn parse_env(&self, skip: usize) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1 + skip).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(CliError::Help) => {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("flag --{name} not declared/provided"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name) == "true"
+    }
+
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        let v = self.get(name);
+        if v.is_empty() {
+            vec![]
+        } else {
+            v.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test")
+            .flag("model", "llama", "model name")
+            .flag("users", "5", "user count")
+            .switch("verbose", "log more")
+            .required("dataset", "dataset id")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv("--dataset mised --users 3")).unwrap();
+        assert_eq!(a.get("model"), "llama");
+        assert_eq!(a.get_usize("users"), 3);
+        assert_eq!(a.get("dataset"), "mised");
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_switch() {
+        let a = cli()
+            .parse(&argv("--dataset=enron --verbose --model=qwen"))
+            .unwrap();
+        assert_eq!(a.get("dataset"), "enron");
+        assert_eq!(a.get("model"), "qwen");
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = cli().parse(&argv("fig14 --dataset x run")).unwrap();
+        assert_eq!(a.positional, vec!["fig14", "run"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(
+            cli().parse(&argv("--nope 1")),
+            Err(CliError::UnknownFlag(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cli().parse(&argv("--dataset")),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn help_detected() {
+        assert!(matches!(cli().parse(&argv("-h")), Err(CliError::Help)));
+        let u = cli().usage();
+        assert!(u.contains("--model") && u.contains("default: llama"));
+    }
+
+    #[test]
+    fn list_flag() {
+        let c = Cli::new("t").flag("ids", "a,b", "list");
+        let a = c.parse(&argv("--ids x,y,z")).unwrap();
+        assert_eq!(a.get_list("ids"), vec!["x", "y", "z"]);
+    }
+}

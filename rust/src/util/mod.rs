@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (no serde/clap/rand/criterion/tokio in the vendored crate set).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,199 @@
+//! Thread pool + scoped parallel map (no `tokio`/`rayon` in the vendored
+//! set).  The request loop, idle-time population worker and the bench
+//! harness all run on this substrate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool with a pending-job counter so callers can block
+/// until quiescent (`wait_idle`).
+pub struct Pool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("percache-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cvar) = &*pending;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                if *n == 0 {
+                                    cvar.notify_all();
+                                }
+                            }
+                            Err(_) => break, // sender dropped: shutdown
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Pool {
+            tx: Some(tx),
+            workers,
+            pending,
+        }
+    }
+
+    /// Pool sized to the machine, capped (PJRT CPU already parallelizes
+    /// inside a single execute; the pool is for coordination concurrency).
+    pub fn default_size() -> usize {
+        thread::available_parallelism()
+            .map(|n| n.get().min(8))
+            .unwrap_or(4)
+    }
+
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cvar.wait(n).unwrap();
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        *self.pending.0.lock().unwrap()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scoped parallel map preserving input order.  Spawns up to `threads`
+/// OS threads over chunks of `items`; panics in workers propagate.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let items: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = items[i].lock().unwrap().take().unwrap();
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = Pool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = Pool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..500).collect::<Vec<i32>>(), 8, |x| x * 2);
+        assert_eq!(out, (0..500).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_single_thread() {
+        let out = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

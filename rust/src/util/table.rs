@@ -1,0 +1,151 @@
+//! Plain-text table + CSV writers for the experiment harness.
+//!
+//! Every paper figure/table reproduction prints one of these and also
+//! drops a CSV under reports/ so the series can be re-plotted.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Column-aligned plain-text rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n## {}", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, "{:<w$} | ", c, w = widths[i]);
+            }
+            let _ = writeln!(out, "{}", s.trim_end());
+        };
+        line(&mut out, &self.columns);
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<w$}|", "", w = w + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Print to stdout and persist a CSV under `dir` (created on demand).
+    pub fn emit(&self, dir: &Path, stem: &str) {
+        print!("{}", self.render());
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{stem}.csv"));
+            if let Ok(mut f) = std::fs::File::create(&path) {
+                let _ = f.write_all(self.to_csv().as_bytes());
+                println!("[csv] {}", path.display());
+            }
+        }
+    }
+}
+
+pub fn fmt_ms(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn fmt_pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Fig X", &["method", "latency"]);
+        t.row(vec!["percache".into(), "1.25".into()]);
+        t.row(vec!["naive".into(), "10.50".into()]);
+        let r = t.render();
+        assert!(r.contains("## Fig X"));
+        assert!(r.contains("| percache |"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_bad_width() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["x,y".into(), "he said \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn emit_writes_csv() {
+        let dir = std::env::temp_dir().join("percache_table_test");
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["1".into()]);
+        t.emit(&dir, "unit");
+        let data = std::fs::read_to_string(dir.join("unit.csv")).unwrap();
+        assert!(data.starts_with("a\n"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,278 @@
+//! Engine-level end-to-end behaviour against real artifacts: serve paths,
+//! population, scheduler conversions, baseline semantics, refresh.
+//!
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use percache::baselines;
+use percache::config::{PerCacheConfig, PopulationMode};
+use percache::datasets;
+use percache::engine::PerCache;
+use percache::metrics::ServePath;
+use percache::runtime::Runtime;
+use percache::scheduler::PopulationStrategy;
+
+fn rt() -> Runtime {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        d.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    Runtime::load(&d).unwrap()
+}
+
+fn small_cfg() -> PerCacheConfig {
+    let mut c = PerCacheConfig::default();
+    c.model = "qwen".into(); // faster in tests
+    c.decode_tokens = 6;
+    c.prediction_stride = 3;
+    c
+}
+
+const DOC: &str = "the quarterly budget review meeting is scheduled for \
+                   thursday at 3pm in room alpha. sarah is responsible for \
+                   the budget review and will prepare the summary. they \
+                   decided to move forward with the budget review.";
+
+#[test]
+fn identical_query_hits_qa_bank_second_time() {
+    let rt = rt();
+    let mut eng = PerCache::new(&rt, small_cfg()).unwrap();
+    eng.add_document(DOC).unwrap();
+
+    let q = "when is the budget review meeting";
+    let r1 = eng.serve(q).unwrap();
+    assert_ne!(r1.path, ServePath::QaHit, "cold cache cannot QA-hit");
+    let r2 = eng.serve(q).unwrap();
+    assert_eq!(r2.path, ServePath::QaHit, "verbatim repeat must QA-hit");
+    assert_eq!(r2.answer, r1.answer, "cached answer is returned");
+    assert!(r2.total_ms() < r1.total_ms() / 5.0, "QA hit must be near-instant");
+}
+
+#[test]
+fn paraphrase_hits_and_mismatch_misses() {
+    let rt = rt();
+    let mut eng = PerCache::new(&rt, small_cfg()).unwrap();
+    eng.add_document(DOC).unwrap();
+
+    let r1 = eng.serve("when is the budget review meeting scheduled").unwrap();
+    // same content-word set, reordered — the paraphrase class the QA bank
+    // is built to catch (paper Fig 2's 0.815+ pairs)
+    let hit = eng.serve("the budget review meeting is scheduled for when").unwrap();
+    assert_eq!(hit.path, ServePath::QaHit, "high-overlap paraphrase hits");
+    assert_eq!(hit.answer, r1.answer);
+
+    let miss = eng.serve("who is responsible for the budget review").unwrap();
+    assert_ne!(miss.path, ServePath::QaHit, "different intent must miss");
+}
+
+#[test]
+fn second_query_reuses_chunk_qkv() {
+    let rt = rt();
+    let mut cfg = small_cfg();
+    cfg.qa_enabled = false; // isolate the QKV layer
+    let mut eng = PerCache::new(&rt, cfg).unwrap();
+    eng.add_document(DOC).unwrap();
+
+    let r1 = eng.serve("when is the budget review meeting").unwrap();
+    assert_eq!(r1.path, ServePath::Full);
+    // same topic → same retrieved chunks → cached sys+chunk prefix
+    let r2 = eng.serve("who is responsible for the budget review").unwrap();
+    assert_eq!(r2.path, ServePath::QkvHit);
+    assert!(r2.matched_segments >= 1);
+    assert!(r2.flops < r1.flops, "reuse must cut FLOPs");
+}
+
+#[test]
+fn naive_never_caches_percache_does() {
+    let rt = rt();
+    let base = small_cfg();
+    let data = datasets::generate("mised", 1);
+
+    let mut naive = baselines::build_method(&rt, "naive", &base).unwrap();
+    let mut pc = baselines::build_method(&rt, "percache", &base).unwrap();
+    for d in &data.documents {
+        naive.add_document(d).unwrap();
+        pc.add_document(d).unwrap();
+    }
+    pc.idle_tick().unwrap();
+
+    for q in data.queries.iter().take(4) {
+        let rn = naive.serve(&q.text).unwrap();
+        assert_eq!(rn.path, ServePath::Full, "naive must always run full");
+    }
+    assert_eq!(naive.qa.len(), 0);
+    assert_eq!(naive.tree.slice_count(), 0);
+    assert!(pc.qa.len() > 0 && pc.tree.slice_count() > 0);
+}
+
+#[test]
+fn prediction_populates_before_any_user_query() {
+    let rt = rt();
+    let mut eng = PerCache::new(&rt, small_cfg()).unwrap();
+    eng.add_document(DOC).unwrap();
+    assert_eq!(eng.qa.len(), 0);
+
+    let rep = eng.idle_tick().unwrap();
+    assert!(rep.predicted > 0, "knowledge-based prediction must fire");
+    assert!(rep.populated > 0);
+    assert!(rep.flops > 0, "population compute is charged");
+    assert!(eng.qa.len() > 0, "QA bank populated predictively");
+    assert!(eng.tree.slice_count() > 0, "QKV tree populated predictively");
+}
+
+#[test]
+fn reactive_mode_never_predicts() {
+    let rt = rt();
+    let mut cfg = small_cfg();
+    cfg.population = PopulationMode::Reactive;
+    let mut eng = PerCache::new(&rt, cfg).unwrap();
+    eng.add_document(DOC).unwrap();
+    let rep = eng.idle_tick().unwrap();
+    assert_eq!(rep.predicted, 0);
+    assert_eq!(eng.qa.len(), 0);
+}
+
+#[test]
+fn scheduler_gates_decoding_by_threshold() {
+    let rt = rt();
+    let mut cfg = small_cfg();
+    cfg.tau_query = 0.95; // above τ_scheduler = 0.87
+    let mut eng = PerCache::new(&rt, cfg).unwrap();
+    eng.add_document(DOC).unwrap();
+
+    assert_eq!(eng.scheduler.strategy(), PopulationStrategy::PrefillOnly);
+    eng.idle_tick().unwrap();
+    assert!(eng.qa.len() > 0);
+    assert_eq!(
+        eng.qa.undecoded().len(),
+        eng.qa.len(),
+        "prefill-only population stores entries without answers"
+    );
+
+    // τ drops: conversion decodes the pending entries
+    eng.set_tau_query(0.80);
+    let rep = eng.idle_tick().unwrap();
+    assert!(rep.decoded_pending > 0, "QKV→QA conversion must run");
+    assert_eq!(eng.qa.undecoded().len(), 0);
+}
+
+#[test]
+fn storage_growth_triggers_restore() {
+    let rt = rt();
+    let mut cfg = small_cfg();
+    let dims = rt.manifest.model("qwen").unwrap().dims;
+    let slice = dims.layers * 3 * 64 * dims.d_model * 4 + 16;
+    cfg.qkv_storage_bytes = 12 * slice;
+    let mut eng = PerCache::new(&rt, cfg).unwrap();
+    eng.add_document(DOC).unwrap();
+    eng.idle_tick().unwrap();
+    // isolate the RestoreQkv action: stop predictive population from
+    // refilling the tree before the conversion gets its turn
+    eng.cfg.population = PopulationMode::Reactive;
+    let before = eng.tree.slice_count();
+    assert!(before > 0);
+
+    // shrink: slices evicted
+    eng.set_qkv_storage(slice);
+    assert!(eng.tree.slice_count() < before);
+
+    // grow: restore re-prefills from QA-bank queries
+    eng.set_qkv_storage(12 * slice);
+    let rep = eng.idle_tick().unwrap();
+    assert!(rep.restored_paths > 0, "QA→QKV restore must run");
+    assert!(eng.tree.slice_count() > 1);
+}
+
+#[test]
+fn new_document_refreshes_stale_answers() {
+    let rt = rt();
+    let mut eng = PerCache::new(&rt, small_cfg()).unwrap();
+    eng.add_document(DOC).unwrap();
+    let _ = eng.serve("when is the budget review meeting").unwrap();
+    assert_eq!(eng.qa.undecoded().len(), 0);
+
+    // new, topically-related knowledge invalidates the cached answer
+    eng.add_document(
+        "update the budget review meeting moved to friday at 9am in room beta",
+    )
+    .unwrap();
+    assert!(
+        !eng.qa.undecoded().is_empty(),
+        "dynamic refresh must clear answers related to new chunks"
+    );
+    // idle decoding regenerates them
+    eng.idle_tick().unwrap();
+    assert_eq!(eng.qa.undecoded().len(), 0);
+}
+
+#[test]
+fn qa_disabled_engine_never_qa_hits() {
+    let rt = rt();
+    let mut cfg = small_cfg();
+    cfg.qa_enabled = false;
+    let mut eng = PerCache::new(&rt, cfg).unwrap();
+    eng.add_document(DOC).unwrap();
+    let q = "when is the budget review meeting";
+    let _ = eng.serve(q).unwrap();
+    let r = eng.serve(q).unwrap();
+    assert_ne!(r.path, ServePath::QaHit);
+    assert_eq!(eng.qa.len(), 0);
+}
+
+#[test]
+fn qkv_disabled_engine_never_reuses_segments() {
+    let rt = rt();
+    let mut cfg = small_cfg();
+    cfg.qkv_enabled = false;
+    cfg.qa_enabled = false;
+    let mut eng = PerCache::new(&rt, cfg).unwrap();
+    eng.add_document(DOC).unwrap();
+    let _ = eng.serve("when is the budget review meeting").unwrap();
+    let r = eng.serve("who is responsible for the budget review").unwrap();
+    assert_eq!(r.path, ServePath::Full);
+    assert_eq!(r.matched_segments, 0);
+}
+
+#[test]
+fn reuse_answers_match_full_inference_answers() {
+    // The headline exactness claim at the engine level: a QKV-hit serve
+    // must produce the same decoded answer as a cold full-inference serve
+    // of the same query (cached-prefix reuse is numerically exact).
+    let rt = rt();
+    let data = datasets::generate("enronqa", 0);
+
+    let mut cfg = small_cfg();
+    cfg.qa_enabled = false;
+    let mut cold = PerCache::new(&rt, cfg.clone()).unwrap();
+    let mut warm = PerCache::new(&rt, cfg).unwrap();
+    for d in &data.documents {
+        cold.add_document(d).unwrap();
+        warm.add_document(d).unwrap();
+    }
+    warm.idle_tick().unwrap(); // pre-populate the tree
+
+    for q in data.queries.iter().take(3) {
+        let a = cold.serve(&q.text).unwrap();
+        let b = warm.serve(&q.text).unwrap();
+        assert_eq!(a.answer, b.answer, "reuse changed the answer for {:?}", q.text);
+    }
+}
+
+#[test]
+fn stage_latencies_are_recorded_and_consistent() {
+    let rt = rt();
+    let mut eng = PerCache::new(&rt, small_cfg()).unwrap();
+    eng.add_document(DOC).unwrap();
+    let r = eng.serve("when is the budget review meeting").unwrap();
+    assert!(r.embed_ms > 0.0);
+    assert!(r.retrieval_ms >= 0.0);
+    assert!(r.prefill_ms > 0.0);
+    assert!(r.decode_ms > 0.0);
+    assert!(r.flops > 0);
+    assert_eq!(r.n_segments, 2 + eng.cfg.top_k.min(eng.kb.len()));
+    let sum = r.embed_ms + r.qa_match_ms + r.retrieval_ms + r.tree_match_ms
+        + r.cache_load_ms + r.prefill_ms + r.decode_ms;
+    assert!((sum - r.total_ms()).abs() < 1e-9);
+}

@@ -1,0 +1,187 @@
+//! Cross-module integration tests against the real artifacts:
+//! tokenizer parity fixtures, embedder + retrieval + knowledge bank,
+//! cache round-trips through the PJRT path.
+//!
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use percache::embedding::{cosine, Embedder};
+use percache::kb::KnowledgeBank;
+use percache::retrieval::Retriever;
+use percache::runtime::Runtime;
+use percache::tokenizer;
+use percache::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        d.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    d
+}
+
+#[test]
+fn tokenizer_parity_with_python_fixtures() {
+    let text =
+        std::fs::read_to_string(artifacts_dir().join("tokenizer_fixtures.json")).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let fixtures = j.as_arr().unwrap();
+    assert!(fixtures.len() >= 10);
+    for fx in fixtures {
+        let input = fx.get("text").as_str().unwrap();
+        let want_ids: Vec<i32> = fx
+            .get("ids")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect();
+        let want_seg: Vec<i32> = fx
+            .get("segment")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect();
+        assert_eq!(tokenizer::encode(input), want_ids, "ids for {input:?}");
+        assert_eq!(
+            tokenizer::encode_segment(input),
+            want_seg,
+            "segment for {input:?}"
+        );
+    }
+}
+
+#[test]
+fn manifest_matches_flop_model() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    for name in ["llama", "qwen"] {
+        let mm = rt.manifest.model(name).unwrap();
+        // weights blob holds exactly params(): the analytic FLOP model and
+        // the artifacts agree on the architecture
+        let total = rt.model_weight_floats(name).unwrap() as u64;
+        assert_eq!(total, mm.dims.params(), "{name} params");
+    }
+}
+
+#[test]
+fn embedder_memoizes_and_normalizes() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let e = Embedder::new(&rt);
+    let a = e.embed("budget meeting thursday").unwrap();
+    let b = e.embed("budget meeting thursday").unwrap();
+    assert_eq!(a, b);
+    assert_eq!(*e.cache_misses.borrow(), 1);
+    assert_eq!(*e.cache_hits.borrow(), 1);
+    let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-4);
+    assert_eq!(a.len(), e.dim());
+}
+
+#[test]
+fn retrieval_finds_topically_right_chunks() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let embedder = Embedder::new(&rt);
+    let mut kb = KnowledgeBank::new();
+    let mut retr = Retriever::new(0.5);
+
+    let docs = [
+        "the quarterly budget review meeting is on thursday at 3pm in room alpha",
+        "the flight booking to denver departs monday morning from gate 22",
+        "the gym session with jordan is planned for saturday at the park",
+    ];
+    for d in docs {
+        for id in kb.add_document(d, &embedder).unwrap() {
+            let t = kb.chunk(id).text.clone();
+            retr.index_chunk(id, &t);
+        }
+    }
+
+    let cases = [
+        ("when is the budget review meeting", "budget"),
+        ("what time does the flight depart", "flight"),
+        ("when is the gym session with jordan", "gym"),
+    ];
+    for (q, expect_word) in cases {
+        let emb = embedder.embed(q).unwrap();
+        let got = retr.retrieve(q, &emb, &kb, 1);
+        assert_eq!(got.len(), 1);
+        let text = &kb.chunk(got[0].chunk).text;
+        assert!(
+            text.contains(expect_word),
+            "query {q:?} retrieved {text:?}"
+        );
+    }
+}
+
+#[test]
+fn chunk_embeddings_cluster_by_topic() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let embedder = Embedder::new(&rt);
+    let budget1 = embedder.embed("quarterly budget review numbers finance").unwrap();
+    let budget2 = embedder.embed("the finance budget review was updated").unwrap();
+    let gym = embedder.embed("gym workout saturday park jordan").unwrap();
+    assert!(cosine(&budget1, &budget2) > cosine(&budget1, &gym));
+}
+
+#[test]
+fn disk_store_roundtrips_through_engine_path() {
+    // slice → disk → load → concat must be byte-exact (the on-demand
+    // loading path the paper's Table 1 measures)
+    use percache::cache::{slice_prompt, SliceStore};
+    use percache::llm::LlmEngine;
+
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let eng = LlmEngine::new(&rt, "qwen").unwrap();
+    let mut tokens = Vec::new();
+    for s in 0..3 {
+        tokens.extend(tokenizer::encode_segment(&format!("chunk {s} text about budget")));
+    }
+    let pre = eng.prefill(&tokens, None).unwrap();
+    let keys = [1u64, 2, 3];
+    let slices = slice_prompt(&pre.qkv, &keys);
+
+    let dir = std::env::temp_dir().join(format!("percache_int_{}", std::process::id()));
+    let mut store = SliceStore::disk(dir.clone()).unwrap();
+    let mut ids = Vec::new();
+    for s in &slices {
+        ids.push(store.put(s.tensor.clone()).unwrap().0);
+    }
+    for (i, id) in ids.iter().enumerate() {
+        assert_eq!(store.get(*id).unwrap(), slices[i].tensor);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dataset_paraphrases_exceed_default_tau() {
+    // the generator's paraphrase pairs must be QA-bank-matchable at the
+    // paper's τ = 0.85 for at least a good fraction — otherwise Fig 11/14
+    // dynamics collapse (this pins generator/embedder calibration)
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let embedder = Embedder::new(&rt);
+    let mut above = 0usize;
+    let mut total = 0usize;
+    for ds in percache::datasets::DATASETS {
+        for u in 0..2 {
+            let data = percache::datasets::generate(ds, u);
+            for q in &data.queries {
+                if let Some(src) = q.paraphrase_of {
+                    let a = embedder.embed(&q.text).unwrap();
+                    let b = embedder.embed(&data.queries[src].text).unwrap();
+                    if cosine(&a, &b) as f64 >= 0.85 {
+                        above += 1;
+                    }
+                    total += 1;
+                }
+            }
+        }
+    }
+    assert!(total >= 8, "need paraphrase pairs, got {total}");
+    assert!(
+        above * 2 >= total,
+        "only {above}/{total} paraphrase pairs reach τ=0.85"
+    );
+}

@@ -1,0 +1,399 @@
+//! Property-based tests over the coordinator invariants (testkit::prop —
+//! seeded generation, no PJRT required, hundreds of randomized cases).
+
+use percache::cache::{slice_prompt, QaBank, QkvTree, SliceStore};
+use percache::llm::{plan_prefill, QkvTensor, ReuseVariant};
+use percache::metrics::text::{bleu_tokens, rouge_l_tokens};
+use percache::retrieval::Bm25Index;
+use percache::testkit::{check, forall, gen_sentence, gen_vec};
+use percache::tokenizer;
+use percache::util::json::Json;
+use percache::util::rng::Rng;
+
+const SEG: usize = tokenizer::SEGMENT_TOKENS;
+
+fn tiny_tensor(rng: &mut Rng) -> QkvTensor {
+    let mut t = QkvTensor::zeros(1, 4, SEG);
+    for v in t.data.iter_mut() {
+        *v = rng.f32();
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// QKV tree
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tree_match_is_longest_stored_prefix() {
+    forall(
+        150,
+        |rng| {
+            let n_paths = rng.range(1, 6);
+            let paths: Vec<Vec<u64>> = (0..n_paths)
+                .map(|_| {
+                    let d = rng.range(1, 4);
+                    (0..d).map(|_| rng.range(1, 8) as u64).collect()
+                })
+                .collect();
+            let probe: Vec<u64> = (0..rng.range(1, 4)).map(|_| rng.range(1, 8) as u64).collect();
+            (paths, probe, rng.next_u64())
+        },
+        |(paths, probe, seed)| {
+            let mut rng = Rng::new(*seed);
+            let mut store = SliceStore::memory();
+            let mut tree = QkvTree::new(1 << 30);
+            for p in paths {
+                let slices: Vec<QkvTensor> = p.iter().map(|_| tiny_tensor(&mut rng)).collect();
+                tree.insert_path(p, slices, &mut store).map_err(|e| e.to_string())?;
+            }
+            tree.check_invariants().map_err(|e| e.to_string())?;
+
+            let m = tree.match_prefix(probe);
+            // reference: longest prefix of probe that is a prefix of some
+            // inserted path
+            let want = paths
+                .iter()
+                .map(|p| {
+                    probe
+                        .iter()
+                        .zip(p.iter())
+                        .take_while(|(a, b)| a == b)
+                        .count()
+                })
+                .max()
+                .unwrap_or(0);
+            check(
+                m.len() == want,
+                format!("match {} != expected {want} for probe {probe:?} over {paths:?}", m.len()),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_tree_never_exceeds_budget_and_accounting_is_exact() {
+    forall(
+        100,
+        |rng| {
+            let budget_slices = rng.range(1, 6);
+            let n_inserts = rng.range(1, 10);
+            let paths: Vec<Vec<u64>> = (0..n_inserts)
+                .map(|_| {
+                    let d = rng.range(1, 4);
+                    (0..d).map(|_| rng.range(1, 10) as u64).collect()
+                })
+                .collect();
+            (budget_slices, paths, rng.next_u64())
+        },
+        |(budget_slices, paths, seed)| {
+            let mut rng = Rng::new(*seed);
+            let slice_bytes = QkvTensor::zeros(1, 4, SEG).byte_size() + 16;
+            let mut store = SliceStore::memory();
+            let mut tree = QkvTree::new(budget_slices * slice_bytes);
+            for p in paths {
+                let slices: Vec<QkvTensor> = p.iter().map(|_| tiny_tensor(&mut rng)).collect();
+                tree.insert_path(p, slices, &mut store).map_err(|e| e.to_string())?;
+                tree.check_invariants().map_err(|e| e.to_string())?;
+                check(
+                    tree.bytes_used() <= tree.byte_limit(),
+                    format!("over budget: {} > {}", tree.bytes_used(), tree.byte_limit()),
+                )?;
+                check(
+                    tree.slice_count() * slice_bytes == tree.bytes_used(),
+                    "byte accounting drift",
+                )?;
+            }
+            // store and tree agree on slice count
+            check(
+                store.count() == tree.slice_count(),
+                format!("store {} vs tree {}", store.count(), tree.slice_count()),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_tree_eviction_prefers_cold_nodes() {
+    forall(
+        60,
+        |rng| (rng.range(2, 5), rng.next_u64()),
+        |&(depth, seed)| {
+            let mut rng = Rng::new(seed);
+            let slice_bytes = QkvTensor::zeros(1, 4, SEG).byte_size() + 16;
+            let mut store = SliceStore::memory();
+            let mut tree = QkvTree::new(depth * slice_bytes);
+            let path: Vec<u64> = (1..=depth as u64).collect();
+            let slices: Vec<QkvTensor> = path.iter().map(|_| tiny_tensor(&mut rng)).collect();
+            tree.insert_path(&path, slices, &mut store).map_err(|e| e.to_string())?;
+            // heat the root
+            for _ in 0..3 {
+                tree.match_prefix(&path[..1]);
+            }
+            // force one eviction
+            tree.insert_path(&[99], vec![tiny_tensor(&mut rng)], &mut store)
+                .map_err(|e| e.to_string())?;
+            // the hot root must survive
+            check(tree.match_prefix(&path[..1]).len() == 1, "hot root evicted")
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// QA bank
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qa_bank_budget_and_match_threshold() {
+    forall(
+        120,
+        |rng| {
+            let n = rng.range(1, 30);
+            let entries: Vec<(String, Vec<f32>, bool)> = (0..n)
+                .map(|i| {
+                    (
+                        format!("{} {}", gen_sentence(rng, 2, 6), i),
+                        gen_vec(rng, 16),
+                        rng.chance(0.7),
+                    )
+                })
+                .collect();
+            let probe = gen_vec(rng, 16);
+            let tau = 0.5 + rng.f64() * 0.5;
+            (entries, probe, tau)
+        },
+        |(entries, probe, tau)| {
+            let mut qa = QaBank::new(4096);
+            for (q, e, answered) in entries {
+                let ans = if *answered { Some(vec![1, 2, 3]) } else { None };
+                qa.insert(q, e.clone(), ans, false);
+                qa.check_invariants().map_err(|e| e.to_string())?;
+                check(qa.bytes_used() <= 4096 || qa.len() <= 1, "qa over budget")?;
+            }
+            if let Some((m, _)) = qa.match_query(probe, *tau) {
+                check(m.similarity >= *tau, "matched below threshold")?;
+                check(m.has_answer, "matched an unanswered entry")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// slicer / QKV tensor
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_slice_concat_roundtrip() {
+    forall(
+        80,
+        |rng| (rng.range(1, 5), rng.range(1, 3), rng.range(2, 8), rng.next_u64()),
+        |&(n_seg, layers, d, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut t = QkvTensor::zeros(layers, d, n_seg * SEG);
+            for v in t.data.iter_mut() {
+                *v = rng.f32();
+            }
+            let parts: Vec<QkvTensor> =
+                (0..n_seg).map(|s| t.slice_segments(s, s + 1)).collect();
+            let refs: Vec<&QkvTensor> = parts.iter().collect();
+            let back = QkvTensor::concat(&refs);
+            check(back == t, "slice→concat roundtrip changed data")
+        },
+    );
+}
+
+#[test]
+fn prop_slicer_skips_query_segment() {
+    forall(
+        60,
+        |rng| rng.range(1, 5),
+        |&n_seg| {
+            let t = QkvTensor::zeros(1, 4, (n_seg + 1) * SEG);
+            let keys: Vec<u64> = (0..=n_seg as u64).collect();
+            let slices = slice_prompt(&t, &keys);
+            check(slices.len() == n_seg, "must cache all but the query segment")?;
+            check(
+                slices.iter().map(|s| s.key).collect::<Vec<_>>() == keys[..n_seg],
+                "keys preserved in order",
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// bucket planner
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bucket_planner_total_and_clamp() {
+    forall(
+        200,
+        |rng| (rng.range(2, 5), rng.range(0, 8)),
+        |&(n, matched)| {
+            for v in [ReuseVariant::Qkv, ReuseVariant::Kv] {
+                let plan = plan_prefill(n, matched, v).ok_or("grid rejected valid n")?;
+                check(plan.n_seg == n, "n preserved")?;
+                check(plan.p_seg <= matched.min(n - 1), "p clamped")?;
+                if matched == 0 {
+                    check(plan.artifact.starts_with("prefill_full"), "full bucket")?;
+                } else {
+                    check(plan.artifact.contains(v.tag()) || plan.p_seg == 0, "variant tag")?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// retrieval
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bm25_self_retrieval() {
+    // a document queried with its own (distinctive) text must score at
+    // least as high as unrelated documents
+    forall(
+        80,
+        |rng| {
+            let docs: Vec<String> = (0..rng.range(2, 6))
+                .map(|i| format!("{} marker{i}", gen_sentence(rng, 4, 10)))
+                .collect();
+            let target = rng.below(docs.len());
+            (docs, target)
+        },
+        |(docs, target)| {
+            let mut idx = Bm25Index::new();
+            for d in docs {
+                idx.add_document(d);
+            }
+            let scores = idx.scores(&format!("marker{target}"));
+            let best = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            check(best == *target, format!("marker query retrieved doc {best}, want {target}"))
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// tokenizer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tokenizer_segment_contract() {
+    forall(
+        300,
+        |rng| gen_sentence(rng, 0, 90),
+        |text| {
+            let seg = tokenizer::encode_segment(text);
+            check(seg.len() == SEG, "segment length")?;
+            let ids = tokenizer::encode(text);
+            let n = ids.len().min(SEG);
+            check(seg[..n] == ids[..n], "prefix preserved")?;
+            for &t in &seg[n..] {
+                check(t == tokenizer::PAD, "tail must be PAD")?;
+            }
+            for &t in &ids {
+                check((tokenizer::RESERVED..tokenizer::VOCAB).contains(&t), "id range")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// text metrics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rouge_bleu_bounds_and_identity() {
+    forall(
+        200,
+        |rng| {
+            let a: Vec<String> = (0..rng.range(1, 20)).map(|_| format!("t{}", rng.range(0, 9))).collect();
+            let b: Vec<String> = (0..rng.range(1, 20)).map(|_| format!("t{}", rng.range(0, 9))).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let r = rouge_l_tokens(a, b);
+            let bl = bleu_tokens(a, b);
+            check((0.0..=1.0 + 1e-9).contains(&r), format!("rouge out of range: {r}"))?;
+            check((0.0..=1.0 + 1e-9).contains(&bl), format!("bleu out of range: {bl}"))?;
+            check((rouge_l_tokens(a, a) - 1.0).abs() < 1e-9, "rouge self != 1")?;
+            // symmetry of rouge-l f1
+            check((r - rouge_l_tokens(b, a)).abs() < 1e-9, "rouge asymmetric")
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// json
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        // rng.range is inclusive: 0..=2 are the scalar variants
+        match if depth == 0 { rng.range(0, 2) } else { rng.range(0, 4) } {
+            0 => Json::Num((rng.next_u32() as f64 / 256.0).floor()),
+            1 => Json::Str(gen_sentence(rng, 0, 5) + "\"\\\n✓"),
+            2 => Json::Bool(rng.chance(0.5)),
+            3 => Json::Arr((0..rng.range(0, 4)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.range(0, 4) {
+                    o.insert(format!("k{i}"), gen_json(rng, depth - 1));
+                }
+                Json::Obj(o)
+            }
+        }
+    }
+    forall(
+        200,
+        |rng| gen_json(rng, 3),
+        |j| {
+            let parsed = Json::parse(&j.to_string()).map_err(|e| e.to_string())?;
+            check(&parsed == j, format!("compact roundtrip:\n{}", j.to_string()))?;
+            let pretty = Json::parse(&j.to_string_pretty()).map_err(|e| e.to_string())?;
+            check(&pretty == j, "pretty roundtrip")
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// datasets
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dataset_generation_is_total_and_wellformed() {
+    forall(
+        40,
+        |rng| {
+            let ds = *rng.pick(&percache::datasets::DATASETS);
+            (ds.to_string(), rng.below(percache::datasets::USERS_PER_DATASET))
+        },
+        |(ds, user)| {
+            let u = percache::datasets::generate(ds, *user);
+            check(!u.documents.is_empty(), "documents")?;
+            check(u.queries.len() >= 8, "queries")?;
+            for q in &u.queries {
+                check(q.topic < u.documents.len(), "topic in range")?;
+                if let Some(p) = q.paraphrase_of {
+                    check(p < u.queries.len(), "paraphrase index in range")?;
+                    check(u.queries[p].paraphrase_of.is_none(), "no paraphrase chains")?;
+                }
+                // every query must fit one segment (prompt contract)
+                check(
+                    tokenizer::encode(&q.text).len() <= SEG,
+                    format!("query too long: {:?}", q.text),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,320 @@
+//! PJRT runtime numerics: replay artifacts/goldens.json through the rust
+//! runtime and compare against the jax-computed outputs.
+//!
+//! This is the end-to-end proof that the AOT bridge (HLO text → PJRT
+//! compile → execute with device-resident weights) reproduces Layer-2
+//! numerics bit-for-bit (f32 tolerance), including the QKV-reuse prefill
+//! and the decode step.
+//!
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use percache::llm::{LlmEngine, QkvTensor, ReuseVariant};
+use percache::runtime::Runtime;
+use percache::tokenizer::SEGMENT_TOKENS;
+use percache::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        d.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    d
+}
+
+fn goldens() -> Json {
+    let text = std::fs::read_to_string(artifacts_dir().join("goldens.json")).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+fn tokens_of(j: &Json, key: &str) -> Vec<i32> {
+    j.get(key)
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_i64().unwrap() as i32)
+        .collect()
+}
+
+fn floats_of(j: &Json, key: &str) -> Vec<f32> {
+    j.get(key)
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol + tol * w.abs(),
+            "{what}[{i}]: got {g}, want {w}"
+        );
+    }
+}
+
+#[test]
+fn prefill_full_matches_goldens_and_reuse_is_exact() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let g = goldens();
+
+    for case in g.get("cases").as_arr().unwrap() {
+        let model = case.get("model").as_str().unwrap();
+        let artifact = case.get("artifact").as_str().unwrap();
+        if model == "embed" || artifact == "decode_step" {
+            continue;
+        }
+        let engine = LlmEngine::new(&rt, model).unwrap();
+        let tokens = tokens_of(case, "tokens");
+        let want_head = floats_of(case, "logits_head");
+        let want_argmax = case.get("argmax").as_i64().unwrap() as usize;
+
+        if artifact.starts_with("prefill_full") {
+            let r = engine.prefill(&tokens, None).unwrap();
+            assert_close(&r.logits[..8], &want_head, 2e-4, &format!("{model}/{artifact}"));
+            let argmax = r
+                .logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(argmax, want_argmax, "{model}/{artifact} argmax");
+
+            // golden checksum over the QKV output
+            let qkv_sum: f64 = r.qkv.data.iter().map(|&x| x as f64).sum();
+            let want_sum = case.get("qkv_sum").as_f64().unwrap();
+            assert!(
+                (qkv_sum - want_sum).abs() < 1.0 + want_sum.abs() * 1e-4,
+                "{model} qkv_sum: {qkv_sum} vs {want_sum}"
+            );
+
+            // reuse path: feed back the prefix of this run's QKV and demand
+            // identical logits through the reuse artifact (both variants).
+            for variant in [ReuseVariant::Qkv, ReuseVariant::Kv] {
+                let prefix = r.qkv.slice_segments(0, 2);
+                let rr = engine.prefill(&tokens, Some((&prefix, variant))).unwrap();
+                assert_eq!(rr.reused_segments, 2);
+                assert_close(
+                    &rr.logits[..8],
+                    &r.logits[..8],
+                    2e-4,
+                    &format!("{model} reuse {variant:?}"),
+                );
+            }
+        } else if artifact.starts_with("prefill_reuse_qkv") {
+            // golden reuse case: prefix comes from the python full run; we
+            // regenerate it here via the rust full prefill (already proven
+            // equal above) to avoid shipping the large tensor in goldens.
+            let full = engine.prefill(&tokens, None).unwrap();
+            let p_seg = 2;
+            let prefix = full.qkv.slice_segments(0, p_seg);
+            let r = engine.prefill(&tokens, Some((&prefix, ReuseVariant::Qkv))).unwrap();
+            assert_close(&r.logits[..8], &want_head, 2e-4, &format!("{model}/{artifact}"));
+        }
+    }
+}
+
+#[test]
+fn decode_step_matches_goldens() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let g = goldens();
+
+    for case in g.get("cases").as_arr().unwrap() {
+        if case.get("artifact").as_str() != Some("decode_step") {
+            continue;
+        }
+        let model = case.get("model").as_str().unwrap();
+        let engine = LlmEngine::new(&rt, model).unwrap();
+        let prompt = tokens_of(case, "prompt_tokens");
+        let want_head = floats_of(case, "logits_head");
+
+        // rebuild the prefill state, then run exactly one decode step by
+        // calling the low-level path through LlmEngine::decode with
+        // max_tokens=2 and checking the first generated token's source
+        // logits via a manual exec.
+        let pre = engine.prefill(&prompt, None).unwrap();
+        let dims = engine.dims;
+        let ctx = rt.manifest.decode_ctx;
+        let kv = pre.qkv.to_kv_cache(ctx);
+        let mut valid = vec![0f32; ctx];
+        for (i, &t) in prompt.iter().enumerate() {
+            valid[i] = if t != 0 { 1.0 } else { 0.0 };
+        }
+        let pos = case.get("pos").as_usize().unwrap();
+        let tok = case.get("token").as_i64().unwrap() as i32;
+        valid[pos] = 1.0;
+
+        let out = rt
+            .exec_model(
+                model,
+                "decode_step",
+                &[
+                    percache::runtime::Input::I32Scalar(tok),
+                    percache::runtime::Input::I32Scalar(pos as i32),
+                    percache::runtime::Input::f32_slice(
+                        &kv,
+                        vec![dims.layers, 2, ctx, dims.d_model],
+                    ),
+                    percache::runtime::Input::F32(valid, vec![ctx]),
+                ],
+            )
+            .unwrap();
+        let logits = out[0].to_vec::<f32>().unwrap();
+        assert_close(&logits[..8], &want_head, 3e-4, &format!("{model}/decode"));
+
+        let want_k = floats_of(case, "new_k_head");
+        let new_k = out[1].to_vec::<f32>().unwrap();
+        assert_close(&new_k[..4], &want_k, 3e-4, &format!("{model}/decode new_k"));
+    }
+}
+
+#[test]
+fn embed_matches_goldens() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let g = goldens();
+
+    for case in g.get("cases").as_arr().unwrap() {
+        if case.get("model").as_str() != Some("embed") {
+            continue;
+        }
+        let text = case.get("text").as_str().unwrap();
+        // tokenizer parity: rust must produce the same segment
+        let seg = percache::tokenizer::encode_segment(text);
+        let want_tokens = tokens_of(case, "tokens");
+        assert_eq!(seg, want_tokens, "tokenizer parity for {text:?}");
+
+        let e = rt.exec_embed(&seg).unwrap();
+        let want = floats_of(case, "embedding_head");
+        assert_close(&e[..8], &want, 2e-4, "embedding");
+        let norm: f32 = e.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-4, "norm {norm}");
+    }
+
+    // similarity ordering sanity, mirrored from the python side
+    let sim = g.get("similarity");
+    assert!(
+        sim.get("pair_similar").as_f64().unwrap()
+            > sim.get("pair_dissimilar").as_f64().unwrap()
+    );
+}
+
+#[test]
+fn full_decode_loop_is_deterministic() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let engine = LlmEngine::new(&rt, "qwen").unwrap();
+    let text = "what did the finance team decide about the quarterly budget";
+    let mut tokens = percache::tokenizer::encode_segment(text);
+    tokens.extend(percache::tokenizer::encode_segment("the finance team agreed to move the review meeting to thursday"));
+
+    let (pre1, dec1) = engine.generate(&tokens, None, 8).unwrap();
+    let (_, dec2) = engine.generate(&tokens, None, 8).unwrap();
+    assert_eq!(dec1.tokens, dec2.tokens, "greedy decode must be deterministic");
+    assert!(!dec1.tokens.is_empty());
+    assert!(dec1.flops > 0 && pre1.flops > 0);
+    // anti-repeat guard: no immediate token repetition
+    for w in dec1.tokens.windows(2) {
+        assert_ne!(w[0], w[1], "immediate repeat in {:?}", dec1.tokens);
+    }
+}
+
+#[test]
+fn bucket_grid_all_artifacts_execute() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let engine = LlmEngine::new(&rt, "qwen").unwrap();
+
+    for n in 2..=5usize {
+        let mut tokens = Vec::new();
+        for s in 0..n {
+            tokens.extend(percache::tokenizer::encode_segment(&format!(
+                "segment {s} filler words budget meeting review thursday"
+            )));
+        }
+        let full = engine.prefill(&tokens, None).unwrap();
+        assert_eq!(full.qkv.seq, n * SEGMENT_TOKENS);
+        for p in 1..n {
+            let prefix = full.qkv.slice_segments(0, p);
+            for variant in [ReuseVariant::Qkv, ReuseVariant::Kv] {
+                let r = engine.prefill(&tokens, Some((&prefix, variant))).unwrap();
+                assert_eq!(r.reused_segments, p, "n={n} p={p}");
+                // logits must agree with the full run
+                for i in 0..8 {
+                    assert!(
+                        (r.logits[i] - full.logits[i]).abs() < 2e-4,
+                        "n={n} p={p} {variant:?} logit {i}: {} vs {}",
+                        r.logits[i],
+                        full.logits[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_paths_agree() {
+    // The perf path (device-side decode_block) must be token-exact with
+    // the per-token step loop — switching paths can never change answers.
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    for model in ["llama", "qwen"] {
+        let engine = LlmEngine::new(&rt, model).unwrap();
+        let mut tokens = percache::tokenizer::encode_segment(
+            "when is the quarterly budget review meeting scheduled",
+        );
+        tokens.extend(percache::tokenizer::encode_segment(
+            "the budget review meeting is on thursday at 3pm in room alpha",
+        ));
+        let pre = engine.prefill(&tokens, None).unwrap();
+        for budget in [1usize, 7, 8, 20] {
+            let a = engine.decode_steps(&tokens, &pre, budget).unwrap();
+            let b = engine.decode_blocks(&tokens, &pre, budget).unwrap();
+            assert_eq!(a.tokens, b.tokens, "{model} budget={budget}");
+        }
+    }
+}
+
+#[test]
+fn reuse_prefill_is_faster_than_full() {
+    // Wall-clock sanity on the headline mechanism: with a 3/4 cached
+    // prefix, reuse prefill must beat full prefill (generous 0.97 margin —
+    // tightened measurements live in the bench harness).
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let engine = LlmEngine::new(&rt, "llama").unwrap();
+    let mut tokens = Vec::new();
+    for s in 0..4 {
+        tokens.extend(percache::tokenizer::encode_segment(&format!(
+            "chunk {s} quarterly budget review meeting thursday room finance"
+        )));
+    }
+    let full = engine.prefill(&tokens, None).unwrap();
+    let prefix = full.qkv.slice_segments(0, 3);
+
+    // warm both paths
+    let _ = engine.prefill(&tokens, None).unwrap();
+    let _ = engine.prefill(&tokens, Some((&prefix, ReuseVariant::Qkv))).unwrap();
+
+    let reps = 5;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let _ = engine.prefill(&tokens, None).unwrap();
+    }
+    let full_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    let t1 = std::time::Instant::now();
+    for _ in 0..reps {
+        let _ = engine
+            .prefill(&tokens, Some((&prefix, ReuseVariant::Qkv)))
+            .unwrap();
+    }
+    let reuse_ms = t1.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    println!("full={full_ms:.2}ms reuse(3/4)={reuse_ms:.2}ms");
+    assert!(
+        reuse_ms < full_ms * 0.97,
+        "reuse ({reuse_ms:.2}ms) not faster than full ({full_ms:.2}ms)"
+    );
+}
