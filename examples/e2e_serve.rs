@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     // Send); clients talk to it through the server handle.
     let docs = data.documents.clone();
     let method2 = method.clone();
-    let (handle, join) = server::spawn_with(
+    let handle = server::spawn_with(
         move || {
             let rt = Box::leak(Box::new(percache::runtime::Runtime::load_default()?));
             let base = PerCacheConfig::default();
@@ -103,7 +103,7 @@ fn main() -> anyhow::Result<()> {
     }
     let wall_s = t0.elapsed().as_secs_f64();
     handle.shutdown();
-    join.join().unwrap()?;
+    handle.join()?;
 
     e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let qa_hits = rec

@@ -1,0 +1,91 @@
+//! Multi-tenant subsystem micro-benchmarks: router scheduling, shard
+//! cache operations, governor planning/rebalancing, and a full routed
+//! replay cell.  Everything here is PJRT-free (the tenancy layer must
+//! never become the coordinator bottleneck).
+//!
+//! `cargo bench --bench tenancy`
+
+use percache::config::TenancyConfig;
+use percache::tenancy::sim::{arrivals_from_workload, replay, serve_one, sim_slice_bytes, SimConfig};
+use percache::tenancy::{Router, RouterConfig, TenantRegistry, TenantShard};
+use percache::tokenizer::fnv1a64;
+use percache::util::bench::{black_box, Bench};
+
+fn slice_bytes() -> usize {
+    sim_slice_bytes()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new();
+
+    // -- router: push/pop under backlog -------------------------------------
+    for tenants in [8usize, 64] {
+        let mut router: Router<u64> = Router::new(RouterConfig {
+            queue_cap: 1 << 20,
+            global_cap: 1 << 20,
+        });
+        for _ in 0..tenants {
+            router.register_tenant();
+        }
+        let mut i = 0u64;
+        b.bench(&format!("router/push_pop_{tenants}_tenants"), || {
+            i += 1;
+            let t = (i % tenants as u64) as u32;
+            router.try_push(t, i).ok();
+            black_box(router.pop())
+        });
+    }
+
+    // -- shard: cache-level serve (match + insert + qa) ----------------------
+    let cfg = SimConfig::default();
+    let mut shard = TenantShard::new(0, 1 << 20, 64 * slice_bytes(), 0.2);
+    let mut q = 0u64;
+    b.bench("shard/serve_one_cycling_topics", || {
+        q += 1;
+        let topic = q % 8;
+        let keys = vec![
+            fnv1a64(b"sys"),
+            fnv1a64(format!("c{topic}a").as_bytes()),
+            fnv1a64(format!("c{topic}b").as_bytes()),
+            fnv1a64(format!("q{q}").as_bytes()),
+        ];
+        serve_one(&cfg, &mut shard, &format!("question item{q:05} topic{topic}"), &keys).unwrap()
+    });
+
+    // -- governor: plan + rebalance across shard counts ----------------------
+    for n in [8usize, 64] {
+        let mut tc = TenancyConfig::default();
+        tc.max_tenants = n;
+        tc.global_qkv_bytes = n * 8 * slice_bytes();
+        let mut reg = TenantRegistry::new(&tc);
+        for _ in 0..n {
+            reg.create_tenant().unwrap();
+        }
+        b.bench(&format!("governor/plan_{n}_shards"), || black_box(reg.plan()));
+    }
+
+    // -- end-to-end replay cell (router + shards + governor) ------------------
+    b.bench("replay/8_tenants_320_arrivals", || {
+        let mut tc = TenancyConfig::default();
+        tc.max_tenants = 8;
+        tc.global_qkv_bytes = 96 * slice_bytes();
+        let mut reg = TenantRegistry::new(&tc);
+        for _ in 0..8 {
+            reg.create_tenant().unwrap();
+        }
+        let w = percache::datasets::multi_tenant(8, 320, 1.0, 1);
+        let arrivals = arrivals_from_workload(&w);
+        replay(
+            &mut reg,
+            RouterConfig::default(),
+            &cfg,
+            &arrivals,
+            8,
+        )
+        .unwrap()
+        .rejected
+    });
+
+    println!("{}", b.summary());
+    Ok(())
+}

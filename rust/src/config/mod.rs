@@ -23,6 +23,120 @@ pub enum PopulationMode {
     Predictive,
 }
 
+/// Multi-tenant serving knobs (the `tenancy` subsystem).  Disabled by
+/// default: single-tenant mode is a registry with one shard holding the
+/// whole budget, which leaves the paper experiments untouched.
+#[derive(Debug, Clone)]
+pub struct TenancyConfig {
+    pub enabled: bool,
+    pub max_tenants: usize,
+    /// Device-wide QKV byte budget shared by all tenant shards.
+    pub global_qkv_bytes: usize,
+    /// QA bank budget per tenant (small, so it stays per-shard).
+    pub qa_bytes_per_tenant: usize,
+    /// Fraction of the fair share (global/n) guaranteed to every shard.
+    pub floor_frac: f64,
+    /// Governor hysteresis: skip rebalances smaller than this fraction.
+    pub hysteresis_frac: f64,
+    /// Governor cadence, in serves.
+    pub rebalance_every: usize,
+    /// Router admission control: per-tenant / global queue caps.
+    pub queue_cap: usize,
+    pub global_queue_cap: usize,
+    /// EWMA smoothing for the per-shard utility signal.
+    pub utility_alpha: f64,
+}
+
+impl Default for TenancyConfig {
+    fn default() -> Self {
+        TenancyConfig {
+            enabled: false,
+            max_tenants: 64,
+            global_qkv_bytes: 80 << 20, // the single-tenant default, shared
+            qa_bytes_per_tenant: 1 << 20,
+            floor_frac: 0.25,
+            hysteresis_frac: 0.05,
+            rebalance_every: 16,
+            queue_cap: 32,
+            global_queue_cap: 256,
+            utility_alpha: 0.2,
+        }
+    }
+}
+
+impl TenancyConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut t = TenancyConfig::default();
+        if let Some(b) = j.get("enabled").as_bool() {
+            t.enabled = b;
+        }
+        if let Some(v) = j.get("max_tenants").as_usize() {
+            t.max_tenants = v;
+        }
+        if let Some(v) = j.get("global_qkv_bytes").as_usize() {
+            t.global_qkv_bytes = v;
+        }
+        if let Some(v) = j.get("qa_bytes_per_tenant").as_usize() {
+            t.qa_bytes_per_tenant = v;
+        }
+        if let Some(v) = j.get("floor_frac").as_f64() {
+            t.floor_frac = v;
+        }
+        if let Some(v) = j.get("hysteresis_frac").as_f64() {
+            t.hysteresis_frac = v;
+        }
+        if let Some(v) = j.get("rebalance_every").as_usize() {
+            t.rebalance_every = v;
+        }
+        if let Some(v) = j.get("queue_cap").as_usize() {
+            t.queue_cap = v;
+        }
+        if let Some(v) = j.get("global_queue_cap").as_usize() {
+            t.global_queue_cap = v;
+        }
+        if let Some(v) = j.get("utility_alpha").as_f64() {
+            t.utility_alpha = v;
+        }
+        t.validate()?;
+        Ok(t)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.max_tenants >= 1, "max_tenants >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.floor_frac),
+            "floor_frac must be in [0,1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.hysteresis_frac),
+            "hysteresis_frac must be in [0,1]"
+        );
+        anyhow::ensure!(self.rebalance_every >= 1, "rebalance_every >= 1");
+        anyhow::ensure!(self.queue_cap >= 1, "queue_cap >= 1");
+        anyhow::ensure!(self.global_queue_cap >= 1, "global_queue_cap >= 1");
+        anyhow::ensure!(
+            self.utility_alpha > 0.0 && self.utility_alpha <= 1.0,
+            "utility_alpha must be in (0,1]"
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("enabled", self.enabled);
+        o.insert("max_tenants", self.max_tenants);
+        o.insert("global_qkv_bytes", self.global_qkv_bytes);
+        o.insert("qa_bytes_per_tenant", self.qa_bytes_per_tenant);
+        o.insert("floor_frac", self.floor_frac);
+        o.insert("hysteresis_frac", self.hysteresis_frac);
+        o.insert("rebalance_every", self.rebalance_every);
+        o.insert("queue_cap", self.queue_cap);
+        o.insert("global_queue_cap", self.global_queue_cap);
+        o.insert("utility_alpha", self.utility_alpha);
+        Json::Obj(o)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct PerCacheConfig {
     /// Model config name from the manifest ("llama" / "qwen").
@@ -67,6 +181,9 @@ pub struct PerCacheConfig {
 
     /// System prompt prepended to every RAG prompt (one segment).
     pub system_prompt: String,
+
+    // -- multi-tenant serving -----------------------------------------------
+    pub tenancy: TenancyConfig,
 }
 
 impl Default for PerCacheConfig {
@@ -92,6 +209,7 @@ impl Default for PerCacheConfig {
             system_prompt: "you are a smartphone assistant answer the user \
                             question using the retrieved personal data"
                 .to_string(),
+            tenancy: TenancyConfig::default(),
         }
     }
 }
@@ -156,6 +274,9 @@ impl PerCacheConfig {
         if let Some(s) = j.get("system_prompt").as_str() {
             c.system_prompt = s.to_string();
         }
+        if j.get("tenancy").as_obj().is_some() {
+            c.tenancy = TenancyConfig::from_json(j.get("tenancy"))?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -183,6 +304,7 @@ impl PerCacheConfig {
             crate::llm::MAX_SEGMENTS - 2
         );
         anyhow::ensure!(self.decode_tokens >= 1, "decode_tokens >= 1");
+        self.tenancy.validate()?;
         Ok(())
     }
 
@@ -216,6 +338,7 @@ impl PerCacheConfig {
         o.insert("refresh_top_k", self.refresh_top_k);
         o.insert("decode_tokens", self.decode_tokens);
         o.insert("system_prompt", self.system_prompt.as_str());
+        o.insert("tenancy", self.tenancy.to_json());
         Json::Obj(o)
     }
 }
@@ -251,6 +374,37 @@ mod tests {
         assert_eq!(c.tau_query, 0.9);
         assert_eq!(c.model, "llama");
         assert_eq!(c.prediction_stride, 5);
+    }
+
+    #[test]
+    fn tenancy_block_roundtrip_and_defaults() {
+        let mut c = PerCacheConfig::default();
+        assert!(!c.tenancy.enabled, "tenancy must default off");
+        c.tenancy.enabled = true;
+        c.tenancy.max_tenants = 8;
+        c.tenancy.global_qkv_bytes = 123 << 20;
+        let j = c.to_json();
+        let c2 = PerCacheConfig::from_json(&j).unwrap();
+        assert!(c2.tenancy.enabled);
+        assert_eq!(c2.tenancy.max_tenants, 8);
+        assert_eq!(c2.tenancy.global_qkv_bytes, 123 << 20);
+
+        // partial tenancy block keeps the other defaults
+        let j = Json::parse(r#"{"tenancy": {"max_tenants": 4}}"#).unwrap();
+        let c3 = PerCacheConfig::from_json(&j).unwrap();
+        assert_eq!(c3.tenancy.max_tenants, 4);
+        assert_eq!(c3.tenancy.rebalance_every, 16);
+        assert!(!c3.tenancy.enabled);
+    }
+
+    #[test]
+    fn tenancy_invalid_rejected() {
+        let j = Json::parse(r#"{"tenancy": {"max_tenants": 0}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"tenancy": {"floor_frac": 1.5}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"tenancy": {"utility_alpha": 0.0}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
     }
 
     #[test]

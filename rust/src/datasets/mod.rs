@@ -305,6 +305,66 @@ pub fn generate(dataset: &str, user: usize) -> UserData {
     }
 }
 
+// ---------------------------------------------------------------------------
+// multi-tenant workloads
+// ---------------------------------------------------------------------------
+
+/// One tenant's trace in a multi-tenant workload.
+#[derive(Debug, Clone)]
+pub struct TenantTrace {
+    pub tenant: usize,
+    pub dataset: String,
+    pub user: usize,
+    /// Relative arrival weight (Zipf over tenant rank).
+    pub weight: f64,
+    pub data: UserData,
+}
+
+/// A device-wide workload: per-tenant traces + a deterministic
+/// interleaved arrival order `(tenant, per-tenant sequence number)`.
+/// Query streams cycle, so long runs repeat queries — the reuse the
+/// caches exist to exploit.
+#[derive(Debug, Clone)]
+pub struct MultiTenantWorkload {
+    pub tenants: Vec<TenantTrace>,
+    pub arrivals: Vec<(usize, usize)>,
+}
+
+/// Generate a multi-tenant workload: `n_tenants` tenants cycling through
+/// the (dataset, user) grid, `total_arrivals` arrivals interleaved with
+/// Zipf(`zipf_s`) tenant skew (rank-1 tenants dominate, the long tail
+/// trickles — the shape a shared on-device assistant actually sees).
+pub fn multi_tenant(
+    n_tenants: usize,
+    total_arrivals: usize,
+    zipf_s: f64,
+    seed: u64,
+) -> MultiTenantWorkload {
+    assert!(n_tenants > 0, "need at least one tenant");
+    let mut rng = Rng::new(seed ^ 0x7E4A47);
+    let mut tenants = Vec::with_capacity(n_tenants);
+    for t in 0..n_tenants {
+        let dataset = DATASETS[t % DATASETS.len()];
+        let user = (t / DATASETS.len()) % USERS_PER_DATASET;
+        tenants.push(TenantTrace {
+            tenant: t,
+            dataset: dataset.to_string(),
+            user,
+            weight: 1.0 / ((t + 1) as f64).powf(zipf_s),
+            data: generate(dataset, user),
+        });
+    }
+    let weights: Vec<f64> = tenants.iter().map(|t| t.weight).collect();
+    let mut next_seq = vec![0usize; n_tenants];
+    let mut arrivals = Vec::with_capacity(total_arrivals);
+    for _ in 0..total_arrivals {
+        let t = rng.weighted(&weights);
+        arrivals.push((t, next_seq[t]));
+        next_seq[t] += 1;
+    }
+    MultiTenantWorkload { tenants, arrivals }
+}
+
 /// All users of all datasets (the paper's 20-user evaluation set).
 pub fn all_users() -> Vec<UserData> {
     let mut out = Vec::new();
@@ -401,5 +461,50 @@ mod tests {
     #[should_panic(expected = "user index")]
     fn user_bounds_checked() {
         generate("mised", 99);
+    }
+
+    #[test]
+    fn multi_tenant_deterministic_and_covering() {
+        let a = multi_tenant(8, 200, 1.0, 42);
+        let b = multi_tenant(8, 200, 1.0, 42);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.tenants.len(), 8);
+        assert_eq!(a.arrivals.len(), 200);
+        for &(t, _) in &a.arrivals {
+            assert!(t < 8);
+        }
+        // per-tenant sequence numbers are contiguous from zero
+        let mut counts = vec![0usize; 8];
+        for &(t, seq) in &a.arrivals {
+            assert_eq!(seq, counts[t], "sequence gap for tenant {t}");
+            counts[t] += 1;
+        }
+    }
+
+    #[test]
+    fn multi_tenant_zipf_skews_toward_low_ranks() {
+        let w = multi_tenant(8, 800, 1.2, 7);
+        let mut counts = vec![0usize; 8];
+        for &(t, _) in &w.arrivals {
+            counts[t] += 1;
+        }
+        assert!(
+            counts[0] > counts[7],
+            "rank-1 tenant must dominate the tail: {counts:?}"
+        );
+        // distinct tenants map to distinct (dataset, user) traces here
+        assert_ne!(w.tenants[0].data.documents, w.tenants[1].data.documents);
+    }
+
+    #[test]
+    fn multi_tenant_zero_skew_is_roughly_uniform() {
+        let w = multi_tenant(4, 400, 0.0, 3);
+        let mut counts = vec![0usize; 4];
+        for &(t, _) in &w.arrivals {
+            counts[t] += 1;
+        }
+        for &c in &counts {
+            assert!((60..=140).contains(&c), "skewed without zipf: {counts:?}");
+        }
     }
 }

@@ -29,6 +29,31 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
     dot / (na.sqrt() * nb.sqrt())
 }
 
+/// Runtime-free embedding: content-word feature hashing into `dim`
+/// buckets, L2-normalized.  Shares the embed artifact's structural
+/// property — similarity tracks content-word overlap, so paraphrases
+/// land close — without needing PJRT.  Used by the tenancy cache-level
+/// simulation, benches and tests; the serving path always uses the real
+/// [`Embedder`].
+pub fn hash_embed(text: &str, dim: usize) -> Embedding {
+    assert!(dim > 0, "hash_embed dim must be positive");
+    let mut v = vec![0f32; dim];
+    for w in crate::tokenizer::words(text) {
+        if w.len() <= 3 {
+            continue; // stopword-ish filter, like the content-word basis
+        }
+        let h = crate::tokenizer::fnv1a64(w.as_bytes());
+        v[(h % dim as u64) as usize] += 1.0;
+    }
+    let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    v
+}
+
 pub struct Embedder<'rt> {
     rt: &'rt Runtime,
     cache: RefCell<HashMap<String, Embedding>>,
@@ -105,5 +130,29 @@ mod tests {
     #[should_panic(expected = "dim mismatch")]
     fn cosine_checks_dims() {
         cosine(&[1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn hash_embed_is_unit_norm_and_deterministic() {
+        let a = hash_embed("quarterly budget review meeting", 64);
+        let b = hash_embed("quarterly budget review meeting", 64);
+        assert_eq!(a, b);
+        let n: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-5, "norm {n}");
+    }
+
+    #[test]
+    fn hash_embed_tracks_content_overlap() {
+        let a = hash_embed("when is the budget review meeting", 64);
+        let b = hash_embed("the budget review meeting is when", 64);
+        let c = hash_embed("completely unrelated grocery delivery", 64);
+        assert!(cosine(&a, &b) > 0.99, "paraphrase must be near-identical");
+        assert!(cosine(&a, &c) < 0.5, "different topic must be far");
+    }
+
+    #[test]
+    fn hash_embed_empty_text_is_zero_vector() {
+        let z = hash_embed("", 16);
+        assert!(z.iter().all(|&x| x == 0.0));
     }
 }

@@ -13,5 +13,6 @@ pub mod overhead;
 pub mod runner;
 pub mod scheduler_exp;
 pub mod showcase;
+pub mod tenancy_exp;
 
 pub use runner::{run_all, run_experiment, APPENDIX, EXPERIMENTS};

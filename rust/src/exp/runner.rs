@@ -5,7 +5,7 @@ use anyhow::Result;
 
 use crate::runtime::Runtime;
 
-use super::{ablation, motivation, overall, overhead, scheduler_exp, showcase};
+use super::{ablation, motivation, overall, overhead, scheduler_exp, showcase, tenancy_exp};
 
 /// All experiment ids, in paper order.
 pub const EXPERIMENTS: [&str; 18] = [
@@ -18,8 +18,10 @@ pub const EXPERIMENTS: [&str; 18] = [
 ];
 
 /// Appendix experiments (heavier; included in `exp all` but also
-/// runnable individually).
-pub const APPENDIX: [&str; 3] = ["fig21", "fig22", "fig23"];
+/// runnable individually).  `tenancy` is the multi-tenant scaling sweep
+/// introduced on top of the paper's evaluation; it also emits the
+/// machine-readable reports/BENCH_tenancy.json perf seed.
+pub const APPENDIX: [&str; 4] = ["fig21", "fig22", "fig23", "tenancy"];
 
 pub fn run_experiment(rt: &Runtime, name: &str) -> Result<()> {
     let t0 = std::time::Instant::now();
@@ -46,6 +48,7 @@ pub fn run_experiment(rt: &Runtime, name: &str) -> Result<()> {
         "fig22" => overall::fig22(rt)?,
         "fig23" => overall::fig23(rt)?,
         "table1" => overhead::table1(rt)?,
+        "tenancy" => tenancy_exp::tenancy(rt)?,
         other => anyhow::bail!(
             "unknown experiment '{other}' — known: {:?} + {:?}",
             EXPERIMENTS,
@@ -75,7 +78,7 @@ mod tests {
         for id in ["fig2", "fig14", "fig15a", "fig19", "fig20", "table1"] {
             assert!(EXPERIMENTS.contains(&id), "{id} missing");
         }
-        for id in ["fig21", "fig22", "fig23"] {
+        for id in ["fig21", "fig22", "fig23", "tenancy"] {
             assert!(APPENDIX.contains(&id), "{id} missing");
         }
     }

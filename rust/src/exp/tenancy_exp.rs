@@ -1,0 +1,218 @@
+//! Multi-tenant scaling experiment (`percache exp tenancy`): tenant
+//! counts vs latency/hit-rate under one global memory budget.
+//!
+//! Runs the cache-level tenancy replay (real shards, governor and
+//! router; analytic LLM cost — no PJRT artifacts needed), sweeping the
+//! tenant count at a fixed device-wide QKV budget.  Emits the human
+//! table + CSV like every other experiment, plus a machine-readable
+//! `BENCH_tenancy.json` (p50/p99 latency and hit rates per tenant
+//! count) that seeds the performance trajectory across PRs.
+
+use anyhow::Result;
+
+use crate::config::TenancyConfig;
+use crate::datasets;
+use crate::metrics::Recorder;
+use crate::runtime::Runtime;
+use crate::tenancy::sim::{arrivals_from_workload, replay, sim_slice_bytes, SimConfig};
+use crate::tenancy::{RouterConfig, TenantRegistry};
+use crate::util::bench::percentile;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::common::reports_dir;
+
+/// Tenant counts swept (the ≥8 point is the acceptance bar).
+pub const TENANT_COUNTS: [usize; 5] = [1, 2, 4, 8, 16];
+/// Arrivals per tenant (cycling each tenant's query stream).
+const ARRIVALS_PER_TENANT: usize = 40;
+/// Global QKV budget, in slices of the sim's tiny tensor shape.
+const GLOBAL_SLICES: usize = 96;
+
+#[derive(Debug, Clone)]
+pub struct TenancyCell {
+    pub tenants: usize,
+    pub arrivals: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub qa_hit_rate: f64,
+    pub qkv_hit_rate: f64,
+    pub hit_rate: f64,
+    pub rejected: u64,
+    pub rebalances: u64,
+    pub per_tenant_hit_rate: Vec<f64>,
+}
+
+/// Run the sweep (pure; unit-testable without a runtime).
+pub fn sweep() -> Result<Vec<TenancyCell>> {
+    let slice = sim_slice_bytes();
+    let sim = SimConfig::default();
+    let mut cells = Vec::new();
+    for &n in &TENANT_COUNTS {
+        let tc = TenancyConfig {
+            enabled: true,
+            max_tenants: n.max(1),
+            global_qkv_bytes: GLOBAL_SLICES * slice,
+            rebalance_every: 16,
+            ..TenancyConfig::default()
+        };
+        let mut reg = TenantRegistry::new(&tc);
+        for _ in 0..n {
+            reg.create_tenant()?;
+        }
+        let w = datasets::multi_tenant(n, n * ARRIVALS_PER_TENANT, 1.0, 0xBEEF + n as u64);
+        let arrivals = arrivals_from_workload(&w);
+        let out = replay(
+            &mut reg,
+            RouterConfig {
+                queue_cap: tc.queue_cap,
+                global_cap: tc.global_queue_cap,
+            },
+            &sim,
+            &arrivals,
+            8,
+        )?;
+
+        let mut merged = Recorder::new();
+        for r in &out.per_tenant {
+            for q in &r.records {
+                merged.push(q.clone());
+            }
+        }
+        let lat = out.all_total_ms();
+        cells.push(TenancyCell {
+            tenants: n,
+            arrivals: arrivals.len(),
+            p50_ms: percentile(&lat, 50.0),
+            p99_ms: percentile(&lat, 99.0),
+            qa_hit_rate: merged.qa_hit_rate(),
+            qkv_hit_rate: merged.qkv_hit_rate(),
+            hit_rate: reg
+                .shards()
+                .iter()
+                .map(|s| s.stats.hit_rate())
+                .sum::<f64>()
+                / n.max(1) as f64,
+            rejected: out.rejected,
+            rebalances: out.rebalances,
+            per_tenant_hit_rate: out
+                .per_tenant
+                .iter()
+                .map(|r| {
+                    if r.is_empty() {
+                        0.0
+                    } else {
+                        r.records
+                            .iter()
+                            .filter(|q| q.path != crate::metrics::ServePath::Full)
+                            .count() as f64
+                            / r.len() as f64
+                    }
+                })
+                .collect(),
+        });
+    }
+    Ok(cells)
+}
+
+/// `percache exp tenancy` entry point (runtime unused: cache-level sim).
+pub fn tenancy(_rt: &Runtime) -> Result<()> {
+    run_and_report()
+}
+
+/// Shared by the exp registry and the `percache tenants` subcommand.
+pub fn run_and_report() -> Result<()> {
+    let cells = sweep()?;
+    let mut table = Table::new(
+        "tenancy: tenants vs latency/hit-rate at fixed global budget",
+        &[
+            "tenants", "arrivals", "p50 ms", "p99 ms", "qa hit", "qkv hit",
+            "rejected", "rebalances",
+        ],
+    );
+    for c in &cells {
+        table.row(vec![
+            c.tenants.to_string(),
+            c.arrivals.to_string(),
+            format!("{:.2}", c.p50_ms),
+            format!("{:.2}", c.p99_ms),
+            format!("{:.0}%", c.qa_hit_rate * 100.0),
+            format!("{:.0}%", c.qkv_hit_rate * 100.0),
+            c.rejected.to_string(),
+            c.rebalances.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    let dir = reports_dir();
+    table.emit(&dir, "tenancy");
+    write_bench_json(&cells, &dir)?;
+    Ok(())
+}
+
+/// Emit `<dir>/BENCH_tenancy.json` — the perf-trajectory seed.
+pub fn write_bench_json(cells: &[TenancyCell], dir: &std::path::Path) -> Result<()> {
+    let mut root = Json::obj();
+    root.insert("bench", "tenancy");
+    root.insert("global_qkv_bytes", GLOBAL_SLICES * sim_slice_bytes());
+    let series: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.insert("tenants", c.tenants);
+            o.insert("arrivals", c.arrivals);
+            o.insert("p50_ms", c.p50_ms);
+            o.insert("p99_ms", c.p99_ms);
+            o.insert("qa_hit_rate", c.qa_hit_rate);
+            o.insert("qkv_hit_rate", c.qkv_hit_rate);
+            o.insert("mean_shard_hit_rate", c.hit_rate);
+            o.insert("rejected", c.rejected);
+            o.insert("rebalances", c.rebalances);
+            o.insert(
+                "per_tenant_hit_rate",
+                Json::Arr(c.per_tenant_hit_rate.iter().map(|&h| Json::Num(h)).collect()),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("series", Json::Arr(series));
+
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_tenancy.json");
+    std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
+    println!("[tenancy] wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_all_counts_and_stays_bounded() {
+        let cells = sweep().unwrap();
+        assert_eq!(cells.len(), TENANT_COUNTS.len());
+        for (c, &n) in cells.iter().zip(&TENANT_COUNTS) {
+            assert_eq!(c.tenants, n);
+            assert!(c.p50_ms <= c.p99_ms, "percentiles out of order");
+            assert!(c.arrivals > 0);
+            assert_eq!(c.per_tenant_hit_rate.len(), n);
+        }
+        // cycling query streams must produce some cache hits somewhere
+        assert!(
+            cells.iter().any(|c| c.qa_hit_rate + c.qkv_hit_rate > 0.0),
+            "no cache hits in the whole sweep"
+        );
+    }
+
+    #[test]
+    fn bench_json_is_parseable() {
+        let tmp = std::env::temp_dir().join(format!("percache_tenexp_{}", std::process::id()));
+        let cells = sweep().unwrap();
+        write_bench_json(&cells, &tmp).unwrap();
+        let text = std::fs::read_to_string(tmp.join("BENCH_tenancy.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("tenancy"));
+        assert_eq!(j.get("series").as_arr().unwrap().len(), TENANT_COUNTS.len());
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -17,6 +17,8 @@
 //! * [`engine`] — the PerCache facade (serve + populate pipelines).
 //! * [`baselines`] — Naive / RAGCache / MeanCache / Sleep-time Compute and
 //!   combinations, behind one `CachePolicy` trait.
+//! * [`tenancy`] — multi-tenant cache sharding: per-tenant shards, the
+//!   global memory governor, and the fair-scheduling request router.
 //! * [`datasets`] / [`sim`] — synthetic workloads and device models.
 //! * [`exp`] — the paper-figure/table reproduction harness.
 //! * [`util`] / [`testkit`] / [`tokenizer`] / [`metrics`] — substrates.
@@ -37,6 +39,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod sim;
+pub mod tenancy;
 pub mod testkit;
 pub mod tokenizer;
 pub mod util;

@@ -2,8 +2,9 @@
 //! the system.
 //!
 //! ```text
-//! percache serve  [--model llama] [--dataset mised] [--user 0] …
-//! percache exp    <fig2|…|table1|all> [--out reports]
+//! percache serve   [--model llama] [--dataset mised] [--user 0] …
+//! percache exp     <fig2|…|table1|all> [--out reports]
+//! percache tenants [--tenants 8] [--arrivals 0] [--zipf 1.0] [--sweep]
 //! percache info
 //! ```
 
@@ -23,19 +24,107 @@ fn real_main() -> Result<()> {
     match sub.as_str() {
         "serve" => cmd_serve(),
         "exp" => cmd_exp(),
+        "tenants" => cmd_tenants(),
         "info" => cmd_info(),
         _ => {
             println!(
                 "percache — predictive hierarchical cache for on-device RAG\n\n\
                  subcommands:\n  \
-                 serve   run the interactive serving demo over a dataset user\n  \
-                 exp     reproduce a paper figure/table (or `all`)\n  \
-                 info    print manifest / artifact summary\n\n\
+                 serve    run the interactive serving demo over a dataset user\n  \
+                 exp      reproduce a paper figure/table (or `all`)\n  \
+                 tenants  multi-tenant sharding demo/sweep (no artifacts needed)\n  \
+                 info     print manifest / artifact summary\n\n\
                  run `percache <subcommand> --help` for flags"
             );
             Ok(())
         }
     }
+}
+
+/// Multi-tenant cache sharding under one global budget — runs entirely at
+/// the cache level (no PJRT artifacts required).
+fn cmd_tenants() -> Result<()> {
+    use percache::config::TenancyConfig;
+    use percache::tenancy::sim::{arrivals_from_workload, replay, sim_slice_bytes, SimConfig};
+    use percache::tenancy::{RouterConfig, TenantRegistry};
+
+    let cli = Cli::new("percache tenants — multi-tenant sharding demo / scaling sweep")
+        .flag("tenants", "8", "tenant count")
+        .flag("arrivals", "0", "total arrivals (0 = 40 per tenant)")
+        .flag("zipf", "1.0", "tenant-popularity skew exponent")
+        .flag("budget-slices", "96", "global QKV budget in slices")
+        .flag("rebalance-every", "16", "governor cadence in serves")
+        .switch("sweep", "run the tenant-count sweep + BENCH_tenancy.json")
+        .switch("verbose", "per-tenant breakdown");
+    let a = cli.parse_env(1);
+
+    if a.get_bool("sweep") {
+        return percache::exp::tenancy_exp::run_and_report();
+    }
+
+    let n = a.get_usize("tenants").max(1);
+    let arrivals_n = match a.get_usize("arrivals") {
+        0 => n * 40,
+        v => v,
+    };
+    let tc = TenancyConfig {
+        enabled: true,
+        max_tenants: n,
+        global_qkv_bytes: a.get_usize("budget-slices") * sim_slice_bytes(),
+        rebalance_every: a.get_usize("rebalance-every").max(1),
+        ..TenancyConfig::default()
+    };
+
+    let mut reg = TenantRegistry::new(&tc);
+    for _ in 0..n {
+        reg.create_tenant()?;
+    }
+    let w = percache::datasets::multi_tenant(n, arrivals_n, a.get_f64("zipf"), 0xBEEF);
+    let arrivals = arrivals_from_workload(&w);
+    let out = replay(
+        &mut reg,
+        RouterConfig {
+            queue_cap: tc.queue_cap,
+            global_cap: tc.global_queue_cap,
+        },
+        &SimConfig::default(),
+        &arrivals,
+        8,
+    )?;
+
+    println!(
+        "[tenants] {} tenants, {} arrivals, global budget {} slices ({} KB)",
+        n,
+        arrivals.len(),
+        a.get_usize("budget-slices"),
+        tc.global_qkv_bytes / 1024,
+    );
+    if a.get_bool("verbose") {
+        for (i, shard) in reg.shards().iter().enumerate() {
+            let rec = &out.per_tenant[i];
+            println!(
+                "  t{:02} [{}:{}] serves={:3} hit={:3.0}% budget={:6} B used={:6} B",
+                i,
+                w.tenants[i].dataset,
+                w.tenants[i].user,
+                rec.len(),
+                shard.stats.hit_rate() * 100.0,
+                shard.qkv_budget(),
+                shard.tree.bytes_used(),
+            );
+        }
+    }
+    let lat = out.all_total_ms();
+    println!(
+        "[done] p50={:.2}ms p99={:.2}ms rejected={} rebalances={} budgets {} / {} B",
+        percache::util::bench::percentile(&lat, 50.0),
+        percache::util::bench::percentile(&lat, 99.0),
+        out.rejected,
+        out.rebalances,
+        reg.total_qkv_budget(),
+        tc.global_qkv_bytes,
+    );
+    reg.check_invariants()
 }
 
 fn cmd_info() -> Result<()> {

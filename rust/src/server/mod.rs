@@ -6,6 +6,7 @@
 //! Used by `examples/e2e_serve.rs` and the `percache serve` subcommand.
 
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Instant;
 
@@ -36,10 +37,34 @@ pub enum Command {
     Shutdown,
 }
 
+/// Shareable join-handle cell: the first `join()` waits for the thread
+/// and propagates its result; later calls — including from clones —
+/// return Ok immediately.  Used by [`ServerHandle`] and the tenancy
+/// router's `TenantServerHandle`.
+#[derive(Clone)]
+pub struct JoinCell(Arc<Mutex<Option<thread::JoinHandle<anyhow::Result<()>>>>>);
+
+impl JoinCell {
+    pub fn new(handle: thread::JoinHandle<anyhow::Result<()>>) -> Self {
+        JoinCell(Arc::new(Mutex::new(Some(handle))))
+    }
+
+    pub fn join(&self) -> anyhow::Result<()> {
+        let handle = self.0.lock().unwrap().take();
+        match handle {
+            Some(h) => h
+                .join()
+                .map_err(|_| anyhow::anyhow!("server thread panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
 /// Handle held by clients.
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: mpsc::Sender<Command>,
+    join: JoinCell,
 }
 
 impl ServerHandle {
@@ -63,48 +88,71 @@ impl ServerHandle {
             .map_err(|_| anyhow::anyhow!("server is down"))
     }
 
+    /// Request shutdown.  Already-queued requests are drained and
+    /// answered before the serving loop exits (see [`run_loop`]).
     pub fn shutdown(&self) {
         let _ = self.tx.send(Command::Shutdown);
+    }
+
+    /// Wait for the inference thread to exit.  Idempotent: the first
+    /// caller joins; later calls (or clones) return Ok immediately.
+    pub fn join(&self) -> anyhow::Result<()> {
+        self.join.join()
     }
 }
 
 /// Run a serving loop on the CURRENT thread, with `serve_fn` handling
 /// each query and `idle_fn` handling idle ticks.  Returns when Shutdown
-/// arrives.  (The engine stays on this thread; see `spawn_with`.)
+/// arrives — but only after draining and answering every request already
+/// queued at that point (clients blocked in `query()` would otherwise
+/// hang on a dropped channel).  (The engine stays on this thread; see
+/// `spawn_with`.)
 pub fn run_loop(
     rx: mpsc::Receiver<Command>,
     mut serve_fn: impl FnMut(&str) -> anyhow::Result<QueryRecord>,
     mut idle_fn: impl FnMut(),
 ) {
-    for cmd in rx {
-        match cmd {
-            Command::Serve(req) => {
-                let record = serve_fn(&req.query).unwrap_or_else(|e| {
-                    let mut r = crate::metrics::blank_record(req.id);
-                    r.answer = format!("error: {e:#}");
-                    r
-                });
-                let e2e_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
-                let _ = req.respond.send(Response {
-                    id: req.id,
-                    record,
-                    e2e_ms,
-                });
+    let mut serve = |req: Request| {
+        let record = serve_fn(&req.query).unwrap_or_else(|e| {
+            let mut r = crate::metrics::blank_record(req.id);
+            r.answer = format!("error: {e:#}");
+            r
+        });
+        let e2e_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+        let _ = req.respond.send(Response {
+            id: req.id,
+            record,
+            e2e_ms,
+        });
+    };
+    loop {
+        match rx.recv() {
+            Ok(Command::Serve(req)) => serve(req),
+            Ok(Command::IdleTick) => idle_fn(),
+            Ok(Command::Shutdown) => {
+                // drain: answer everything that was queued before the
+                // shutdown command; idle work is skipped
+                while let Ok(cmd) = rx.try_recv() {
+                    if let Command::Serve(req) = cmd {
+                        serve(req);
+                    }
+                }
+                break;
             }
-            Command::IdleTick => idle_fn(),
-            Command::Shutdown => break,
+            Err(_) => break, // all senders gone
         }
     }
 }
 
 /// Spawn a server thread whose state is built *inside* the thread by
 /// `make_state` (so non-Send engine state never crosses threads), then
-/// serve with the provided handlers.
+/// serve with the provided handlers.  Wait for the thread with
+/// `handle.join()` after `handle.shutdown()`.
 pub fn spawn_with<S: 'static>(
     make_state: impl FnOnce() -> anyhow::Result<S> + Send + 'static,
     serve_fn: impl Fn(&mut S, &str) -> anyhow::Result<QueryRecord> + Send + 'static,
     idle_fn: impl Fn(&mut S) + Send + 'static,
-) -> (ServerHandle, thread::JoinHandle<anyhow::Result<()>>) {
+) -> ServerHandle {
     let (tx, rx) = mpsc::channel();
     let handle = thread::Builder::new()
         .name("percache-server".into())
@@ -118,7 +166,10 @@ pub fn spawn_with<S: 'static>(
             Ok(())
         })
         .expect("spawn server thread");
-    (ServerHandle { tx }, handle)
+    ServerHandle {
+        tx,
+        join: JoinCell::new(handle),
+    }
 }
 
 #[cfg(test)]
@@ -128,7 +179,7 @@ mod tests {
 
     #[test]
     fn serve_roundtrip_and_shutdown() {
-        let (handle, join) = spawn_with(
+        let handle = spawn_with(
             || Ok(0usize),
             |count, q| {
                 *count += 1;
@@ -143,12 +194,14 @@ mod tests {
         assert_eq!(resp.record.answer, "echo hello");
         assert!(resp.e2e_ms >= 0.0);
         handle.shutdown();
-        join.join().unwrap().unwrap();
+        handle.join().unwrap();
+        // idempotent, also from a clone
+        handle.clone().join().unwrap();
     }
 
     #[test]
     fn concurrent_clients_serialize_on_engine() {
-        let (handle, join) = spawn_with(
+        let handle = spawn_with(
             || Ok(Vec::<usize>::new()),
             |seen, q| {
                 let n: usize = q.parse().unwrap();
@@ -168,16 +221,15 @@ mod tests {
         got.sort();
         assert_eq!(got, (0..8).collect::<Vec<_>>());
         handle.shutdown();
-        join.join().unwrap().unwrap();
+        handle.join().unwrap();
     }
 
     #[test]
     fn idle_tick_reaches_state() {
         use std::sync::atomic::{AtomicUsize, Ordering};
-        use std::sync::Arc;
         let ticks = Arc::new(AtomicUsize::new(0));
         let t2 = Arc::clone(&ticks);
-        let (handle, join) = spawn_with(
+        let handle = spawn_with(
             || Ok(()),
             |_, _| Ok(blank_record(0)),
             move |_| {
@@ -187,13 +239,13 @@ mod tests {
         handle.idle_tick().unwrap();
         handle.idle_tick().unwrap();
         handle.shutdown();
-        join.join().unwrap().unwrap();
+        handle.join().unwrap();
         assert_eq!(ticks.load(Ordering::SeqCst), 2);
     }
 
     #[test]
     fn error_in_serve_becomes_error_answer() {
-        let (handle, join) = spawn_with(
+        let handle = spawn_with(
             || Ok(()),
             |_, _| anyhow::bail!("boom"),
             |_| {},
@@ -201,6 +253,56 @@ mod tests {
         let resp = handle.query(0, "x").unwrap();
         assert!(resp.record.answer.contains("boom"));
         handle.shutdown();
-        join.join().unwrap().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        // Drive run_loop directly so the queue state is deterministic:
+        // three requests and a shutdown are already in the channel before
+        // the loop starts — all three must still be answered.
+        let (tx, rx) = mpsc::channel();
+        let mut responders = Vec::new();
+        for i in 0..3 {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Command::Serve(Request {
+                id: i,
+                query: format!("q{i}"),
+                submitted: Instant::now(),
+                respond: rtx,
+            }))
+            .unwrap();
+            responders.push(rrx);
+        }
+        tx.send(Command::Shutdown).unwrap();
+        let mut served = 0usize;
+        run_loop(
+            rx,
+            |q| {
+                served += 1;
+                let mut r = blank_record(0);
+                r.answer = format!("ans {q}");
+                Ok(r)
+            },
+            || {},
+        );
+        assert_eq!(served, 3, "queued requests were dropped on shutdown");
+        for (i, rrx) in responders.into_iter().enumerate() {
+            let resp = rrx.recv().expect("response must arrive before exit");
+            assert_eq!(resp.record.answer, format!("ans q{i}"));
+        }
+    }
+
+    #[test]
+    fn shutdown_drain_skips_idle_ticks() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let (tx, rx) = mpsc::channel();
+        tx.send(Command::Shutdown).unwrap();
+        tx.send(Command::IdleTick).unwrap();
+        let ticks = AtomicUsize::new(0);
+        run_loop(rx, |_| Ok(blank_record(0)), || {
+            ticks.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ticks.load(Ordering::SeqCst), 0, "idle work after shutdown");
     }
 }

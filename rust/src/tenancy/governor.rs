@@ -1,0 +1,237 @@
+//! The global memory governor: divides one device-wide QKV byte budget
+//! across tenant shards by caching utility.
+//!
+//! Allocation = guaranteed floor + utility-proportional share of the
+//! remainder (utility = EWMA hit rate × FLOPs saved per byte, see
+//! [`crate::tenancy::ShardStats`]).  Two hard properties, both covered by
+//! the property suite in rust/tests/properties.rs:
+//!
+//! 1. the planned budgets never sum above the global budget;
+//! 2. every shard receives at least the floor — in particular a shard
+//!    with nonzero utility is never starved to zero bytes.
+//!
+//! A hysteresis band suppresses rebalances whose largest relative budget
+//! move is below a threshold, so LFU state is not churned by noise.
+//! Budget application goes through `TenantShard::set_qkv_budget`, i.e.
+//! the existing `QkvTree::enforce_budget` LFU eviction path; shrinks are
+//! applied before grows so global residency never overshoots.
+
+use super::shard::{TenantId, TenantShard};
+
+#[derive(Debug, Clone)]
+pub struct GovernorConfig {
+    /// Device-wide QKV cache budget shared by all shards.
+    pub global_qkv_bytes: usize,
+    /// Fraction of the fair share (global/n) guaranteed to every shard.
+    pub floor_frac: f64,
+    /// Skip a rebalance whose max relative budget change is below this.
+    pub hysteresis_frac: f64,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            global_qkv_bytes: 80 << 20,
+            floor_frac: 0.25,
+            hysteresis_frac: 0.05,
+        }
+    }
+}
+
+/// One shard's planned budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub tenant: TenantId,
+    pub bytes: usize,
+    pub utility: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct MemoryGovernor {
+    pub cfg: GovernorConfig,
+    /// Rebalances applied / skipped by hysteresis (reporting).
+    pub rebalances: u64,
+    pub skipped: u64,
+}
+
+impl MemoryGovernor {
+    pub fn new(cfg: GovernorConfig) -> Self {
+        MemoryGovernor {
+            cfg,
+            rebalances: 0,
+            skipped: 0,
+        }
+    }
+
+    /// Pure allocation over (tenant, utility) pairs.  With no utility
+    /// signal anywhere (cold start) the split is uniform.
+    pub fn plan_weights(&self, entries: &[(TenantId, f64)]) -> Vec<Allocation> {
+        let n = entries.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let global = self.cfg.global_qkv_bytes;
+        if n == 1 {
+            // single-tenant mode: the whole budget, always
+            return vec![Allocation {
+                tenant: entries[0].0,
+                bytes: global,
+                utility: entries[0].1,
+            }];
+        }
+        let fair = global / n;
+        let floor = (fair as f64 * self.cfg.floor_frac) as usize;
+        let remainder = global.saturating_sub(floor * n);
+        let total_u: f64 = entries.iter().map(|(_, u)| u.max(0.0)).sum();
+        entries
+            .iter()
+            .map(|&(tenant, u)| {
+                let share = if total_u > 0.0 {
+                    (remainder as f64 * u.max(0.0) / total_u) as usize
+                } else {
+                    remainder / n
+                };
+                Allocation {
+                    tenant,
+                    bytes: floor + share,
+                    utility: u,
+                }
+            })
+            .collect()
+    }
+
+    /// Plan budgets for a set of live shards.
+    pub fn plan(&self, shards: &[TenantShard]) -> Vec<Allocation> {
+        let entries: Vec<(TenantId, f64)> =
+            shards.iter().map(|s| (s.id, s.utility())).collect();
+        self.plan_weights(&entries)
+    }
+
+    /// Plan over `(tenant, utility, current_budget)` entries and apply
+    /// through `set` — the one implementation of the hysteresis band and
+    /// the shrinks-before-grows ordering (so the global working set never
+    /// overshoots), shared by every governed backend (cache-level shards
+    /// and full `PerCache` engines alike).  Returns true when budgets
+    /// actually moved; a plan inside the hysteresis band is skipped
+    /// unless `force`.
+    pub fn rebalance_entries(
+        &mut self,
+        entries: &[(TenantId, f64, usize)],
+        mut set: impl FnMut(TenantId, usize),
+        force: bool,
+    ) -> bool {
+        let weights: Vec<(TenantId, f64)> =
+            entries.iter().map(|&(t, u, _)| (t, u)).collect();
+        let plan = self.plan_weights(&weights);
+        let current = |tenant: TenantId| {
+            entries
+                .iter()
+                .find(|e| e.0 == tenant)
+                .map(|e| e.2)
+                .unwrap_or(0)
+        };
+        let moved = plan.iter().any(|alloc| {
+            let cur = current(alloc.tenant);
+            alloc.bytes.abs_diff(cur) as f64 > self.cfg.hysteresis_frac * cur.max(1) as f64
+        });
+        if !force && !moved {
+            self.skipped += 1;
+            return false;
+        }
+        // shrinks first so the global working set never overshoots
+        for pass in 0..2 {
+            for alloc in &plan {
+                let cur = current(alloc.tenant);
+                let shrink = alloc.bytes < cur;
+                if (pass == 0) == shrink && alloc.bytes != cur {
+                    set(alloc.tenant, alloc.bytes);
+                }
+            }
+        }
+        self.rebalances += 1;
+        true
+    }
+
+    /// Plan and apply over live shards (see [`Self::rebalance_entries`]).
+    pub fn rebalance(&mut self, shards: &mut [TenantShard], force: bool) -> bool {
+        let entries: Vec<(TenantId, f64, usize)> = shards
+            .iter()
+            .map(|s| (s.id, s.utility(), s.qkv_budget()))
+            .collect();
+        self.rebalance_entries(
+            &entries,
+            |tenant, bytes| {
+                if let Some(s) = shards.iter_mut().find(|s| s.id == tenant) {
+                    s.set_qkv_budget(bytes);
+                }
+            },
+            force,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn governor(global: usize) -> MemoryGovernor {
+        MemoryGovernor::new(GovernorConfig {
+            global_qkv_bytes: global,
+            floor_frac: 0.25,
+            hysteresis_frac: 0.05,
+        })
+    }
+
+    #[test]
+    fn single_tenant_gets_everything() {
+        let g = governor(1000);
+        let plan = g.plan_weights(&[(0, 0.0)]);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].bytes, 1000);
+    }
+
+    #[test]
+    fn cold_start_is_uniform() {
+        let g = governor(1200);
+        let plan = g.plan_weights(&[(0, 0.0), (1, 0.0), (2, 0.0)]);
+        let total: usize = plan.iter().map(|a| a.bytes).sum();
+        assert!(total <= 1200);
+        assert_eq!(plan[0].bytes, plan[1].bytes);
+        assert_eq!(plan[1].bytes, plan[2].bytes);
+    }
+
+    #[test]
+    fn utility_skews_allocation_with_floor() {
+        let g = governor(8000);
+        let plan = g.plan_weights(&[(0, 9.0), (1, 1.0), (2, 0.0), (3, 0.0)]);
+        let total: usize = plan.iter().map(|a| a.bytes).sum();
+        assert!(total <= 8000, "over budget: {total}");
+        assert!(plan[0].bytes > plan[1].bytes);
+        assert!(plan[1].bytes > plan[2].bytes);
+        // floor: fair share 2000 × 0.25 = 500 — nobody starves
+        for a in &plan {
+            assert!(a.bytes >= 500, "{a:?} starved");
+        }
+    }
+
+    #[test]
+    fn rebalance_applies_and_hysteresis_skips() {
+        let mut g = governor(8 * 4096);
+        let mut shards: Vec<TenantShard> =
+            (0..4).map(|i| TenantShard::new(i, 1024, 4096, 0.5)).collect();
+        // first rebalance from uniform cold start: forced
+        assert!(g.rebalance(&mut shards, true));
+        assert_eq!(g.rebalances, 1);
+        // no utility change → plan identical → hysteresis skips
+        assert!(!g.rebalance(&mut shards, false));
+        assert_eq!(g.skipped, 1);
+        // a shard becomes clearly useful → budgets move
+        for _ in 0..32 {
+            shards[0]
+                .stats
+                .note(crate::metrics::ServePath::QkvHit, 1_000_000);
+        }
+        assert!(g.rebalance(&mut shards, false));
+        assert!(shards[0].qkv_budget() > shards[1].qkv_budget());
+    }
+}

@@ -1,0 +1,43 @@
+//! Multi-tenant cache sharding under one device-wide memory budget
+//! (DESIGN.md §6).
+//!
+//! PerCache is inherently personal — every user owns a knowledge bank,
+//! query history and predictive cache — but the paper's engine serves one
+//! tenant.  This subsystem converts it into a multi-user serving system
+//! without touching the single-tenant serve path:
+//!
+//! * [`shard`] — [`TenantShard`]: one tenant's cache state (QA bank +
+//!   QKV prefix tree + slice store + query predictor, reusing the
+//!   `cache`/`predict` types verbatim) plus the [`ShardStats`] utility
+//!   signal fed from `metrics::recorder`-style query records.
+//! * [`governor`] — [`MemoryGovernor`]: divides a global byte budget
+//!   across shards proportionally to caching utility (EWMA hit rate ×
+//!   FLOPs saved per byte, after RAGCache's reuse-value replacement and
+//!   Cache-Craft's recomputation-cost budgeting), with a per-shard floor
+//!   so no shard with nonzero utility is ever starved.  Budget changes
+//!   drive the existing LFU `enforce_budget` eviction path.
+//! * [`registry`] — [`TenantRegistry`]: owns the shards and the
+//!   governor; single-tenant mode is a registry with one shard holding
+//!   the whole budget, which keeps the paper experiments bit-identical.
+//! * [`router`] — [`Router`]: per-tenant request queues with round-robin
+//!   fair scheduling and admission control (per-tenant + global queue
+//!   caps), plus a threaded serving loop fronting `server::run_loop`'s
+//!   coordination shape.
+//! * [`multi`] — [`MultiTenantEngine`]: per-tenant [`crate::engine::PerCache`]
+//!   instances over one shared PJRT runtime, governed the same way.
+//! * [`sim`] — runtime-free cache-level replay used by the tenancy
+//!   experiment, bench, CLI and integration tests (no PJRT artifacts
+//!   required).
+
+pub mod governor;
+pub mod multi;
+pub mod registry;
+pub mod router;
+pub mod shard;
+pub mod sim;
+
+pub use governor::{Allocation, GovernorConfig, MemoryGovernor};
+pub use multi::MultiTenantEngine;
+pub use registry::TenantRegistry;
+pub use router::{Rejection, Router, RouterConfig, TenantCommand, TenantServerHandle};
+pub use shard::{ShardStats, TenantId, TenantShard};

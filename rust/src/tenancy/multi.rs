@@ -1,0 +1,167 @@
+//! Multi-tenant engine: one [`PerCache`] instance per tenant over a
+//! single shared PJRT [`Runtime`] (weights and compiled executables are
+//! cached per-runtime, so tenants share them), governed by the same
+//! utility-proportional byte allocator as the cache-level shards.
+//!
+//! The utility signal is fed from `metrics::recorder` query records: each
+//! serve's measured FLOPs are compared against the analytic cold-cache
+//! cost of the same prompt, and the EWMA of (hit, FLOPs saved) drives the
+//! governor exactly as in [`super::shard::ShardStats`].
+
+use anyhow::Result;
+
+use crate::config::PerCacheConfig;
+use crate::engine::{IdleReport, PerCache};
+use crate::metrics::{ModelDims, QueryRecord, Recorder, ServePath};
+use crate::runtime::Runtime;
+use crate::tokenizer::SEGMENT_TOKENS;
+
+use super::governor::{GovernorConfig, MemoryGovernor};
+use super::shard::{ShardStats, TenantId};
+
+pub struct MultiTenantEngine<'rt> {
+    rt: &'rt Runtime,
+    base: PerCacheConfig,
+    engines: Vec<PerCache<'rt>>,
+    stats: Vec<ShardStats>,
+    /// Per-tenant measurement streams (Fig 14-style comparisons per user).
+    pub recorders: Vec<Recorder>,
+    pub governor: MemoryGovernor,
+    serves: u64,
+}
+
+impl<'rt> MultiTenantEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, base: PerCacheConfig) -> Self {
+        let t = &base.tenancy;
+        MultiTenantEngine {
+            rt,
+            governor: MemoryGovernor::new(GovernorConfig {
+                global_qkv_bytes: t.global_qkv_bytes,
+                floor_frac: t.floor_frac,
+                hysteresis_frac: t.hysteresis_frac,
+            }),
+            base,
+            engines: Vec::new(),
+            stats: Vec::new(),
+            recorders: Vec::new(),
+            serves: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
+    }
+
+    pub fn engine(&self, tenant: TenantId) -> Option<&PerCache<'rt>> {
+        self.engines.get(tenant as usize)
+    }
+
+    pub fn engine_mut(&mut self, tenant: TenantId) -> Option<&mut PerCache<'rt>> {
+        self.engines.get_mut(tenant as usize)
+    }
+
+    pub fn stats(&self, tenant: TenantId) -> Option<&ShardStats> {
+        self.stats.get(tenant as usize)
+    }
+
+    /// Add a tenant (own KB, retriever, caches, predictor); budgets are
+    /// re-planned across all tenants.
+    pub fn add_tenant(&mut self) -> Result<TenantId> {
+        let tc = &self.base.tenancy;
+        anyhow::ensure!(
+            self.engines.len() < tc.max_tenants,
+            "tenant limit reached ({})",
+            tc.max_tenants
+        );
+        let mut cfg = self.base.clone();
+        cfg.qa_storage_bytes = tc.qa_bytes_per_tenant;
+        // start from zero; the forced rebalance below hands out budgets
+        cfg.qkv_storage_bytes = 0;
+        let alpha = tc.utility_alpha;
+        self.engines.push(PerCache::new(self.rt, cfg)?);
+        self.stats.push(ShardStats::new(alpha));
+        self.recorders.push(Recorder::new());
+        self.rebalance(true);
+        Ok((self.engines.len() - 1) as TenantId)
+    }
+
+    pub fn add_document(&mut self, tenant: TenantId, text: &str) -> Result<Vec<usize>> {
+        self.engine_checked(tenant)?.add_document(text)
+    }
+
+    /// Serve one query for `tenant`, feeding the governor's utility
+    /// signal from the resulting record.
+    pub fn serve(&mut self, tenant: TenantId, query: &str) -> Result<QueryRecord> {
+        let rec = self.engine_checked(tenant)?.serve(query)?;
+        let full = self.cold_cost(tenant, &rec);
+        let idx = tenant as usize;
+        self.stats[idx].note_record(&rec, full);
+        self.recorders[idx].push(rec.clone());
+        self.serves += 1;
+        if self.serves % self.base.tenancy.rebalance_every as u64 == 0 {
+            self.rebalance(false);
+        }
+        Ok(rec)
+    }
+
+    pub fn idle_tick(&mut self, tenant: TenantId) -> Result<IdleReport> {
+        self.engine_checked(tenant)?.idle_tick()
+    }
+
+    /// Utility-proportional budget re-plan across all tenants, through
+    /// the governor's shared hysteresis + shrink-first apply path.
+    /// Returns true when budgets moved.
+    pub fn rebalance(&mut self, force: bool) -> bool {
+        let entries: Vec<(TenantId, f64, usize)> = self
+            .engines
+            .iter()
+            .zip(&self.stats)
+            .enumerate()
+            .map(|(i, (e, s))| {
+                (
+                    i as TenantId,
+                    s.utility(e.tree.bytes_used() + e.qa.bytes_used()),
+                    e.tree.byte_limit(),
+                )
+            })
+            .collect();
+        let engines = &mut self.engines;
+        self.governor.rebalance_entries(
+            &entries,
+            |tenant, bytes| engines[tenant as usize].set_qkv_storage(bytes),
+            force,
+        )
+    }
+
+    pub fn total_qkv_budget(&self) -> usize {
+        self.engines.iter().map(|e| e.tree.byte_limit()).sum()
+    }
+
+    fn engine_checked(&mut self, tenant: TenantId) -> Result<&mut PerCache<'rt>> {
+        let n = self.engines.len();
+        self.engines
+            .get_mut(tenant as usize)
+            .ok_or_else(|| anyhow::anyhow!("unknown tenant {tenant} (have {n})"))
+    }
+
+    /// Analytic cost the query would have paid with cold caches — the
+    /// "FLOPs saved" reference for the utility signal.
+    fn cold_cost(&self, tenant: TenantId, rec: &QueryRecord) -> u64 {
+        let eng = &self.engines[tenant as usize];
+        let dims: ModelDims = eng.llm.dims;
+        // a QA hit skips prompt assembly, so fall back to the configured
+        // prompt shape (sys + top_k chunks + query)
+        let n_seg = if rec.path == ServePath::QaHit || rec.n_segments == 0 {
+            2 + eng.cfg.top_k.min(eng.kb.len())
+        } else {
+            rec.n_segments
+        };
+        let s = n_seg * SEGMENT_TOKENS;
+        dims.prefill_full(s)
+            + eng.cfg.decode_tokens as u64 * dims.decode_step(eng.llm.decode_ctx)
+    }
+}

@@ -1,0 +1,205 @@
+//! The tenant registry: owns every tenant's cache shard and the memory
+//! governor that arbitrates bytes between them.
+
+use anyhow::Result;
+
+use crate::config::TenancyConfig;
+
+use super::governor::{Allocation, GovernorConfig, MemoryGovernor};
+use super::shard::{TenantId, TenantShard};
+
+pub struct TenantRegistry {
+    shards: Vec<TenantShard>,
+    pub governor: MemoryGovernor,
+    cfg: TenancyConfig,
+    /// Serves since the last governor pass (drives `rebalance_every`).
+    serves_since_rebalance: u64,
+}
+
+impl TenantRegistry {
+    pub fn new(cfg: &TenancyConfig) -> Self {
+        TenantRegistry {
+            shards: Vec::new(),
+            governor: MemoryGovernor::new(GovernorConfig {
+                global_qkv_bytes: cfg.global_qkv_bytes,
+                floor_frac: cfg.floor_frac,
+                hysteresis_frac: cfg.hysteresis_frac,
+            }),
+            cfg: cfg.clone(),
+            serves_since_rebalance: 0,
+        }
+    }
+
+    /// Single-tenant mode: one shard holding the whole global budget —
+    /// the configuration under which the paper experiments run unchanged.
+    pub fn single_tenant(cfg: &TenancyConfig) -> Self {
+        let mut reg = Self::new(cfg);
+        reg.create_tenant().expect("max_tenants >= 1");
+        reg
+    }
+
+    /// Register a new tenant; every shard's budget is re-planned so the
+    /// newcomer starts from its governed share (cold start: uniform).
+    pub fn create_tenant(&mut self) -> Result<TenantId> {
+        anyhow::ensure!(
+            self.shards.len() < self.cfg.max_tenants,
+            "tenant limit reached ({})",
+            self.cfg.max_tenants
+        );
+        let id = self.shards.len() as TenantId;
+        self.shards.push(TenantShard::new(
+            id,
+            self.cfg.qa_bytes_per_tenant,
+            0, // budget assigned by the forced rebalance below
+            self.cfg.utility_alpha,
+        ));
+        self.governor.rebalance(&mut self.shards, true);
+        Ok(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn shard(&self, id: TenantId) -> Option<&TenantShard> {
+        self.shards.get(id as usize)
+    }
+
+    pub fn shard_mut(&mut self, id: TenantId) -> Option<&mut TenantShard> {
+        self.shards.get_mut(id as usize)
+    }
+
+    pub fn shards(&self) -> &[TenantShard] {
+        &self.shards
+    }
+
+    /// Count one serve; every `rebalance_every` serves the governor gets
+    /// a chance to move bytes.  Returns true when a rebalance applied.
+    pub fn note_serve(&mut self) -> bool {
+        self.serves_since_rebalance += 1;
+        if self.serves_since_rebalance >= self.cfg.rebalance_every as u64 {
+            self.serves_since_rebalance = 0;
+            return self.governor.rebalance(&mut self.shards, false);
+        }
+        false
+    }
+
+    /// Force an immediate governor pass (bypasses cadence + hysteresis).
+    pub fn rebalance_now(&mut self) -> bool {
+        self.serves_since_rebalance = 0;
+        self.governor.rebalance(&mut self.shards, true)
+    }
+
+    /// Current governed plan (reporting / tests).
+    pub fn plan(&self) -> Vec<Allocation> {
+        self.governor.plan(&self.shards)
+    }
+
+    pub fn total_qkv_used(&self) -> usize {
+        self.shards.iter().map(|s| s.tree.bytes_used()).sum()
+    }
+
+    pub fn total_qkv_budget(&self) -> usize {
+        self.shards.iter().map(|s| s.qkv_budget()).sum()
+    }
+
+    /// Registry-wide invariants: per-shard consistency plus the global
+    /// budget bound (budgets and residency never exceed the governed
+    /// global byte budget).
+    pub fn check_invariants(&self) -> Result<()> {
+        for s in &self.shards {
+            s.check_invariants()?;
+        }
+        anyhow::ensure!(
+            self.total_qkv_budget() <= self.governor.cfg.global_qkv_bytes,
+            "shard budgets {} exceed global {}",
+            self.total_qkv_budget(),
+            self.governor.cfg.global_qkv_bytes
+        );
+        anyhow::ensure!(
+            self.total_qkv_used() <= self.governor.cfg.global_qkv_bytes,
+            "shard residency {} exceeds global {}",
+            self.total_qkv_used(),
+            self.governor.cfg.global_qkv_bytes
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::QkvTensor;
+
+    fn cfg(global: usize) -> TenancyConfig {
+        TenancyConfig {
+            global_qkv_bytes: global,
+            ..TenancyConfig::default()
+        }
+    }
+
+    #[test]
+    fn single_tenant_holds_whole_budget() {
+        let reg = TenantRegistry::single_tenant(&cfg(1 << 20));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.shard(0).unwrap().qkv_budget(), 1 << 20);
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn create_many_respects_global_budget() {
+        let mut reg = TenantRegistry::new(&cfg(64 * 4096));
+        for _ in 0..8 {
+            reg.create_tenant().unwrap();
+        }
+        assert_eq!(reg.len(), 8);
+        reg.check_invariants().unwrap();
+        // cold start: equal budgets
+        let b0 = reg.shard(0).unwrap().qkv_budget();
+        assert!(reg.shards().iter().all(|s| s.qkv_budget() == b0));
+    }
+
+    #[test]
+    fn tenant_limit_enforced() {
+        let mut tc = cfg(1 << 20);
+        tc.max_tenants = 2;
+        let mut reg = TenantRegistry::new(&tc);
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        assert!(reg.create_tenant().is_err());
+    }
+
+    #[test]
+    fn note_serve_triggers_periodic_rebalance() {
+        let mut tc = cfg(32 * 3088);
+        tc.rebalance_every = 4;
+        let mut reg = TenantRegistry::new(&tc);
+        for _ in 0..2 {
+            reg.create_tenant().unwrap();
+        }
+        // make tenant 0 useful so the periodic pass has something to move
+        let t = QkvTensor::zeros(1, 4, 64);
+        reg.shard_mut(0).unwrap().insert_path(&[1], vec![t]).unwrap();
+        for _ in 0..32 {
+            reg.shard_mut(0).unwrap().prefix_match(&[1]);
+            reg.shard_mut(0)
+                .unwrap()
+                .stats
+                .note(crate::metrics::ServePath::QkvHit, 1_000_000);
+        }
+        let mut applied = false;
+        for _ in 0..8 {
+            applied |= reg.note_serve();
+        }
+        assert!(applied, "periodic rebalance never applied");
+        assert!(
+            reg.shard(0).unwrap().qkv_budget() > reg.shard(1).unwrap().qkv_budget(),
+            "useful shard did not grow"
+        );
+        reg.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,433 @@
+//! Request routing for multi-tenant serving: per-tenant FIFO queues,
+//! round-robin fair scheduling across tenants, and admission control
+//! under load (per-tenant and global queue caps).
+//!
+//! [`Router`] is a pure data structure (unit-testable); the
+//! [`spawn_tenant_server`] loop wires it in front of a single inference
+//! thread using the same coordination shape as `server::spawn_with` —
+//! commands arrive over a channel, the router reorders them fairly, and
+//! one request is served between channel drains so a chatty tenant can
+//! never occupy the engine back-to-back while others wait.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use crate::metrics::{blank_record, QueryRecord};
+use crate::server::{JoinCell, Request, Response};
+
+use super::shard::TenantId;
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Max queued requests per tenant.
+    pub queue_cap: usize,
+    /// Max queued requests across all tenants.
+    pub global_cap: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            queue_cap: 32,
+            global_cap: 256,
+        }
+    }
+}
+
+/// Why admission control turned a request away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejection {
+    QueueFull,
+    GlobalFull,
+    UnknownTenant,
+}
+
+impl std::fmt::Display for Rejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejection::QueueFull => write!(f, "per-tenant queue full"),
+            Rejection::GlobalFull => write!(f, "global queue full"),
+            Rejection::UnknownTenant => write!(f, "unknown tenant"),
+        }
+    }
+}
+
+/// Per-tenant queues + fair scheduler.
+pub struct Router<T> {
+    cfg: RouterConfig,
+    queues: Vec<VecDeque<T>>,
+    /// Next tenant the scheduler looks at (rotates on every pop).
+    cursor: usize,
+    queued: usize,
+    pub enqueued: u64,
+    pub rejected: u64,
+    pub popped: u64,
+}
+
+impl<T> Router<T> {
+    pub fn new(cfg: RouterConfig) -> Self {
+        Router {
+            cfg,
+            queues: Vec::new(),
+            cursor: 0,
+            queued: 0,
+            enqueued: 0,
+            rejected: 0,
+            popped: 0,
+        }
+    }
+
+    /// Register the next tenant; ids align with the registry's.
+    pub fn register_tenant(&mut self) -> TenantId {
+        self.queues.push(VecDeque::new());
+        (self.queues.len() - 1) as TenantId
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queued
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    pub fn queue_len(&self, tenant: TenantId) -> usize {
+        self.queues.get(tenant as usize).map_or(0, |q| q.len())
+    }
+
+    /// Admission-controlled enqueue; a rejected item is handed back so
+    /// the caller can answer the client.
+    pub fn try_push(&mut self, tenant: TenantId, item: T) -> Result<(), (Rejection, T)> {
+        let Some(q) = self.queues.get_mut(tenant as usize) else {
+            self.rejected += 1;
+            return Err((Rejection::UnknownTenant, item));
+        };
+        if self.queued >= self.cfg.global_cap {
+            self.rejected += 1;
+            return Err((Rejection::GlobalFull, item));
+        }
+        if q.len() >= self.cfg.queue_cap {
+            self.rejected += 1;
+            return Err((Rejection::QueueFull, item));
+        }
+        q.push_back(item);
+        self.queued += 1;
+        self.enqueued += 1;
+        Ok(())
+    }
+
+    /// Round-robin pop: take the head of the first non-empty queue at or
+    /// after the cursor, then advance the cursor past it.  Backlogged
+    /// tenants therefore get equal service regardless of arrival rate;
+    /// within a tenant, order stays FIFO.
+    pub fn pop(&mut self) -> Option<(TenantId, T)> {
+        let n = self.queues.len();
+        if n == 0 || self.queued == 0 {
+            return None;
+        }
+        for step in 0..n {
+            let t = (self.cursor + step) % n;
+            if let Some(item) = self.queues[t].pop_front() {
+                self.cursor = (t + 1) % n;
+                self.queued -= 1;
+                self.popped += 1;
+                return Some((t as TenantId, item));
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// threaded serving loop
+// ---------------------------------------------------------------------------
+
+/// Commands accepted by the multi-tenant serving loop.
+pub enum TenantCommand {
+    Serve { tenant: TenantId, req: Request },
+    /// Run one idle tick for a tenant (population/conversions).
+    IdleTick { tenant: TenantId },
+    Shutdown,
+}
+
+/// Client handle to a multi-tenant serving thread.
+#[derive(Clone)]
+pub struct TenantServerHandle {
+    tx: mpsc::Sender<TenantCommand>,
+    join: JoinCell,
+}
+
+impl TenantServerHandle {
+    /// Blocking query on behalf of `tenant`.
+    pub fn query(&self, tenant: TenantId, id: usize, query: &str) -> anyhow::Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(TenantCommand::Serve {
+                tenant,
+                req: Request {
+                    id,
+                    query: query.to_string(),
+                    submitted: Instant::now(),
+                    respond: rtx,
+                },
+            })
+            .map_err(|_| anyhow::anyhow!("tenant server is down"))?;
+        rrx.recv()
+            .map_err(|_| anyhow::anyhow!("tenant server dropped request"))
+    }
+
+    pub fn idle_tick(&self, tenant: TenantId) -> anyhow::Result<()> {
+        self.tx
+            .send(TenantCommand::IdleTick { tenant })
+            .map_err(|_| anyhow::anyhow!("tenant server is down"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(TenantCommand::Shutdown);
+    }
+
+    /// Wait for the serving thread to exit (idempotent).
+    pub fn join(&self) -> anyhow::Result<()> {
+        self.join.join()
+    }
+}
+
+/// Run the routed serving loop on the current thread.  Commands are
+/// drained into the router between serves; `Shutdown` stops admission
+/// and drains everything already queued before returning.
+pub fn run_tenant_loop(
+    rx: mpsc::Receiver<TenantCommand>,
+    cfg: RouterConfig,
+    n_tenants: usize,
+    mut serve_fn: impl FnMut(TenantId, &str) -> anyhow::Result<QueryRecord>,
+    mut idle_fn: impl FnMut(TenantId),
+) {
+    let mut router: Router<Request> = Router::new(cfg);
+    for _ in 0..n_tenants {
+        router.register_tenant();
+    }
+    let mut shutting_down = false;
+    let mut disconnected = false;
+
+    let handle = |cmd: TenantCommand,
+                      router: &mut Router<Request>,
+                      shutting_down: &mut bool,
+                      idle_fn: &mut dyn FnMut(TenantId)| {
+        match cmd {
+            TenantCommand::Serve { tenant, req } => {
+                if *shutting_down {
+                    respond_error(req, "server shutting down");
+                } else if let Err((why, req)) = router.try_push(tenant, req) {
+                    respond_error(req, &format!("admission rejected: {why}"));
+                }
+            }
+            TenantCommand::IdleTick { tenant } => {
+                if !*shutting_down {
+                    idle_fn(tenant);
+                }
+            }
+            TenantCommand::Shutdown => *shutting_down = true,
+        }
+    };
+
+    loop {
+        // block only when there is nothing to serve
+        if router.is_empty() && !disconnected {
+            if shutting_down {
+                break;
+            }
+            match rx.recv() {
+                Ok(cmd) => handle(cmd, &mut router, &mut shutting_down, &mut idle_fn),
+                Err(_) => break,
+            }
+        }
+        // drain whatever else is pending without blocking
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => handle(cmd, &mut router, &mut shutting_down, &mut idle_fn),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        // serve one request, picked fairly across tenants
+        match router.pop() {
+            Some((tenant, req)) => {
+                let record = serve_fn(tenant, &req.query).unwrap_or_else(|e| {
+                    let mut r = blank_record(req.id);
+                    r.answer = format!("error: {e:#}");
+                    r
+                });
+                let e2e_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+                let _ = req.respond.send(Response {
+                    id: req.id,
+                    record,
+                    e2e_ms,
+                });
+            }
+            None => {
+                if shutting_down || disconnected {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn respond_error(req: Request, msg: &str) {
+    let mut r = blank_record(req.id);
+    r.answer = format!("error: {msg}");
+    let e2e_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+    let _ = req.respond.send(Response {
+        id: req.id,
+        record: r,
+        e2e_ms,
+    });
+}
+
+/// Spawn a multi-tenant serving thread whose state is built inside the
+/// thread (non-Send engine state never crosses threads), mirroring
+/// `server::spawn_with`.
+pub fn spawn_tenant_server<S: 'static>(
+    cfg: RouterConfig,
+    n_tenants: usize,
+    make_state: impl FnOnce() -> anyhow::Result<S> + Send + 'static,
+    serve_fn: impl Fn(&mut S, TenantId, &str) -> anyhow::Result<QueryRecord> + Send + 'static,
+    idle_fn: impl Fn(&mut S, TenantId) + Send + 'static,
+) -> TenantServerHandle {
+    let (tx, rx) = mpsc::channel();
+    let join = thread::Builder::new()
+        .name("percache-tenant-server".into())
+        .spawn(move || -> anyhow::Result<()> {
+            let state = std::cell::RefCell::new(make_state()?);
+            run_tenant_loop(
+                rx,
+                cfg,
+                n_tenants,
+                |t, q| serve_fn(&mut state.borrow_mut(), t, q),
+                |t| idle_fn(&mut state.borrow_mut(), t),
+            );
+            Ok(())
+        })
+        .expect("spawn tenant server thread");
+    TenantServerHandle {
+        tx,
+        join: JoinCell::new(join),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(queue_cap: usize, global_cap: usize, tenants: usize) -> Router<usize> {
+        let mut r = Router::new(RouterConfig {
+            queue_cap,
+            global_cap,
+        });
+        for _ in 0..tenants {
+            r.register_tenant();
+        }
+        r
+    }
+
+    #[test]
+    fn round_robin_is_fair_under_backlog() {
+        let mut r = router(16, 64, 3);
+        // tenant 0 floods, tenants 1/2 trickle
+        for i in 0..9 {
+            r.try_push(0, i).unwrap();
+        }
+        for i in 0..3 {
+            r.try_push(1, 100 + i).unwrap();
+            r.try_push(2, 200 + i).unwrap();
+        }
+        let mut served = [0usize; 3];
+        for _ in 0..9 {
+            let (t, _) = r.pop().unwrap();
+            served[t as usize] += 1;
+        }
+        // first 9 pops: each backlogged tenant gets exactly 3
+        assert_eq!(served, [3, 3, 3], "unfair service: {served:?}");
+    }
+
+    #[test]
+    fn fifo_within_tenant() {
+        let mut r = router(16, 64, 2);
+        for i in 0..5 {
+            r.try_push(0, i).unwrap();
+        }
+        let mut got = Vec::new();
+        while let Some((_, v)) = r.pop() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn admission_control_rejects() {
+        let mut r = router(2, 3, 2);
+        r.try_push(0, 1).unwrap();
+        r.try_push(0, 2).unwrap();
+        assert_eq!(r.try_push(0, 3).unwrap_err().0, Rejection::QueueFull);
+        r.try_push(1, 4).unwrap();
+        assert_eq!(r.try_push(1, 5).unwrap_err().0, Rejection::GlobalFull);
+        assert_eq!(r.try_push(9, 6).unwrap_err().0, Rejection::UnknownTenant);
+        assert_eq!(r.rejected, 3);
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn empty_router_pops_nothing() {
+        let mut r = router(4, 8, 2);
+        assert!(r.pop().is_none());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn threaded_loop_serves_and_drains_on_shutdown() {
+        let handle = spawn_tenant_server(
+            RouterConfig::default(),
+            2,
+            || Ok(Vec::<(TenantId, String)>::new()),
+            |seen, t, q| {
+                seen.push((t, q.to_string()));
+                let mut r = blank_record(seen.len());
+                r.answer = format!("t{t}: {q}");
+                Ok(r)
+            },
+            |_, _| {},
+        );
+        let a = handle.query(0, 1, "hello").unwrap();
+        assert_eq!(a.record.answer, "t0: hello");
+        let b = handle.query(1, 2, "world").unwrap();
+        assert_eq!(b.record.answer, "t1: world");
+        handle.shutdown();
+        handle.join().unwrap();
+        // join is idempotent
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_tenant_gets_error_response() {
+        let handle = spawn_tenant_server(
+            RouterConfig::default(),
+            1,
+            || Ok(()),
+            |_, _, _| Ok(blank_record(0)),
+            |_, _| {},
+        );
+        let resp = handle.query(7, 1, "hi").unwrap();
+        assert!(resp.record.answer.contains("unknown tenant"), "{}", resp.record.answer);
+        handle.shutdown();
+        handle.join().unwrap();
+    }
+}

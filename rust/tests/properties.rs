@@ -139,6 +139,152 @@ fn prop_tree_eviction_prefers_cold_nodes() {
     );
 }
 
+#[test]
+fn prop_tree_eviction_respects_protect_set() {
+    // The path handed to insert_path is protected while the budget is
+    // enforced: as long as the budget can hold the whole path, every one
+    // of its slices must survive its own insert — even when pre-existing
+    // nodes are arbitrarily hot (protection beats LFU order).
+    forall(
+        120,
+        |rng| {
+            let depth = rng.range(1, 4);
+            let budget_slices = rng.range(depth, depth + 3);
+            let n_pre = rng.range(0, 5);
+            let pre: Vec<Vec<u64>> = (0..n_pre)
+                .map(|_| {
+                    let d = rng.range(1, 3);
+                    (0..d).map(|_| rng.range(1, 9) as u64).collect()
+                })
+                .collect();
+            let heat = rng.range(0, 6);
+            (depth, budget_slices, pre, heat, rng.next_u64())
+        },
+        |(depth, budget_slices, pre, heat, seed)| {
+            let mut rng = Rng::new(*seed);
+            let slice_bytes = QkvTensor::zeros(1, 4, SEG).byte_size() + 16;
+            let mut store = SliceStore::memory();
+            let mut tree = QkvTree::new(budget_slices * slice_bytes);
+            for p in pre {
+                let slices: Vec<QkvTensor> = p.iter().map(|_| tiny_tensor(&mut rng)).collect();
+                tree.insert_path(p, slices, &mut store).map_err(|e| e.to_string())?;
+                for _ in 0..*heat {
+                    tree.match_prefix(p); // make pre-existing nodes hot
+                }
+            }
+            // fresh path in a disjoint key range (100+)
+            let path: Vec<u64> = (0..*depth).map(|i| 100 + i as u64).collect();
+            let slices: Vec<QkvTensor> = path.iter().map(|_| tiny_tensor(&mut rng)).collect();
+            tree.insert_path(&path, slices, &mut store).map_err(|e| e.to_string())?;
+            tree.check_invariants().map_err(|e| e.to_string())?;
+            check(
+                tree.cached_prefix_len(&path) == *depth,
+                format!(
+                    "inserted path lost slices mid-insert: {} of {depth} cached \
+                     (budget {budget_slices} slices, {} pre-paths heated {heat}x)",
+                    tree.cached_prefix_len(&path),
+                    pre.len()
+                ),
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// memory governor
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_governor_never_starves_nonzero_utility_and_stays_in_budget() {
+    use percache::tenancy::{GovernorConfig, MemoryGovernor};
+    forall(
+        200,
+        |rng| {
+            let n = rng.range(2, 12);
+            let per_shard = rng.range(64, 4096);
+            let utilities: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.chance(0.4) {
+                        0.0
+                    } else {
+                        rng.f64() * 1e6
+                    }
+                })
+                .collect();
+            (n * per_shard, utilities)
+        },
+        |(global, utilities)| {
+            let gov = MemoryGovernor::new(GovernorConfig {
+                global_qkv_bytes: *global,
+                floor_frac: 0.25,
+                hysteresis_frac: 0.05,
+            });
+            let entries: Vec<(u32, f64)> = utilities
+                .iter()
+                .enumerate()
+                .map(|(i, &u)| (i as u32, u))
+                .collect();
+            let plan = gov.plan_weights(&entries);
+            let n = utilities.len();
+            let floor = (*global / n) / 4; // fair × floor_frac
+            let total: usize = plan.iter().map(|a| a.bytes).sum();
+            check(total <= *global, format!("plan over budget: {total} > {global}"))?;
+            for (alloc, &u) in plan.iter().zip(utilities) {
+                check(
+                    alloc.bytes >= floor,
+                    format!("shard {} below floor: {} < {floor}", alloc.tenant, alloc.bytes),
+                )?;
+                if u > 0.0 {
+                    check(
+                        alloc.bytes > 0,
+                        format!("nonzero-utility shard {} starved", alloc.tenant),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_governor_allocation_is_utility_monotone() {
+    use percache::tenancy::{GovernorConfig, MemoryGovernor};
+    forall(
+        150,
+        |rng| {
+            let n = rng.range(2, 10);
+            (0..n).map(|_| rng.f64() * 100.0).collect::<Vec<f64>>()
+        },
+        |utilities| {
+            let gov = MemoryGovernor::new(GovernorConfig {
+                global_qkv_bytes: utilities.len() * 10_000,
+                floor_frac: 0.25,
+                hysteresis_frac: 0.05,
+            });
+            let entries: Vec<(u32, f64)> = utilities
+                .iter()
+                .enumerate()
+                .map(|(i, &u)| (i as u32, u))
+                .collect();
+            let plan = gov.plan_weights(&entries);
+            for a in &plan {
+                for b in &plan {
+                    if a.utility > b.utility {
+                        check(
+                            a.bytes >= b.bytes,
+                            format!(
+                                "monotonicity violated: u={} got {} < u={} got {}",
+                                a.utility, a.bytes, b.utility, b.bytes
+                            ),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---------------------------------------------------------------------------
 // QA bank
 // ---------------------------------------------------------------------------

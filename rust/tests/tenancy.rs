@@ -1,0 +1,241 @@
+//! Multi-tenant integration: eight tenants share one global QKV budget,
+//! the memory governor reallocates bytes toward high-utility shards
+//! (asserted via per-shard hit-rate deltas), and single-tenant mode is
+//! exactly the paper configuration (one shard, whole budget).
+//!
+//! Runs entirely at the cache level — real shards, governor, router and
+//! eviction; no PJRT artifacts required.
+
+use percache::config::TenancyConfig;
+use percache::metrics::ServePath;
+use percache::tenancy::sim::{replay, serve_one, sim_slice_bytes, Arrival, SimConfig};
+use percache::tenancy::{RouterConfig, TenantRegistry};
+use percache::tokenizer::fnv1a64;
+
+const N_TENANTS: usize = 8;
+const HOT: [u32; 2] = [0, 1];
+/// Hot tenants cycle 2 topics in bursts; each topic is 3 chunks, so the
+/// hot working set is 6 slices.
+const HOT_TOPICS: u64 = 2;
+const BURST: usize = 4;
+
+fn slice_bytes() -> usize {
+    sim_slice_bytes()
+}
+
+fn tenancy_config() -> TenancyConfig {
+    let mut tc = TenancyConfig::default();
+    tc.enabled = true;
+    tc.max_tenants = N_TENANTS;
+    // global budget: 24 slices → fair share 3 slices per tenant, half the
+    // hot working set of 6, so uniform sharding must thrash
+    tc.global_qkv_bytes = 24 * slice_bytes();
+    // floor = fair share × 0.4 ≈ 1.2 slices: nobody is starved to zero
+    tc.floor_frac = 0.4;
+    tc.utility_alpha = 0.2;
+    tc
+}
+
+/// QKV-layer-only cost model: τ above 1.0 makes the QA bank unreachable
+/// (cosine ≤ 1), isolating the governed layer and keeping hit counts
+/// exactly predictable (no feature-hash collision noise).
+fn sim() -> SimConfig {
+    SimConfig {
+        tau_query: 1.1,
+        ..SimConfig::default()
+    }
+}
+
+/// Arrival for a (tenant, serial) pair.  Hot tenants revisit a 2-topic
+/// set in bursts of 4 (reusable 3-chunk paths); cold tenants touch a
+/// fresh 3-chunk path every time (nothing to reuse).  Query text is
+/// unique per serial.
+fn arrival(tenant: u32, serial: usize) -> Arrival {
+    let topic = if HOT.contains(&tenant) {
+        (serial / BURST) as u64 % HOT_TOPICS
+    } else {
+        serial as u64 // always fresh
+    };
+    let query = format!("question item{serial:04} about topic{topic} tenant{tenant}");
+    let chunk = |part: &str| fnv1a64(format!("t{tenant}/topic{topic}/{part}").as_bytes());
+    Arrival {
+        tenant,
+        seg_keys: vec![
+            chunk("a"),
+            chunk("b"),
+            chunk("c"),
+            fnv1a64(query.as_bytes()),
+        ],
+        query,
+    }
+}
+
+/// Serve `serves_per_tenant` arrivals for every tenant, interleaved, and
+/// return the per-tenant hit rate of this window.
+fn drive_window(
+    reg: &mut TenantRegistry,
+    sim: &SimConfig,
+    serial_base: usize,
+    serves_per_tenant: usize,
+) -> Vec<f64> {
+    let mut hits = vec![0usize; N_TENANTS];
+    for round in 0..serves_per_tenant {
+        for t in 0..N_TENANTS as u32 {
+            let a = arrival(t, serial_base + round);
+            let rec = serve_one(sim, reg.shard_mut(t).unwrap(), &a.query, &a.seg_keys).unwrap();
+            if rec.path != ServePath::Full {
+                hits[t as usize] += 1;
+            }
+        }
+    }
+    hits.iter()
+        .map(|&h| h as f64 / serves_per_tenant as f64)
+        .collect()
+}
+
+#[test]
+fn governor_reallocates_toward_high_utility_shards() {
+    let tc = tenancy_config();
+    let sim = sim();
+    let mut reg = TenantRegistry::new(&tc);
+    for _ in 0..N_TENANTS {
+        reg.create_tenant().unwrap();
+    }
+    assert_eq!(reg.len(), 8, "acceptance bar: at least 8 tenants");
+    let uniform = reg.shard(0).unwrap().qkv_budget();
+    assert!(
+        reg.shards().iter().all(|s| s.qkv_budget() == uniform),
+        "cold start must be uniform"
+    );
+
+    // window A: uniform budgets — every topic switch inserts 3 protected
+    // slices into a 3-slice share, evicting the whole previous topic, so
+    // every burst starts with a full miss: hot hit rate is exactly 3/4
+    let hit_a = drive_window(&mut reg, &sim, 0, 36);
+    for &h in &HOT {
+        assert!(
+            (0.5..=0.8).contains(&hit_a[h as usize]),
+            "hot tenant {h} should thrash at 3/4 under uniform sharding: {hit_a:?}"
+        );
+    }
+    for t in 2..N_TENANTS {
+        assert!(
+            hit_a[t] < 0.1,
+            "cold tenant {t} has nothing to reuse: {hit_a:?}"
+        );
+    }
+
+    // the governor moves bytes toward the shards earning them
+    assert!(reg.rebalance_now(), "rebalance must apply");
+    let hot_budget = reg.shard(HOT[0]).unwrap().qkv_budget();
+    let cold_budget = reg.shard(5).unwrap().qkv_budget();
+    assert!(
+        hot_budget > uniform,
+        "hot budget {hot_budget} did not grow past uniform {uniform}"
+    );
+    assert!(
+        hot_budget >= 6 * slice_bytes(),
+        "hot budget {hot_budget} still below the 6-slice working set"
+    );
+    assert!(hot_budget > cold_budget, "reallocation must skew hot > cold");
+    // no shard is starved below the floor (floor > one slice here)
+    for s in reg.shards() {
+        assert!(
+            s.qkv_budget() >= slice_bytes(),
+            "tenant {} starved to {} bytes",
+            s.id,
+            s.qkv_budget()
+        );
+    }
+    // budgets stay within the single global budget
+    assert!(reg.total_qkv_budget() <= tc.global_qkv_bytes);
+
+    // window B: the same traffic now fits the hot shards' grown budgets —
+    // the per-shard hit-rate delta is the observable win
+    let hit_b = drive_window(&mut reg, &sim, 1000, 36);
+    for &h in &HOT {
+        assert!(
+            hit_b[h as usize] >= hit_a[h as usize] + 0.1,
+            "hot tenant {h}: window B {:.2} not better than A {:.2}",
+            hit_b[h as usize],
+            hit_a[h as usize]
+        );
+    }
+    reg.check_invariants().unwrap();
+}
+
+#[test]
+fn routed_replay_respects_global_budget_with_eight_tenants() {
+    // end-to-end through the router + periodic governor cadence
+    let mut tc = tenancy_config();
+    tc.rebalance_every = 16;
+    let sim = sim();
+    let mut reg = TenantRegistry::new(&tc);
+    for _ in 0..N_TENANTS {
+        reg.create_tenant().unwrap();
+    }
+    let mut arrivals = Vec::new();
+    for round in 0..24 {
+        for t in 0..N_TENANTS as u32 {
+            arrivals.push(arrival(t, round));
+        }
+    }
+    let out = replay(&mut reg, RouterConfig::default(), &sim, &arrivals, 8).unwrap();
+    assert_eq!(out.per_tenant.len(), N_TENANTS);
+    assert!(out.rebalances > 0, "periodic governor never ran");
+    assert!(reg.total_qkv_budget() <= tc.global_qkv_bytes);
+    assert!(reg.total_qkv_used() <= tc.global_qkv_bytes);
+    // every tenant was served everything it submitted (the fair scheduler
+    // starves nobody at these queue depths)
+    for r in &out.per_tenant {
+        assert_eq!(r.len(), 24);
+    }
+    // hot tenants out-hit cold ones
+    let hot_rate = reg.shard(0).unwrap().stats.hit_rate();
+    let cold_rate = reg.shard(6).unwrap().stats.hit_rate();
+    assert!(
+        hot_rate > cold_rate,
+        "hot {hot_rate:.2} should beat cold {cold_rate:.2}"
+    );
+    reg.check_invariants().unwrap();
+}
+
+#[test]
+fn single_tenant_mode_is_the_paper_configuration() {
+    // the tenancy block defaults OFF, and single-tenant mode gives the
+    // one shard the entire global budget — the paper's experiments see
+    // exactly the same cache shapes as before this subsystem existed
+    let base = percache::config::PerCacheConfig::default();
+    assert!(!base.tenancy.enabled, "tenancy must be opt-in");
+
+    let tc = tenancy_config();
+    let mut reg = TenantRegistry::single_tenant(&tc);
+    assert_eq!(reg.len(), 1);
+    assert_eq!(reg.shard(0).unwrap().qkv_budget(), tc.global_qkv_bytes);
+    // governor passes never take the whole budget away from a lone shard
+    reg.rebalance_now();
+    assert_eq!(reg.shard(0).unwrap().qkv_budget(), tc.global_qkv_bytes);
+
+    // and a lone shard behaves identically to a standalone shard with the
+    // same budget over the same query stream (byte-for-byte determinism)
+    let sim = SimConfig::default();
+    let mut standalone = percache::tenancy::TenantShard::new(
+        0,
+        tc.qa_bytes_per_tenant,
+        tc.global_qkv_bytes,
+        tc.utility_alpha,
+    );
+    for serial in 0..24 {
+        let a = arrival(0, serial);
+        let r1 = serve_one(&sim, reg.shard_mut(0).unwrap(), &a.query, &a.seg_keys).unwrap();
+        let r2 = serve_one(&sim, &mut standalone, &a.query, &a.seg_keys).unwrap();
+        assert_eq!(r1.path, r2.path, "serial {serial}");
+        assert_eq!(r1.matched_segments, r2.matched_segments, "serial {serial}");
+        assert_eq!(r1.flops, r2.flops, "serial {serial}");
+    }
+    assert_eq!(
+        reg.shard(0).unwrap().tree.bytes_used(),
+        standalone.tree.bytes_used()
+    );
+    reg.check_invariants().unwrap();
+}

@@ -1,0 +1,381 @@
+//! API-compatible stub of the `xla-rs` PJRT surface used by the percache
+//! runtime (`PjRtClient` / `PjRtBuffer` / `HloModuleProto` /
+//! `XlaComputation` / `Literal`).
+//!
+//! The build environment has no XLA/PJRT shared library, so this crate
+//! lets the coordinator compile and run everywhere.  Behaviourally it is
+//! a *null device*: buffers are held host-side, `compile` parses the
+//! ENTRY signature out of the HLO text to learn the output shapes, and
+//! `execute_b` returns zero-filled literals of those shapes.  Everything
+//! shape-related (tuple arity, element counts, dtypes) is faithful, so
+//! the coordinator's unpacking logic runs unchanged; the numerics are
+//! obviously not.  Swap the `xla` path dependency in rust/Cargo.toml for
+//! a real binding to run against actual artifacts.
+
+use std::fmt;
+
+// ---------------------------------------------------------------------------
+// error type
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla-stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------------------
+// element types
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host element types movable in/out of buffers and literals.
+pub trait NativeType: Copy + Default + 'static {
+    const TY: ElementType;
+    fn extract(repr: &Repr) -> Result<Vec<Self>>
+    where
+        Self: Sized;
+    fn to_repr(data: &[Self], dims: Vec<usize>) -> Repr
+    where
+        Self: Sized;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn extract(repr: &Repr) -> Result<Vec<f32>> {
+        match repr {
+            Repr::F32(v, _) => Ok(v.clone()),
+            other => Err(Error::msg(format!("expected f32 literal, got {other:?}"))),
+        }
+    }
+    fn to_repr(data: &[f32], dims: Vec<usize>) -> Repr {
+        Repr::F32(data.to_vec(), dims)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn extract(repr: &Repr) -> Result<Vec<i32>> {
+        match repr {
+            Repr::I32(v, _) => Ok(v.clone()),
+            other => Err(Error::msg(format!("expected s32 literal, got {other:?}"))),
+        }
+    }
+    fn to_repr(data: &[i32], dims: Vec<usize>) -> Repr {
+        Repr::I32(data.to_vec(), dims)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literals
+// ---------------------------------------------------------------------------
+
+/// Internal literal storage (public only so NativeType can be implemented).
+#[derive(Debug, Clone)]
+pub enum Repr {
+    Tuple(Vec<Literal>),
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+#[derive(Debug, Clone)]
+pub struct Literal {
+    repr: Repr,
+}
+
+impl Literal {
+    fn zeros(ty: ElementType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        let repr = match ty {
+            ElementType::F32 => Repr::F32(vec![0f32; n], dims.to_vec()),
+            ElementType::S32 => Repr::I32(vec![0i32; n], dims.to_vec()),
+        };
+        Literal { repr }
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.repr {
+            Repr::Tuple(elems) => Ok(elems),
+            other => Err(Error::msg(format!("not a tuple literal: {other:?}"))),
+        }
+    }
+
+    /// Decompose a 1-tuple into its single element.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut elems = self.to_tuple()?;
+        if elems.len() != 1 {
+            return Err(Error::msg(format!("expected 1-tuple, got {}", elems.len())));
+        }
+        Ok(elems.remove(0))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.repr)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let v = T::extract(&self.repr)?;
+        v.first()
+            .copied()
+            .ok_or_else(|| Error::msg("empty literal has no first element"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// buffers + client
+// ---------------------------------------------------------------------------
+
+/// Host-resident "device" buffer.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The CPU "client" — always available in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        // scalars are passed with dims = [] (product = 1)
+        if n != data.len() && !(dims.is_empty() && data.len() == 1) {
+            return Err(Error::msg(format!(
+                "host buffer has {} elements, dims {:?} want {}",
+                data.len(),
+                dims,
+                n
+            )));
+        }
+        Ok(PjRtBuffer {
+            literal: Literal {
+                repr: T::to_repr(data, dims.to_vec()),
+            },
+        })
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match &comp.outputs {
+            Some(outs) => Ok(PjRtLoadedExecutable {
+                outputs: outs.clone(),
+            }),
+            None => Err(Error::msg(
+                "cannot compile: no ENTRY result signature found in HLO text",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO text → computation
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    outputs: Option<Vec<(ElementType, Vec<usize>)>>,
+}
+
+impl HloModuleProto {
+    /// Parse the ENTRY result signature from an HLO text file.  Only the
+    /// output shapes are retained — enough for the null device to produce
+    /// correctly-shaped zero results.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto {
+            outputs: parse_entry_outputs(&text),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    outputs: Option<Vec<(ElementType, Vec<usize>)>>,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            outputs: proto.outputs.clone(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    outputs: Vec<(ElementType, Vec<usize>)>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed argument buffers.  Returns the xla-rs shape:
+    /// one buffer list per device, one output buffer per list (the tuple).
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let elems: Vec<Literal> = self
+            .outputs
+            .iter()
+            .map(|(ty, dims)| Literal::zeros(*ty, dims))
+            .collect();
+        let tuple = Literal {
+            repr: Repr::Tuple(elems),
+        };
+        Ok(vec![vec![PjRtBuffer { literal: tuple }]])
+    }
+}
+
+/// Find `ENTRY … -> <result> {` and parse the result shape list.
+/// `-> (f32[8192], f32[196608])` or `-> f32[64]`; layout suffixes
+/// (`{0,1}`) are stripped.
+fn parse_entry_outputs(text: &str) -> Option<Vec<(ElementType, Vec<usize>)>> {
+    for line in text.lines() {
+        let t = line.trim_start();
+        if !t.starts_with("ENTRY") {
+            continue;
+        }
+        let arrow = t.find("->")?;
+        let rest = t[arrow + 2..].trim();
+        let rest = rest.strip_suffix('{').map(str::trim_end).unwrap_or(rest);
+        return parse_shape_list(rest.trim());
+    }
+    None
+}
+
+fn parse_shape_list(s: &str) -> Option<Vec<(ElementType, Vec<usize>)>> {
+    let inner = if let Some(stripped) = s.strip_prefix('(') {
+        stripped.strip_suffix(')')?
+    } else {
+        return parse_shape(s).map(|sh| vec![sh]);
+    };
+    let mut out = Vec::new();
+    // shapes contain no nested parens, so a top-level split on ',' outside
+    // brackets is enough
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let bytes = inner.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'[' | b'{' => depth += 1,
+            b']' | b'}' => depth = depth.saturating_sub(1),
+            b',' if depth == 0 => {
+                out.push(parse_shape(inner[start..i].trim())?);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < inner.len() {
+        out.push(parse_shape(inner[start..].trim())?);
+    }
+    Some(out)
+}
+
+fn parse_shape(s: &str) -> Option<(ElementType, Vec<usize>)> {
+    // strip layout: f32[8,16]{1,0} → f32[8,16]
+    let s = match s.find(']') {
+        Some(i) => &s[..=i],
+        None => s,
+    };
+    let open = s.find('[')?;
+    let ty = match &s[..open] {
+        "f32" => ElementType::F32,
+        "s32" | "s64" | "u32" | "pred" => ElementType::S32,
+        _ => return None,
+    };
+    let dims_str = s[open + 1..].strip_suffix(']')?;
+    let dims = if dims_str.trim().is_empty() {
+        Vec::new()
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| d.trim().parse::<usize>().ok())
+            .collect::<Option<Vec<_>>>()?
+    };
+    Some((ty, dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tuple_signature() {
+        let hlo = "HloModule m\n\nENTRY %main.5 (p0: s32[256]) -> (f32[8192], f32[196608]) {\n";
+        let outs = parse_entry_outputs(hlo).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0], (ElementType::F32, vec![8192]));
+        assert_eq!(outs[1], (ElementType::F32, vec![196608]));
+    }
+
+    #[test]
+    fn parses_scalar_and_layout() {
+        let hlo = "ENTRY e (a: f32[2]) -> s32[] {";
+        assert_eq!(
+            parse_entry_outputs(hlo).unwrap(),
+            vec![(ElementType::S32, vec![])]
+        );
+        let hlo2 = "ENTRY e (a: f32[2]) -> (f32[8,16]{1,0}, s32[4]) {";
+        let outs = parse_entry_outputs(hlo2).unwrap();
+        assert_eq!(outs[0], (ElementType::F32, vec![8, 16]));
+        assert_eq!(outs[1], (ElementType::S32, vec![4]));
+    }
+
+    #[test]
+    fn executes_zero_filled_tuple() {
+        let comp = XlaComputation {
+            outputs: Some(vec![
+                (ElementType::F32, vec![4]),
+                (ElementType::S32, vec![2]),
+            ]),
+        };
+        let exe = PjRtClient::cpu().unwrap().compile(&comp).unwrap();
+        let out = exe.execute_b(&[]).unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap();
+        let elems = lit.to_tuple().unwrap();
+        assert_eq!(elems[0].to_vec::<f32>().unwrap(), vec![0.0; 4]);
+        assert_eq!(elems[1].to_vec::<i32>().unwrap(), vec![0; 2]);
+        assert_eq!(elems[1].get_first_element::<i32>().unwrap(), 0);
+    }
+
+    #[test]
+    fn buffer_roundtrip() {
+        let c = PjRtClient::cpu().unwrap();
+        let b = c.buffer_from_host_buffer(&[1f32, 2.0, 3.0], &[3], None).unwrap();
+        assert_eq!(b.to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+        // scalar convention: empty dims, one element
+        let s = c.buffer_from_host_buffer(&[7i32], &[], None).unwrap();
+        assert_eq!(s.to_literal_sync().unwrap().get_first_element::<i32>().unwrap(), 7);
+    }
+}
