@@ -5,14 +5,19 @@
 //! * [`qkv_tree`] — layer 2: prefix tree of per-chunk QKV tensor slices
 //!   (skips Q/K/V projections of cached prompt prefixes);
 //! * [`slicer`] — splits whole-prompt QKV tensors into tree-node slices;
-//! * [`store`] — slice persistence (memory or on-disk, load-on-demand).
+//! * [`store`] — slice persistence (memory or on-disk, load-on-demand,
+//!   with a versioned manifest so directories reopen safely);
+//! * [`persist`] — snapshot/restore of tree structure, QA entries and
+//!   predictor history (warm restart, DESIGN.md §10).
 
+pub mod persist;
 pub mod qa_bank;
 pub mod qkv_tree;
 pub mod slicer;
 pub mod store;
 
+pub use persist::{load_state, save_state, RestoreReport};
 pub use qa_bank::{QaBank, QaEntry, QaId, QaMatch};
-pub use qkv_tree::{PrefixMatch, QkvTree, SegKey};
+pub use qkv_tree::{NodeSnapshot, PrefixMatch, QkvTree, SegKey};
 pub use slicer::{slice_prompt, SegmentSlice};
 pub use store::{Backend, SliceId, SliceStore};

@@ -1,0 +1,386 @@
+//! Snapshot/restore for the cache hierarchy (DESIGN.md §10): the warm
+//! half of warm restart.
+//!
+//! The slice *data* already lives on disk (the [`SliceStore`] manifest
+//! makes it resumable); this module persists everything that gives those
+//! bytes meaning — the QKV prefix-tree structure (keys, parent links,
+//! slice ids, LFU freqs), the QA bank entries (query, embedding, answer,
+//! freq) and the predictor's recent-query history — into one versioned
+//! `cache_state.json` next to the slice files, written atomically
+//! (tmp + rename).
+//!
+//! Crash-safety model: the store manifest commits on every put/remove,
+//! the state snapshot only on [`save_state`] (engine shutdown / explicit
+//! checkpoint).  [`load_state`] therefore reconciles the two sides:
+//! store slices no state snapshot references are garbage-collected, and
+//! snapshot nodes whose slice vanished keep their structure but drop the
+//! slice — both directions degrade to a smaller warm cache, never to
+//! corruption.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::predict::QueryPredictor;
+use crate::util::json::Json;
+
+use super::qa_bank::{QaBank, QaEntry, QaId};
+use super::qkv_tree::{NodeSnapshot, QkvTree};
+use super::store::{SliceId, SliceStore};
+
+/// State-snapshot schema version; readers reject anything else.
+pub const STATE_VERSION: usize = 1;
+/// Snapshot file name inside a cache directory.
+pub const STATE_FILE: &str = "cache_state.json";
+const STATE_MAGIC: &str = "percache-state";
+
+/// What a [`load_state`] restore brought back (reporting).
+#[derive(Debug, Clone, Default)]
+pub struct RestoreReport {
+    pub tree_nodes: usize,
+    pub tree_slices: usize,
+    pub qa_entries: usize,
+    pub history: usize,
+    /// Store slices no snapshot node referenced, GC'd at load.
+    pub unreferenced_slices: usize,
+}
+
+/// Atomically persist the cache hierarchy's state into `dir` (next to
+/// the slice files of the disk store).
+pub fn save_state(
+    dir: &Path,
+    tree: &QkvTree,
+    qa: &QaBank,
+    predictor: &QueryPredictor,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating cache dir {}", dir.display()))?;
+    let mut root = Json::obj();
+    root.insert("magic", STATE_MAGIC);
+    root.insert("version", STATE_VERSION);
+
+    let nodes: Vec<Json> = tree
+        .export()
+        .iter()
+        .map(|n| {
+            let mut o = Json::obj();
+            // seg keys are full-range u64 hashes: hex strings, not f64
+            o.insert("key", format!("{:016x}", n.key));
+            o.insert(
+                "parent",
+                match n.parent {
+                    None => Json::Num(-1.0),
+                    Some(p) => Json::from(p),
+                },
+            );
+            o.insert(
+                "slice",
+                match n.slice {
+                    None => Json::Null,
+                    Some(s) => Json::from(s),
+                },
+            );
+            o.insert("freq", n.freq);
+            Json::Obj(o)
+        })
+        .collect();
+    let mut tj = Json::obj();
+    tj.insert("nodes", Json::Arr(nodes));
+    root.insert("tree", Json::Obj(tj));
+
+    let entries: Vec<Json> = qa
+        .entries()
+        .iter()
+        .map(|e| {
+            let mut o = Json::obj();
+            o.insert("id", e.id);
+            o.insert("query", e.query.as_str());
+            o.insert(
+                "embedding",
+                Json::Arr(e.embedding.iter().map(|&x| Json::Num(x as f64)).collect()),
+            );
+            o.insert(
+                "answer",
+                match &e.answer {
+                    None => Json::Null,
+                    Some(a) => Json::Arr(a.iter().map(|&t| Json::from(t)).collect()),
+                },
+            );
+            o.insert("predicted", e.predicted);
+            o.insert("freq", e.freq);
+            Json::Obj(o)
+        })
+        .collect();
+    let mut qj = Json::obj();
+    qj.insert("next_id", qa.next_id());
+    qj.insert("entries", Json::Arr(entries));
+    root.insert("qa", Json::Obj(qj));
+
+    let mut pj = Json::obj();
+    pj.insert(
+        "history",
+        Json::Arr(
+            predictor
+                .history_snapshot()
+                .into_iter()
+                .map(Json::Str)
+                .collect(),
+        ),
+    );
+    root.insert("predictor", Json::Obj(pj));
+
+    let tmp = dir.join(format!("{STATE_FILE}.tmp"));
+    let fin = dir.join(STATE_FILE);
+    std::fs::write(&tmp, Json::Obj(root).to_string_pretty())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &fin).with_context(|| format!("committing {}", fin.display()))?;
+    Ok(())
+}
+
+/// Restore the cache hierarchy persisted at `dir`, reconciling against
+/// the (already-opened) disk `store`.
+///
+/// Returns `Ok(None)` when no snapshot exists — in that case any slices
+/// the store resumed are purged too (with no tree to reference them they
+/// are dead weight, and a later snapshot would GC them anyway).  A
+/// present but unreadable/incompatible snapshot is an error, never
+/// silently discarded.
+pub fn load_state(
+    dir: &Path,
+    store: &mut SliceStore,
+    qkv_limit: usize,
+    qa_limit: usize,
+    predictor: &mut QueryPredictor,
+) -> Result<Option<(QkvTree, QaBank, RestoreReport)>> {
+    let path = dir.join(STATE_FILE);
+    if !path.exists() {
+        store.remove_many(&store.ids());
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text)
+        .with_context(|| format!("invalid cache state {}", path.display()))?;
+    anyhow::ensure!(
+        j.get("magic").as_str() == Some(STATE_MAGIC),
+        "cache state missing magic {STATE_MAGIC:?}"
+    );
+    let version = j.get("version").as_usize().context("state missing version")?;
+    anyhow::ensure!(
+        version == STATE_VERSION,
+        "unsupported cache-state version {version} (reader supports {STATE_VERSION})"
+    );
+
+    // -- tree --------------------------------------------------------------
+    let mut nodes = Vec::new();
+    for n in j.get("tree").get("nodes").as_arr().context("state missing tree.nodes")? {
+        let key_hex = n.get("key").as_str().context("node missing key")?;
+        let key = u64::from_str_radix(key_hex, 16)
+            .with_context(|| format!("bad node key {key_hex:?}"))?;
+        let parent = match n.get("parent").as_i64().context("node missing parent")? {
+            -1 => None,
+            p if p >= 0 => Some(p as usize),
+            p => anyhow::bail!("bad parent index {p}"),
+        };
+        let slice = match n.get("slice") {
+            Json::Null => None,
+            v => Some(v.as_usize().context("bad slice id")? as SliceId),
+        };
+        let freq = n.get("freq").as_usize().unwrap_or(0) as u64;
+        nodes.push(NodeSnapshot {
+            key,
+            parent,
+            slice,
+            freq,
+        });
+    }
+    let tree = QkvTree::restore(qkv_limit, &nodes, store)?;
+
+    // GC store slices the restored tree doesn't reference (puts committed
+    // after the last snapshot, or slices the restore's budget pass shed)
+    let referenced: std::collections::HashSet<SliceId> =
+        tree.slice_ids().into_iter().collect();
+    let orphans: Vec<SliceId> = store
+        .ids()
+        .into_iter()
+        .filter(|id| !referenced.contains(id))
+        .collect();
+    let unreferenced = orphans.len();
+    store.remove_many(&orphans);
+
+    // -- qa bank -----------------------------------------------------------
+    let qa_j = j.get("qa");
+    let next_id = qa_j.get("next_id").as_usize().context("qa missing next_id")? as QaId;
+    let mut entries = Vec::new();
+    for e in qa_j.get("entries").as_arr().context("qa missing entries")? {
+        let id = e.get("id").as_usize().context("qa entry missing id")? as QaId;
+        let query = e
+            .get("query")
+            .as_str()
+            .context("qa entry missing query")?
+            .to_string();
+        let mut embedding = Vec::new();
+        for x in e.get("embedding").as_arr().context("qa entry missing embedding")? {
+            embedding.push(x.as_f64().context("bad embedding component")? as f32);
+        }
+        let answer = match e.get("answer") {
+            Json::Null => None,
+            v => {
+                let mut a = Vec::new();
+                for t in v.as_arr().context("bad qa answer")? {
+                    a.push(t.as_i64().context("bad answer token")? as i32);
+                }
+                Some(a)
+            }
+        };
+        entries.push(QaEntry {
+            id,
+            query,
+            embedding,
+            answer,
+            predicted: e.get("predicted").as_bool().unwrap_or(false),
+            freq: e.get("freq").as_usize().unwrap_or(0) as u64,
+        });
+    }
+    let qa = QaBank::from_entries(qa_limit, entries, next_id)?;
+
+    // -- predictor history -------------------------------------------------
+    let mut history = 0;
+    for h in j.get("predictor").get("history").as_arr().unwrap_or(&[]) {
+        if let Some(s) = h.as_str() {
+            predictor.observe(s);
+            history += 1;
+        }
+    }
+
+    let report = RestoreReport {
+        tree_nodes: tree.node_count(),
+        tree_slices: tree.slice_count(),
+        qa_entries: qa.len(),
+        history,
+        unreferenced_slices: unreferenced,
+    };
+    Ok(Some((tree, qa, report)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::QkvTensor;
+
+    fn tensor(tag: f32) -> QkvTensor {
+        let mut t = QkvTensor::zeros(1, 4, 64);
+        t.data[0] = tag;
+        t
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "percache_persist_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn emb(x: f32, y: f32) -> Vec<f32> {
+        let n = (x * x + y * y).sqrt().max(1e-9);
+        vec![x / n, y / n, 0.0, 0.0]
+    }
+
+    #[test]
+    fn save_load_roundtrips_the_whole_hierarchy() {
+        let dir = tmp_dir("roundtrip");
+        let limit = 1 << 20;
+        let (snapshot_bytes, snapshot_qa) = {
+            let mut store = SliceStore::disk(dir.clone()).unwrap();
+            let mut tree = QkvTree::new(limit);
+            tree.insert_path(&[10, 20], vec![tensor(1.0), tensor(2.0)], &mut store)
+                .unwrap();
+            let mut qa = QaBank::new(limit);
+            qa.insert("alpha query", emb(1.0, 0.0), Some(vec![4, 5]), false);
+            qa.insert("beta query", emb(0.0, 1.0), None, true);
+            let mut pred = QueryPredictor::new(1);
+            pred.observe("alpha query");
+            save_state(&dir, &tree, &qa, &pred).unwrap();
+            (tree.bytes_used(), qa.bytes_used())
+        };
+        let mut store = SliceStore::disk(dir.clone()).unwrap();
+        let mut pred = QueryPredictor::new(1);
+        let (mut tree, mut qa, rep) =
+            load_state(&dir, &mut store, limit, limit, &mut pred)
+                .unwrap()
+                .expect("snapshot must be found");
+        assert_eq!(rep.tree_slices, 2);
+        assert_eq!(rep.qa_entries, 2);
+        assert_eq!(rep.history, 1);
+        assert_eq!(tree.bytes_used(), snapshot_bytes);
+        assert_eq!(qa.bytes_used(), snapshot_qa);
+        assert_eq!(tree.match_prefix(&[10, 20]).len(), 2);
+        let hit = qa.match_query(&emb(1.0, 0.0), 0.85).expect("restored qa hit");
+        assert_eq!(hit.1, vec![4, 5]);
+        assert_eq!(pred.history_len(), 1);
+        tree.check_invariants().unwrap();
+        qa.check_invariants().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_snapshot_purges_dangling_slices() {
+        let dir = tmp_dir("nosnap");
+        {
+            let mut store = SliceStore::disk(dir.clone()).unwrap();
+            store.put(tensor(1.0)).unwrap();
+        }
+        let mut store = SliceStore::disk(dir.clone()).unwrap();
+        assert_eq!(store.count(), 1);
+        let mut pred = QueryPredictor::new(1);
+        let got = load_state(&dir, &mut store, 1 << 20, 1 << 20, &mut pred).unwrap();
+        assert!(got.is_none());
+        assert_eq!(store.count(), 0, "slices without a snapshot are purged");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_rejected_not_discarded() {
+        let dir = tmp_dir("badsnap");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(STATE_FILE), "{broken").unwrap();
+        let mut store = SliceStore::disk(dir.clone()).unwrap();
+        let mut pred = QueryPredictor::new(1);
+        assert!(load_state(&dir, &mut store, 1 << 20, 1 << 20, &mut pred).is_err());
+        // wrong version too
+        std::fs::write(
+            dir.join(STATE_FILE),
+            r#"{"magic":"percache-state","version":99,"tree":{"nodes":[]},"qa":{"next_id":1,"entries":[]},"predictor":{"history":[]}}"#,
+        )
+        .unwrap();
+        assert!(load_state(&dir, &mut store, 1 << 20, 1 << 20, &mut pred).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_gcs_slices_newer_than_the_snapshot() {
+        let dir = tmp_dir("gcnewer");
+        {
+            let mut store = SliceStore::disk(dir.clone()).unwrap();
+            let mut tree = QkvTree::new(1 << 20);
+            tree.insert_path(&[1], vec![tensor(1.0)], &mut store).unwrap();
+            let qa = QaBank::new(1 << 20);
+            let pred = QueryPredictor::new(1);
+            save_state(&dir, &tree, &qa, &pred).unwrap();
+            // a put committed after the snapshot (crash before re-save)
+            store.put(tensor(9.0)).unwrap();
+        }
+        let mut store = SliceStore::disk(dir.clone()).unwrap();
+        assert_eq!(store.count(), 2);
+        let mut pred = QueryPredictor::new(1);
+        let (tree, _qa, rep) = load_state(&dir, &mut store, 1 << 20, 1 << 20, &mut pred)
+            .unwrap()
+            .unwrap();
+        assert_eq!(rep.unreferenced_slices, 1);
+        assert_eq!(store.count(), 1);
+        assert_eq!(tree.slice_count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -84,6 +84,39 @@ impl QaBank {
         &self.entries
     }
 
+    /// Next id `insert` would assign (persistence).
+    pub fn next_id(&self) -> QaId {
+        self.next_id
+    }
+
+    /// Rebuild a bank from persisted entries (DESIGN.md §10).  Ids must
+    /// be unique and below `next_id` so later inserts never collide with
+    /// restored entries; the byte budget is enforced on the way in.
+    pub fn from_entries(
+        byte_limit: usize,
+        entries: Vec<QaEntry>,
+        next_id: QaId,
+    ) -> anyhow::Result<Self> {
+        let mut bank = QaBank::new(byte_limit);
+        for e in entries {
+            anyhow::ensure!(
+                e.id >= 1 && e.id < next_id,
+                "qa entry id {} out of range (next_id {next_id})",
+                e.id
+            );
+            anyhow::ensure!(
+                bank.entries.iter().all(|x| x.id != e.id),
+                "duplicate qa entry id {}",
+                e.id
+            );
+            bank.bytes_used += e.bytes();
+            bank.entries.push(e);
+        }
+        bank.next_id = next_id.max(1);
+        bank.enforce_budget(&[]);
+        Ok(bank)
+    }
+
     pub fn get(&self, id: QaId) -> Option<&QaEntry> {
         self.entries.iter().find(|e| e.id == id)
     }
@@ -331,6 +364,29 @@ mod tests {
         assert_eq!(stale, vec![a]);
         assert_eq!(qa.undecoded(), vec![a]);
         qa.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn from_entries_roundtrips_and_validates() {
+        let mut qa = QaBank::new(1 << 20);
+        qa.insert("alpha", emb(1.0, 0.0), Some(vec![1]), false);
+        qa.insert("beta", emb(0.0, 1.0), None, true);
+        let entries: Vec<QaEntry> = qa.entries().to_vec();
+        let restored = QaBank::from_entries(1 << 20, entries.clone(), qa.next_id()).unwrap();
+        assert_eq!(restored.len(), 2);
+        assert_eq!(restored.bytes_used(), qa.bytes_used());
+        assert_eq!(restored.next_id(), qa.next_id());
+        restored.check_invariants().unwrap();
+        // a fresh insert never collides with a restored id
+        let mut restored = restored;
+        let new_id = restored.insert("gamma", emb(0.5, 0.5), None, false);
+        assert!(entries.iter().all(|e| e.id != new_id));
+
+        // out-of-range / duplicate ids are rejected
+        assert!(QaBank::from_entries(1 << 20, entries.clone(), 1).is_err());
+        let mut dup = entries.clone();
+        dup.push(entries[0].clone());
+        assert!(QaBank::from_entries(1 << 20, dup, qa.next_id()).is_err());
     }
 
     #[test]

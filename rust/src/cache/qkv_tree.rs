@@ -31,6 +31,16 @@ struct Node {
     freq: u64,
 }
 
+/// Serializable view of one tree node (see [`QkvTree::export`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeSnapshot {
+    pub key: SegKey,
+    /// Index of the parent within the snapshot vec (None = root).
+    pub parent: Option<usize>,
+    pub slice: Option<SliceId>,
+    pub freq: u64,
+}
+
 /// Result of a prefix match.
 #[derive(Debug, Clone)]
 pub struct PrefixMatch {
@@ -254,6 +264,96 @@ impl QkvTree {
         }
     }
 
+    /// Serializable view of the tree structure for persistence
+    /// (DESIGN.md §10): nodes in an order where every parent precedes its
+    /// children, with parent links as indices into the returned vec.
+    /// Slice byte sizes are re-derived from the store on restore, so only
+    /// ids are exported.
+    pub fn export(&self) -> Vec<NodeSnapshot> {
+        let mut out = Vec::with_capacity(self.nodes.len());
+        let mut stack: Vec<(usize, Option<usize>)> =
+            self.roots.values().map(|&i| (i, None)).collect();
+        while let Some((idx, parent)) = stack.pop() {
+            let snap_idx = out.len();
+            let n = &self.nodes[idx];
+            out.push(NodeSnapshot {
+                key: n.key,
+                parent,
+                slice: n.slice,
+                freq: n.freq,
+            });
+            for &c in n.children.values() {
+                stack.push((c, Some(snap_idx)));
+            }
+        }
+        out
+    }
+
+    /// Rebuild a tree from an [`Self::export`] snapshot.  Nodes whose
+    /// slice id is no longer present in `store` (evicted or lost between
+    /// snapshot and restore) keep their structure but drop the slice —
+    /// exactly the state `match_prefix` already tolerates.  The budget is
+    /// enforced through the normal LFU path before returning.
+    pub fn restore(
+        byte_limit: usize,
+        snapshot: &[NodeSnapshot],
+        store: &mut SliceStore,
+    ) -> Result<Self> {
+        let mut tree = QkvTree::new(byte_limit);
+        let mut seen_slices = std::collections::HashSet::new();
+        for (i, s) in snapshot.iter().enumerate() {
+            let depth = match s.parent {
+                None => 0,
+                Some(p) => {
+                    anyhow::ensure!(
+                        p < i,
+                        "snapshot node {i}: parent {p} does not precede it"
+                    );
+                    tree.nodes[p].depth + 1
+                }
+            };
+            let idx = tree.nodes.len();
+            let fresh = match s.parent {
+                None => tree.roots.insert(s.key, idx).is_none(),
+                Some(p) => tree.nodes[p].children.insert(s.key, idx).is_none(),
+            };
+            anyhow::ensure!(fresh, "snapshot node {i}: duplicate key {:#x}", s.key);
+            if let Some(sid) = s.slice {
+                // two nodes sharing a slice id would double-count bytes
+                // and leave a dangling id when one of them is evicted
+                anyhow::ensure!(
+                    seen_slices.insert(sid),
+                    "snapshot node {i}: duplicate slice id {sid}"
+                );
+            }
+            let (slice, slice_bytes) = match s.slice {
+                Some(sid) => match store.size_of(sid) {
+                    Some(b) => (Some(sid), b),
+                    None => (None, 0),
+                },
+                None => (None, 0),
+            };
+            tree.bytes_used += slice_bytes;
+            tree.nodes.push(Node {
+                key: s.key,
+                depth,
+                slice,
+                slice_bytes,
+                children: HashMap::new(),
+                freq: s.freq,
+            });
+        }
+        tree.enforce_budget(store, &[]);
+        tree.check_invariants()?;
+        Ok(tree)
+    }
+
+    /// Slice ids currently attached to nodes (persistence-time GC of
+    /// unreferenced store entries).
+    pub fn slice_ids(&self) -> Vec<SliceId> {
+        self.nodes.iter().filter_map(|n| n.slice).collect()
+    }
+
     /// Internal-consistency check for property tests: byte accounting must
     /// equal the sum over slice-bearing nodes, and every child edge must
     /// point at a node of depth parent+1 with the matching key.
@@ -391,6 +491,64 @@ mod tests {
         assert_eq!(tree.slice_count(), 2);
         assert!(tree.bytes_used() <= 2 * bytes_one());
         tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn export_restore_roundtrips_structure_and_slices() {
+        let mut store = SliceStore::memory();
+        let mut tree = QkvTree::new(10 * bytes_one());
+        tree.insert_path(&[1, 2, 3], vec![tensor(1.0), tensor(2.0), tensor(3.0)], &mut store)
+            .unwrap();
+        tree.insert_path(&[1, 5], vec![tensor(1.0), tensor(5.0)], &mut store).unwrap();
+        for _ in 0..4 {
+            tree.match_prefix(&[1, 2]);
+        }
+        let snap = tree.export();
+        assert_eq!(snap.len(), tree.node_count());
+        let restored = QkvTree::restore(tree.byte_limit(), &snap, &mut store).unwrap();
+        assert_eq!(restored.node_count(), tree.node_count());
+        assert_eq!(restored.slice_count(), tree.slice_count());
+        assert_eq!(restored.bytes_used(), tree.bytes_used());
+        let mut r = restored;
+        assert_eq!(r.match_prefix(&[1, 2, 3]).len(), 3);
+        assert_eq!(r.match_prefix(&[1, 5]).len(), 2);
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn restore_drops_slices_missing_from_store() {
+        let mut store = SliceStore::memory();
+        let mut tree = QkvTree::new(10 * bytes_one());
+        tree.insert_path(&[1, 2], vec![tensor(1.0), tensor(2.0)], &mut store).unwrap();
+        let snap = tree.export();
+        // simulate a slice lost between snapshot and restore
+        let victim = snap.iter().find(|n| n.parent.is_some()).unwrap().slice.unwrap();
+        store.remove(victim);
+        let restored = QkvTree::restore(tree.byte_limit(), &snap, &mut store).unwrap();
+        assert_eq!(restored.node_count(), 2, "structure survives");
+        assert_eq!(restored.slice_count(), 1, "lost slice dropped");
+        restored.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn restore_rejects_malformed_snapshots() {
+        let mut store = SliceStore::memory();
+        // parent pointing forward
+        let bad = vec![NodeSnapshot { key: 1, parent: Some(1), slice: None, freq: 0 }];
+        assert!(QkvTree::restore(1 << 20, &bad, &mut store).is_err());
+        // duplicate root key
+        let dup = vec![
+            NodeSnapshot { key: 7, parent: None, slice: None, freq: 0 },
+            NodeSnapshot { key: 7, parent: None, slice: None, freq: 0 },
+        ];
+        assert!(QkvTree::restore(1 << 20, &dup, &mut store).is_err());
+        // duplicate slice id across two nodes
+        let (sid, _) = store.put(tensor(1.0)).unwrap();
+        let dup_slice = vec![
+            NodeSnapshot { key: 1, parent: None, slice: Some(sid), freq: 0 },
+            NodeSnapshot { key: 2, parent: None, slice: Some(sid), freq: 0 },
+        ];
+        assert!(QkvTree::restore(1 << 20, &dup_slice, &mut store).is_err());
     }
 
     #[test]

@@ -4,17 +4,37 @@
 //!
 //! Disk format per slice: 16-byte header (magic, layers, d_model, seq as
 //! u32 LE) followed by raw f32 LE data.
+//!
+//! A disk directory additionally carries a versioned manifest
+//! (`store_manifest.json`: next_id + per-slice id/bytes/checksum) so that
+//! reopening an existing directory *resumes* — ids continue after the
+//! highest committed id instead of restarting at 1 and overwriting live
+//! slice files, entries are validated against the files on disk, and
+//! slice files with no manifest entry (a crash between the data write and
+//! the manifest commit) are garbage-collected.  The manifest is written
+//! atomically (tmp + rename) after every mutation; the slice file is
+//! written first, so the manifest only ever references complete files.
+//! See DESIGN.md §10 for the full on-disk layout.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use crate::llm::QkvTensor;
+use crate::tokenizer::fnv1a64;
+use crate::util::json::Json;
 
 pub type SliceId = u64;
 
 const MAGIC: u32 = 0x51_4B_56_01; // "QKV\x01"
+
+/// Manifest schema version; readers reject anything else.
+pub const MANIFEST_VERSION: usize = 1;
+/// Manifest file name inside a slice directory.
+pub const MANIFEST_FILE: &str = "store_manifest.json";
+/// Manifest magic string (distinguishes it from unrelated JSON).
+const MANIFEST_MAGIC: &str = "percache-slices";
 
 #[derive(Debug, Clone)]
 pub enum Backend {
@@ -27,10 +47,14 @@ pub struct SliceStore {
     backend: Backend,
     mem: HashMap<SliceId, QkvTensor>,
     sizes: HashMap<SliceId, usize>,
+    /// fnv1a64 over the slice file bytes (disk backend only).
+    checksums: HashMap<SliceId, u64>,
     next_id: SliceId,
     /// Counters for Table 1-style reporting.
     pub loads: u64,
     pub stores: u64,
+    /// Unreferenced/invalid slice files removed while (re)opening a dir.
+    pub orphans_removed: u64,
 }
 
 impl SliceStore {
@@ -38,10 +62,18 @@ impl SliceStore {
         Self::new(Backend::Memory)
     }
 
+    /// Open (or create) an on-disk store.  An existing directory is
+    /// *resumed* from its manifest: ids continue after the highest
+    /// committed id, committed slices stay readable, and stray slice
+    /// files without a manifest entry are garbage-collected.  A present
+    /// but unreadable/incompatible manifest is an error — never silently
+    /// clobbered.
     pub fn disk(dir: PathBuf) -> Result<Self> {
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating slice dir {}", dir.display()))?;
-        Ok(Self::new(Backend::Disk(dir)))
+        let mut store = Self::new(Backend::Disk(dir));
+        store.open_dir()?;
+        Ok(store)
     }
 
     fn new(backend: Backend) -> Self {
@@ -49,47 +81,235 @@ impl SliceStore {
             backend,
             mem: HashMap::new(),
             sizes: HashMap::new(),
+            checksums: HashMap::new(),
             next_id: 1,
             loads: 0,
             stores: 0,
+            orphans_removed: 0,
+        }
+    }
+
+    /// Disk directory backing this store (None for the memory backend).
+    pub fn dir(&self) -> Option<&Path> {
+        match &self.backend {
+            Backend::Memory => None,
+            Backend::Disk(d) => Some(d),
         }
     }
 
     fn path(&self, id: SliceId) -> Option<PathBuf> {
-        match &self.backend {
-            Backend::Memory => None,
-            Backend::Disk(dir) => Some(dir.join(format!("slice_{id:016x}.qkv"))),
-        }
+        self.dir().map(|dir| dir.join(slice_file_name(id)))
     }
 
-    /// Persist a slice; returns its id and byte size.
+    /// Load state from an existing slice directory (see [`Self::disk`]).
+    fn open_dir(&mut self) -> Result<()> {
+        let dir = match self.dir() {
+            None => return Ok(()),
+            Some(d) => d.to_path_buf(),
+        };
+        let manifest_path = dir.join(MANIFEST_FILE);
+        if manifest_path.exists() {
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {}", manifest_path.display()))?;
+            self.load_manifest(&text)
+                .with_context(|| format!("invalid slice-store manifest {}", manifest_path.display()))?;
+            self.validate_entries()?;
+        } else {
+            // Pre-manifest (or brand-new) directory: adopt whatever valid
+            // slice files exist instead of clobbering them.
+            self.rebuild_from_files(&dir)?;
+        }
+        self.collect_orphans(&dir)?;
+        // Commit the (possibly repaired) view so the directory is
+        // consistent even if the process dies before the first put.
+        self.write_manifest()
+    }
+
+    fn load_manifest(&mut self, text: &str) -> Result<()> {
+        let j = Json::parse(text).context("parsing json")?;
+        anyhow::ensure!(
+            j.get("magic").as_str() == Some(MANIFEST_MAGIC),
+            "missing or wrong magic (want {MANIFEST_MAGIC:?})"
+        );
+        let version = j.get("version").as_usize().context("missing version")?;
+        anyhow::ensure!(
+            version == MANIFEST_VERSION,
+            "unsupported manifest version {version} (reader supports {MANIFEST_VERSION})"
+        );
+        let next = j.get("next_id").as_usize().context("missing next_id")? as SliceId;
+        anyhow::ensure!(next >= 1, "next_id must be >= 1");
+        let slices = j.get("slices").as_arr().context("missing slices array")?;
+        for e in slices {
+            let id = e.get("id").as_usize().context("slice entry missing id")? as SliceId;
+            let bytes = e.get("bytes").as_usize().context("slice entry missing bytes")?;
+            let sum_hex = e
+                .get("checksum")
+                .as_str()
+                .context("slice entry missing checksum")?;
+            let sum = u64::from_str_radix(sum_hex, 16)
+                .with_context(|| format!("bad checksum hex {sum_hex:?}"))?;
+            anyhow::ensure!(
+                id >= 1 && id < next,
+                "slice id {id} out of range (next_id {next})"
+            );
+            anyhow::ensure!(
+                self.sizes.insert(id, bytes).is_none(),
+                "duplicate slice id {id}"
+            );
+            self.checksums.insert(id, sum);
+        }
+        self.next_id = next;
+        Ok(())
+    }
+
+    /// Cross-check manifest entries against the files on disk.  An entry
+    /// whose file is missing or has the wrong length (a torn write / lost
+    /// file) is dropped from the store — it never shadows a fresh insert.
+    fn validate_entries(&mut self) -> Result<()> {
+        let ids: Vec<SliceId> = self.sizes.keys().copied().collect();
+        for id in ids {
+            let p = self.path(id).expect("disk backend");
+            let ok = match std::fs::metadata(&p) {
+                Ok(m) => m.len() as usize == self.sizes[&id],
+                Err(_) => false,
+            };
+            if !ok {
+                self.sizes.remove(&id);
+                self.checksums.remove(&id);
+                let _ = std::fs::remove_file(&p);
+                self.orphans_removed += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Adopt slice files from a directory that predates the manifest:
+    /// ids are recovered from the file names, sizes/checksums from the
+    /// file contents, and `next_id` resumes past the highest id seen.
+    fn rebuild_from_files(&mut self, dir: &Path) -> Result<()> {
+        let mut max_id = 0;
+        for entry in
+            std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let id = match parse_slice_file_name(&name) {
+                Some(id) => id,
+                None => continue,
+            };
+            let buf = std::fs::read(entry.path())
+                .with_context(|| format!("reading {}", entry.path().display()))?;
+            if decode_slice(&buf).is_err() {
+                // undecodable slice file: treat as an orphan
+                let _ = std::fs::remove_file(entry.path());
+                self.orphans_removed += 1;
+                continue;
+            }
+            self.sizes.insert(id, buf.len());
+            self.checksums.insert(id, fnv1a64(&buf));
+            max_id = max_id.max(id);
+        }
+        self.next_id = max_id + 1;
+        Ok(())
+    }
+
+    /// Remove slice files with no manifest entry (a crash between the
+    /// slice write and the manifest commit leaves exactly these behind).
+    fn collect_orphans(&mut self, dir: &Path) -> Result<()> {
+        for entry in
+            std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(id) = parse_slice_file_name(&name) {
+                if !self.sizes.contains_key(&id) {
+                    let _ = std::fs::remove_file(entry.path());
+                    self.orphans_removed += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Atomically (tmp + rename) persist the manifest.  No-op in memory.
+    fn write_manifest(&self) -> Result<()> {
+        let dir = match self.dir() {
+            None => return Ok(()),
+            Some(d) => d,
+        };
+        let mut root = Json::obj();
+        root.insert("magic", MANIFEST_MAGIC);
+        root.insert("version", MANIFEST_VERSION);
+        root.insert("next_id", self.next_id);
+        let mut ids: Vec<SliceId> = self.sizes.keys().copied().collect();
+        ids.sort_unstable();
+        let slices: Vec<Json> = ids
+            .iter()
+            .map(|id| {
+                let mut o = Json::obj();
+                o.insert("id", *id);
+                o.insert("bytes", self.sizes[id]);
+                o.insert(
+                    "checksum",
+                    format!("{:016x}", self.checksums.get(id).copied().unwrap_or(0)),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("slices", Json::Arr(slices));
+
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        let fin = dir.join(MANIFEST_FILE);
+        std::fs::write(&tmp, Json::Obj(root).to_string_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &fin)
+            .with_context(|| format!("committing {}", fin.display()))?;
+        Ok(())
+    }
+
+    /// Persist a slice; returns its id and byte size.  On any failure the
+    /// store is left exactly as it was (no id consumed, no accounting).
     pub fn put(&mut self, tensor: QkvTensor) -> Result<(SliceId, usize)> {
         let id = self.next_id;
-        self.next_id += 1;
         let bytes = tensor.byte_size() + 16;
-        self.sizes.insert(id, bytes);
-        self.stores += 1;
         match self.path(id) {
             None => {
                 self.mem.insert(id, tensor);
             }
             Some(p) => {
-                let mut buf = Vec::with_capacity(bytes);
-                buf.extend_from_slice(&MAGIC.to_le_bytes());
-                buf.extend_from_slice(&(tensor.layers as u32).to_le_bytes());
-                buf.extend_from_slice(&(tensor.d_model as u32).to_le_bytes());
-                buf.extend_from_slice(&(tensor.seq as u32).to_le_bytes());
-                for v in &tensor.data {
-                    buf.extend_from_slice(&v.to_le_bytes());
+                let buf = encode_slice(&tensor);
+                debug_assert_eq!(buf.len(), bytes);
+                let sum = fnv1a64(&buf);
+                if let Err(e) =
+                    std::fs::write(&p, &buf).with_context(|| format!("writing {}", p.display()))
+                {
+                    // nothing was committed; leave the store untouched
+                    let _ = std::fs::remove_file(&p);
+                    return Err(e);
                 }
-                std::fs::write(&p, &buf)
-                    .with_context(|| format!("writing {}", p.display()))?;
+                self.checksums.insert(id, sum);
             }
+        }
+        self.sizes.insert(id, bytes);
+        self.next_id += 1;
+        self.stores += 1;
+        if let Err(e) = self.write_manifest() {
+            // roll back: a failed put must leave the store unchanged
+            self.sizes.remove(&id);
+            self.checksums.remove(&id);
+            self.mem.remove(&id);
+            self.next_id -= 1;
+            self.stores -= 1;
+            if let Some(p) = self.path(id) {
+                let _ = std::fs::remove_file(p);
+            }
+            return Err(e);
         }
         Ok((id, bytes))
     }
 
-    /// Load a slice (on-demand from disk for the Disk backend).
+    /// Load a slice (on-demand from disk for the Disk backend, with
+    /// checksum verification against the manifest).
     pub fn get(&mut self, id: SliceId) -> Result<QkvTensor> {
         self.loads += 1;
         match self.path(id) {
@@ -101,44 +321,109 @@ impl SliceStore {
             Some(p) => {
                 let buf =
                     std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?;
-                anyhow::ensure!(buf.len() >= 16, "slice file too short");
-                let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
-                anyhow::ensure!(magic == MAGIC, "bad slice magic");
-                let layers = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
-                let d_model = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
-                let seq = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
-                let n = layers * 3 * seq * d_model;
-                anyhow::ensure!(buf.len() == 16 + n * 4, "slice file size mismatch");
-                let mut data = vec![0f32; n];
-                for (i, c) in buf[16..].chunks_exact(4).enumerate() {
-                    data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                if let Some(&want) = self.checksums.get(&id) {
+                    let got = fnv1a64(&buf);
+                    anyhow::ensure!(
+                        got == want,
+                        "slice {id} checksum mismatch ({got:016x} != {want:016x})"
+                    );
                 }
-                Ok(QkvTensor::from_flat(layers, d_model, seq, data))
+                decode_slice(&buf)
             }
         }
     }
 
     /// Delete a slice; returns the bytes freed.
     pub fn remove(&mut self, id: SliceId) -> usize {
-        let bytes = self.sizes.remove(&id).unwrap_or(0);
-        match self.path(id) {
-            None => {
-                self.mem.remove(&id);
+        self.remove_many(&[id])
+    }
+
+    /// Delete many slices with a single manifest commit (bulk GC stays
+    /// O(n), not O(n²) in manifest writes); returns total bytes freed.
+    pub fn remove_many(&mut self, ids: &[SliceId]) -> usize {
+        let mut freed = 0;
+        for &id in ids {
+            let bytes = self.sizes.remove(&id).unwrap_or(0);
+            self.checksums.remove(&id);
+            match self.path(id) {
+                None => {
+                    self.mem.remove(&id);
+                }
+                Some(p) => {
+                    let _ = std::fs::remove_file(p);
+                }
             }
-            Some(p) => {
-                let _ = std::fs::remove_file(p);
-            }
+            freed += bytes;
         }
-        bytes
+        if freed != 0 {
+            // best-effort: a failed manifest write self-heals at the next
+            // open (the dangling entries' files are gone → dropped there)
+            let _ = self.write_manifest();
+        }
+        freed
     }
 
     pub fn size_of(&self, id: SliceId) -> Option<usize> {
         self.sizes.get(&id).copied()
     }
 
+    /// Whether `id` is a live slice in this store.
+    pub fn contains(&self, id: SliceId) -> bool {
+        self.sizes.contains_key(&id)
+    }
+
     pub fn count(&self) -> usize {
         self.sizes.len()
     }
+
+    /// Next id that `put` would assign (reporting/tests).
+    pub fn next_id(&self) -> SliceId {
+        self.next_id
+    }
+
+    /// Live slice ids, ascending.
+    pub fn ids(&self) -> Vec<SliceId> {
+        let mut v: Vec<SliceId> = self.sizes.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+fn slice_file_name(id: SliceId) -> String {
+    format!("slice_{id:016x}.qkv")
+}
+
+fn parse_slice_file_name(name: &str) -> Option<SliceId> {
+    let hex = name.strip_prefix("slice_")?.strip_suffix(".qkv")?;
+    SliceId::from_str_radix(hex, 16).ok()
+}
+
+fn encode_slice(tensor: &QkvTensor) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(tensor.byte_size() + 16);
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&(tensor.layers as u32).to_le_bytes());
+    buf.extend_from_slice(&(tensor.d_model as u32).to_le_bytes());
+    buf.extend_from_slice(&(tensor.seq as u32).to_le_bytes());
+    for v in &tensor.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    buf
+}
+
+fn decode_slice(buf: &[u8]) -> Result<QkvTensor> {
+    anyhow::ensure!(buf.len() >= 16, "slice file too short");
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    anyhow::ensure!(magic == MAGIC, "bad slice magic");
+    let layers = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let d_model = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    let seq = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+    let n = layers * 3 * seq * d_model;
+    anyhow::ensure!(buf.len() == 16 + n * 4, "slice file size mismatch");
+    let mut data = vec![0f32; n];
+    for (i, c) in buf[16..].chunks_exact(4).enumerate() {
+        data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(QkvTensor::from_flat(layers, d_model, seq, data))
 }
 
 #[cfg(test)]
@@ -151,6 +436,15 @@ mod tests {
             *v = seed + i as f32 * 0.5;
         }
         t
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "percache_store_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
     }
 
     #[test]
@@ -167,7 +461,7 @@ mod tests {
 
     #[test]
     fn disk_roundtrip() {
-        let dir = std::env::temp_dir().join(format!("percache_store_{}", std::process::id()));
+        let dir = tmp_dir("rt");
         let mut s = SliceStore::disk(dir.clone()).unwrap();
         let t = tensor(-3.25);
         let (id, _) = s.put(t.clone()).unwrap();
@@ -181,10 +475,10 @@ mod tests {
 
     #[test]
     fn disk_detects_corruption() {
-        let dir = std::env::temp_dir().join(format!("percache_corrupt_{}", std::process::id()));
+        let dir = tmp_dir("corrupt");
         let mut s = SliceStore::disk(dir.clone()).unwrap();
         let (id, _) = s.put(tensor(0.0)).unwrap();
-        let p = dir.join(format!("slice_{id:016x}.qkv"));
+        let p = dir.join(slice_file_name(id));
         std::fs::write(&p, b"garbage data here").unwrap();
         assert!(s.get(id).is_err());
         let _ = std::fs::remove_dir_all(&dir);
@@ -196,5 +490,92 @@ mod tests {
         let (a, _) = s.put(tensor(0.0)).unwrap();
         let (b, _) = s.put(tensor(1.0)).unwrap();
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn reopen_resumes_ids_and_preserves_slices() {
+        let dir = tmp_dir("reopen");
+        let ta = tensor(1.0);
+        let tb = tensor(2.0);
+        let (a, b) = {
+            let mut s = SliceStore::disk(dir.clone()).unwrap();
+            (s.put(ta.clone()).unwrap().0, s.put(tb.clone()).unwrap().0)
+        };
+        let mut s = SliceStore::disk(dir.clone()).unwrap();
+        assert_eq!(s.count(), 2, "reopen must keep committed slices");
+        assert_eq!(s.get(a).unwrap(), ta);
+        assert_eq!(s.get(b).unwrap(), tb);
+        let (c, _) = s.put(tensor(3.0)).unwrap();
+        assert!(c > b, "resumed id {c} must not collide with {a}/{b}");
+        // the old slices are untouched by the new put
+        assert_eq!(s.get(a).unwrap(), ta);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_collects_orphan_files() {
+        let dir = tmp_dir("orphan");
+        {
+            let mut s = SliceStore::disk(dir.clone()).unwrap();
+            s.put(tensor(1.0)).unwrap();
+        }
+        // a crash between slice write and manifest commit leaves a stray
+        // file behind; it must be GC'd, not adopted or clobbered over
+        let stray = dir.join(slice_file_name(0xff));
+        std::fs::write(&stray, encode_slice(&tensor(9.0))).unwrap();
+        let s = SliceStore::disk(dir.clone()).unwrap();
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.orphans_removed, 1);
+        assert!(!stray.exists(), "orphan file must be removed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_manifest_is_rejected() {
+        let dir = tmp_dir("badmanifest");
+        {
+            let mut s = SliceStore::disk(dir.clone()).unwrap();
+            s.put(tensor(1.0)).unwrap();
+        }
+        std::fs::write(dir.join(MANIFEST_FILE), "{not json").unwrap();
+        assert!(SliceStore::disk(dir.clone()).is_err(), "garbage manifest");
+        std::fs::write(
+            dir.join(MANIFEST_FILE),
+            r#"{"magic":"percache-slices","version":999,"next_id":1,"slices":[]}"#,
+        )
+        .unwrap();
+        assert!(SliceStore::disk(dir.clone()).is_err(), "future version");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifestless_dir_is_adopted_not_clobbered() {
+        let dir = tmp_dir("legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        // legacy layout: slice files, no manifest
+        let t = tensor(4.0);
+        std::fs::write(dir.join(slice_file_name(7)), encode_slice(&t)).unwrap();
+        let mut s = SliceStore::disk(dir.clone()).unwrap();
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.get(7).unwrap(), t);
+        let (id, _) = s.put(tensor(5.0)).unwrap();
+        assert_eq!(id, 8, "ids resume past the adopted max");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_slice_file_is_dropped_on_reopen() {
+        let dir = tmp_dir("missing");
+        let (a, b) = {
+            let mut s = SliceStore::disk(dir.clone()).unwrap();
+            (s.put(tensor(1.0)).unwrap().0, s.put(tensor(2.0)).unwrap().0)
+        };
+        std::fs::remove_file(dir.join(slice_file_name(a))).unwrap();
+        let mut s = SliceStore::disk(dir.clone()).unwrap();
+        assert!(!s.contains(a), "lost slice must be dropped");
+        assert!(s.contains(b));
+        assert!(s.get(b).is_ok());
+        assert!(s.next_id() > b, "ids never reused even after a loss");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -182,6 +182,11 @@ pub struct PerCacheConfig {
     /// System prompt prepended to every RAG prompt (one segment).
     pub system_prompt: String,
 
+    // -- persistence ---------------------------------------------------------
+    /// Directory for durable cache state (slice store manifest + warm
+    /// restart snapshots, DESIGN.md §10).  None = memory-only caches.
+    pub persist_dir: Option<String>,
+
     // -- multi-tenant serving -----------------------------------------------
     pub tenancy: TenancyConfig,
 }
@@ -209,6 +214,7 @@ impl Default for PerCacheConfig {
             system_prompt: "you are a smartphone assistant answer the user \
                             question using the retrieved personal data"
                 .to_string(),
+            persist_dir: None,
             tenancy: TenancyConfig::default(),
         }
     }
@@ -274,6 +280,9 @@ impl PerCacheConfig {
         if let Some(s) = j.get("system_prompt").as_str() {
             c.system_prompt = s.to_string();
         }
+        if let Some(s) = j.get("persist_dir").as_str() {
+            c.persist_dir = if s.is_empty() { None } else { Some(s.to_string()) };
+        }
         if j.get("tenancy").as_obj().is_some() {
             c.tenancy = TenancyConfig::from_json(j.get("tenancy"))?;
         }
@@ -338,6 +347,9 @@ impl PerCacheConfig {
         o.insert("refresh_top_k", self.refresh_top_k);
         o.insert("decode_tokens", self.decode_tokens);
         o.insert("system_prompt", self.system_prompt.as_str());
+        if let Some(d) = &self.persist_dir {
+            o.insert("persist_dir", d.as_str());
+        }
         o.insert("tenancy", self.tenancy.to_json());
         Json::Obj(o)
     }
@@ -365,6 +377,20 @@ mod tests {
         assert_eq!(c2.model, "qwen");
         assert_eq!(c2.population, PopulationMode::Reactive);
         assert_eq!(c2.reuse_variant, ReuseVariant::Kv);
+    }
+
+    #[test]
+    fn persist_dir_roundtrip_and_default_off() {
+        let c = PerCacheConfig::default();
+        assert!(c.persist_dir.is_none(), "persistence must be opt-in");
+        let mut c = c;
+        c.persist_dir = Some("/tmp/percache-state".to_string());
+        let j = c.to_json();
+        let c2 = PerCacheConfig::from_json(&j).unwrap();
+        assert_eq!(c2.persist_dir.as_deref(), Some("/tmp/percache-state"));
+        // empty string means "off" (CLI-friendly)
+        let j = Json::parse(r#"{"persist_dir": ""}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).unwrap().persist_dir.is_none());
     }
 
     #[test]

@@ -34,9 +34,15 @@ use crate::tokenizer::{self, SEGMENT_TOKENS};
 /// earlier predictions are skipped — distinct paraphrases still populate
 /// (they are what makes future QA-bank hits possible).
 const PREDICT_DEDUP_SIM: f64 = 0.995;
+/// Deterministic seed for the engine's query predictor.
+const PREDICTOR_SEED: u64 = 0xCAC4E5EED;
 /// Idle-tick work budgets (keep a tick bounded, like a real idle window).
 const DECODE_PENDING_BUDGET: usize = 8;
 const RESTORE_BUDGET: usize = 8;
+/// QA entries *examined* per `restore_qkv` call (each examination costs
+/// an embed + retrieve), so a tick stays O(budget) even over a large
+/// bank; a round-robin cursor resumes where the last tick stopped.
+const RESTORE_SCAN_BUDGET: usize = 32;
 
 #[derive(Debug, Clone, Default)]
 pub struct IdleReport {
@@ -61,6 +67,8 @@ pub struct PerCache<'rt> {
     sys_tokens: Vec<i32>,
     sys_key: u64,
     query_counter: usize,
+    /// Round-robin position of the QA→QKV restoration scan.
+    restore_cursor: usize,
     /// Cumulative idle-side (population) compute — the paper's Fig 15a /
     /// Fig 20 accounting.
     pub population_flops: u64,
@@ -75,29 +83,101 @@ impl<'rt> PerCache<'rt> {
         let scheduler = CacheScheduler::new(cfg.scheduler_enabled, cfg.tau_scheduler, cfg.tau_query);
         let sys_tokens = tokenizer::encode_segment(&cfg.system_prompt);
         let sys_key = tokenizer::fnv1a64(cfg.system_prompt.as_bytes());
-        Ok(PerCache {
+        let mut eng = PerCache {
             retriever: Retriever::new(cfg.hybrid_alpha),
             qa: QaBank::new(cfg.qa_storage_bytes),
             tree: QkvTree::new(cfg.qkv_storage_bytes),
             store: SliceStore::memory(),
-            predictor: QueryPredictor::new(0xCAC4E5EED),
+            predictor: QueryPredictor::new(PREDICTOR_SEED),
             scheduler,
             kb: KnowledgeBank::new(),
             sys_tokens,
             sys_key,
             query_counter: 0,
+            restore_cursor: 0,
             population_flops: 0,
             population_events: 0,
             llm,
             embedder,
             cfg,
-        })
+        };
+        // durable-persistence config: attach (and warm-restore) the
+        // engine's cache directory at construction
+        if let Some(dir) = eng.cfg.persist_dir.clone() {
+            eng.attach_dir(std::path::PathBuf::from(dir))?;
+        }
+        Ok(eng)
     }
 
-    /// Use an on-disk slice store (paper-faithful load-on-demand).
+    /// Build an engine whose cache hierarchy lives at `dir`: the slice
+    /// store opens on disk (resuming its manifest) and any persisted
+    /// tree/QA/predictor state is restored — a warm restart when the
+    /// directory was populated by an earlier process, a cold start on a
+    /// fresh directory.  Equivalent to setting `cfg.persist_dir`.  Pair
+    /// with [`Self::save_state`] at shutdown.
+    pub fn open_or_create(
+        rt: &'rt Runtime,
+        mut cfg: PerCacheConfig,
+        dir: std::path::PathBuf,
+    ) -> Result<Self> {
+        cfg.persist_dir = Some(dir.to_string_lossy().into_owned());
+        Self::new(rt, cfg)
+    }
+
+    /// Switch this engine to an on-disk store at `dir`, restoring any
+    /// persisted cache state (see [`Self::open_or_create`]).  Replaces
+    /// whatever in-memory cache state the engine held.  Returns the
+    /// restore report, or None when the directory held no snapshot.
+    pub fn attach_dir(
+        &mut self,
+        dir: std::path::PathBuf,
+    ) -> Result<Option<crate::cache::RestoreReport>> {
+        // stage everything fallible against fresh state, so a failed
+        // attach leaves the engine exactly as it was (all-or-nothing)
+        let mut store = SliceStore::disk(dir.clone())?;
+        let mut predictor = QueryPredictor::new(PREDICTOR_SEED);
+        let restored = crate::cache::load_state(
+            &dir,
+            &mut store,
+            self.cfg.qkv_storage_bytes,
+            self.cfg.qa_storage_bytes,
+            &mut predictor,
+        )?;
+        self.store = store;
+        self.predictor = predictor;
+        self.restore_cursor = 0;
+        match restored {
+            Some((tree, qa, report)) => {
+                self.tree = tree;
+                self.qa = qa;
+                Ok(Some(report))
+            }
+            None => {
+                self.tree = QkvTree::new(self.cfg.qkv_storage_bytes);
+                self.qa = QaBank::new(self.cfg.qa_storage_bytes);
+                Ok(None)
+            }
+        }
+    }
+
+    /// Use an on-disk slice store (paper-faithful load-on-demand).  Full
+    /// open-or-create semantics: an existing directory is resumed, not
+    /// clobbered.
     pub fn with_disk_store(mut self, dir: std::path::PathBuf) -> Result<Self> {
-        self.store = SliceStore::disk(dir)?;
+        self.attach_dir(dir)?;
         Ok(self)
+    }
+
+    /// Persist the cache hierarchy next to the disk slice store (errors
+    /// on a memory-backed engine).  Cheap enough to call after every
+    /// serve; at minimum call it at shutdown.
+    pub fn save_state(&self) -> Result<()> {
+        let dir = self
+            .store
+            .dir()
+            .context("save_state requires a disk-backed store (open_or_create)")?
+            .to_path_buf();
+        crate::cache::save_state(&dir, &self.tree, &self.qa, &self.predictor)
     }
 
     // ------------------------------------------------------------------
@@ -210,9 +290,12 @@ impl<'rt> PerCache<'rt> {
         rec.answer = tokens_to_text(&dec.tokens);
 
         // 7. post-response population (reactive; free — reuses the
-        //    tensors this inference already produced)
+        //    tensors this inference already produced).  Only the prefix
+        //    path is inserted: matching never probes the query leaf, so
+        //    caching it would burn QKV budget on unmatchable slices.
         if self.cfg.qkv_enabled {
             let slices = slice_prompt(&pre.qkv, &seg_keys);
+            debug_assert_eq!(slices.len() + 1, seg_keys.len(), "query leaf must not be cached");
             let keys: Vec<u64> = slices.iter().map(|s| s.key).collect();
             let tensors: Vec<QkvTensor> = slices.into_iter().map(|s| s.tensor).collect();
             self.tree.insert_path(&keys, tensors, &mut self.store)?;
@@ -289,7 +372,9 @@ impl<'rt> PerCache<'rt> {
         let mut flops = pre.flops;
 
         if self.cfg.qkv_enabled {
+            // prefix path only — see the serve-path comment
             let slices = slice_prompt(&pre.qkv, &seg_keys);
+            debug_assert_eq!(slices.len() + 1, seg_keys.len(), "query leaf must not be cached");
             let keys: Vec<u64> = slices.iter().map(|s| s.key).collect();
             let tensors: Vec<QkvTensor> = slices.into_iter().map(|s| s.tensor).collect();
             self.tree.insert_path(&keys, tensors, &mut self.store)?;
@@ -406,26 +491,34 @@ impl<'rt> PerCache<'rt> {
 
     /// QA→QKV conversion (§4.3.3): re-prefill QA-bank queries whose tree
     /// slices were evicted, while storage headroom remains.
+    ///
+    /// Examines at most [`RESTORE_SCAN_BUDGET`] entries per call (every
+    /// examination pays an embed + retrieve), resuming round-robin where
+    /// the previous tick stopped — so an idle tick over a fully-cached
+    /// bank costs O(scan budget), not O(bank).
     pub fn restore_qkv(&mut self, budget: usize) -> Result<usize> {
         if !self.cfg.qkv_enabled {
             return Ok(0);
         }
-        let queries: Vec<String> = self
-            .qa
-            .entries()
-            .iter()
-            .map(|e| e.query.clone())
+        let len = self.qa.len();
+        if len == 0 {
+            return Ok(0);
+        }
+        let scan = RESTORE_SCAN_BUDGET.min(len);
+        // clone only the scan window, not the whole bank
+        let window: Vec<String> = (0..scan)
+            .map(|k| self.qa.entries()[(self.restore_cursor + k) % len].query.clone())
             .collect();
         let mut restored = 0;
-        for query in queries {
-            if restored >= budget {
-                break;
-            }
-            let emb = self.embedder.embed(&query)?;
+        let mut scanned = 0;
+        while scanned < scan && restored < budget {
+            let query = &window[scanned];
+            scanned += 1;
+            let emb = self.embedder.embed(query)?;
             let retrieved = self
                 .retriever
-                .retrieve(&query, &emb, &self.kb, self.cfg.top_k);
-            let (tokens, seg_keys) = self.assemble_prompt(&query, &retrieved);
+                .retrieve(query, &emb, &self.kb, self.cfg.top_k);
+            let (tokens, seg_keys) = self.assemble_prompt(query, &retrieved);
             let path = &seg_keys[..seg_keys.len() - 1];
             let cached = self.tree.cached_prefix_len(path);
             if cached >= path.len() {
@@ -445,6 +538,7 @@ impl<'rt> PerCache<'rt> {
             self.tree.insert_path(&keys, tensors, &mut self.store)?;
             restored += 1;
         }
+        self.restore_cursor = (self.restore_cursor + scanned) % len;
         Ok(restored)
     }
 

@@ -10,6 +10,7 @@ pub mod common;
 pub mod motivation;
 pub mod overall;
 pub mod overhead;
+pub mod persistence_exp;
 pub mod runner;
 pub mod scheduler_exp;
 pub mod showcase;

@@ -1,0 +1,255 @@
+//! Cold-start vs warm-start experiment (`percache exp persistence`):
+//! does durable cache state actually buy back the paper's latency wins
+//! after a process restart?
+//!
+//! Protocol (cache-level, runtime-free like the tenancy sweep): session
+//! 1 primes a disk-persisted shard over a cycling query stream and
+//! snapshots it (the app is "killed").  Then the *same* first-N query
+//! window is measured twice — once on a fresh memory shard (cold start:
+//! everything was lost) and once on the shard reopened from disk (warm
+//! restart).  Emits the human table + CSV plus the machine-readable
+//! `reports/BENCH_persistence.json` (first-N p50/p99 and hit rates,
+//! cold vs warm) — the acceptance artifact: warm must show a strictly
+//! higher hit rate and strictly lower p50 than cold.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::metrics::{Recorder, ServePath};
+use crate::runtime::Runtime;
+use crate::tenancy::sim::{serve_one, sim_slice_bytes, SimConfig};
+use crate::tenancy::TenantShard;
+use crate::tokenizer::fnv1a64;
+use crate::util::bench::percentile;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::common::reports_dir;
+
+/// Queries served in the priming session before the simulated kill.
+pub const PRIME_QUERIES: usize = 48;
+/// First-N window measured after each (re)start.
+pub const MEASURE_QUERIES: usize = 12;
+/// Topics cycled by the workload (each owns a reusable 2-chunk path).
+const TOPICS: usize = 4;
+/// Query phrasings per topic (verbatim repeats land in the QA bank).
+const VARIANTS: usize = 3;
+/// QKV budget, in sim slices (holds every topic path: 1 + 2·TOPICS).
+const BUDGET_SLICES: usize = 24;
+/// QA bank budget per shard.
+const QA_BYTES: usize = 1 << 20;
+
+/// One measured start (cold or warm).
+#[derive(Debug, Clone)]
+pub struct PersistenceCell {
+    pub label: String,
+    pub queries: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub hit_rate: f64,
+    pub qa_hit_rate: f64,
+    pub qkv_hit_rate: f64,
+    pub mean_flops: f64,
+}
+
+/// Deterministic cycling stream: query `i` asks about topic `i % TOPICS`
+/// with phrasing `(i / TOPICS) % VARIANTS` — every (topic, variant) pair
+/// repeats verbatim once the stream wraps.
+fn query_text(i: usize) -> String {
+    let topic = i % TOPICS;
+    let variant = (i / TOPICS) % VARIANTS;
+    format!("question phrasing{variant} about subject{topic} details")
+}
+
+/// Prompt path `[sys, chunk_a(topic), chunk_b(topic), query]`.
+fn seg_keys(i: usize, text: &str) -> Vec<u64> {
+    let topic = i % TOPICS;
+    vec![
+        fnv1a64(b"sys"),
+        fnv1a64(format!("persist/topic{topic}/a").as_bytes()),
+        fnv1a64(format!("persist/topic{topic}/b").as_bytes()),
+        fnv1a64(text.as_bytes()),
+    ]
+}
+
+fn run_session(shard: &mut TenantShard, sim: &SimConfig, n: usize) -> Result<Recorder> {
+    let mut rec = Recorder::new();
+    for i in 0..n {
+        let q = query_text(i);
+        let keys = seg_keys(i, &q);
+        rec.push(serve_one(sim, shard, &q, &keys)?);
+    }
+    Ok(rec)
+}
+
+fn cell(label: &str, rec: &Recorder) -> PersistenceCell {
+    let mut lat: Vec<f64> = rec.records.iter().map(|r| r.total_ms()).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let hits = rec
+        .records
+        .iter()
+        .filter(|r| r.path != ServePath::Full)
+        .count();
+    PersistenceCell {
+        label: label.to_string(),
+        queries: rec.len(),
+        p50_ms: percentile(&lat, 50.0),
+        p99_ms: percentile(&lat, 99.0),
+        hit_rate: hits as f64 / rec.len().max(1) as f64,
+        qa_hit_rate: rec.qa_hit_rate(),
+        qkv_hit_rate: rec.qkv_hit_rate(),
+        mean_flops: rec.total_flops() as f64 / rec.len().max(1) as f64,
+    }
+}
+
+/// Run the cold-vs-warm comparison with persistent state under `dir`
+/// (pure; unit-testable without a runtime).  Returns (cold, warm).
+pub fn sweep(dir: &Path) -> Result<(PersistenceCell, PersistenceCell)> {
+    let sim = SimConfig::default();
+    let qkv_bytes = BUDGET_SLICES * sim_slice_bytes();
+    let shard_dir = dir.join("shard_0");
+    let _ = std::fs::remove_dir_all(&shard_dir);
+
+    // session 1: prime a persistent shard, snapshot, "kill the app"
+    {
+        let mut shard =
+            TenantShard::open_or_create(0, QA_BYTES, qkv_bytes, 0.2, shard_dir.clone())?;
+        run_session(&mut shard, &sim, PRIME_QUERIES)?;
+        shard.save()?;
+        shard.check_invariants()?;
+    }
+
+    // cold start: a fresh memory shard — the pre-persistence behaviour
+    let mut cold_shard = TenantShard::new(0, QA_BYTES, qkv_bytes, 0.2);
+    let cold = cell("cold", &run_session(&mut cold_shard, &sim, MEASURE_QUERIES)?);
+
+    // warm restart: reopen the persisted shard and serve the same window
+    let mut warm_shard =
+        TenantShard::open_or_create(0, QA_BYTES, qkv_bytes, 0.2, shard_dir.clone())?;
+    warm_shard.check_invariants()?;
+    let warm = cell("warm", &run_session(&mut warm_shard, &sim, MEASURE_QUERIES)?);
+    warm_shard.check_invariants()?;
+
+    Ok((cold, warm))
+}
+
+/// `percache exp persistence` entry point (runtime unused: cache-level).
+pub fn persistence(_rt: &Runtime) -> Result<()> {
+    run_and_report()
+}
+
+/// Shared by the exp registry and tests.
+pub fn run_and_report() -> Result<()> {
+    let state_dir = std::env::temp_dir().join(format!(
+        "percache_persistence_exp_{}",
+        std::process::id()
+    ));
+    let (cold, warm) = sweep(&state_dir)?;
+    let _ = std::fs::remove_dir_all(&state_dir);
+
+    let mut table = Table::new(
+        "persistence: first-N queries after restart, cold vs warm",
+        &["start", "queries", "p50 ms", "p99 ms", "hit", "qa hit", "qkv hit"],
+    );
+    for c in [&cold, &warm] {
+        table.row(vec![
+            c.label.clone(),
+            c.queries.to_string(),
+            format!("{:.3}", c.p50_ms),
+            format!("{:.3}", c.p99_ms),
+            format!("{:.0}%", c.hit_rate * 100.0),
+            format!("{:.0}%", c.qa_hit_rate * 100.0),
+            format!("{:.0}%", c.qkv_hit_rate * 100.0),
+        ]);
+    }
+    println!("{}", table.render());
+    let dir = reports_dir();
+    table.emit(&dir, "persistence");
+    write_bench_json(&cold, &warm, &dir)?;
+    Ok(())
+}
+
+fn cell_json(c: &PersistenceCell) -> Json {
+    let mut o = Json::obj();
+    o.insert("queries", c.queries);
+    o.insert("p50_ms", c.p50_ms);
+    o.insert("p99_ms", c.p99_ms);
+    o.insert("hit_rate", c.hit_rate);
+    o.insert("qa_hit_rate", c.qa_hit_rate);
+    o.insert("qkv_hit_rate", c.qkv_hit_rate);
+    o.insert("mean_flops", c.mean_flops);
+    Json::Obj(o)
+}
+
+/// Emit `<dir>/BENCH_persistence.json` — the warm-restart acceptance
+/// artifact.
+pub fn write_bench_json(
+    cold: &PersistenceCell,
+    warm: &PersistenceCell,
+    dir: &std::path::Path,
+) -> Result<()> {
+    let mut root = Json::obj();
+    root.insert("bench", "persistence");
+    root.insert("prime_queries", PRIME_QUERIES);
+    root.insert("measure_queries", MEASURE_QUERIES);
+    root.insert("cold", cell_json(cold));
+    root.insert("warm", cell_json(warm));
+    root.insert(
+        "p50_speedup",
+        if warm.p50_ms > 0.0 { cold.p50_ms / warm.p50_ms } else { f64::INFINITY },
+    );
+    root.insert("hit_rate_delta", warm.hit_rate - cold.hit_rate);
+
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_persistence.json");
+    std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
+    println!("[persistence] wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("percache_pexp_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn warm_restart_strictly_beats_cold_start() {
+        let dir = tmp("sweep");
+        let (cold, warm) = sweep(&dir).unwrap();
+        assert!(
+            warm.hit_rate > cold.hit_rate,
+            "warm hit rate {:.2} must beat cold {:.2}",
+            warm.hit_rate,
+            cold.hit_rate
+        );
+        assert!(
+            warm.p50_ms < cold.p50_ms,
+            "warm p50 {:.4}ms must beat cold {:.4}ms",
+            warm.p50_ms,
+            cold.p50_ms
+        );
+        assert!(warm.mean_flops < cold.mean_flops, "warm must skip compute");
+        // the warm window is verbatim repeats of primed queries: all QA hits
+        assert!(warm.qa_hit_rate > 0.99, "warm window must hit the QA bank");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bench_json_is_parseable_and_ordered() {
+        let dir = tmp("json");
+        let (cold, warm) = sweep(&dir).unwrap();
+        write_bench_json(&cold, &warm, &dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("BENCH_persistence.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("persistence"));
+        let dw = j.get("warm").get("hit_rate").as_f64().unwrap();
+        let dc = j.get("cold").get("hit_rate").as_f64().unwrap();
+        assert!(dw > dc);
+        assert!(j.get("hit_rate_delta").as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -5,7 +5,10 @@ use anyhow::Result;
 
 use crate::runtime::Runtime;
 
-use super::{ablation, motivation, overall, overhead, scheduler_exp, showcase, tenancy_exp};
+use super::{
+    ablation, motivation, overall, overhead, persistence_exp, scheduler_exp, showcase,
+    tenancy_exp,
+};
 
 /// All experiment ids, in paper order.
 pub const EXPERIMENTS: [&str; 18] = [
@@ -19,9 +22,10 @@ pub const EXPERIMENTS: [&str; 18] = [
 
 /// Appendix experiments (heavier; included in `exp all` but also
 /// runnable individually).  `tenancy` is the multi-tenant scaling sweep
-/// introduced on top of the paper's evaluation; it also emits the
-/// machine-readable reports/BENCH_tenancy.json perf seed.
-pub const APPENDIX: [&str; 4] = ["fig21", "fig22", "fig23", "tenancy"];
+/// introduced on top of the paper's evaluation (emits the
+/// machine-readable reports/BENCH_tenancy.json perf seed); `persistence`
+/// is the cold-vs-warm restart comparison (reports/BENCH_persistence.json).
+pub const APPENDIX: [&str; 5] = ["fig21", "fig22", "fig23", "tenancy", "persistence"];
 
 pub fn run_experiment(rt: &Runtime, name: &str) -> Result<()> {
     let t0 = std::time::Instant::now();
@@ -49,6 +53,7 @@ pub fn run_experiment(rt: &Runtime, name: &str) -> Result<()> {
         "fig23" => overall::fig23(rt)?,
         "table1" => overhead::table1(rt)?,
         "tenancy" => tenancy_exp::tenancy(rt)?,
+        "persistence" => persistence_exp::persistence(rt)?,
         other => anyhow::bail!(
             "unknown experiment '{other}' — known: {:?} + {:?}",
             EXPERIMENTS,
@@ -78,7 +83,7 @@ mod tests {
         for id in ["fig2", "fig14", "fig15a", "fig19", "fig20", "table1"] {
             assert!(EXPERIMENTS.contains(&id), "{id} missing");
         }
-        for id in ["fig21", "fig22", "fig23", "tenancy"] {
+        for id in ["fig21", "fig22", "fig23", "tenancy", "persistence"] {
             assert!(APPENDIX.contains(&id), "{id} missing");
         }
     }

@@ -23,6 +23,18 @@
 //! * [`exp`] — the paper-figure/table reproduction harness.
 //! * [`util`] / [`testkit`] / [`tokenizer`] / [`metrics`] — substrates.
 
+// Style idioms the seed tree uses pervasively (`&Embedding` parameters,
+// inherent `Json::to_string`, arg-less `new()` constructors, configs
+// built by mutating a `default()`).  Allowed explicitly so the CI
+// clippy gate (`-D warnings`) enforces everything else; shrinking this
+// list is tracked cleanup, not a blocker.
+#![allow(clippy::ptr_arg)]
+#![allow(clippy::inherent_to_string)]
+#![allow(clippy::new_without_default)]
+#![allow(clippy::field_reassign_with_default)]
+#![allow(clippy::len_without_is_empty)]
+#![allow(clippy::type_complexity)]
+
 pub mod baselines;
 pub mod cache;
 pub mod config;

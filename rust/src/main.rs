@@ -2,11 +2,16 @@
 //! the system.
 //!
 //! ```text
-//! percache serve   [--model llama] [--dataset mised] [--user 0] …
-//! percache exp     <fig2|…|table1|all> [--out reports]
+//! percache serve   [--model llama] [--dataset mised] [--user 0]
+//!                  [--persist-dir state/] …
+//! percache exp     <fig2|…|table1|persistence|all> [--out reports]
 //! percache tenants [--tenants 8] [--arrivals 0] [--zipf 1.0] [--sweep]
 //! percache info
 //! ```
+
+// Same seed-tree style allowance as rust/src/lib.rs (configs are built
+// by mutating a `default()`); the CI clippy gate enforces the rest.
+#![allow(clippy::field_reassign_with_default)]
 
 use anyhow::Result;
 use percache::util::cli::Cli;
@@ -159,6 +164,11 @@ fn cmd_serve() -> Result<()> {
         .flag("method", "percache", "method (percache or a baseline)")
         .flag("tau", "0.85", "QA-bank similarity threshold")
         .flag("idle-every", "1", "idle ticks between queries (0 = none)")
+        .flag(
+            "persist-dir",
+            "",
+            "durable cache dir: warm-restores on start, snapshots on exit",
+        )
         .switch("verbose", "per-query breakdown");
     let a = cli.parse_env(1);
 
@@ -166,7 +176,19 @@ fn cmd_serve() -> Result<()> {
     let mut base = percache::config::PerCacheConfig::default();
     base.model = a.get("model").to_string();
     base.tau_query = a.get_f64("tau");
+    let persist_dir = a.get("persist-dir").to_string();
+    if !persist_dir.is_empty() {
+        base.persist_dir = Some(persist_dir.clone());
+    }
+    // persist_dir in the config warm-restores the engine at construction
     let mut eng = percache::baselines::build_method(&rt, a.get("method"), &base)?;
+    if !persist_dir.is_empty() {
+        println!(
+            "[persist] cache dir {persist_dir}: restored {} tree slices, {} QA entries",
+            eng.tree.slice_count(),
+            eng.qa.len(),
+        );
+    }
 
     let data = percache::datasets::generate(a.get("dataset"), a.get_usize("user"));
     for doc in &data.documents {
@@ -220,6 +242,10 @@ fn cmd_serve() -> Result<()> {
         rec.qkv_hit_rate() * 100.0,
         rec.segment_reuse_ratio() * 100.0,
     );
+    if !persist_dir.is_empty() {
+        eng.save_state()?;
+        println!("[persist] cache state saved to {persist_dir}");
+    }
     Ok(())
 }
 

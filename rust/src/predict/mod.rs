@@ -73,6 +73,18 @@ impl QueryPredictor {
         self.history.len()
     }
 
+    /// Recent-query buffer, oldest first (persistence, DESIGN.md §10).
+    /// Restoring is just `observe`-ing these back in order.
+    pub fn history_snapshot(&self) -> Vec<String> {
+        self.history.iter().cloned().collect()
+    }
+
+    /// Drop the recent-query buffer (a state restore replaces history
+    /// wholesale rather than mixing two sessions').
+    pub fn clear_history(&mut self) {
+        self.history.clear();
+    }
+
     /// Knowledge-based prediction: `stride` questions over abstract terms.
     /// Mirrors the paper's two question kinds (general + detailed).
     pub fn predict_from_knowledge(&mut self, kb: &KnowledgeBank, stride: usize) -> Vec<String> {

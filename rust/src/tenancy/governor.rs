@@ -83,7 +83,7 @@ impl MemoryGovernor {
         let floor = (fair as f64 * self.cfg.floor_frac) as usize;
         let remainder = global.saturating_sub(floor * n);
         let total_u: f64 = entries.iter().map(|(_, u)| u.max(0.0)).sum();
-        entries
+        let mut plan: Vec<Allocation> = entries
             .iter()
             .map(|&(tenant, u)| {
                 let share = if total_u > 0.0 {
@@ -97,7 +97,27 @@ impl MemoryGovernor {
                     utility: u,
                 }
             })
-            .collect()
+            .collect();
+        // Integer truncation of the floor and of each share strands up to
+        // n + total_u bytes; hand the leftover to the highest-utility
+        // shard (first on ties) so the plan sums to exactly `global`.
+        let allocated: usize = plan.iter().map(|a| a.bytes).sum();
+        let leftover = global.saturating_sub(allocated);
+        if leftover > 0 {
+            let best = plan
+                .iter()
+                .enumerate()
+                .max_by(|(ia, a), (ib, b)| {
+                    a.utility
+                        .partial_cmp(&b.utility)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(ib.cmp(ia)) // earlier index wins ties
+                })
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            plan[best].bytes += leftover;
+        }
+        plan
     }
 
     /// Plan budgets for a set of live shards.
@@ -195,9 +215,21 @@ mod tests {
         let g = governor(1200);
         let plan = g.plan_weights(&[(0, 0.0), (1, 0.0), (2, 0.0)]);
         let total: usize = plan.iter().map(|a| a.bytes).sum();
-        assert!(total <= 1200);
+        assert_eq!(total, 1200, "plan must sum to exactly the global budget");
         assert_eq!(plan[0].bytes, plan[1].bytes);
         assert_eq!(plan[1].bytes, plan[2].bytes);
+    }
+
+    #[test]
+    fn truncation_leftover_goes_to_highest_utility() {
+        // 1000 over 3 shards: fair 333, floor 83, remainder 751; the
+        // truncated shares strand bytes that must land on the top shard
+        let g = governor(1000);
+        let plan = g.plan_weights(&[(0, 1.0), (1, 5.0), (2, 1.0)]);
+        let total: usize = plan.iter().map(|a| a.bytes).sum();
+        assert_eq!(total, 1000, "no stranded bytes: {plan:?}");
+        let top = plan.iter().max_by_key(|a| a.bytes).unwrap();
+        assert_eq!(top.tenant, 1, "leftover must go to the highest utility");
     }
 
     #[test]
@@ -205,7 +237,7 @@ mod tests {
         let g = governor(8000);
         let plan = g.plan_weights(&[(0, 9.0), (1, 1.0), (2, 0.0), (3, 0.0)]);
         let total: usize = plan.iter().map(|a| a.bytes).sum();
-        assert!(total <= 8000, "over budget: {total}");
+        assert_eq!(total, 8000, "plan must sum to exactly the global budget");
         assert!(plan[0].bytes > plan[1].bytes);
         assert!(plan[1].bytes > plan[2].bytes);
         // floor: fair share 2000 × 0.25 = 500 — nobody starves

@@ -1,7 +1,12 @@
 //! The tenant registry: owns every tenant's cache shard and the memory
-//! governor that arbitrates bytes between them.
+//! governor that arbitrates bytes between them.  With a persistence
+//! directory attached ([`TenantRegistry::open_or_create`]) every shard
+//! lives in its own `shard_<id>/` subdirectory and survives process
+//! restarts.
 
-use anyhow::Result;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
 
 use crate::config::TenancyConfig;
 
@@ -14,6 +19,8 @@ pub struct TenantRegistry {
     cfg: TenancyConfig,
     /// Serves since the last governor pass (drives `rebalance_every`).
     serves_since_rebalance: u64,
+    /// Base directory for per-shard persistence (None = memory shards).
+    dir: Option<PathBuf>,
 }
 
 impl TenantRegistry {
@@ -27,7 +34,56 @@ impl TenantRegistry {
             }),
             cfg: cfg.clone(),
             serves_since_rebalance: 0,
+            dir: None,
         }
+    }
+
+    /// Open (or create) a persistent registry at `dir`: existing
+    /// `shard_<id>/` subdirectories are resumed in id order (warm
+    /// restart for every tenant), and tenants created later get their
+    /// own persistent subdirectory.  Pair with [`Self::save_all`].
+    pub fn open_or_create(cfg: &TenancyConfig, dir: PathBuf) -> Result<Self> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating tenant dir {}", dir.display()))?;
+        let mut reg = Self::new(cfg);
+        reg.dir = Some(dir.clone());
+        let mut ids: Vec<u32> = Vec::new();
+        for entry in
+            std::fs::read_dir(&dir).with_context(|| format!("listing {}", dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(id) = name.strip_prefix("shard_").and_then(|s| s.parse::<u32>().ok()) {
+                ids.push(id);
+            }
+        }
+        ids.sort_unstable();
+        for (i, id) in ids.iter().enumerate() {
+            anyhow::ensure!(
+                *id == i as u32,
+                "shard directories must be contiguous from 0 (found shard_{id} at position {i})"
+            );
+            reg.create_tenant()?;
+        }
+        Ok(reg)
+    }
+
+    /// Base persistence directory, when attached.
+    pub fn persist_dir(&self) -> Option<&PathBuf> {
+        self.dir.as_ref()
+    }
+
+    /// Snapshot every shard's cache state (persistent registries only).
+    /// Returns how many shards were saved.
+    pub fn save_all(&self) -> Result<usize> {
+        anyhow::ensure!(
+            self.dir.is_some(),
+            "save_all requires a persistent registry (open_or_create)"
+        );
+        for shard in &self.shards {
+            shard.save()?;
+        }
+        Ok(self.shards.len())
     }
 
     /// Single-tenant mode: one shard holding the whole global budget —
@@ -47,12 +103,25 @@ impl TenantRegistry {
             self.cfg.max_tenants
         );
         let id = self.shards.len() as TenantId;
-        self.shards.push(TenantShard::new(
-            id,
-            self.cfg.qa_bytes_per_tenant,
-            0, // budget assigned by the forced rebalance below
-            self.cfg.utility_alpha,
-        ));
+        let shard = match &self.dir {
+            None => TenantShard::new(
+                id,
+                self.cfg.qa_bytes_per_tenant,
+                0, // budget assigned by the forced rebalance below
+                self.cfg.utility_alpha,
+            ),
+            // persistent shard: restore under the full global budget so a
+            // warm tree is paged in intact, then let the forced rebalance
+            // below shrink it to the governed share through the LFU path
+            Some(base) => TenantShard::open_or_create(
+                id,
+                self.cfg.qa_bytes_per_tenant,
+                self.cfg.global_qkv_bytes,
+                self.cfg.utility_alpha,
+                base.join(format!("shard_{id}")),
+            )?,
+        };
+        self.shards.push(shard);
         self.governor.rebalance(&mut self.shards, true);
         Ok(id)
     }

@@ -2,7 +2,7 @@
 //! cache, bundled so the registry can own many of them and the governor
 //! can move bytes between them.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::cache::{PrefixMatch, QaBank, QkvTree, SegKey, SliceStore};
 use crate::embedding::Embedding;
@@ -110,6 +110,44 @@ impl TenantShard {
             predictor: QueryPredictor::new(0xCAC4E5EED ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             stats: ShardStats::new(utility_alpha),
         }
+    }
+
+    /// Open (or create) a shard persisted at `dir`: the slice store
+    /// resumes its manifest and any `cache_state.json` snapshot restores
+    /// the QA bank, tree structure and predictor history — tenants
+    /// survive process restarts.  Pair with [`Self::save`].
+    pub fn open_or_create(
+        id: TenantId,
+        qa_bytes: usize,
+        qkv_bytes: usize,
+        utility_alpha: f64,
+        dir: std::path::PathBuf,
+    ) -> Result<Self> {
+        let mut shard = Self::new(id, qa_bytes, qkv_bytes, utility_alpha);
+        let mut store = SliceStore::disk(dir.clone())?;
+        if let Some((tree, qa, _report)) = crate::cache::load_state(
+            &dir,
+            &mut store,
+            qkv_bytes,
+            qa_bytes,
+            &mut shard.predictor,
+        )? {
+            shard.tree = tree;
+            shard.qa = qa;
+        }
+        shard.store = store;
+        Ok(shard)
+    }
+
+    /// Persist this shard's cache state next to its disk store (errors
+    /// on a memory-backed shard).
+    pub fn save(&self) -> Result<()> {
+        let dir = self
+            .store
+            .dir()
+            .with_context(|| format!("shard {}: save requires a disk store (open_or_create)", self.id))?
+            .to_path_buf();
+        crate::cache::save_state(&dir, &self.tree, &self.qa, &self.predictor)
     }
 
     // -- cache operations (PJRT-free; embeddings supplied by the caller) --

@@ -228,7 +228,11 @@ fn prop_governor_never_starves_nonzero_utility_and_stays_in_budget() {
             let n = utilities.len();
             let floor = (*global / n) / 4; // fair × floor_frac
             let total: usize = plan.iter().map(|a| a.bytes).sum();
-            check(total <= *global, format!("plan over budget: {total} > {global}"))?;
+            // exact-sum: truncation leftovers are reassigned, never stranded
+            check(
+                total == *global,
+                format!("plan must sum exactly: {total} != {global}"),
+            )?;
             for (alloc, &u) in plan.iter().zip(utilities) {
                 check(
                     alloc.bytes >= floor,
