@@ -16,7 +16,7 @@ pub mod qkv_tree;
 pub mod slicer;
 pub mod store;
 
-pub use persist::{load_state, save_state, RestoreReport};
+pub use persist::{load_state, save_state, RestoreReport, Snapshotter};
 pub use qa_bank::{QaBank, QaEntry, QaId, QaMatch};
 pub use qkv_tree::{NodeSnapshot, PrefixMatch, QkvTree, SegKey};
 pub use slicer::{slice_prompt, SegmentSlice};

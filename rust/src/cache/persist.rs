@@ -45,20 +45,8 @@ pub struct RestoreReport {
     pub unreferenced_slices: usize,
 }
 
-/// Atomically persist the cache hierarchy's state into `dir` (next to
-/// the slice files of the disk store).
-pub fn save_state(
-    dir: &Path,
-    tree: &QkvTree,
-    qa: &QaBank,
-    predictor: &QueryPredictor,
-) -> Result<()> {
-    std::fs::create_dir_all(dir)
-        .with_context(|| format!("creating cache dir {}", dir.display()))?;
-    let mut root = Json::obj();
-    root.insert("magic", STATE_MAGIC);
-    root.insert("version", STATE_VERSION);
-
+/// Serialize the QKV tree section of a snapshot.
+fn tree_section(tree: &QkvTree) -> Json {
     let nodes: Vec<Json> = tree
         .export()
         .iter()
@@ -86,8 +74,11 @@ pub fn save_state(
         .collect();
     let mut tj = Json::obj();
     tj.insert("nodes", Json::Arr(nodes));
-    root.insert("tree", Json::Obj(tj));
+    Json::Obj(tj)
+}
 
+/// Serialize the QA-bank section of a snapshot.
+fn qa_section(qa: &QaBank) -> Json {
     let entries: Vec<Json> = qa
         .entries()
         .iter()
@@ -114,8 +105,11 @@ pub fn save_state(
     let mut qj = Json::obj();
     qj.insert("next_id", qa.next_id());
     qj.insert("entries", Json::Arr(entries));
-    root.insert("qa", Json::Obj(qj));
+    Json::Obj(qj)
+}
 
+/// Serialize the predictor section of a snapshot.
+fn predictor_section(predictor: &QueryPredictor) -> Json {
     let mut pj = Json::obj();
     pj.insert(
         "history",
@@ -127,14 +121,118 @@ pub fn save_state(
                 .collect(),
         ),
     );
-    root.insert("predictor", Json::Obj(pj));
+    Json::Obj(pj)
+}
 
+/// Assemble and atomically commit a snapshot from its three sections.
+fn write_snapshot(dir: &Path, tree_j: Json, qa_j: Json, pred_j: Json) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating cache dir {}", dir.display()))?;
+    let mut root = Json::obj();
+    root.insert("magic", STATE_MAGIC);
+    root.insert("version", STATE_VERSION);
+    root.insert("tree", tree_j);
+    root.insert("qa", qa_j);
+    root.insert("predictor", pred_j);
     let tmp = dir.join(format!("{STATE_FILE}.tmp"));
     let fin = dir.join(STATE_FILE);
     std::fs::write(&tmp, Json::Obj(root).to_string_pretty())
         .with_context(|| format!("writing {}", tmp.display()))?;
     std::fs::rename(&tmp, &fin).with_context(|| format!("committing {}", fin.display()))?;
     Ok(())
+}
+
+/// Atomically persist the cache hierarchy's state into `dir` (next to
+/// the slice files of the disk store).  Always writes; use a
+/// [`Snapshotter`] for dirty-flag-aware incremental saves.
+pub fn save_state(
+    dir: &Path,
+    tree: &QkvTree,
+    qa: &QaBank,
+    predictor: &QueryPredictor,
+) -> Result<()> {
+    write_snapshot(
+        dir,
+        tree_section(tree),
+        qa_section(qa),
+        predictor_section(predictor),
+    )
+}
+
+/// Incremental snapshot writer: keeps the assembled snapshot document
+/// cached and re-serializes only the sections whose source structure
+/// reports dirty since the last save (clean sections stay in the cached
+/// document untouched — no clone, no re-serialization).  A save where
+/// nothing is dirty (and the snapshot file exists) is a complete no-op,
+/// which makes per-serve checkpointing and demote-time saves of idle
+/// shards cheap.
+#[derive(Debug, Default)]
+pub struct Snapshotter {
+    /// The cached snapshot document (magic/version + three sections).
+    root: Option<Json>,
+    /// Snapshots actually written / skipped as clean (reporting).
+    pub writes: u64,
+    pub skipped: u64,
+    /// Sections served from cache across all writes (reporting).
+    pub sections_reused: u64,
+}
+
+impl Snapshotter {
+    pub fn new() -> Self {
+        Snapshotter::default()
+    }
+
+    /// Save `dir`'s snapshot if anything changed; returns whether a file
+    /// write happened.  Clears the dirty flags of everything it captured.
+    pub fn save(
+        &mut self,
+        dir: &Path,
+        tree: &mut QkvTree,
+        qa: &mut QaBank,
+        predictor: &mut QueryPredictor,
+    ) -> Result<bool> {
+        let have_root = self.root.is_some();
+        let tree_fresh = tree.is_dirty() || !have_root;
+        let qa_fresh = qa.is_dirty() || !have_root;
+        let pred_fresh = predictor.is_dirty() || !have_root;
+        if !tree_fresh && !qa_fresh && !pred_fresh && dir.join(STATE_FILE).exists() {
+            self.skipped += 1;
+            return Ok(false);
+        }
+        self.sections_reused +=
+            [tree_fresh, qa_fresh, pred_fresh].iter().filter(|f| !**f).count() as u64;
+        if !have_root {
+            let mut o = Json::obj();
+            o.insert("magic", STATE_MAGIC);
+            o.insert("version", STATE_VERSION);
+            self.root = Some(Json::Obj(o));
+        }
+        let Some(Json::Obj(root)) = self.root.as_mut() else {
+            unreachable!("snapshotter root is always an object");
+        };
+        if tree_fresh {
+            root.insert("tree", tree_section(tree));
+        }
+        if qa_fresh {
+            root.insert("qa", qa_section(qa));
+        }
+        if pred_fresh {
+            root.insert("predictor", predictor_section(predictor));
+        }
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        let tmp = dir.join(format!("{STATE_FILE}.tmp"));
+        let fin = dir.join(STATE_FILE);
+        let doc = self.root.as_ref().expect("root just ensured");
+        std::fs::write(&tmp, doc.to_string_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &fin).with_context(|| format!("committing {}", fin.display()))?;
+        tree.mark_clean();
+        qa.mark_clean();
+        predictor.mark_clean();
+        self.writes += 1;
+        Ok(true)
+    }
 }
 
 /// Restore the cache hierarchy persisted at `dir`, reconciling against
@@ -252,6 +350,8 @@ pub fn load_state(
             history += 1;
         }
     }
+    // the replayed history equals the snapshot: nothing new to persist
+    predictor.mark_clean();
 
     let report = RestoreReport {
         tree_nodes: tree.node_count(),
@@ -322,6 +422,44 @@ mod tests {
         assert_eq!(pred.history_len(), 1);
         tree.check_invariants().unwrap();
         qa.check_invariants().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshotter_skips_clean_saves_and_reuses_sections() {
+        let dir = tmp_dir("incremental");
+        let limit = 1 << 20;
+        let mut store = SliceStore::disk(dir.clone()).unwrap();
+        let mut tree = QkvTree::new(limit);
+        let mut qa = QaBank::new(limit);
+        let mut pred = QueryPredictor::new(1);
+        tree.insert_path(&[10], vec![tensor(1.0)], &mut store).unwrap();
+        qa.insert("alpha query", emb(1.0, 0.0), Some(vec![1]), false);
+        let mut saver = Snapshotter::new();
+        assert!(
+            saver.save(&dir, &mut tree, &mut qa, &mut pred).unwrap(),
+            "first save must write"
+        );
+        // nothing changed: the save is a complete no-op
+        assert!(!saver.save(&dir, &mut tree, &mut qa, &mut pred).unwrap());
+        assert_eq!(saver.skipped, 1);
+        // dirty one section: rewrite, reusing the other two from cache
+        qa.insert("beta query", emb(0.0, 1.0), None, true);
+        assert!(saver.save(&dir, &mut tree, &mut qa, &mut pred).unwrap());
+        assert!(
+            saver.sections_reused >= 2,
+            "clean sections must come from the cache ({})",
+            saver.sections_reused
+        );
+        drop(store);
+        // the snapshot on disk is complete and loadable
+        let mut store = SliceStore::disk(dir.clone()).unwrap();
+        let mut pred = QueryPredictor::new(1);
+        let (tree, qa, _) = load_state(&dir, &mut store, limit, limit, &mut pred)
+            .unwrap()
+            .expect("snapshot must exist");
+        assert_eq!(qa.len(), 2);
+        assert_eq!(tree.slice_count(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

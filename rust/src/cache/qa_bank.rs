@@ -47,6 +47,9 @@ pub struct QaBank {
     byte_limit: usize,
     bytes_used: usize,
     next_id: QaId,
+    /// Persisted state (entries, answers, LFU freqs) changed since the
+    /// last [`Self::mark_clean`] — incremental snapshots skip clean banks.
+    dirty: bool,
     pub evictions: u64,
 }
 
@@ -87,6 +90,16 @@ impl QaBank {
     /// Next id `insert` would assign (persistence).
     pub fn next_id(&self) -> QaId {
         self.next_id
+    }
+
+    /// Whether persisted state changed since the last [`Self::mark_clean`].
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    /// Mark the current state as snapshotted (persistence internal).
+    pub fn mark_clean(&mut self) {
+        self.dirty = false;
     }
 
     /// Rebuild a bank from persisted entries (DESIGN.md §10).  Ids must
@@ -148,6 +161,7 @@ impl QaBank {
         }
         let (i, sim) = best;
         self.entries[i].freq += 1;
+        self.dirty = true; // persisted LFU freq moved
         Some((
             QaMatch {
                 id: self.entries[i].id,
@@ -180,6 +194,7 @@ impl QaBank {
             let new = self.entries[pos].bytes();
             self.bytes_used = self.bytes_used + new - old;
             let id = self.entries[pos].id;
+            self.dirty = true;
             self.enforce_budget(&[id]);
             return id;
         }
@@ -195,6 +210,7 @@ impl QaBank {
         };
         self.bytes_used += e.bytes();
         self.entries.push(e);
+        self.dirty = true;
         self.enforce_budget(&[id]);
         id
     }
@@ -214,6 +230,7 @@ impl QaBank {
             e.answer = Some(answer);
             let new = e.bytes();
             self.bytes_used = self.bytes_used + new - old;
+            self.dirty = true;
             true
         } else {
             false
@@ -239,6 +256,7 @@ impl QaBank {
                 self.entries[i].answer = None;
                 let new = self.entries[i].bytes();
                 self.bytes_used = self.bytes_used + new - old;
+                self.dirty = true;
                 out.push(self.entries[i].id);
             }
         }
@@ -266,6 +284,7 @@ impl QaBank {
                     let e = self.entries.remove(i);
                     self.bytes_used -= e.bytes();
                     self.evictions += 1;
+                    self.dirty = true;
                 }
                 None => break,
             }
@@ -387,6 +406,28 @@ mod tests {
         let mut dup = entries.clone();
         dup.push(entries[0].clone());
         assert!(QaBank::from_entries(1 << 20, dup, qa.next_id()).is_err());
+    }
+
+    #[test]
+    fn dirty_tracks_mutations_and_clears() {
+        let mut qa = QaBank::new(1 << 20);
+        assert!(!qa.is_dirty(), "fresh bank is clean");
+        let id = qa.insert("q1", emb(1.0, 0.0), None, true);
+        assert!(qa.is_dirty());
+        qa.mark_clean();
+        // a miss touches nothing persisted
+        assert!(qa.match_query(&emb(0.0, 1.0), 0.99).is_none());
+        assert!(!qa.is_dirty());
+        qa.set_answer(id, vec![1, 2]);
+        assert!(qa.is_dirty());
+        qa.mark_clean();
+        // a hit bumps the persisted LFU freq
+        qa.match_query(&emb(1.0, 0.0), 0.85).unwrap();
+        assert!(qa.is_dirty());
+        // restore without evictions is clean
+        let restored =
+            QaBank::from_entries(1 << 20, qa.entries().to_vec(), qa.next_id()).unwrap();
+        assert!(!restored.is_dirty());
     }
 
     #[test]

@@ -64,6 +64,9 @@ pub struct QkvTree {
     roots: HashMap<SegKey, usize>,
     byte_limit: usize,
     bytes_used: usize,
+    /// Persisted state (structure, slices, LFU freqs) changed since the
+    /// last [`Self::mark_clean`] — incremental snapshots skip clean trees.
+    dirty: bool,
     /// Eviction/metric counters.
     pub evictions: u64,
     pub hits: u64,
@@ -77,10 +80,21 @@ impl QkvTree {
             roots: HashMap::new(),
             byte_limit,
             bytes_used: 0,
+            dirty: false,
             evictions: 0,
             hits: 0,
             misses: 0,
         }
+    }
+
+    /// Whether persisted state changed since the last [`Self::mark_clean`].
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    /// Mark the current state as snapshotted (persistence internal).
+    pub fn mark_clean(&mut self) {
+        self.dirty = false;
     }
 
     pub fn bytes_used(&self) -> usize {
@@ -122,6 +136,10 @@ impl QkvTree {
                 }
                 _ => break,
             }
+        }
+        if !matched_nodes.is_empty() {
+            // persisted LFU freqs move
+            self.dirty = true;
         }
         for idx in matched_nodes {
             self.nodes[idx].freq += 1;
@@ -211,6 +229,7 @@ impl QkvTree {
                         children: HashMap::new(),
                         freq: 0,
                     });
+                    self.dirty = true;
                     idx
                 }
             };
@@ -219,6 +238,7 @@ impl QkvTree {
                 self.nodes[idx].slice = Some(sid);
                 self.nodes[idx].slice_bytes = bytes;
                 self.bytes_used += bytes;
+                self.dirty = true;
             }
             inserted_nodes.push(idx);
             parent = Some(idx);
@@ -261,6 +281,7 @@ impl QkvTree {
             self.bytes_used -= self.nodes[idx].slice_bytes;
             self.nodes[idx].slice_bytes = 0;
             self.evictions += 1;
+            self.dirty = true;
         }
     }
 
@@ -549,6 +570,27 @@ mod tests {
             NodeSnapshot { key: 2, parent: None, slice: Some(sid), freq: 0 },
         ];
         assert!(QkvTree::restore(1 << 20, &dup_slice, &mut store).is_err());
+    }
+
+    #[test]
+    fn dirty_tracks_mutations_and_clears() {
+        let mut store = SliceStore::memory();
+        let mut tree = QkvTree::new(10 * bytes_one());
+        assert!(!tree.is_dirty(), "fresh tree is clean");
+        tree.insert_path(&[1], vec![tensor(1.0)], &mut store).unwrap();
+        assert!(tree.is_dirty());
+        tree.mark_clean();
+        // a miss touches nothing persisted
+        tree.match_prefix(&[9]);
+        assert!(!tree.is_dirty());
+        // a hit bumps persisted LFU freqs
+        tree.match_prefix(&[1]);
+        assert!(tree.is_dirty());
+        tree.mark_clean();
+        // restoring a snapshot that needed no evictions yields a clean tree
+        let snap = tree.export();
+        let restored = QkvTree::restore(tree.byte_limit(), &snap, &mut store).unwrap();
+        assert!(!restored.is_dirty());
     }
 
     #[test]

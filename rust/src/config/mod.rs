@@ -23,6 +23,92 @@ pub enum PopulationMode {
     Predictive,
 }
 
+/// Warm/cold shard tiering knobs (the `tiering` subsystem, DESIGN.md
+/// §11).  Disabled by default: every shard stays resident, exactly the
+/// pre-tiering behaviour.
+#[derive(Debug, Clone)]
+pub struct TieringConfig {
+    pub enabled: bool,
+    /// Ticks (scheduling rounds) without a request before a shard is
+    /// demotion-eligible.
+    pub idle_ticks_to_demote: u64,
+    /// EWMA smoothing for the per-tenant request-rate tracker.
+    pub activity_alpha: f64,
+    /// Proactive demotion pressure point: when resident QKV bytes exceed
+    /// this fraction of the global budget, the least-recently-active
+    /// shard demotes even before its idle threshold.
+    pub demote_watermark_frac: f64,
+    /// Never demote below this many resident shards.
+    pub min_resident: usize,
+    /// Scheduled prefetches start hydrating this many ticks before the
+    /// forecasted active period.
+    pub prefetch_lead_ticks: u64,
+}
+
+impl Default for TieringConfig {
+    fn default() -> Self {
+        TieringConfig {
+            enabled: false,
+            idle_ticks_to_demote: 48,
+            activity_alpha: 0.2,
+            demote_watermark_frac: 0.85,
+            min_resident: 1,
+            prefetch_lead_ticks: 2,
+        }
+    }
+}
+
+impl TieringConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut t = TieringConfig::default();
+        if let Some(b) = j.get("enabled").as_bool() {
+            t.enabled = b;
+        }
+        if let Some(v) = j.get("idle_ticks_to_demote").as_usize() {
+            t.idle_ticks_to_demote = v as u64;
+        }
+        if let Some(v) = j.get("activity_alpha").as_f64() {
+            t.activity_alpha = v;
+        }
+        if let Some(v) = j.get("demote_watermark_frac").as_f64() {
+            t.demote_watermark_frac = v;
+        }
+        if let Some(v) = j.get("min_resident").as_usize() {
+            t.min_resident = v;
+        }
+        if let Some(v) = j.get("prefetch_lead_ticks").as_usize() {
+            t.prefetch_lead_ticks = v as u64;
+        }
+        t.validate()?;
+        Ok(t)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.idle_ticks_to_demote >= 1, "idle_ticks_to_demote >= 1");
+        anyhow::ensure!(
+            self.activity_alpha > 0.0 && self.activity_alpha <= 1.0,
+            "activity_alpha must be in (0,1]"
+        );
+        anyhow::ensure!(
+            self.demote_watermark_frac > 0.0 && self.demote_watermark_frac <= 1.0,
+            "demote_watermark_frac must be in (0,1]"
+        );
+        anyhow::ensure!(self.min_resident >= 1, "min_resident >= 1");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("enabled", self.enabled);
+        o.insert("idle_ticks_to_demote", self.idle_ticks_to_demote);
+        o.insert("activity_alpha", self.activity_alpha);
+        o.insert("demote_watermark_frac", self.demote_watermark_frac);
+        o.insert("min_resident", self.min_resident);
+        o.insert("prefetch_lead_ticks", self.prefetch_lead_ticks);
+        Json::Obj(o)
+    }
+}
+
 /// Multi-tenant serving knobs (the `tenancy` subsystem).  Disabled by
 /// default: single-tenant mode is a registry with one shard holding the
 /// whole budget, which leaves the paper experiments untouched.
@@ -45,6 +131,12 @@ pub struct TenancyConfig {
     pub global_queue_cap: usize,
     /// EWMA smoothing for the per-shard utility signal.
     pub utility_alpha: f64,
+    /// Queueing signal weight: a shard's governor utility is multiplied
+    /// by (1 + queue_weight × queue depth), so backlogged tenants gain
+    /// bytes and are never demotion candidates.
+    pub queue_weight: f64,
+    /// Warm/cold shard tiering (off by default).
+    pub tiering: TieringConfig,
 }
 
 impl Default for TenancyConfig {
@@ -60,6 +152,8 @@ impl Default for TenancyConfig {
             queue_cap: 32,
             global_queue_cap: 256,
             utility_alpha: 0.2,
+            queue_weight: 0.5,
+            tiering: TieringConfig::default(),
         }
     }
 }
@@ -97,6 +191,12 @@ impl TenancyConfig {
         if let Some(v) = j.get("utility_alpha").as_f64() {
             t.utility_alpha = v;
         }
+        if let Some(v) = j.get("queue_weight").as_f64() {
+            t.queue_weight = v;
+        }
+        if j.get("tiering").as_obj().is_some() {
+            t.tiering = TieringConfig::from_json(j.get("tiering"))?;
+        }
         t.validate()?;
         Ok(t)
     }
@@ -118,6 +218,8 @@ impl TenancyConfig {
             self.utility_alpha > 0.0 && self.utility_alpha <= 1.0,
             "utility_alpha must be in (0,1]"
         );
+        anyhow::ensure!(self.queue_weight >= 0.0, "queue_weight must be >= 0");
+        self.tiering.validate()?;
         Ok(())
     }
 
@@ -133,6 +235,8 @@ impl TenancyConfig {
         o.insert("queue_cap", self.queue_cap);
         o.insert("global_queue_cap", self.global_queue_cap);
         o.insert("utility_alpha", self.utility_alpha);
+        o.insert("queue_weight", self.queue_weight);
+        o.insert("tiering", self.tiering.to_json());
         Json::Obj(o)
     }
 }
@@ -421,6 +525,40 @@ mod tests {
         assert_eq!(c3.tenancy.max_tenants, 4);
         assert_eq!(c3.tenancy.rebalance_every, 16);
         assert!(!c3.tenancy.enabled);
+    }
+
+    #[test]
+    fn tiering_block_roundtrip_and_defaults() {
+        let mut c = PerCacheConfig::default();
+        assert!(!c.tenancy.tiering.enabled, "tiering must default off");
+        c.tenancy.tiering.enabled = true;
+        c.tenancy.tiering.idle_ticks_to_demote = 12;
+        c.tenancy.tiering.min_resident = 2;
+        c.tenancy.queue_weight = 1.5;
+        let j = c.to_json();
+        let c2 = PerCacheConfig::from_json(&j).unwrap();
+        assert!(c2.tenancy.tiering.enabled);
+        assert_eq!(c2.tenancy.tiering.idle_ticks_to_demote, 12);
+        assert_eq!(c2.tenancy.tiering.min_resident, 2);
+        assert_eq!(c2.tenancy.queue_weight, 1.5);
+
+        // partial tiering block keeps the other defaults
+        let j = Json::parse(r#"{"tenancy": {"tiering": {"enabled": true}}}"#).unwrap();
+        let c3 = PerCacheConfig::from_json(&j).unwrap();
+        assert!(c3.tenancy.tiering.enabled);
+        assert_eq!(c3.tenancy.tiering.idle_ticks_to_demote, 48);
+        assert_eq!(c3.tenancy.tiering.demote_watermark_frac, 0.85);
+    }
+
+    #[test]
+    fn tiering_invalid_rejected() {
+        let j = Json::parse(r#"{"tenancy": {"tiering": {"min_resident": 0}}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        let j =
+            Json::parse(r#"{"tenancy": {"tiering": {"demote_watermark_frac": 1.5}}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"tenancy": {"queue_weight": -0.5}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
     }
 
     #[test]

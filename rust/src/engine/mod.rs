@@ -17,7 +17,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::cache::{slice_prompt, QaBank, QkvTree, SliceStore};
+use crate::cache::{slice_prompt, QaBank, QkvTree, SliceStore, Snapshotter};
 use crate::config::{PerCacheConfig, PopulationMode};
 use crate::embedding::Embedder;
 use crate::kb::KnowledgeBank;
@@ -69,6 +69,8 @@ pub struct PerCache<'rt> {
     query_counter: usize,
     /// Round-robin position of the QA→QKV restoration scan.
     restore_cursor: usize,
+    /// Incremental snapshot writer (skips clean sections/saves).
+    saver: Snapshotter,
     /// Cumulative idle-side (population) compute — the paper's Fig 15a /
     /// Fig 20 accounting.
     pub population_flops: u64,
@@ -95,6 +97,7 @@ impl<'rt> PerCache<'rt> {
             sys_key,
             query_counter: 0,
             restore_cursor: 0,
+            saver: Snapshotter::new(),
             population_flops: 0,
             population_events: 0,
             llm,
@@ -146,6 +149,8 @@ impl<'rt> PerCache<'rt> {
         self.store = store;
         self.predictor = predictor;
         self.restore_cursor = 0;
+        // different directory → the cached snapshot sections are stale
+        self.saver = Snapshotter::new();
         match restored {
             Some((tree, qa, report)) => {
                 self.tree = tree;
@@ -169,15 +174,19 @@ impl<'rt> PerCache<'rt> {
     }
 
     /// Persist the cache hierarchy next to the disk slice store (errors
-    /// on a memory-backed engine).  Cheap enough to call after every
-    /// serve; at minimum call it at shutdown.
-    pub fn save_state(&self) -> Result<()> {
+    /// on a memory-backed engine).  Incremental: unchanged sections are
+    /// served from the snapshotter's cache and a fully clean engine skips
+    /// the write entirely, so this is cheap enough to call on a periodic
+    /// checkpoint timer; at minimum call it at shutdown.  Returns whether
+    /// a snapshot file was actually written.
+    pub fn save_state(&mut self) -> Result<bool> {
         let dir = self
             .store
             .dir()
             .context("save_state requires a disk-backed store (open_or_create)")?
             .to_path_buf();
-        crate::cache::save_state(&dir, &self.tree, &self.qa, &self.predictor)
+        self.saver
+            .save(&dir, &mut self.tree, &mut self.qa, &mut self.predictor)
     }
 
     // ------------------------------------------------------------------

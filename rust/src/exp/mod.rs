@@ -15,5 +15,8 @@ pub mod runner;
 pub mod scheduler_exp;
 pub mod showcase;
 pub mod tenancy_exp;
+pub mod tiering_exp;
 
-pub use runner::{run_all, run_experiment, APPENDIX, EXPERIMENTS};
+pub use runner::{
+    is_runtime_free, run_all, run_experiment, run_offline, APPENDIX, EXPERIMENTS, RUNTIME_FREE,
+};

@@ -7,7 +7,7 @@ use crate::runtime::Runtime;
 
 use super::{
     ablation, motivation, overall, overhead, persistence_exp, scheduler_exp, showcase,
-    tenancy_exp,
+    tenancy_exp, tiering_exp,
 };
 
 /// All experiment ids, in paper order.
@@ -24,8 +24,32 @@ pub const EXPERIMENTS: [&str; 18] = [
 /// runnable individually).  `tenancy` is the multi-tenant scaling sweep
 /// introduced on top of the paper's evaluation (emits the
 /// machine-readable reports/BENCH_tenancy.json perf seed); `persistence`
-/// is the cold-vs-warm restart comparison (reports/BENCH_persistence.json).
-pub const APPENDIX: [&str; 5] = ["fig21", "fig22", "fig23", "tenancy", "persistence"];
+/// is the cold-vs-warm restart comparison (reports/BENCH_persistence.json);
+/// `tiering` is the warm/cold shard-residency comparison
+/// (reports/BENCH_tiering.json).
+pub const APPENDIX: [&str; 6] = ["fig21", "fig22", "fig23", "tenancy", "persistence", "tiering"];
+
+/// Experiments that run entirely at the cache level — no PJRT artifacts,
+/// dispatchable without a [`Runtime`] via [`run_offline`] (the CI path).
+pub const RUNTIME_FREE: [&str; 3] = ["tenancy", "persistence", "tiering"];
+
+pub fn is_runtime_free(name: &str) -> bool {
+    RUNTIME_FREE.contains(&name)
+}
+
+/// Dispatch a [`RUNTIME_FREE`] experiment without loading artifacts.
+pub fn run_offline(name: &str) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    println!("\n=== {name} ===");
+    match name {
+        "tenancy" => tenancy_exp::run_and_report()?,
+        "persistence" => persistence_exp::run_and_report()?,
+        "tiering" => tiering_exp::run_and_report()?,
+        other => anyhow::bail!("'{other}' needs artifacts — runtime-free: {RUNTIME_FREE:?}"),
+    }
+    println!("[{name}] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
 
 pub fn run_experiment(rt: &Runtime, name: &str) -> Result<()> {
     let t0 = std::time::Instant::now();
@@ -54,6 +78,7 @@ pub fn run_experiment(rt: &Runtime, name: &str) -> Result<()> {
         "table1" => overhead::table1(rt)?,
         "tenancy" => tenancy_exp::tenancy(rt)?,
         "persistence" => persistence_exp::persistence(rt)?,
+        "tiering" => tiering_exp::tiering(rt)?,
         other => anyhow::bail!(
             "unknown experiment '{other}' — known: {:?} + {:?}",
             EXPERIMENTS,
@@ -83,8 +108,11 @@ mod tests {
         for id in ["fig2", "fig14", "fig15a", "fig19", "fig20", "table1"] {
             assert!(EXPERIMENTS.contains(&id), "{id} missing");
         }
-        for id in ["fig21", "fig22", "fig23", "tenancy", "persistence"] {
+        for id in ["fig21", "fig22", "fig23", "tenancy", "persistence", "tiering"] {
             assert!(APPENDIX.contains(&id), "{id} missing");
+        }
+        for id in RUNTIME_FREE {
+            assert!(APPENDIX.contains(&id), "runtime-free {id} must be registered");
         }
     }
 }

@@ -1,0 +1,423 @@
+//! Warm/cold shard tiering experiment (`percache exp tiering`): does
+//! demoting idle tenant shards to disk buy back resident memory without
+//! hurting the hot tenants?
+//!
+//! Workload: a skewed on/off multi-tenant stream — tenant 0 is active in
+//! every scheduling tick (the "hot" tenant), while the remaining tenants
+//! take turns bursting for one phase and then going silent for a full
+//! rotation, exactly the multi-app pattern mobile RAG serving sees.
+//! Three arms replay the same arrivals through `tiering::replay_tiered`:
+//!
+//! * **baseline** — tiering disabled: every shard stays resident (the
+//!   pre-tiering behaviour).
+//! * **tiered** — idle shards demote after a phase of silence; a
+//!   returning tenant's first request pays the measured hydration stall.
+//! * **prefetched** — same, plus the forecast hook: each burst is
+//!   scheduled ahead of time, so the controller warms the shard
+//!   `prefetch_lead_ticks` early and the stall disappears.
+//!
+//! Emits the human table + CSV plus `reports/BENCH_tiering.json`:
+//! resident-byte series stats, hot-tenant p50/p99 (the acceptance bar:
+//! tiered must be no worse than baseline) and hydration-stall p50/p99.
+//! `--smoke` (or PERCACHE_SMOKE=1) shrinks the workload for CI.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{TenancyConfig, TieringConfig};
+use crate::metrics::ServePath;
+use crate::runtime::Runtime;
+use crate::tenancy::sim::{sim_slice_bytes, Arrival, SimConfig};
+use crate::tenancy::{RouterConfig, TenantId, TenantRegistry};
+use crate::tiering::sim::{replay_tiered, TieredOutcome};
+use crate::tiering::TieringController;
+use crate::tokenizer::fnv1a64;
+use crate::util::bench::percentile;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::common::reports_dir;
+
+/// Global QKV budget in sim slices (roomy: hit behaviour identical
+/// across arms, so latency deltas isolate the residency system).
+const GLOBAL_SLICES: usize = 96;
+/// Topics cycled per tenant (each owns a reusable 2-chunk path).
+const TOPICS: usize = 2;
+/// Query phrasings per topic (verbatim repeats land in the QA bank).
+const VARIANTS: usize = 3;
+/// Arrivals per scheduling tick: 2 from the hot tenant + 2 from the
+/// phase's burst tenant.
+const PER_TICK: usize = 4;
+
+/// Workload shape (full vs `--smoke`).
+#[derive(Debug, Clone, Copy)]
+pub struct Shape {
+    pub tenants: usize,
+    /// Ticks per burst phase (also the tiered idle-demotion threshold).
+    pub phase_ticks: u64,
+    /// Burst phases replayed (each burst tenant gets several turns).
+    pub phases: usize,
+}
+
+impl Shape {
+    pub fn full() -> Self {
+        Shape {
+            tenants: 6,
+            phase_ticks: 8,
+            phases: 15,
+        }
+    }
+
+    pub fn smoke() -> Self {
+        Shape {
+            tenants: 3,
+            phase_ticks: 4,
+            phases: 6,
+        }
+    }
+
+    pub fn ticks(&self) -> usize {
+        self.phases * self.phase_ticks as usize
+    }
+
+    /// The tenant bursting in phase `p` (never the hot tenant 0).
+    pub fn burst_tenant(&self, p: usize) -> TenantId {
+        (1 + p % (self.tenants - 1)) as TenantId
+    }
+}
+
+/// CI/fast mode: `percache exp tiering --smoke` or PERCACHE_SMOKE=1.
+pub fn smoke_mode() -> bool {
+    std::env::var("PERCACHE_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// One measured arm.
+#[derive(Debug, Clone)]
+pub struct TieringCell {
+    pub label: String,
+    pub arrivals: usize,
+    pub hot_p50_ms: f64,
+    pub hot_p99_ms: f64,
+    pub hit_rate: f64,
+    pub resident_mean_bytes: f64,
+    pub resident_min_bytes: usize,
+    pub resident_peak_bytes: usize,
+    pub demotions: u64,
+    pub hydrations: u64,
+    pub stalls: usize,
+    pub stall_p50_ms: f64,
+    pub stall_p99_ms: f64,
+}
+
+fn query_text(tenant: TenantId, i: usize) -> String {
+    let topic = i % TOPICS;
+    let variant = (i / TOPICS) % VARIANTS;
+    format!("tenant{tenant:02} topic{topic} phrasing{variant} morning briefing request")
+}
+
+fn arrival(tenant: TenantId, i: usize) -> Arrival {
+    let q = query_text(tenant, i);
+    let topic = i % TOPICS;
+    let tag = |part: &str| fnv1a64(format!("t{tenant}/topic{topic}/{part}").as_bytes());
+    Arrival {
+        seg_keys: vec![fnv1a64(b"sys"), tag("a"), tag("b"), fnv1a64(q.as_bytes())],
+        tenant,
+        query: q,
+    }
+}
+
+/// The skewed on/off stream: every tick carries 2 hot-tenant queries and
+/// 2 from the phase's burst tenant (chunks of [`PER_TICK`] = one tick).
+pub fn arrivals(shape: &Shape) -> Vec<Arrival> {
+    let mut seq = vec![0usize; shape.tenants];
+    let mut out = Vec::with_capacity(shape.ticks() * PER_TICK);
+    for p in 0..shape.phases {
+        let burst = shape.burst_tenant(p);
+        for _ in 0..shape.phase_ticks {
+            for t in [0, burst] {
+                for _ in 0..2 {
+                    out.push(arrival(t, seq[t as usize]));
+                    seq[t as usize] += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn tenancy_config(shape: &Shape, tiering: TieringConfig) -> TenancyConfig {
+    let mut tc = TenancyConfig::default();
+    tc.enabled = true;
+    tc.max_tenants = shape.tenants;
+    tc.global_qkv_bytes = GLOBAL_SLICES * sim_slice_bytes();
+    tc.rebalance_every = 16;
+    tc.tiering = tiering;
+    tc
+}
+
+fn cell(label: &str, out: &TieredOutcome) -> TieringCell {
+    let mut hot: Vec<f64> = out.per_tenant[0].records.iter().map(|r| r.total_ms()).collect();
+    hot.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut stalls = out.hydration_stall_ms.clone();
+    stalls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (served, hits) = out.per_tenant.iter().fold((0usize, 0usize), |(n, h), r| {
+        (
+            n + r.len(),
+            h + r.records.iter().filter(|q| q.path != ServePath::Full).count(),
+        )
+    });
+    TieringCell {
+        label: label.to_string(),
+        arrivals: served,
+        hot_p50_ms: percentile(&hot, 50.0),
+        hot_p99_ms: percentile(&hot, 99.0),
+        hit_rate: hits as f64 / served.max(1) as f64,
+        resident_mean_bytes: out.mean_resident_bytes(),
+        resident_min_bytes: out.min_resident_bytes(),
+        resident_peak_bytes: out.peak_resident_bytes(),
+        demotions: out.demotions,
+        hydrations: out.hydrations,
+        stalls: stalls.len(),
+        stall_p50_ms: if stalls.is_empty() { 0.0 } else { percentile(&stalls, 50.0) },
+        stall_p99_ms: if stalls.is_empty() { 0.0 } else { percentile(&stalls, 99.0) },
+    }
+}
+
+/// Run one arm over `stream` with its own persistent registry under
+/// `dir`; `forecast` additionally schedules every burst phase with the
+/// controller (the predictive-prefetch hook).
+fn run_arm(
+    dir: &Path,
+    shape: &Shape,
+    stream: &[Arrival],
+    tiering: TieringConfig,
+    forecast: bool,
+    label: &str,
+) -> Result<TieringCell> {
+    let _ = std::fs::remove_dir_all(dir);
+    let tc = tenancy_config(shape, tiering);
+    let mut reg = TenantRegistry::open_or_create(&tc, dir.to_path_buf())?;
+    for _ in 0..shape.tenants {
+        reg.create_tenant()?;
+    }
+    let mut ctl = TieringController::new(tc.tiering.clone(), shape.tenants);
+    if forecast {
+        for p in 0..shape.phases {
+            ctl.schedule_active(shape.burst_tenant(p), p as u64 * shape.phase_ticks);
+        }
+    }
+    let out = replay_tiered(
+        &mut reg,
+        &mut ctl,
+        RouterConfig {
+            queue_cap: tc.queue_cap,
+            global_cap: tc.global_queue_cap,
+        },
+        &SimConfig::default(),
+        stream,
+        PER_TICK,
+    )?;
+    Ok(cell(label, &out))
+}
+
+/// Run all three arms (pure; unit-testable without a runtime).
+/// Returns (baseline, tiered, prefetched).
+pub fn sweep(dir: &Path, shape: &Shape) -> Result<(TieringCell, TieringCell, TieringCell)> {
+    let stream = arrivals(shape);
+    let off = TieringConfig::default();
+    let on = TieringConfig {
+        enabled: true,
+        idle_ticks_to_demote: shape.phase_ticks,
+        min_resident: 1,
+        ..TieringConfig::default()
+    };
+    let baseline = run_arm(&dir.join("baseline"), shape, &stream, off, false, "baseline")?;
+    let tiered = run_arm(&dir.join("tiered"), shape, &stream, on.clone(), false, "tiered")?;
+    let prefetched = run_arm(&dir.join("prefetched"), shape, &stream, on, true, "prefetched")?;
+    Ok((baseline, tiered, prefetched))
+}
+
+/// `percache exp tiering` entry point (runtime unused: cache-level sim).
+pub fn tiering(_rt: &Runtime) -> Result<()> {
+    run_and_report()
+}
+
+/// Shared by the exp registry, the offline dispatcher and tests.
+pub fn run_and_report() -> Result<()> {
+    let shape = if smoke_mode() { Shape::smoke() } else { Shape::full() };
+    let state_dir = std::env::temp_dir().join(format!(
+        "percache_tiering_exp_{}",
+        std::process::id()
+    ));
+    let cells = sweep(&state_dir, &shape)?;
+    let _ = std::fs::remove_dir_all(&state_dir);
+    let (baseline, tiered, prefetched) = &cells;
+
+    let mut table = Table::new(
+        "tiering: resident memory + latency under a skewed on/off workload",
+        &[
+            "arm", "served", "hot p50 ms", "hot p99 ms", "hit", "resident mean KB",
+            "resident min KB", "demotions", "hydrations", "stall p99 ms",
+        ],
+    );
+    for c in [baseline, tiered, prefetched] {
+        table.row(vec![
+            c.label.clone(),
+            c.arrivals.to_string(),
+            format!("{:.3}", c.hot_p50_ms),
+            format!("{:.3}", c.hot_p99_ms),
+            format!("{:.0}%", c.hit_rate * 100.0),
+            format!("{:.1}", c.resident_mean_bytes / 1024.0),
+            format!("{:.1}", c.resident_min_bytes as f64 / 1024.0),
+            c.demotions.to_string(),
+            c.hydrations.to_string(),
+            format!("{:.3}", c.stall_p99_ms),
+        ]);
+    }
+    println!("{}", table.render());
+    let dir = reports_dir();
+    table.emit(&dir, "tiering");
+    write_bench_json(&shape, baseline, tiered, prefetched, &dir)?;
+    Ok(())
+}
+
+fn cell_json(c: &TieringCell) -> Json {
+    let mut o = Json::obj();
+    o.insert("label", c.label.as_str());
+    o.insert("arrivals", c.arrivals);
+    o.insert("hot_p50_ms", c.hot_p50_ms);
+    o.insert("hot_p99_ms", c.hot_p99_ms);
+    o.insert("hit_rate", c.hit_rate);
+    o.insert("resident_mean_bytes", c.resident_mean_bytes);
+    o.insert("resident_min_bytes", c.resident_min_bytes);
+    o.insert("resident_peak_bytes", c.resident_peak_bytes);
+    o.insert("demotions", c.demotions);
+    o.insert("hydrations", c.hydrations);
+    o.insert("hydration_stalls", c.stalls);
+    o.insert("hydration_stall_p50_ms", c.stall_p50_ms);
+    o.insert("hydration_stall_p99_ms", c.stall_p99_ms);
+    Json::Obj(o)
+}
+
+/// Emit `<dir>/BENCH_tiering.json` — the acceptance artifact.
+pub fn write_bench_json(
+    shape: &Shape,
+    baseline: &TieringCell,
+    tiered: &TieringCell,
+    prefetched: &TieringCell,
+    dir: &Path,
+) -> Result<()> {
+    let mut root = Json::obj();
+    root.insert("bench", "tiering");
+    root.insert("tenants", shape.tenants);
+    root.insert("ticks", shape.ticks());
+    root.insert("global_qkv_bytes", GLOBAL_SLICES * sim_slice_bytes());
+    root.insert("baseline", cell_json(baseline));
+    root.insert("tiered", cell_json(tiered));
+    root.insert("prefetched", cell_json(prefetched));
+    root.insert(
+        "resident_mean_saving_frac",
+        1.0 - tiered.resident_mean_bytes / baseline.resident_mean_bytes.max(1.0),
+    );
+    root.insert(
+        "hot_p50_ratio_tiered_vs_baseline",
+        if baseline.hot_p50_ms > 0.0 {
+            tiered.hot_p50_ms / baseline.hot_p50_ms
+        } else {
+            1.0
+        },
+    );
+
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_tiering.json");
+    std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
+    println!("[tiering] wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("percache_tierexp_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_tick_aligned() {
+        let shape = Shape::smoke();
+        let a = arrivals(&shape);
+        let b = arrivals(&shape);
+        assert_eq!(a.len(), shape.ticks() * PER_TICK);
+        assert_eq!(a[0].seg_keys, b[0].seg_keys);
+        // every tick: 2 hot-tenant arrivals + 2 burst arrivals
+        for tick in a.chunks(PER_TICK) {
+            assert_eq!(tick.iter().filter(|x| x.tenant == 0).count(), 2);
+            assert!(tick.iter().all(|x| x.seg_keys.len() == 4));
+        }
+    }
+
+    #[test]
+    fn tiering_saves_memory_without_hurting_the_hot_tenant() {
+        let dir = tmp("accept");
+        let shape = Shape::smoke();
+        let (baseline, tiered, prefetched) = sweep(&dir, &shape).unwrap();
+
+        // demotion must actually happen and be observable in resident bytes
+        assert!(tiered.demotions >= 1, "no demotions: {tiered:?}");
+        assert!(tiered.hydrations >= 1, "no hydrations: {tiered:?}");
+        assert!(
+            tiered.resident_min_bytes < tiered.resident_peak_bytes,
+            "demotion must dip the resident-byte series: {tiered:?}"
+        );
+        // same inserts, minus the cold windows: mean strictly drops
+        assert!(
+            tiered.resident_mean_bytes < baseline.resident_mean_bytes,
+            "tiering must save resident memory: tiered {} vs baseline {}",
+            tiered.resident_mean_bytes,
+            baseline.resident_mean_bytes
+        );
+
+        // identical hit behaviour: the cold tier restores what it evicted
+        assert!(
+            (tiered.hit_rate - baseline.hit_rate).abs() < 1e-9,
+            "hit behaviour must not change: tiered {} vs baseline {}",
+            tiered.hit_rate,
+            baseline.hit_rate
+        );
+
+        // the acceptance bar: hot-tenant p50 no worse than baseline
+        // (modeled latency dominates and the hot tenant never demotes;
+        // 10% headroom absorbs measured-stage jitter)
+        assert!(
+            tiered.hot_p50_ms <= baseline.hot_p50_ms * 1.10,
+            "hot p50 regressed: tiered {} vs baseline {}",
+            tiered.hot_p50_ms,
+            baseline.hot_p50_ms
+        );
+
+        // prefetching hides the demand stall
+        assert!(
+            prefetched.stalls <= tiered.stalls,
+            "forecast prefetch must not add stalls: {} vs {}",
+            prefetched.stalls,
+            tiered.stalls
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bench_json_is_parseable() {
+        let dir = tmp("json");
+        let shape = Shape::smoke();
+        let (b, t, p) = sweep(&dir, &shape).unwrap();
+        write_bench_json(&shape, &b, &t, &p, &dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("BENCH_tiering.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("tiering"));
+        assert!(j.get("tiered").get("demotions").as_usize().unwrap() >= 1);
+        assert!(j.get("hot_p50_ratio_tiered_vs_baseline").as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

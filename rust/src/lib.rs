@@ -19,6 +19,8 @@
 //!   combinations, behind one `CachePolicy` trait.
 //! * [`tenancy`] — multi-tenant cache sharding: per-tenant shards, the
 //!   global memory governor, and the fair-scheduling request router.
+//! * [`tiering`] — warm/cold shard residency: idle shards demote to
+//!   their on-disk snapshot and page back on demand.
 //! * [`datasets`] / [`sim`] — synthetic workloads and device models.
 //! * [`exp`] — the paper-figure/table reproduction harness.
 //! * [`util`] / [`testkit`] / [`tokenizer`] / [`metrics`] — substrates.
@@ -53,5 +55,6 @@ pub mod server;
 pub mod sim;
 pub mod tenancy;
 pub mod testkit;
+pub mod tiering;
 pub mod tokenizer;
 pub mod util;

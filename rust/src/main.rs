@@ -3,8 +3,10 @@
 //!
 //! ```text
 //! percache serve   [--model llama] [--dataset mised] [--user 0]
-//!                  [--persist-dir state/] …
-//! percache exp     <fig2|…|table1|persistence|all> [--out reports]
+//!                  [--persist-dir state/] [--checkpoint-secs 30]
+//!                  [--tiering --tenants 4] …
+//! percache exp     <fig2|…|table1|persistence|tiering|all>
+//!                  [--out reports] [--smoke]
 //! percache tenants [--tenants 8] [--arrivals 0] [--zipf 1.0] [--sweep]
 //! percache info
 //! ```
@@ -169,8 +171,22 @@ fn cmd_serve() -> Result<()> {
             "",
             "durable cache dir: warm-restores on start, snapshots on exit",
         )
+        .flag(
+            "checkpoint-secs",
+            "0",
+            "crash-consistent snapshot cadence from the idle path (0 = only at exit)",
+        )
+        .switch(
+            "tiering",
+            "tiered multi-tenant serving demo (warm/cold residency; no artifacts needed)",
+        )
+        .flag("tenants", "4", "tenant count for --tiering")
+        .flag("demote-idle-ticks", "2", "idle ticks before demotion for --tiering")
         .switch("verbose", "per-query breakdown");
     let a = cli.parse_env(1);
+    if a.get_bool("tiering") {
+        return cmd_serve_tiered(&a);
+    }
 
     let rt = percache::runtime::Runtime::load_default()?;
     let mut base = percache::config::PerCacheConfig::default();
@@ -214,6 +230,9 @@ fn cmd_serve() -> Result<()> {
         );
     }
 
+    let checkpoint_secs = a.get_usize("checkpoint-secs");
+    let mut last_checkpoint = std::time::Instant::now();
+    let mut checkpoints = 0u64;
     let mut rec = percache::metrics::Recorder::new();
     for (i, q) in data.queries.iter().enumerate() {
         let r = eng.serve(&q.text)?;
@@ -233,6 +252,17 @@ fn cmd_serve() -> Result<()> {
         if idle_every > 0 && (i + 1) % idle_every == 0 {
             eng.idle_tick()?;
         }
+        // periodic crash-consistent checkpoint on the idle path: the
+        // snapshotter makes a clean save a no-op, so this is cheap
+        if !persist_dir.is_empty()
+            && checkpoint_secs > 0
+            && last_checkpoint.elapsed().as_secs() >= checkpoint_secs as u64
+        {
+            if eng.save_state()? {
+                checkpoints += 1;
+            }
+            last_checkpoint = std::time::Instant::now();
+        }
     }
     println!(
         "[done] mean={:.1}ms p95={:.1}ms qa_hit={:.0}% qkv_hit={:.0}% seg_reuse={:.0}%",
@@ -244,14 +274,103 @@ fn cmd_serve() -> Result<()> {
     );
     if !persist_dir.is_empty() {
         eng.save_state()?;
-        println!("[persist] cache state saved to {persist_dir}");
+        println!(
+            "[persist] cache state saved to {persist_dir} ({checkpoints} periodic checkpoints)"
+        );
     }
+    Ok(())
+}
+
+/// `percache serve --tiering`: the tiered multi-tenant serving demo.
+/// Drives the threaded gated loop (cold tenants hydrate on a background
+/// worker) tenant-major, so early tenants go idle and demote while later
+/// ones serve, then revisits tenant 0 to show the warm comeback.  Runs
+/// at the cache level — no PJRT artifacts needed.
+fn cmd_serve_tiered(a: &percache::util::cli::Args) -> Result<()> {
+    use percache::config::{TenancyConfig, TieringConfig};
+    use percache::tenancy::sim::{sim_slice_bytes, SimConfig};
+    use percache::tiering::service::{spawn_tiered_server, TieredServerConfig, REPORT_FILE};
+
+    let n = a.get_usize("tenants").clamp(2, 64);
+    let persist_dir = match a.get("persist-dir") {
+        "" => "state/tiering".to_string(),
+        d => d.to_string(),
+    };
+    let mut tenancy = TenancyConfig::default();
+    tenancy.enabled = true;
+    tenancy.max_tenants = n;
+    tenancy.global_qkv_bytes = 32 * n * sim_slice_bytes();
+    tenancy.tiering = TieringConfig {
+        enabled: true,
+        idle_ticks_to_demote: a.get_usize("demote-idle-ticks").max(1) as u64,
+        min_resident: 1,
+        ..TieringConfig::default()
+    };
+    let handle = spawn_tiered_server(TieredServerConfig {
+        tenancy,
+        sim: SimConfig::default(),
+        dir: std::path::PathBuf::from(&persist_dir),
+        n_tenants: n,
+        log: true,
+    });
+    println!("[tiering] {n} tenants over {persist_dir} (cold tier = shard_<id>/ snapshots)");
+
+    let queries_per_tenant = 6;
+    let mut id = 0usize;
+    let mut hits = 0usize;
+    let mut served = 0usize;
+    let mut ask = |tenant: u32, text: String| -> Result<()> {
+        let resp = handle.query(tenant, id, &text)?;
+        id += 1;
+        served += 1;
+        if resp.record.path != percache::metrics::ServePath::Full {
+            hits += 1;
+        }
+        if a.get_bool("verbose") {
+            println!(
+                "  t{tenant} [{:?}] e2e={:.2}ms  {text}",
+                resp.record.path, resp.e2e_ms
+            );
+        }
+        Ok(())
+    };
+    // tenant-major: by the time the last tenant serves, the first ones
+    // have idled past the demotion threshold
+    for t in 0..n as u32 {
+        for j in 0..queries_per_tenant {
+            ask(t, format!("tenant{t} demo question {} about calendar", j % 3))?;
+        }
+        handle.idle_tick(t)?;
+        handle.idle_tick(t)?;
+    }
+    // comeback: tenant 0 is cold by now; its queue parks behind the
+    // background hydration and the verbatim repeats hit the QA bank
+    for j in 0..queries_per_tenant {
+        ask(0, format!("tenant0 demo question {} about calendar", j % 3))?;
+    }
+    drop(ask);
+    handle.shutdown();
+    handle.join()?;
+
+    let report_path = std::path::Path::new(&persist_dir).join(REPORT_FILE);
+    let report = std::fs::read_to_string(&report_path)?;
+    let j = percache::util::json::Json::parse(&report)?;
+    println!(
+        "[done] served={served} hits={hits} demotions={} hydrations={} resident {}/{} shards ({} KB)",
+        j.get("demotions").as_usize().unwrap_or(0),
+        j.get("hydrations").as_usize().unwrap_or(0),
+        j.get("resident_count").as_usize().unwrap_or(0),
+        n,
+        j.get("resident_bytes").as_usize().unwrap_or(0) / 1024,
+    );
+    println!("[tiering] full counters: {}", report_path.display());
     Ok(())
 }
 
 fn cmd_exp() -> Result<()> {
     let cli = Cli::new("percache exp — reproduce paper figures/tables")
-        .flag("out", "reports", "CSV output directory");
+        .flag("out", "reports", "CSV output directory")
+        .switch("smoke", "small deterministic workloads (CI-sized)");
     let a = cli.parse_env(1);
     let which = a
         .positional
@@ -259,6 +378,13 @@ fn cmd_exp() -> Result<()> {
         .cloned()
         .unwrap_or_else(|| "all".to_string());
     std::env::set_var("PERCACHE_REPORTS", a.get("out"));
+    if a.get_bool("smoke") {
+        std::env::set_var("PERCACHE_SMOKE", "1");
+    }
+    // cache-level experiments run anywhere: no artifacts, no warm-up
+    if percache::exp::is_runtime_free(&which) {
+        return percache::exp::run_offline(&which);
+    }
 
     let rt = percache::runtime::Runtime::load_default()?;
     // Pre-compile every artifact the experiments touch so first-call PJRT

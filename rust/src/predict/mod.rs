@@ -46,6 +46,9 @@ pub const HISTORY_CAP: usize = 16;
 pub struct QueryPredictor {
     history: VecDeque<String>,
     rng: Rng,
+    /// Persisted state (the history buffer) changed since the last
+    /// [`Self::mark_clean`] — incremental snapshots skip clean predictors.
+    dirty: bool,
     /// Round counters for metrics / Fig 20-style accounting.
     pub knowledge_rounds: u64,
     pub history_rounds: u64,
@@ -56,6 +59,7 @@ impl QueryPredictor {
         QueryPredictor {
             history: VecDeque::new(),
             rng: Rng::new(seed),
+            dirty: false,
             knowledge_rounds: 0,
             history_rounds: 0,
         }
@@ -67,6 +71,17 @@ impl QueryPredictor {
             self.history.pop_front();
         }
         self.history.push_back(query.to_string());
+        self.dirty = true;
+    }
+
+    /// Whether persisted state changed since the last [`Self::mark_clean`].
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    /// Mark the current state as snapshotted (persistence internal).
+    pub fn mark_clean(&mut self) {
+        self.dirty = false;
     }
 
     pub fn history_len(&self) -> usize {
@@ -82,6 +97,9 @@ impl QueryPredictor {
     /// Drop the recent-query buffer (a state restore replaces history
     /// wholesale rather than mixing two sessions').
     pub fn clear_history(&mut self) {
+        if !self.history.is_empty() {
+            self.dirty = true;
+        }
         self.history.clear();
     }
 

@@ -120,13 +120,6 @@ impl MemoryGovernor {
         plan
     }
 
-    /// Plan budgets for a set of live shards.
-    pub fn plan(&self, shards: &[TenantShard]) -> Vec<Allocation> {
-        let entries: Vec<(TenantId, f64)> =
-            shards.iter().map(|s| (s.id, s.utility())).collect();
-        self.plan_weights(&entries)
-    }
-
     /// Plan over `(tenant, utility, current_budget)` entries and apply
     /// through `set` — the one implementation of the hysteresis band and
     /// the shrinks-before-grows ordering (so the global working set never

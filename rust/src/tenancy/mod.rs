@@ -19,6 +19,9 @@
 //! * [`registry`] — [`TenantRegistry`]: owns the shards and the
 //!   governor; single-tenant mode is a registry with one shard holding
 //!   the whole budget, which keeps the paper experiments bit-identical.
+//!   Shards carry a residency state (`crate::tiering::Residency`): the
+//!   registry provides the demote/hydrate mechanics the warm/cold
+//!   tiering controller drives (DESIGN.md §11).
 //! * [`router`] — [`Router`]: per-tenant request queues with round-robin
 //!   fair scheduling and admission control (per-tenant + global queue
 //!   caps), plus a threaded serving loop fronting `server::run_loop`'s
@@ -38,6 +41,6 @@ pub mod sim;
 
 pub use governor::{Allocation, GovernorConfig, MemoryGovernor};
 pub use multi::MultiTenantEngine;
-pub use registry::TenantRegistry;
+pub use registry::{HydrationSpec, TenantRegistry};
 pub use router::{Rejection, Router, RouterConfig, TenantCommand, TenantServerHandle};
 pub use shard::{ShardStats, TenantId, TenantShard};

@@ -3,30 +3,67 @@
 //! directory attached ([`TenantRegistry::open_or_create`]) every shard
 //! lives in its own `shard_<id>/` subdirectory and survives process
 //! restarts.
+//!
+//! Shards have a residency state ([`crate::tiering::Residency`]): a Hot
+//! shard is fully in RAM; a Cold shard exists only as its on-disk
+//! snapshot (the warm/cold tiering subsystem, DESIGN.md §11).  The
+//! registry owns the *mechanics* — [`Self::demote_tenant`] snapshots a
+//! shard and drops it, [`Self::begin_hydration`]/[`Self::finish_hydration`]
+//! page it back in — while the demotion/prefetch *policy* lives in
+//! [`crate::tiering::TieringController`].  The governor plans only over
+//! resident shards, so demoting a shard returns its bytes to the global
+//! pool for the hot shards to absorb.
 
 use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
 use crate::config::TenancyConfig;
+use crate::tiering::Residency;
 
 use super::governor::{Allocation, GovernorConfig, MemoryGovernor};
 use super::shard::{TenantId, TenantShard};
 
+/// Everything a (possibly background) hydration needs to rebuild a cold
+/// shard from its snapshot directory.
+#[derive(Debug, Clone)]
+pub struct HydrationSpec {
+    pub tenant: TenantId,
+    pub dir: PathBuf,
+    pub qa_bytes: usize,
+    /// Restore under the full global budget so the warm tree pages in
+    /// intact; the post-install rebalance shrinks it to the governed
+    /// share through the LFU path.
+    pub qkv_bytes: usize,
+    pub utility_alpha: f64,
+}
+
+/// One tenant's slot: residency state + the shard when resident.
+struct Slot {
+    residency: Residency,
+    shard: Option<TenantShard>,
+}
+
 pub struct TenantRegistry {
-    shards: Vec<TenantShard>,
+    slots: Vec<Slot>,
     pub governor: MemoryGovernor,
     cfg: TenancyConfig,
     /// Serves since the last governor pass (drives `rebalance_every`).
     serves_since_rebalance: u64,
     /// Base directory for per-shard persistence (None = memory shards).
     dir: Option<PathBuf>,
+    /// Router queue depths, fed via [`Self::set_queue_depths`]; boosts
+    /// the governor utility of backlogged tenants.
+    queue_depths: Vec<usize>,
+    /// Tiering counters (reporting).
+    pub demotions: u64,
+    pub hydrations: u64,
 }
 
 impl TenantRegistry {
     pub fn new(cfg: &TenancyConfig) -> Self {
         TenantRegistry {
-            shards: Vec::new(),
+            slots: Vec::new(),
             governor: MemoryGovernor::new(GovernorConfig {
                 global_qkv_bytes: cfg.global_qkv_bytes,
                 floor_frac: cfg.floor_frac,
@@ -35,6 +72,9 @@ impl TenantRegistry {
             cfg: cfg.clone(),
             serves_since_rebalance: 0,
             dir: None,
+            queue_depths: Vec::new(),
+            demotions: 0,
+            hydrations: 0,
         }
     }
 
@@ -73,17 +113,26 @@ impl TenantRegistry {
         self.dir.as_ref()
     }
 
-    /// Snapshot every shard's cache state (persistent registries only).
-    /// Returns how many shards were saved.
-    pub fn save_all(&self) -> Result<usize> {
+    pub fn config(&self) -> &TenancyConfig {
+        &self.cfg
+    }
+
+    /// Snapshot every resident shard's cache state (persistent
+    /// registries only).  Cold shards were snapshotted at demotion and
+    /// hold no newer state.  Returns how many shards were saved.
+    pub fn save_all(&mut self) -> Result<usize> {
         anyhow::ensure!(
             self.dir.is_some(),
             "save_all requires a persistent registry (open_or_create)"
         );
-        for shard in &self.shards {
-            shard.save()?;
+        let mut saved = 0;
+        for slot in &mut self.slots {
+            if let Some(shard) = slot.shard.as_mut() {
+                shard.save()?;
+                saved += 1;
+            }
         }
-        Ok(self.shards.len())
+        Ok(saved)
     }
 
     /// Single-tenant mode: one shard holding the whole global budget —
@@ -98,11 +147,11 @@ impl TenantRegistry {
     /// newcomer starts from its governed share (cold start: uniform).
     pub fn create_tenant(&mut self) -> Result<TenantId> {
         anyhow::ensure!(
-            self.shards.len() < self.cfg.max_tenants,
+            self.slots.len() < self.cfg.max_tenants,
             "tenant limit reached ({})",
             self.cfg.max_tenants
         );
-        let id = self.shards.len() as TenantId;
+        let id = self.slots.len() as TenantId;
         let shard = match &self.dir {
             None => TenantShard::new(
                 id,
@@ -121,29 +170,108 @@ impl TenantRegistry {
                 base.join(format!("shard_{id}")),
             )?,
         };
-        self.shards.push(shard);
-        self.governor.rebalance(&mut self.shards, true);
+        self.slots.push(Slot {
+            residency: Residency::Hot,
+            shard: Some(shard),
+        });
+        self.queue_depths.push(0);
+        self.rebalance_resident(true);
         Ok(id)
     }
 
     pub fn len(&self) -> usize {
-        self.shards.len()
+        self.slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.shards.is_empty()
+        self.slots.is_empty()
     }
 
+    /// The tenant's shard, when resident (None for cold/hydrating
+    /// shards and unknown tenants).
     pub fn shard(&self, id: TenantId) -> Option<&TenantShard> {
-        self.shards.get(id as usize)
+        self.slots.get(id as usize).and_then(|s| s.shard.as_ref())
     }
 
     pub fn shard_mut(&mut self, id: TenantId) -> Option<&mut TenantShard> {
-        self.shards.get_mut(id as usize)
+        self.slots
+            .get_mut(id as usize)
+            .and_then(|s| s.shard.as_mut())
     }
 
-    pub fn shards(&self) -> &[TenantShard] {
-        &self.shards
+    /// Resident shards in id order (every shard, when tiering never
+    /// demoted anything).
+    pub fn shards(&self) -> Vec<&TenantShard> {
+        self.slots.iter().filter_map(|s| s.shard.as_ref()).collect()
+    }
+
+    /// The tenant's residency state (None for unknown tenants).
+    pub fn residency(&self, id: TenantId) -> Option<Residency> {
+        self.slots.get(id as usize).map(|s| s.residency)
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.shard.is_some()).count()
+    }
+
+    /// RAM held by resident shards (QKV tree + QA bank) — the byte count
+    /// demotion observably shrinks.
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .filter_map(|s| s.shard.as_ref())
+            .map(|s| s.bytes_used())
+            .sum()
+    }
+
+    /// Feed per-tenant router queue depths: the governor boosts the
+    /// utility of backlogged tenants (`queue_weight`) so overload grows a
+    /// shard's allocation, and the tiering controller refuses to demote a
+    /// tenant with queued work even when its hit rate dips.
+    pub fn set_queue_depths(&mut self, depths: &[usize]) {
+        self.queue_depths.resize(self.slots.len(), 0);
+        for (i, d) in self.queue_depths.iter_mut().enumerate() {
+            *d = depths.get(i).copied().unwrap_or(0);
+        }
+    }
+
+    pub fn queue_depth(&self, id: TenantId) -> usize {
+        self.queue_depths.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// Governor utility of one resident shard, boosted by its queue
+    /// depth (the queueing signal from the router).
+    fn boosted_utility(&self, idx: usize, shard: &TenantShard) -> f64 {
+        let depth = self.queue_depths.get(idx).copied().unwrap_or(0);
+        shard.utility() * (1.0 + self.cfg.queue_weight * depth as f64)
+    }
+
+    /// Plan + apply budgets over the resident shards through the
+    /// governor's shared hysteresis/shrink-first path.
+    fn rebalance_resident(&mut self, force: bool) -> bool {
+        let entries: Vec<(TenantId, f64, usize)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, slot)| {
+                slot.shard
+                    .as_ref()
+                    .map(|s| (s.id, self.boosted_utility(i, s), s.qkv_budget()))
+            })
+            .collect();
+        let TenantRegistry { slots, governor, .. } = self;
+        governor.rebalance_entries(
+            &entries,
+            |tenant, bytes| {
+                if let Some(s) = slots
+                    .get_mut(tenant as usize)
+                    .and_then(|sl| sl.shard.as_mut())
+                {
+                    s.set_qkv_budget(bytes);
+                }
+            },
+            force,
+        )
     }
 
     /// Count one serve; every `rebalance_every` serves the governor gets
@@ -152,7 +280,7 @@ impl TenantRegistry {
         self.serves_since_rebalance += 1;
         if self.serves_since_rebalance >= self.cfg.rebalance_every as u64 {
             self.serves_since_rebalance = 0;
-            return self.governor.rebalance(&mut self.shards, false);
+            return self.rebalance_resident(false);
         }
         false
     }
@@ -160,28 +288,181 @@ impl TenantRegistry {
     /// Force an immediate governor pass (bypasses cadence + hysteresis).
     pub fn rebalance_now(&mut self) -> bool {
         self.serves_since_rebalance = 0;
-        self.governor.rebalance(&mut self.shards, true)
+        self.rebalance_resident(true)
     }
 
-    /// Current governed plan (reporting / tests).
+    /// Current governed plan over resident shards (reporting / tests).
     pub fn plan(&self) -> Vec<Allocation> {
-        self.governor.plan(&self.shards)
+        let weights: Vec<(TenantId, f64)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, slot)| {
+                slot.shard
+                    .as_ref()
+                    .map(|s| (s.id, self.boosted_utility(i, s)))
+            })
+            .collect();
+        self.governor.plan_weights(&weights)
     }
 
     pub fn total_qkv_used(&self) -> usize {
-        self.shards.iter().map(|s| s.tree.bytes_used()).sum()
+        self.slots
+            .iter()
+            .filter_map(|s| s.shard.as_ref())
+            .map(|s| s.tree.bytes_used())
+            .sum()
     }
 
     pub fn total_qkv_budget(&self) -> usize {
-        self.shards.iter().map(|s| s.qkv_budget()).sum()
+        self.slots
+            .iter()
+            .filter_map(|s| s.shard.as_ref())
+            .map(|s| s.qkv_budget())
+            .sum()
     }
 
-    /// Registry-wide invariants: per-shard consistency plus the global
+    // -- warm/cold tiering mechanics (policy in tiering::controller) ------
+
+    /// Demote a Hot shard to the cold tier: snapshot it into its
+    /// `shard_<id>/` directory, drop the in-RAM shard, and hand its
+    /// budget back to the resident shards.  Returns the resident bytes
+    /// freed.  A failed snapshot leaves the shard Hot and resident.
+    pub fn demote_tenant(&mut self, id: TenantId) -> Result<usize> {
+        anyhow::ensure!(
+            self.dir.is_some(),
+            "demotion requires a persistent registry (open_or_create)"
+        );
+        let slot = self
+            .slots
+            .get_mut(id as usize)
+            .with_context(|| format!("unknown tenant {id}"))?;
+        anyhow::ensure!(
+            slot.residency == Residency::Hot,
+            "tenant {id} is {}, only hot shards demote",
+            slot.residency.label()
+        );
+        slot.residency = Residency::Demoting;
+        let shard = slot.shard.as_mut().expect("hot slot holds a shard");
+        match shard.save() {
+            Ok(_wrote) => {
+                let freed = shard.bytes_used();
+                slot.shard = None;
+                slot.residency = Residency::Cold;
+                self.demotions += 1;
+                // the freed budget flows to the remaining resident shards
+                self.rebalance_resident(true);
+                Ok(freed)
+            }
+            Err(e) => {
+                slot.residency = Residency::Hot;
+                Err(e.context(format!("demoting tenant {id}")))
+            }
+        }
+    }
+
+    /// Start paging a Cold shard back in: marks it Hydrating and returns
+    /// the spec a (background) worker needs to rebuild it.  Complete with
+    /// [`Self::finish_hydration`] or roll back with
+    /// [`Self::abort_hydration`].
+    pub fn begin_hydration(&mut self, id: TenantId) -> Result<HydrationSpec> {
+        let base = self
+            .dir
+            .clone()
+            .context("hydration requires a persistent registry (open_or_create)")?;
+        let slot = self
+            .slots
+            .get_mut(id as usize)
+            .with_context(|| format!("unknown tenant {id}"))?;
+        anyhow::ensure!(
+            slot.residency == Residency::Cold,
+            "tenant {id} is {}, only cold shards hydrate",
+            slot.residency.label()
+        );
+        slot.residency = Residency::Hydrating;
+        Ok(HydrationSpec {
+            tenant: id,
+            dir: base.join(format!("shard_{id}")),
+            qa_bytes: self.cfg.qa_bytes_per_tenant,
+            qkv_bytes: self.cfg.global_qkv_bytes,
+            utility_alpha: self.cfg.utility_alpha,
+        })
+    }
+
+    /// Install a rebuilt shard (the other half of
+    /// [`Self::begin_hydration`]); the forced rebalance shrinks the
+    /// restored tree to the shard's governed share through the LFU path.
+    pub fn finish_hydration(&mut self, id: TenantId, shard: TenantShard) -> Result<()> {
+        anyhow::ensure!(
+            shard.id == id,
+            "hydrated shard id {} does not match tenant {id}",
+            shard.id
+        );
+        let slot = self
+            .slots
+            .get_mut(id as usize)
+            .with_context(|| format!("unknown tenant {id}"))?;
+        anyhow::ensure!(
+            slot.residency == Residency::Hydrating,
+            "tenant {id} is {}, expected hydrating",
+            slot.residency.label()
+        );
+        slot.shard = Some(shard);
+        slot.residency = Residency::Hot;
+        self.hydrations += 1;
+        self.rebalance_resident(true);
+        Ok(())
+    }
+
+    /// Roll a failed hydration back to Cold (the snapshot on disk is
+    /// untouched; a later request may retry).
+    pub fn abort_hydration(&mut self, id: TenantId) -> Result<()> {
+        let slot = self
+            .slots
+            .get_mut(id as usize)
+            .with_context(|| format!("unknown tenant {id}"))?;
+        anyhow::ensure!(
+            slot.residency == Residency::Hydrating,
+            "tenant {id} is {}, expected hydrating",
+            slot.residency.label()
+        );
+        slot.residency = Residency::Cold;
+        Ok(())
+    }
+
+    /// Synchronous demote→hydrate round trip for callers without a
+    /// background worker (CLI paths, shutdown drains, tests).
+    pub fn hydrate_tenant(&mut self, id: TenantId) -> Result<()> {
+        let spec = self.begin_hydration(id)?;
+        match TenantShard::open_or_create(
+            spec.tenant,
+            spec.qa_bytes,
+            spec.qkv_bytes,
+            spec.utility_alpha,
+            spec.dir,
+        ) {
+            Ok(shard) => self.finish_hydration(id, shard),
+            Err(e) => {
+                let _ = self.abort_hydration(id);
+                Err(e.context(format!("hydrating tenant {id}")))
+            }
+        }
+    }
+
+    /// Registry-wide invariants: per-shard consistency, the global
     /// budget bound (budgets and residency never exceed the governed
-    /// global byte budget).
+    /// global byte budget), and residency/slot agreement.
     pub fn check_invariants(&self) -> Result<()> {
-        for s in &self.shards {
-            s.check_invariants()?;
+        for slot in &self.slots {
+            anyhow::ensure!(
+                slot.residency.is_resident() == slot.shard.is_some(),
+                "slot residency {} disagrees with shard presence {}",
+                slot.residency.label(),
+                slot.shard.is_some()
+            );
+            if let Some(s) = &slot.shard {
+                s.check_invariants()?;
+            }
         }
         anyhow::ensure!(
             self.total_qkv_budget() <= self.governor.cfg.global_qkv_bytes,
@@ -203,12 +484,22 @@ impl TenantRegistry {
 mod tests {
     use super::*;
     use crate::llm::QkvTensor;
+    use crate::metrics::ServePath;
 
     fn cfg(global: usize) -> TenancyConfig {
         TenancyConfig {
             global_qkv_bytes: global,
             ..TenancyConfig::default()
         }
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "percache_registry_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
     }
 
     #[test]
@@ -269,6 +560,86 @@ mod tests {
             reg.shard(0).unwrap().qkv_budget() > reg.shard(1).unwrap().qkv_budget(),
             "useful shard did not grow"
         );
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn demote_requires_persistence_and_hot_state() {
+        let mut reg = TenantRegistry::new(&cfg(1 << 20));
+        reg.create_tenant().unwrap();
+        assert!(
+            reg.demote_tenant(0).is_err(),
+            "memory registries must refuse demotion"
+        );
+        assert_eq!(reg.residency(0), Some(Residency::Hot));
+    }
+
+    #[test]
+    fn demote_then_hydrate_roundtrip() {
+        let dir = tmp("roundtrip");
+        let tc = cfg(64 * 3088);
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        let t = QkvTensor::zeros(1, 4, 64);
+        reg.shard_mut(1)
+            .unwrap()
+            .insert_path(&[7, 8], vec![t.clone(), t])
+            .unwrap();
+        let before = reg.resident_bytes();
+        assert_eq!(reg.resident_count(), 2);
+
+        let freed = reg.demote_tenant(1).unwrap();
+        assert!(freed > 0, "demotion must free resident bytes");
+        assert_eq!(reg.residency(1), Some(Residency::Cold));
+        assert!(reg.shard(1).is_none(), "cold shard is not resident");
+        assert_eq!(reg.resident_count(), 1);
+        assert!(reg.resident_bytes() < before);
+        assert_eq!(reg.demotions, 1);
+        // double demotion is rejected
+        assert!(reg.demote_tenant(1).is_err());
+        reg.check_invariants().unwrap();
+
+        reg.hydrate_tenant(1).unwrap();
+        assert_eq!(reg.residency(1), Some(Residency::Hot));
+        assert_eq!(reg.hydrations, 1);
+        let shard = reg.shard_mut(1).unwrap();
+        assert_eq!(
+            shard.prefix_match(&[7, 8]).len(),
+            2,
+            "rehydrated shard must serve its cached path"
+        );
+        reg.check_invariants().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn queue_depth_boosts_the_governed_plan() {
+        let mut tc = cfg(1 << 20);
+        tc.queue_weight = 1.0;
+        let mut reg = TenantRegistry::new(&tc);
+        for _ in 0..2 {
+            reg.create_tenant().unwrap();
+        }
+        // identical utility signals on both shards
+        for id in 0..2u32 {
+            for _ in 0..16 {
+                reg.shard_mut(id)
+                    .unwrap()
+                    .stats
+                    .note(ServePath::QkvHit, 1_000_000);
+            }
+        }
+        // tenant 1 is backlogged: its planned share must grow past 0's
+        reg.set_queue_depths(&[0, 8]);
+        let plan = reg.plan();
+        let b0 = plan.iter().find(|a| a.tenant == 0).unwrap().bytes;
+        let b1 = plan.iter().find(|a| a.tenant == 1).unwrap().bytes;
+        assert!(
+            b1 > b0,
+            "backlogged tenant must out-plan the idle one ({b1} vs {b0})"
+        );
+        assert_eq!(reg.queue_depth(1), 8);
         reg.check_invariants().unwrap();
     }
 }

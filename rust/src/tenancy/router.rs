@@ -12,7 +12,7 @@
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::metrics::{blank_record, QueryRecord};
 use crate::server::{JoinCell, Request, Response};
@@ -55,9 +55,17 @@ impl std::fmt::Display for Rejection {
 }
 
 /// Per-tenant queues + fair scheduler.
+///
+/// A queue can be *blocked* (its tenant's shard is cold and a hydration
+/// is in flight): blocked queues keep admitting requests — clients queue
+/// behind the hydration instead of being bounced — but the scheduler
+/// skips them until [`Router::set_blocked`] lifts the block.
 pub struct Router<T> {
     cfg: RouterConfig,
     queues: Vec<VecDeque<T>>,
+    /// Blocked queues are skipped by `pop` (cold tenant, hydration
+    /// pending); requests still enqueue.
+    blocked: Vec<bool>,
     /// Next tenant the scheduler looks at (rotates on every pop).
     cursor: usize,
     queued: usize,
@@ -71,6 +79,7 @@ impl<T> Router<T> {
         Router {
             cfg,
             queues: Vec::new(),
+            blocked: Vec::new(),
             cursor: 0,
             queued: 0,
             enqueued: 0,
@@ -82,6 +91,7 @@ impl<T> Router<T> {
     /// Register the next tenant; ids align with the registry's.
     pub fn register_tenant(&mut self) -> TenantId {
         self.queues.push(VecDeque::new());
+        self.blocked.push(false);
         (self.queues.len() - 1) as TenantId
     }
 
@@ -99,6 +109,43 @@ impl<T> Router<T> {
 
     pub fn queue_len(&self, tenant: TenantId) -> usize {
         self.queues.get(tenant as usize).map_or(0, |q| q.len())
+    }
+
+    /// Per-tenant queue depths, in tenant-id order — the governor's
+    /// queueing signal (`TenantRegistry::set_queue_depths`).
+    pub fn depths(&self) -> Vec<usize> {
+        self.queues.iter().map(|q| q.len()).collect()
+    }
+
+    /// Block or unblock a tenant's queue.  Blocked queues admit but are
+    /// never popped (their tenant's shard is cold; requests wait for the
+    /// hydration instead of occupying the inference thread).
+    pub fn set_blocked(&mut self, tenant: TenantId, blocked: bool) {
+        if let Some(b) = self.blocked.get_mut(tenant as usize) {
+            *b = blocked;
+        }
+    }
+
+    pub fn is_blocked(&self, tenant: TenantId) -> bool {
+        self.blocked.get(tenant as usize).copied().unwrap_or(false)
+    }
+
+    /// Lift every block (shutdown drains: the caller serves the rest
+    /// with synchronous hydration).
+    pub fn unblock_all(&mut self) {
+        for b in &mut self.blocked {
+            *b = false;
+        }
+    }
+
+    /// Queued requests that are currently eligible to pop (not blocked).
+    pub fn ready_len(&self) -> usize {
+        self.queues
+            .iter()
+            .zip(&self.blocked)
+            .filter(|(_, &b)| !b)
+            .map(|(q, _)| q.len())
+            .sum()
     }
 
     /// Admission-controlled enqueue; a rejected item is handed back so
@@ -122,10 +169,11 @@ impl<T> Router<T> {
         Ok(())
     }
 
-    /// Round-robin pop: take the head of the first non-empty queue at or
-    /// after the cursor, then advance the cursor past it.  Backlogged
-    /// tenants therefore get equal service regardless of arrival rate;
-    /// within a tenant, order stays FIFO.
+    /// Round-robin pop: take the head of the first non-empty *unblocked*
+    /// queue at or after the cursor, then advance the cursor past it.
+    /// Backlogged tenants therefore get equal service regardless of
+    /// arrival rate; within a tenant, order stays FIFO.  Returns None
+    /// when everything queued sits behind a blocked queue.
     pub fn pop(&mut self) -> Option<(TenantId, T)> {
         let n = self.queues.len();
         if n == 0 || self.queued == 0 {
@@ -133,6 +181,9 @@ impl<T> Router<T> {
         }
         for step in 0..n {
             let t = (self.cursor + step) % n;
+            if self.blocked[t] {
+                continue;
+            }
             if let Some(item) = self.queues[t].pop_front() {
                 self.cursor = (t + 1) % n;
                 self.queued -= 1;
@@ -164,6 +215,19 @@ pub struct TenantServerHandle {
 }
 
 impl TenantServerHandle {
+    /// Assemble a handle around an externally-spawned serving thread
+    /// (the tiered serving loop in `crate::tiering::service` builds its
+    /// own state but speaks the same command protocol).
+    pub fn from_parts(
+        tx: mpsc::Sender<TenantCommand>,
+        join: thread::JoinHandle<anyhow::Result<()>>,
+    ) -> Self {
+        TenantServerHandle {
+            tx,
+            join: JoinCell::new(join),
+        }
+    }
+
     /// Blocking query on behalf of `tenant`.
     pub fn query(&self, tenant: TenantId, id: usize, query: &str) -> anyhow::Result<Response> {
         let (rtx, rrx) = mpsc::channel();
@@ -205,8 +269,36 @@ pub fn run_tenant_loop(
     rx: mpsc::Receiver<TenantCommand>,
     cfg: RouterConfig,
     n_tenants: usize,
+    serve_fn: impl FnMut(TenantId, &str) -> anyhow::Result<QueryRecord>,
+    idle_fn: impl FnMut(TenantId),
+) {
+    run_tenant_loop_gated(rx, cfg, n_tenants, serve_fn, idle_fn, |_| true, |_| Vec::new())
+}
+
+/// The gated variant of [`run_tenant_loop`] — the warm/cold tiering
+/// serving shape (DESIGN.md §11).
+///
+/// * `admit_fn` runs when a request is admitted for a tenant: returning
+///   false blocks the tenant's queue (its shard is cold; `admit_fn` is
+///   expected to have kicked an asynchronous hydration).  Requests keep
+///   queueing behind the block instead of occupying the inference
+///   thread.
+/// * `poll_fn` runs every scheduling iteration with the current
+///   per-tenant queue depths (the governor's queueing signal) and
+///   returns tenants whose hydration completed; their queues unblock
+///   and drain fairly.
+///
+/// On shutdown/disconnect with requests still parked behind blocks, the
+/// blocks are lifted and the remaining requests drain through `serve_fn`
+/// — which must then tolerate a cold tenant (synchronous hydration).
+pub fn run_tenant_loop_gated(
+    rx: mpsc::Receiver<TenantCommand>,
+    cfg: RouterConfig,
+    n_tenants: usize,
     mut serve_fn: impl FnMut(TenantId, &str) -> anyhow::Result<QueryRecord>,
     mut idle_fn: impl FnMut(TenantId),
+    mut admit_fn: impl FnMut(TenantId) -> bool,
+    mut poll_fn: impl FnMut(&[usize]) -> Vec<TenantId>,
 ) {
     let mut router: Router<Request> = Router::new(cfg);
     for _ in 0..n_tenants {
@@ -218,13 +310,16 @@ pub fn run_tenant_loop(
     let handle = |cmd: TenantCommand,
                       router: &mut Router<Request>,
                       shutting_down: &mut bool,
-                      idle_fn: &mut dyn FnMut(TenantId)| {
+                      idle_fn: &mut dyn FnMut(TenantId),
+                      admit_fn: &mut dyn FnMut(TenantId) -> bool| {
         match cmd {
             TenantCommand::Serve { tenant, req } => {
                 if *shutting_down {
                     respond_error(req, "server shutting down");
                 } else if let Err((why, req)) = router.try_push(tenant, req) {
                     respond_error(req, &format!("admission rejected: {why}"));
+                } else if !admit_fn(tenant) {
+                    router.set_blocked(tenant, true);
                 }
             }
             TenantCommand::IdleTick { tenant } => {
@@ -237,26 +332,44 @@ pub fn run_tenant_loop(
     };
 
     loop {
-        // block only when there is nothing to serve
+        // block for a command only when there is nothing to serve and
+        // nothing in flight
         if router.is_empty() && !disconnected {
             if shutting_down {
                 break;
             }
             match rx.recv() {
-                Ok(cmd) => handle(cmd, &mut router, &mut shutting_down, &mut idle_fn),
+                Ok(cmd) => handle(
+                    cmd,
+                    &mut router,
+                    &mut shutting_down,
+                    &mut idle_fn,
+                    &mut admit_fn,
+                ),
                 Err(_) => break,
             }
         }
         // drain whatever else is pending without blocking
         loop {
             match rx.try_recv() {
-                Ok(cmd) => handle(cmd, &mut router, &mut shutting_down, &mut idle_fn),
+                Ok(cmd) => handle(
+                    cmd,
+                    &mut router,
+                    &mut shutting_down,
+                    &mut idle_fn,
+                    &mut admit_fn,
+                ),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     disconnected = true;
                     break;
                 }
             }
+        }
+        // completed hydrations make their tenants' queues poppable (the
+        // callback also sees live queue depths — the queueing signal)
+        for t in poll_fn(&router.depths()) {
+            router.set_blocked(t, false);
         }
         // serve one request, picked fairly across tenants
         match router.pop() {
@@ -274,8 +387,17 @@ pub fn run_tenant_loop(
                 });
             }
             None => {
-                if shutting_down || disconnected {
-                    break;
+                if router.is_empty() {
+                    if shutting_down || disconnected {
+                        break;
+                    }
+                } else if shutting_down || disconnected {
+                    // no more commands are coming: lift the blocks so the
+                    // parked requests drain (serve_fn hydrates in-line)
+                    router.unblock_all();
+                } else {
+                    // everything queued waits on a hydration in flight
+                    thread::sleep(Duration::from_millis(1));
                 }
             }
         }
@@ -386,6 +508,62 @@ mod tests {
     }
 
     #[test]
+    fn rejection_ordering_global_before_per_tenant() {
+        // queue_cap 2, global 3: walk the system into every overload
+        // combination and pin the verdict ordering — the global cap is
+        // checked first, so a saturated system reports the system-wide
+        // condition, and the per-tenant cap binds only when there is
+        // still global room
+        let mut r = router(2, 3, 2);
+        r.try_push(0, 1).unwrap();
+        r.try_push(0, 2).unwrap();
+        // tenant 0 full, global 2/3: the per-tenant cap is binding
+        assert_eq!(r.try_push(0, 3).unwrap_err().0, Rejection::QueueFull);
+        r.try_push(1, 4).unwrap();
+        // global 3/3, tenant 1 at 1/2: the global cap is binding
+        assert_eq!(r.try_push(1, 5).unwrap_err().0, Rejection::GlobalFull);
+        // both caps violated at once for tenant 0: global wins
+        assert_eq!(r.try_push(0, 6).unwrap_err().0, Rejection::GlobalFull);
+        // popping makes global room again: tenant 0 re-binds per-tenant
+        let _ = r.pop().unwrap();
+        assert_eq!(r.queue_len(0), 1);
+        r.try_push(0, 7).unwrap();
+        assert_eq!(r.try_push(0, 8).unwrap_err().0, Rejection::QueueFull);
+        assert_eq!(r.rejected, 4);
+    }
+
+    #[test]
+    fn blocked_queue_admits_but_is_not_popped() {
+        let mut r = router(4, 8, 2);
+        r.try_push(0, 1).unwrap();
+        r.try_push(1, 2).unwrap();
+        r.set_blocked(0, true);
+        assert!(r.is_blocked(0));
+        assert_eq!(r.ready_len(), 1);
+        assert_eq!(r.pop().unwrap(), (1, 2));
+        assert!(r.pop().is_none(), "blocked head must not pop");
+        assert_eq!(r.len(), 1, "the blocked item stays queued");
+        r.try_push(0, 3).unwrap(); // blocked queues still admit
+        r.set_blocked(0, false);
+        assert_eq!(r.pop().unwrap(), (0, 1));
+        assert_eq!(r.pop().unwrap(), (0, 3));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn unblock_all_clears_every_block() {
+        let mut r = router(4, 8, 3);
+        for t in 0..3 {
+            r.try_push(t, t as usize).unwrap();
+            r.set_blocked(t, true);
+        }
+        assert_eq!(r.ready_len(), 0);
+        r.unblock_all();
+        assert_eq!(r.ready_len(), 3);
+        assert!(r.pop().is_some());
+    }
+
+    #[test]
     fn empty_router_pops_nothing() {
         let mut r = router(4, 8, 2);
         assert!(r.pop().is_none());
@@ -413,6 +591,37 @@ mod tests {
         handle.shutdown();
         handle.join().unwrap();
         // join is idempotent
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn rejected_request_gets_well_formed_error_response() {
+        // queue_cap 0: every admission fails deterministically, so the
+        // client-visible shape of a rejection is pinned down
+        let handle = spawn_tenant_server(
+            RouterConfig {
+                queue_cap: 0,
+                global_cap: 8,
+            },
+            1,
+            || Ok(()),
+            |_, _, _| Ok(blank_record(0)),
+            |_, _| {},
+        );
+        let resp = handle.query(0, 42, "hello").unwrap();
+        assert_eq!(resp.id, 42, "the response must echo the request id");
+        assert!(
+            resp.record.answer.starts_with("error: admission rejected"),
+            "{}",
+            resp.record.answer
+        );
+        assert!(
+            resp.record.answer.contains("per-tenant queue full"),
+            "{}",
+            resp.record.answer
+        );
+        assert!(resp.e2e_ms >= 0.0);
+        handle.shutdown();
         handle.join().unwrap();
     }
 

@@ -4,13 +4,22 @@
 
 use anyhow::{Context, Result};
 
-use crate::cache::{PrefixMatch, QaBank, QkvTree, SegKey, SliceStore};
+use crate::cache::{PrefixMatch, QaBank, QkvTree, SegKey, SliceStore, Snapshotter};
 use crate::embedding::Embedding;
 use crate::llm::QkvTensor;
 use crate::metrics::{QueryRecord, ServePath};
 use crate::predict::QueryPredictor;
+use crate::util::json::Json;
 
 pub type TenantId = u32;
+
+/// Sidecar file persisting [`ShardStats`] next to `cache_state.json`, so
+/// a demoted shard's governor utility signal survives the cold tier and
+/// rehydration restores the same byte allocation a never-demoted shard
+/// would hold.
+pub const STATS_FILE: &str = "shard_stats.json";
+const STATS_MAGIC: &str = "percache-shard-stats";
+const STATS_VERSION: usize = 1;
 
 /// Per-shard serving statistics — the governor's utility signal.
 ///
@@ -82,6 +91,31 @@ impl ShardStats {
     pub fn utility(&self, bytes_held: usize) -> f64 {
         self.ewma_hit * self.ewma_saved / bytes_held.max(1) as f64
     }
+
+    /// Serializable view (the `shard_stats.json` sidecar).
+    pub fn export(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("serves", self.serves);
+        o.insert("qa_hits", self.qa_hits);
+        o.insert("qkv_hits", self.qkv_hits);
+        o.insert("flops_saved_total", self.flops_saved_total);
+        o.insert("ewma_hit", self.ewma_hit);
+        o.insert("ewma_saved", self.ewma_saved);
+        Json::Obj(o)
+    }
+
+    /// Rebuild from an [`Self::export`] snapshot; missing fields fall
+    /// back to a fresh tracker (degrade, never corrupt).
+    pub fn restore(alpha: f64, j: &Json) -> Self {
+        let mut s = ShardStats::new(alpha);
+        s.serves = j.get("serves").as_usize().unwrap_or(0) as u64;
+        s.qa_hits = j.get("qa_hits").as_usize().unwrap_or(0) as u64;
+        s.qkv_hits = j.get("qkv_hits").as_usize().unwrap_or(0) as u64;
+        s.flops_saved_total = j.get("flops_saved_total").as_usize().unwrap_or(0) as u64;
+        s.ewma_hit = j.get("ewma_hit").as_f64().unwrap_or(0.0);
+        s.ewma_saved = j.get("ewma_saved").as_f64().unwrap_or(0.0);
+        s
+    }
 }
 
 /// One tenant's slice of the hierarchical cache.
@@ -97,6 +131,8 @@ pub struct TenantShard {
     pub store: SliceStore,
     pub predictor: QueryPredictor,
     pub stats: ShardStats,
+    /// Incremental snapshot writer (skips clean sections/saves).
+    saver: Snapshotter,
 }
 
 impl TenantShard {
@@ -109,6 +145,7 @@ impl TenantShard {
             // distinct deterministic stream per tenant
             predictor: QueryPredictor::new(0xCAC4E5EED ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             stats: ShardStats::new(utility_alpha),
+            saver: Snapshotter::new(),
         }
     }
 
@@ -136,18 +173,55 @@ impl TenantShard {
             shard.qa = qa;
         }
         shard.store = store;
+        // the utility signal survives demotion: restore the stats sidecar
+        let stats_path = dir.join(STATS_FILE);
+        if stats_path.exists() {
+            let text = std::fs::read_to_string(&stats_path)
+                .with_context(|| format!("reading {}", stats_path.display()))?;
+            let j = crate::util::json::Json::parse(&text)
+                .with_context(|| format!("invalid shard stats {}", stats_path.display()))?;
+            anyhow::ensure!(
+                j.get("magic").as_str() == Some(STATS_MAGIC),
+                "shard stats missing magic {STATS_MAGIC:?}"
+            );
+            let version = j.get("version").as_usize().context("stats missing version")?;
+            anyhow::ensure!(
+                version == STATS_VERSION,
+                "unsupported shard-stats version {version} (reader supports {STATS_VERSION})"
+            );
+            shard.stats = ShardStats::restore(utility_alpha, j.get("stats"));
+        }
         Ok(shard)
     }
 
     /// Persist this shard's cache state next to its disk store (errors
-    /// on a memory-backed shard).
-    pub fn save(&self) -> Result<()> {
+    /// on a memory-backed shard).  Incremental: unchanged sections come
+    /// from the snapshotter's cache, and saving a fully clean shard is a
+    /// no-op.  Returns whether a snapshot write happened.
+    pub fn save(&mut self) -> Result<bool> {
         let dir = self
             .store
             .dir()
             .with_context(|| format!("shard {}: save requires a disk store (open_or_create)", self.id))?
             .to_path_buf();
-        crate::cache::save_state(&dir, &self.tree, &self.qa, &self.predictor)
+        let wrote = self
+            .saver
+            .save(&dir, &mut self.tree, &mut self.qa, &mut self.predictor)?;
+        // the stats sidecar rides along with snapshot writes (stats only
+        // drift when serves happen, and serves dirty a snapshot section)
+        let stats_path = dir.join(STATS_FILE);
+        if wrote || !stats_path.exists() {
+            let mut root = Json::obj();
+            root.insert("magic", STATS_MAGIC);
+            root.insert("version", STATS_VERSION);
+            root.insert("stats", self.stats.export());
+            let tmp = dir.join(format!("{STATS_FILE}.tmp"));
+            std::fs::write(&tmp, Json::Obj(root).to_string_pretty())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            std::fs::rename(&tmp, &stats_path)
+                .with_context(|| format!("committing {}", stats_path.display()))?;
+        }
+        Ok(wrote)
     }
 
     // -- cache operations (PJRT-free; embeddings supplied by the caller) --
@@ -252,6 +326,30 @@ mod tests {
         r.flops = 300;
         s.note_record(&r, 1000);
         assert_eq!(s.flops_saved_total, 700);
+    }
+
+    #[test]
+    fn save_is_incremental_and_stats_survive_reopen() {
+        let dir = std::env::temp_dir().join(format!(
+            "percache_shard_stats_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let qkv = 1 << 20;
+        {
+            let mut sh = TenantShard::open_or_create(0, 4096, qkv, 0.2, dir.clone()).unwrap();
+            sh.insert_path(&[1, 2], vec![tensor(), tensor()]).unwrap();
+            sh.stats.note(ServePath::QkvHit, 500);
+            assert!(sh.save().unwrap(), "first save must write");
+            assert!(!sh.save().unwrap(), "clean shard save must be a no-op");
+            sh.prefix_match(&[1, 2]); // LFU freq bump dirties the tree
+            assert!(sh.save().unwrap());
+        }
+        let sh = TenantShard::open_or_create(0, 4096, qkv, 0.2, dir.clone()).unwrap();
+        assert_eq!(sh.stats.serves, 1, "stats must survive the restart");
+        assert_eq!(sh.stats.qkv_hits, 1);
+        assert!(sh.stats.ewma_hit_rate() > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,495 @@
+//! The tiering policy loop and the background hydration worker
+//! (DESIGN.md §11).
+//!
+//! [`TieringController`] owns one [`ActivityTracker`] per tenant and, on
+//! every logical tick, decides which shards to demote (idle past
+//! `idle_ticks_to_demote`, or proactively under the memory-pressure
+//! watermark) and which cold shards to warm ahead of a forecasted
+//! active period.  The *mechanics* of demotion/hydration live in
+//! [`TenantRegistry`]; the controller only drives them, so the policy is
+//! a pure function of (activity, queue depths, residency) and replays
+//! deterministically in tests and experiments.
+//!
+//! [`HydrationWorker`] rebuilds cold shards on a background thread so
+//! the inference thread never blocks on disk: the serving loop submits a
+//! [`HydrationSpec`], keeps the tenant's queue blocked, and installs the
+//! finished shard on a later poll.
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::config::TieringConfig;
+use crate::tenancy::registry::HydrationSpec;
+use crate::tenancy::{TenantId, TenantRegistry, TenantShard};
+
+use super::residency::{ActivityTracker, Residency};
+
+/// What one controller tick did (reporting + caller follow-up: the
+/// caller decides how `prefetch` shards get hydrated — synchronously in
+/// the replay, via the [`HydrationWorker`] in the serving loop).
+#[derive(Debug, Default)]
+pub struct TickReport {
+    pub tick: u64,
+    /// Tenants demoted this tick (snapshot written, RAM reclaimed).
+    pub demoted: Vec<TenantId>,
+    /// Resident bytes freed by this tick's demotions.
+    pub freed_bytes: usize,
+    /// Cold tenants whose forecasted active period is within the
+    /// prefetch lead: the caller should start hydrating them now.
+    pub prefetch: Vec<TenantId>,
+}
+
+/// Per-tenant activity tracking + the demote/prefetch policy.
+pub struct TieringController {
+    cfg: TieringConfig,
+    trackers: Vec<ActivityTracker>,
+    tick: u64,
+    /// Forecasted active periods: (tenant, tick it becomes active).
+    scheduled: Vec<(TenantId, u64)>,
+    pub idle_demotions: u64,
+    pub pressure_demotions: u64,
+    pub prefetches: u64,
+}
+
+impl TieringController {
+    pub fn new(cfg: TieringConfig, n_tenants: usize) -> Self {
+        let alpha = cfg.activity_alpha;
+        TieringController {
+            cfg,
+            trackers: (0..n_tenants).map(|_| ActivityTracker::new(alpha)).collect(),
+            tick: 0,
+            scheduled: Vec::new(),
+            idle_demotions: 0,
+            pressure_demotions: 0,
+            prefetches: 0,
+        }
+    }
+
+    pub fn config(&self) -> &TieringConfig {
+        &self.cfg
+    }
+
+    pub fn tick_count(&self) -> u64 {
+        self.tick
+    }
+
+    /// Track a late-created tenant (ids align with the registry's).
+    pub fn register_tenant(&mut self) {
+        self.trackers.push(ActivityTracker::new(self.cfg.activity_alpha));
+    }
+
+    /// Record one admitted request for `tenant` at the current tick.
+    pub fn note_request(&mut self, tenant: TenantId) {
+        if let Some(t) = self.trackers.get_mut(tenant as usize) {
+            t.touch(self.tick);
+        }
+    }
+
+    /// The tenant's smoothed requests-per-tick (reporting).
+    pub fn rate(&self, tenant: TenantId) -> f64 {
+        self.trackers.get(tenant as usize).map_or(0.0, |t| t.rate())
+    }
+
+    /// Forecast that `tenant` becomes active at `at_tick` (from the
+    /// predictor, a calendar, or the workload itself): hydration starts
+    /// `prefetch_lead_ticks` early so the shard is warm on arrival.
+    pub fn schedule_active(&mut self, tenant: TenantId, at_tick: u64) {
+        self.scheduled.push((tenant, at_tick));
+    }
+
+    /// Close the current tick and run the policy over `registry`:
+    /// fold activity EWMAs, demote idle/pressured shards, and report
+    /// which cold shards to prefetch.  A disabled controller still
+    /// tracks activity (so enabling later starts from real signals) but
+    /// never demotes or prefetches.
+    pub fn tick(&mut self, registry: &mut TenantRegistry) -> Result<TickReport> {
+        // tenants created since construction get fresh trackers
+        while self.trackers.len() < registry.len() {
+            self.register_tenant();
+        }
+        for t in &mut self.trackers {
+            t.end_tick();
+        }
+        self.tick += 1;
+        let now = self.tick;
+        let mut report = TickReport {
+            tick: now,
+            ..TickReport::default()
+        };
+        if !self.cfg.enabled {
+            return Ok(report);
+        }
+
+        // idle demotions, in id order (deterministic): a tenant with
+        // queued work is never a candidate, whatever its hit rate
+        for id in 0..registry.len() as TenantId {
+            if registry.resident_count() <= self.cfg.min_resident {
+                break;
+            }
+            if registry.residency(id) != Some(Residency::Hot) {
+                continue;
+            }
+            if registry.queue_depth(id) > 0 {
+                continue;
+            }
+            if self.imminently_active(id, now) {
+                continue;
+            }
+            let idle = self.trackers[id as usize].idle_ticks(now);
+            if idle >= self.cfg.idle_ticks_to_demote {
+                report.freed_bytes += registry.demote_tenant(id)?;
+                report.demoted.push(id);
+                self.idle_demotions += 1;
+            }
+        }
+
+        // memory-pressure watermark: demote the least-recently-active
+        // hot shard even before its idle threshold
+        let limit = (self.cfg.demote_watermark_frac
+            * registry.config().global_qkv_bytes as f64) as usize;
+        while registry.total_qkv_used() > limit
+            && registry.resident_count() > self.cfg.min_resident
+        {
+            let Some(victim) = self.pressure_victim(registry, now) else {
+                break;
+            };
+            report.freed_bytes += registry.demote_tenant(victim)?;
+            report.demoted.push(victim);
+            self.pressure_demotions += 1;
+        }
+
+        // prefetch: start hydrating cold shards whose forecasted active
+        // period is within the lead window.  A forecast whose shard is
+        // still hot is kept until the burst actually starts (it goes on
+        // vetoing demotion); a fired or expired forecast is dropped.
+        let lead = self.cfg.prefetch_lead_ticks;
+        let mut keep = Vec::new();
+        for &(tenant, at_tick) in &self.scheduled {
+            if at_tick > now + lead {
+                keep.push((tenant, at_tick));
+            } else if registry.residency(tenant) == Some(Residency::Cold) {
+                report.prefetch.push(tenant);
+                self.prefetches += 1;
+            } else if now < at_tick {
+                keep.push((tenant, at_tick));
+            }
+        }
+        self.scheduled = keep;
+        Ok(report)
+    }
+
+    /// Whether a forecasted active period makes demoting `tenant` now
+    /// pointless (it would hydrate right back within the lead window).
+    fn imminently_active(&self, tenant: TenantId, now: u64) -> bool {
+        self.scheduled
+            .iter()
+            .any(|&(t, at)| t == tenant && at <= now + self.cfg.prefetch_lead_ticks)
+    }
+
+    /// Least-recently-active hot tenant with no queued work.
+    fn pressure_victim(&self, registry: &TenantRegistry, now: u64) -> Option<TenantId> {
+        (0..registry.len() as TenantId)
+            .filter(|&id| registry.residency(id) == Some(Residency::Hot))
+            .filter(|&id| registry.queue_depth(id) == 0)
+            .filter(|&id| !self.imminently_active(id, now))
+            .max_by_key(|&id| self.trackers[id as usize].idle_ticks(now))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// background hydration
+// ---------------------------------------------------------------------------
+
+/// Background thread rebuilding cold shards from their snapshots.
+///
+/// Submit a [`HydrationSpec`] (from `TenantRegistry::begin_hydration`),
+/// poll for finished shards, and install them with `finish_hydration`.
+/// The worker owns no registry state, so a hydration in flight never
+/// blocks the serving thread's registry access.
+pub struct HydrationWorker {
+    tx: Option<mpsc::Sender<HydrationSpec>>,
+    rx: mpsc::Receiver<(TenantId, Result<TenantShard>)>,
+    handle: Option<thread::JoinHandle<()>>,
+    pub submitted: u64,
+    pub completed: u64,
+}
+
+impl HydrationWorker {
+    pub fn spawn() -> Self {
+        let (jtx, jrx) = mpsc::channel::<HydrationSpec>();
+        let (rtx, rrx) = mpsc::channel();
+        let handle = thread::Builder::new()
+            .name("percache-hydration".into())
+            .spawn(move || {
+                while let Ok(spec) = jrx.recv() {
+                    let tenant = spec.tenant;
+                    let built = TenantShard::open_or_create(
+                        spec.tenant,
+                        spec.qa_bytes,
+                        spec.qkv_bytes,
+                        spec.utility_alpha,
+                        spec.dir,
+                    );
+                    if rtx.send((tenant, built)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn hydration worker thread");
+        HydrationWorker {
+            tx: Some(jtx),
+            rx: rrx,
+            handle: Some(handle),
+            submitted: 0,
+            completed: 0,
+        }
+    }
+
+    /// Queue one hydration; the result arrives via [`Self::poll`].
+    pub fn submit(&mut self, spec: HydrationSpec) {
+        self.submitted += 1;
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(spec);
+        }
+    }
+
+    /// Drain every finished hydration without blocking.
+    pub fn poll(&mut self) -> Vec<(TenantId, Result<TenantShard>)> {
+        let mut out = Vec::new();
+        while let Ok(r) = self.rx.try_recv() {
+            self.completed += 1;
+            out.push(r);
+        }
+        out
+    }
+
+    /// Block until the next hydration finishes (shutdown drains).
+    pub fn wait_one(&mut self) -> Option<(TenantId, Result<TenantShard>)> {
+        match self.rx.recv() {
+            Ok(r) => {
+                self.completed += 1;
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.submitted - self.completed
+    }
+}
+
+impl Drop for HydrationWorker {
+    fn drop(&mut self) {
+        // closing the job channel stops the worker loop
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{TenancyConfig, TieringConfig};
+    use crate::llm::QkvTensor;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "percache_tierctl_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn tcfg(global_slices: usize) -> TenancyConfig {
+        let mut tc = TenancyConfig::default();
+        tc.enabled = true;
+        tc.max_tenants = 8;
+        tc.global_qkv_bytes = global_slices * (QkvTensor::zeros(1, 4, 64).byte_size() + 16);
+        tc.tiering = TieringConfig {
+            enabled: true,
+            idle_ticks_to_demote: 3,
+            min_resident: 1,
+            ..TieringConfig::default()
+        };
+        tc
+    }
+
+    fn touch_tenant(reg: &mut TenantRegistry, id: TenantId) {
+        let t = QkvTensor::zeros(1, 4, 64);
+        reg.shard_mut(id)
+            .unwrap()
+            .insert_path(&[100 + id as u64, 200], vec![t.clone(), t])
+            .unwrap();
+    }
+
+    #[test]
+    fn idle_tenant_demotes_after_threshold_but_active_stays() {
+        let dir = tmp("idle");
+        let tc = tcfg(64);
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        touch_tenant(&mut reg, 0);
+        touch_tenant(&mut reg, 1);
+        let mut ctl = TieringController::new(tc.tiering.clone(), 2);
+        for tick in 0..4 {
+            ctl.note_request(0); // tenant 0 stays active, tenant 1 idles
+            let rep = ctl.tick(&mut reg).unwrap();
+            if tick < 2 {
+                assert!(rep.demoted.is_empty(), "tick {tick}: too early");
+            }
+        }
+        assert_eq!(reg.residency(0), Some(Residency::Hot));
+        assert_eq!(reg.residency(1), Some(Residency::Cold));
+        assert_eq!(ctl.idle_demotions, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn queued_work_vetoes_demotion() {
+        let dir = tmp("queued");
+        let tc = tcfg(64);
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        // tenant 1 never sends a request but has a backlog queued
+        reg.set_queue_depths(&[0, 4]);
+        let mut ctl = TieringController::new(tc.tiering.clone(), 2);
+        for _ in 0..6 {
+            ctl.note_request(0);
+            ctl.tick(&mut reg).unwrap();
+        }
+        assert_eq!(
+            reg.residency(1),
+            Some(Residency::Hot),
+            "backlogged tenants must never demote"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn watermark_pressure_demotes_least_recently_active() {
+        let dir = tmp("pressure");
+        let mut tc = tcfg(8); // tiny global budget
+        tc.tiering.idle_ticks_to_demote = 1000; // idle path disabled
+        tc.tiering.demote_watermark_frac = 0.25;
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        for _ in 0..3 {
+            reg.create_tenant().unwrap();
+        }
+        let mut ctl = TieringController::new(tc.tiering.clone(), 3);
+        // establish a distinct last-touch order while nothing is cached
+        // yet (no bytes → no pressure): 0 is the stalest, 2 the freshest
+        for id in 0..3u32 {
+            ctl.note_request(id);
+        }
+        ctl.tick(&mut reg).unwrap();
+        ctl.note_request(1);
+        ctl.note_request(2);
+        ctl.tick(&mut reg).unwrap();
+        ctl.note_request(2);
+        // now trip the watermark: 6 cached slices against a 2-slice limit
+        for id in 0..3 {
+            touch_tenant(&mut reg, id);
+        }
+        let rep = ctl.tick(&mut reg).unwrap();
+        assert_eq!(
+            rep.demoted,
+            vec![0, 1],
+            "stalest tenants must go first, down to the watermark"
+        );
+        assert_eq!(ctl.pressure_demotions, 2);
+        assert!(rep.freed_bytes > 0);
+        assert_eq!(reg.residency(2), Some(Residency::Hot), "freshest survives");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_controller_never_demotes() {
+        let dir = tmp("disabled");
+        let mut tc = tcfg(64);
+        tc.tiering.enabled = false;
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        let mut ctl = TieringController::new(tc.tiering.clone(), 2);
+        for _ in 0..10 {
+            let rep = ctl.tick(&mut reg).unwrap();
+            assert!(rep.demoted.is_empty());
+        }
+        assert_eq!(reg.resident_count(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefetch_fires_within_lead_and_skips_demotion() {
+        let dir = tmp("prefetch");
+        let mut tc = tcfg(64);
+        tc.tiering.prefetch_lead_ticks = 2;
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        touch_tenant(&mut reg, 1);
+        let mut ctl = TieringController::new(tc.tiering.clone(), 2);
+        // let tenant 1 go cold
+        for _ in 0..4 {
+            ctl.note_request(0);
+            ctl.tick(&mut reg).unwrap();
+        }
+        assert_eq!(reg.residency(1), Some(Residency::Cold));
+        // forecast: tenant 1 active at tick 8 → prefetch fires at 8-2=6
+        ctl.schedule_active(1, 8);
+        ctl.note_request(0);
+        let rep = ctl.tick(&mut reg).unwrap(); // tick 5
+        assert!(rep.prefetch.is_empty(), "tick {} too early", rep.tick);
+        ctl.note_request(0);
+        let rep = ctl.tick(&mut reg).unwrap(); // tick 6 = 8 - lead
+        assert_eq!(rep.prefetch, vec![1]);
+        assert_eq!(ctl.prefetches, 1);
+        // the caller hydrates; the shard is warm before its burst
+        reg.hydrate_tenant(1).unwrap();
+        assert_eq!(reg.residency(1), Some(Residency::Hot));
+        // an imminent forecast also vetoes demotion of a hot shard
+        ctl.schedule_active(1, 9);
+        ctl.note_request(0);
+        let rep = ctl.tick(&mut reg).unwrap(); // tick 7: 1 idle but imminent
+        assert!(
+            !rep.demoted.contains(&1),
+            "imminently-active shard must not demote"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hydration_worker_rebuilds_in_background() {
+        let dir = tmp("worker");
+        let tc = tcfg(64);
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        touch_tenant(&mut reg, 1);
+        reg.demote_tenant(1).unwrap();
+
+        let mut worker = HydrationWorker::spawn();
+        let spec = reg.begin_hydration(1).unwrap();
+        worker.submit(spec);
+        assert_eq!(worker.in_flight(), 1);
+        let (tenant, shard) = worker.wait_one().expect("worker must deliver");
+        assert_eq!(tenant, 1);
+        reg.finish_hydration(1, shard.unwrap()).unwrap();
+        assert_eq!(reg.residency(1), Some(Residency::Hot));
+        assert_eq!(
+            reg.shard_mut(1).unwrap().prefix_match(&[101, 200]).len(),
+            2,
+            "hydrated shard serves its cached path"
+        );
+        assert_eq!(worker.in_flight(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,40 @@
+//! Warm/cold shard tiering (DESIGN.md §11): demote idle tenant shards to
+//! disk, page them back on demand.
+//!
+//! PR 1's memory governor can only shrink a cold tenant's budget
+//! slice-by-slice while the shard's QA bank, QKV tree and predictor stay
+//! resident forever.  This subsystem converts the registry into a
+//! two-tier residency system — RAGCache's hot/cold knowledge-cache shape
+//! applied to whole tenant shards under mobile memory pressure:
+//!
+//! * [`residency`] — the [`Residency`] state machine
+//!   (Hot/Demoting/Cold/Hydrating) and the deterministic per-tenant
+//!   [`ActivityTracker`] (EWMA request rate + last-touch tick).
+//! * [`controller`] — the [`TieringController`] policy loop: demotes
+//!   shards idle past a threshold (and, proactively, under a
+//!   memory-pressure watermark), skips tenants with queued work, starts
+//!   asynchronous hydrations on a background [`controller::HydrationWorker`]
+//!   thread, and warms shards ahead of forecasted active periods via
+//!   scheduled prefetches.
+//! * [`sim`] — deterministic tiered replay (router admission + blocked
+//!   queues + controller ticks) used by `percache exp tiering`, the
+//!   integration tests and the CLI demo.
+//! * [`service`] — the threaded serving loop: requests for a cold tenant
+//!   queue behind the async hydration instead of blocking the inference
+//!   thread (`spawn_tiered_server`, on the gated router loop).
+//!
+//! The cold tier *is* the PR 2 persistence format: demotion snapshots the
+//! shard into its `shard_<id>/` directory (`TenantShard::save`, now
+//! incremental) and drops the in-RAM shard; the freed bytes flow back
+//! into the governor's global pool for the remaining hot shards.
+//! Hydration is `TenantShard::open_or_create` on a worker thread followed
+//! by a governed shrink to the shard's current share.
+
+pub mod controller;
+pub mod residency;
+pub mod service;
+pub mod sim;
+
+pub use controller::{HydrationWorker, TickReport, TieringController};
+pub use residency::{ActivityTracker, Residency};
+pub use service::spawn_tiered_server;

@@ -1,0 +1,138 @@
+//! The shard residency state machine and the per-tenant activity signal
+//! that drives it (DESIGN.md §11).
+//!
+//! ```text
+//!            demote_tenant            save ok
+//!   Hot ────────────────▶ Demoting ────────────▶ Cold
+//!    ▲                        │ save failed        │ begin_hydration
+//!    │                        ▼                    ▼
+//!    │◀──────────────────── Hot              Hydrating
+//!    │            finish_hydration                 │
+//!    └─────────────────────────────────────────────┘
+//! ```
+//!
+//! `Hot` and `Demoting` shards are resident in RAM; `Cold` and
+//! `Hydrating` shards exist only as their on-disk snapshot (the PR 2
+//! persistence format: `shard_<id>/` with slice files, store manifest,
+//! `cache_state.json` and `shard_stats.json`).  `Demoting` is transient
+//! inside `TenantRegistry::demote_tenant`; `Hydrating` is observable for
+//! as long as the background hydration worker is rebuilding the shard.
+
+/// Where a tenant shard currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// Fully resident in RAM, serving requests.
+    Hot,
+    /// Snapshot in progress; still resident (transient).
+    Demoting,
+    /// Evicted to the cold tier; only the on-disk snapshot exists.
+    Cold,
+    /// A background hydration is rebuilding the shard from disk.
+    Hydrating,
+}
+
+impl Residency {
+    /// Whether a shard in this state occupies RAM (has an in-memory
+    /// `TenantShard`).
+    pub fn is_resident(self) -> bool {
+        matches!(self, Residency::Hot | Residency::Demoting)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Residency::Hot => "hot",
+            Residency::Demoting => "demoting",
+            Residency::Cold => "cold",
+            Residency::Hydrating => "hydrating",
+        }
+    }
+}
+
+/// Per-tenant activity signal: EWMA request rate over logical ticks
+/// (scheduling rounds) plus the last-touch tick.  Deterministic — no
+/// wall clock — so demotion decisions replay identically in tests and
+/// experiments.
+#[derive(Debug, Clone)]
+pub struct ActivityTracker {
+    /// Requests observed since the current tick started.
+    pending: u64,
+    /// EWMA of requests-per-tick.
+    rate: f64,
+    /// Tick of the most recent request (0 = never touched).
+    last_touch: u64,
+    alpha: f64,
+    pub touches: u64,
+}
+
+impl ActivityTracker {
+    pub fn new(alpha: f64) -> Self {
+        ActivityTracker {
+            pending: 0,
+            rate: 0.0,
+            last_touch: 0,
+            alpha: alpha.clamp(1e-6, 1.0),
+            touches: 0,
+        }
+    }
+
+    /// Record one request at tick `now`.
+    pub fn touch(&mut self, now: u64) {
+        self.pending += 1;
+        self.touches += 1;
+        self.last_touch = now;
+    }
+
+    /// Fold the tick's request count into the EWMA rate (call once per
+    /// tick, after all of the tick's requests were recorded).
+    pub fn end_tick(&mut self) {
+        self.rate += self.alpha * (self.pending as f64 - self.rate);
+        self.pending = 0;
+    }
+
+    /// Smoothed requests-per-tick.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    pub fn last_touch(&self) -> u64 {
+        self.last_touch
+    }
+
+    /// Ticks since the last request (`now` itself counts as elapsed; a
+    /// never-touched tracker reports `now`).
+    pub fn idle_ticks(&self, now: u64) -> u64 {
+        now.saturating_sub(self.last_touch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residency_labels_and_residency() {
+        assert!(Residency::Hot.is_resident());
+        assert!(Residency::Demoting.is_resident());
+        assert!(!Residency::Cold.is_resident());
+        assert!(!Residency::Hydrating.is_resident());
+        assert_eq!(Residency::Cold.label(), "cold");
+    }
+
+    #[test]
+    fn activity_tracks_rate_and_idleness() {
+        let mut a = ActivityTracker::new(0.5);
+        assert_eq!(a.idle_ticks(10), 10, "never touched = idle forever");
+        a.touch(3);
+        a.touch(3);
+        a.end_tick();
+        assert!(a.rate() > 0.9, "{}", a.rate());
+        assert_eq!(a.idle_ticks(3), 0);
+        assert_eq!(a.idle_ticks(8), 5);
+        // quiet ticks decay the rate toward zero
+        for _ in 0..8 {
+            a.end_tick();
+        }
+        assert!(a.rate() < 0.01, "{}", a.rate());
+        assert_eq!(a.touches, 2);
+    }
+}

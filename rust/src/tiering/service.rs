@@ -1,0 +1,351 @@
+//! The tiered serving loop: `run_tenant_loop_gated` wired to a
+//! persistent registry, the [`TieringController`] and a background
+//! [`HydrationWorker`] (DESIGN.md §11).
+//!
+//! A request for a cold tenant does not block the inference thread:
+//! admission kicks an asynchronous hydration and blocks only that
+//! tenant's queue; other tenants keep serving, and the blocked queue
+//! drains fairly once the worker delivers the rebuilt shard.  Idle-tick
+//! commands drive the controller (demotion + prefetch), mirroring the
+//! engine's idle-path population cadence.
+//!
+//! Serving is the cache-level sim (`tenancy::sim::serve_one`) — the
+//! residency system under test is fully real; only the LLM cost is
+//! modeled — so the tiered server runs without PJRT artifacts
+//! (`percache serve --tiering`).
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::config::TenancyConfig;
+use crate::metrics::QueryRecord;
+use crate::tenancy::router::run_tenant_loop_gated;
+use crate::tenancy::sim::{serve_one, SimConfig};
+use crate::tenancy::{RouterConfig, TenantId, TenantRegistry, TenantServerHandle};
+use crate::tokenizer::fnv1a64;
+use crate::util::json::Json;
+
+use super::controller::{HydrationWorker, TieringController};
+use super::residency::Residency;
+
+/// Counters the serving thread writes to `<dir>/tiering_report.json` at
+/// shutdown (the thread's state dies with it; the report is how demos
+/// and tests observe what the residency system did).
+pub const REPORT_FILE: &str = "tiering_report.json";
+
+/// Everything the tiered serving thread needs to build its state.
+#[derive(Debug, Clone)]
+pub struct TieredServerConfig {
+    pub tenancy: TenancyConfig,
+    pub sim: SimConfig,
+    /// Persistent registry base dir (the cold tier lives here).
+    pub dir: PathBuf,
+    pub n_tenants: usize,
+    /// Print demotion/hydration events (CLI demo).
+    pub log: bool,
+}
+
+struct State {
+    registry: TenantRegistry,
+    controller: TieringController,
+    worker: HydrationWorker,
+    sim: SimConfig,
+    log: bool,
+}
+
+impl State {
+    /// Derive the demo prompt path for a query: a per-tenant context
+    /// prefix (reusable across the tenant's queries) + the query segment.
+    fn seg_keys(tenant: TenantId, query: &str) -> Vec<u64> {
+        vec![
+            fnv1a64(b"sys"),
+            fnv1a64(format!("t{tenant}/profile").as_bytes()),
+            fnv1a64(query.as_bytes()),
+        ]
+    }
+
+    /// Feed the live queue depths into the registry (the backlog veto +
+    /// governor boost) and install every hydration the worker finished;
+    /// returns the tenants whose queues may unblock.
+    fn poll_hydrations(&mut self, depths: &[usize]) -> Vec<TenantId> {
+        self.registry.set_queue_depths(depths);
+        let mut ready = Vec::new();
+        for (tenant, built) in self.worker.poll() {
+            match built {
+                Ok(shard) => {
+                    if self.registry.finish_hydration(tenant, shard).is_ok() {
+                        if self.log {
+                            println!("[tiering] tenant {tenant} hydrated");
+                        }
+                        ready.push(tenant);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[tiering] tenant {tenant} hydration failed: {e:#}");
+                    let _ = self.registry.abort_hydration(tenant);
+                    // unblock so the queued requests drain through the
+                    // synchronous fallback instead of waiting forever
+                    ready.push(tenant);
+                }
+            }
+        }
+        ready
+    }
+
+    /// Make `tenant` resident before serving (shutdown drains and
+    /// hydration-failure fallbacks reach here with a non-Hot shard).
+    fn ensure_resident(&mut self, tenant: TenantId) -> Result<()> {
+        loop {
+            match self.registry.residency(tenant) {
+                Some(Residency::Hot) | Some(Residency::Demoting) => return Ok(()),
+                Some(Residency::Cold) => return self.registry.hydrate_tenant(tenant),
+                Some(Residency::Hydrating) => {
+                    // the worker holds the shard; wait for it
+                    match self.worker.wait_one() {
+                        Some((t, Ok(shard))) => {
+                            self.registry.finish_hydration(t, shard)?;
+                        }
+                        Some((t, Err(e))) => {
+                            self.registry.abort_hydration(t)?;
+                            if t == tenant {
+                                anyhow::bail!("hydration failed: {e:#}");
+                            }
+                        }
+                        None => anyhow::bail!("hydration worker died"),
+                    }
+                }
+                None => anyhow::bail!("unknown tenant {tenant}"),
+            }
+        }
+    }
+
+    fn serve(&mut self, tenant: TenantId, query: &str) -> Result<QueryRecord> {
+        self.ensure_resident(tenant)?;
+        self.controller.note_request(tenant);
+        let keys = Self::seg_keys(tenant, query);
+        let shard = self
+            .registry
+            .shard_mut(tenant)
+            .context("resident shard vanished")?;
+        serve_one(&self.sim, shard, query, &keys)
+    }
+
+    /// Admission gate: a Hot tenant serves normally; a Cold tenant
+    /// starts a background hydration and parks its queue.
+    fn admit(&mut self, tenant: TenantId) -> bool {
+        self.controller.note_request(tenant);
+        match self.registry.residency(tenant) {
+            Some(Residency::Hot) | Some(Residency::Demoting) => true,
+            Some(Residency::Hydrating) => false,
+            Some(Residency::Cold) => match self.registry.begin_hydration(tenant) {
+                Ok(spec) => {
+                    if self.log {
+                        println!("[tiering] tenant {tenant} cold — hydrating in background");
+                    }
+                    self.worker.submit(spec);
+                    false
+                }
+                Err(_) => true, // raced to Hot; serve normally
+            },
+            None => true, // unknown tenant: the serve path answers with an error
+        }
+    }
+
+    /// One idle tick: run the controller (demotion + prefetch).
+    fn idle(&mut self) {
+        match self.controller.tick(&mut self.registry) {
+            Ok(report) => {
+                if self.log && !report.demoted.is_empty() {
+                    println!(
+                        "[tiering] tick {}: demoted {:?} (freed {} KB)",
+                        report.tick,
+                        report.demoted,
+                        report.freed_bytes / 1024
+                    );
+                }
+                for tenant in report.prefetch {
+                    if let Ok(spec) = self.registry.begin_hydration(tenant) {
+                        if self.log {
+                            println!("[tiering] tenant {tenant} prefetching ahead of forecast");
+                        }
+                        self.worker.submit(spec);
+                    }
+                }
+            }
+            Err(e) => eprintln!("[tiering] controller tick failed: {e:#}"),
+        }
+    }
+
+    /// Shutdown: make everything consistent on disk and leave the
+    /// residency counters where a demo/test can read them.
+    fn finish(&mut self) -> Result<()> {
+        // drain any hydration still in flight so no shard is lost
+        while self.worker.in_flight() > 0 {
+            match self.worker.wait_one() {
+                Some((t, Ok(shard))) => {
+                    let _ = self.registry.finish_hydration(t, shard);
+                }
+                Some((t, Err(_))) => {
+                    let _ = self.registry.abort_hydration(t);
+                }
+                None => break,
+            }
+        }
+        self.registry.save_all()?;
+        let mut o = Json::obj();
+        o.insert("ticks", self.controller.tick_count());
+        o.insert("demotions", self.registry.demotions);
+        o.insert("hydrations", self.registry.hydrations);
+        o.insert("idle_demotions", self.controller.idle_demotions);
+        o.insert("pressure_demotions", self.controller.pressure_demotions);
+        o.insert("prefetches", self.controller.prefetches);
+        o.insert("resident_bytes", self.registry.resident_bytes());
+        o.insert("resident_count", self.registry.resident_count());
+        let dir = self
+            .registry
+            .persist_dir()
+            .context("tiered registry is persistent")?
+            .clone();
+        std::fs::write(dir.join(REPORT_FILE), Json::Obj(o).to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Spawn the tiered multi-tenant serving thread.  The registry opens
+/// (or creates) under `cfg.dir`; missing tenants up to `cfg.n_tenants`
+/// are created.  The returned handle is the ordinary
+/// [`TenantServerHandle`] — `query` for requests, `idle_tick` to drive
+/// the controller, `shutdown`/`join` to stop (writing
+/// `tiering_report.json` + saving every resident shard on the way out).
+pub fn spawn_tiered_server(cfg: TieredServerConfig) -> TenantServerHandle {
+    let (tx, rx) = mpsc::channel();
+    let n_tenants = cfg.n_tenants;
+    let router_cfg = RouterConfig {
+        queue_cap: cfg.tenancy.queue_cap,
+        global_cap: cfg.tenancy.global_queue_cap,
+    };
+    let join = thread::Builder::new()
+        .name("percache-tiered-server".into())
+        .spawn(move || -> Result<()> {
+            let mut registry = TenantRegistry::open_or_create(&cfg.tenancy, cfg.dir.clone())?;
+            while registry.len() < cfg.n_tenants {
+                registry.create_tenant()?;
+            }
+            let controller =
+                TieringController::new(cfg.tenancy.tiering.clone(), registry.len());
+            let state = RefCell::new(State {
+                registry,
+                controller,
+                worker: HydrationWorker::spawn(),
+                sim: cfg.sim.clone(),
+                log: cfg.log,
+            });
+            run_tenant_loop_gated(
+                rx,
+                router_cfg,
+                n_tenants,
+                |t, q| state.borrow_mut().serve(t, q),
+                |_| state.borrow_mut().idle(),
+                |t| state.borrow_mut().admit(t),
+                |depths| state.borrow_mut().poll_hydrations(depths),
+            );
+            state.borrow_mut().finish()
+        })
+        .expect("spawn tiered server thread");
+    TenantServerHandle::from_parts(tx, join)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TieringConfig;
+    use crate::tenancy::sim::sim_slice_bytes;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "percache_tiersvc_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn config(dir: &PathBuf, idle_ticks: u64) -> TieredServerConfig {
+        let mut tenancy = TenancyConfig::default();
+        tenancy.enabled = true;
+        tenancy.max_tenants = 4;
+        tenancy.global_qkv_bytes = 64 * sim_slice_bytes();
+        tenancy.tiering = TieringConfig {
+            enabled: true,
+            idle_ticks_to_demote: idle_ticks,
+            min_resident: 1,
+            ..TieringConfig::default()
+        };
+        TieredServerConfig {
+            tenancy,
+            sim: SimConfig::default(),
+            dir: dir.clone(),
+            n_tenants: 2,
+            log: false,
+        }
+    }
+
+    #[test]
+    fn cold_tenant_serves_after_async_hydration() {
+        let dir = tmp("async");
+        let handle = spawn_tiered_server(config(&dir, 2));
+        // prime both tenants
+        handle.query(0, 1, "alpha question one").unwrap();
+        handle.query(1, 2, "beta question one").unwrap();
+        // two idle ticks with only tenant 0 active → tenant 1 demotes
+        handle.query(0, 3, "alpha question two").unwrap();
+        handle.idle_tick(0).unwrap();
+        handle.query(0, 4, "alpha question three").unwrap();
+        handle.idle_tick(0).unwrap();
+        // tenant 1 returns: the request parks behind the background
+        // hydration and still gets a real answer
+        let resp = handle.query(1, 5, "beta question one").unwrap();
+        assert!(
+            !resp.record.answer.starts_with("error"),
+            "cold-tenant request must serve after hydration: {}",
+            resp.record.answer
+        );
+        handle.shutdown();
+        handle.join().unwrap();
+
+        let report =
+            std::fs::read_to_string(dir.join(REPORT_FILE)).expect("report must be written");
+        let j = Json::parse(&report).unwrap();
+        assert!(
+            j.get("demotions").as_usize().unwrap() >= 1,
+            "idle tenant must have demoted: {report}"
+        );
+        assert!(
+            j.get("hydrations").as_usize().unwrap() >= 1,
+            "comeback must have hydrated: {report}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn service_warm_restarts_from_the_cold_tier() {
+        let dir = tmp("restart");
+        // long idle threshold: nothing demotes on its own
+        let handle = spawn_tiered_server(config(&dir, 1000));
+        handle.query(0, 1, "warm up zero").unwrap();
+        handle.query(1, 2, "warm up one").unwrap();
+        handle.shutdown();
+        handle.join().unwrap();
+        // a second server over the same dir warm-restarts both tenants
+        let handle = spawn_tiered_server(config(&dir, 1000));
+        let resp = handle.query(1, 3, "warm up one").unwrap();
+        assert!(!resp.record.answer.starts_with("error"), "{}", resp.record.answer);
+        handle.shutdown();
+        handle.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

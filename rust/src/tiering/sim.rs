@@ -1,0 +1,267 @@
+//! Deterministic tiered replay: the tenancy cache-level replay with the
+//! residency system in the loop (DESIGN.md §11).
+//!
+//! One scheduling round (a router batch) is one controller tick.  The
+//! router's admission control and fair scheduling run exactly as in
+//! `tenancy::sim::replay`; on top of that, per-tenant queue depths feed
+//! the governor's queueing signal, the [`TieringController`] demotes
+//! idle/pressured shards between rounds, and a request that lands on a
+//! cold shard pays a measured *hydration stall* (the snapshot reload)
+//! before it is served — the cost `BENCH_tiering.json` reports as
+//! `hydration_stall_p99_ms`.  Demand hydration here is synchronous
+//! (deterministic single-thread replay); the asynchronous path — blocked
+//! queues draining behind a background worker — is the serving loop's
+//! ([`super::service::spawn_tiered_server`]).
+
+use anyhow::Result;
+
+use crate::metrics::Recorder;
+use crate::tenancy::sim::{serve_one, Arrival, SimConfig};
+use crate::tenancy::{Router, RouterConfig, TenantRegistry};
+
+use super::controller::TieringController;
+
+/// Tiered replay result: the plain replay's outcome plus residency
+/// accounting.
+#[derive(Debug)]
+pub struct TieredOutcome {
+    pub per_tenant: Vec<Recorder>,
+    pub rejected: u64,
+    pub rebalances: u64,
+    pub demotions: u64,
+    pub hydrations: u64,
+    /// Measured ms each demand hydration stalled the request that
+    /// triggered it (empty when nothing ever went cold).
+    pub hydration_stall_ms: Vec<f64>,
+    /// Resident (tree + QA) bytes sampled after every controller tick —
+    /// the series whose drop makes demotion observable.
+    pub resident_bytes_ticks: Vec<usize>,
+}
+
+impl TieredOutcome {
+    /// All records flattened and sorted by total latency.
+    pub fn all_total_ms(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self
+            .per_tenant
+            .iter()
+            .flat_map(|r| r.records.iter().map(|q| q.total_ms()))
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    pub fn mean_resident_bytes(&self) -> f64 {
+        if self.resident_bytes_ticks.is_empty() {
+            return 0.0;
+        }
+        self.resident_bytes_ticks.iter().sum::<usize>() as f64
+            / self.resident_bytes_ticks.len() as f64
+    }
+
+    pub fn min_resident_bytes(&self) -> usize {
+        self.resident_bytes_ticks.iter().copied().min().unwrap_or(0)
+    }
+
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.resident_bytes_ticks.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Replay `arrivals` through router + registry with the tiering
+/// controller ticking once per scheduling round.  The registry must be
+/// persistent (`open_or_create`) when the controller is enabled —
+/// demotion writes the cold tier.  With tiering disabled this measures
+/// exactly the pre-tiering behaviour (every shard stays resident),
+/// which is the experiment's baseline arm.
+pub fn replay_tiered(
+    registry: &mut TenantRegistry,
+    controller: &mut TieringController,
+    router_cfg: RouterConfig,
+    cfg: &SimConfig,
+    arrivals: &[Arrival],
+    batch: usize,
+) -> Result<TieredOutcome> {
+    let mut router: Router<Arrival> = Router::new(router_cfg);
+    for _ in 0..registry.len() {
+        router.register_tenant();
+    }
+    let mut per_tenant: Vec<Recorder> = (0..registry.len()).map(|_| Recorder::new()).collect();
+    let mut rebalances = 0u64;
+    let mut hydration_stall_ms = Vec::new();
+    let mut resident_bytes_ticks = Vec::new();
+
+    for chunk in arrivals.chunks(batch.max(1)) {
+        for a in chunk {
+            if router.try_push(a.tenant, a.clone()).is_ok() {
+                controller.note_request(a.tenant);
+            }
+        }
+        // the queueing signal: backlog boosts governor utility and
+        // vetoes demotion
+        registry.set_queue_depths(&router.depths());
+        while let Some((tenant, a)) = router.pop() {
+            if registry.shard(tenant).is_none() {
+                // cold shard: this request pays the page-in
+                let t0 = std::time::Instant::now();
+                registry.hydrate_tenant(tenant)?;
+                hydration_stall_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            let shard = registry
+                .shard_mut(tenant)
+                .ok_or_else(|| anyhow::anyhow!("router/registry tenant mismatch"))?;
+            let rec = serve_one(cfg, shard, &a.query, &a.seg_keys)?;
+            per_tenant[tenant as usize].push(rec);
+            if registry.note_serve() {
+                rebalances += 1;
+            }
+        }
+        registry.set_queue_depths(&router.depths());
+        let report = controller.tick(registry)?;
+        // scheduled prefetches warm shards before their active period;
+        // no request waits on them, so no stall is recorded
+        for tenant in report.prefetch {
+            registry.hydrate_tenant(tenant)?;
+        }
+        resident_bytes_ticks.push(registry.resident_bytes());
+    }
+    registry.check_invariants()?;
+    Ok(TieredOutcome {
+        per_tenant,
+        rejected: router.rejected,
+        rebalances,
+        demotions: registry.demotions,
+        hydrations: registry.hydrations,
+        hydration_stall_ms,
+        resident_bytes_ticks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{TenancyConfig, TieringConfig};
+    use crate::tenancy::sim::sim_slice_bytes;
+    use crate::tenancy::TenantId;
+    use crate::tokenizer::fnv1a64;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "percache_tiersim_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn tcfg(n: usize, idle_ticks: u64) -> TenancyConfig {
+        let mut tc = TenancyConfig::default();
+        tc.enabled = true;
+        tc.max_tenants = n;
+        tc.global_qkv_bytes = 64 * sim_slice_bytes();
+        tc.rebalance_every = 8;
+        tc.tiering = TieringConfig {
+            enabled: true,
+            idle_ticks_to_demote: idle_ticks,
+            min_resident: 1,
+            ..TieringConfig::default()
+        };
+        tc
+    }
+
+    fn arrival(tenant: TenantId, q: &str, topic: u64) -> Arrival {
+        Arrival {
+            tenant,
+            query: q.to_string(),
+            seg_keys: vec![
+                fnv1a64(b"sys"),
+                fnv1a64(format!("t{tenant}/c{topic}a").as_bytes()),
+                fnv1a64(format!("t{tenant}/c{topic}b").as_bytes()),
+                fnv1a64(q.as_bytes()),
+            ],
+        }
+    }
+
+    /// Tenant 1 bursts, goes silent (demotes), then returns: the comeback
+    /// request pays a hydration stall and then hits its restored cache.
+    #[test]
+    fn on_off_tenant_demotes_and_comes_back_warm() {
+        let dir = tmp("onoff");
+        let tc = tcfg(2, 2);
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        let mut ctl = TieringController::new(tc.tiering.clone(), 2);
+        let cfg = SimConfig::default();
+
+        let mut arrivals = Vec::new();
+        // phase 1 (2 ticks of 4): both tenants active
+        for i in 0..8u64 {
+            arrivals.push(arrival((i % 2) as TenantId, &format!("query item{:04}", i / 2), 0));
+        }
+        // phase 2 (4 ticks): only tenant 0 → tenant 1 idles past 2 ticks
+        for i in 0..16u64 {
+            arrivals.push(arrival(0, &format!("query item{i:04} still"), 0));
+        }
+        // phase 3: tenant 1 returns with a verbatim phase-1 repeat
+        arrivals.push(arrival(1, "query item0000", 0));
+
+        let out = replay_tiered(
+            &mut reg,
+            &mut ctl,
+            RouterConfig::default(),
+            &cfg,
+            &arrivals,
+            4,
+        )
+        .unwrap();
+        assert!(out.demotions >= 1, "idle tenant must demote");
+        assert_eq!(out.hydrations, out.hydration_stall_ms.len() as u64);
+        assert!(out.hydrations >= 1, "comeback must hydrate");
+        // the resident-bytes series must dip while tenant 1 is cold
+        assert!(
+            out.min_resident_bytes() < out.peak_resident_bytes(),
+            "demotion must be observable in resident bytes: {:?}",
+            out.resident_bytes_ticks
+        );
+        // the comeback query is a verbatim repeat primed in phase 1: the
+        // rehydrated QA bank must serve it as a hit
+        let last = out.per_tenant[1].records.last().unwrap();
+        assert_eq!(
+            last.path,
+            crate::metrics::ServePath::QaHit,
+            "rehydrated shard must keep its hit behaviour"
+        );
+        reg.check_invariants().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The disabled-arm replay is exactly the pre-tiering behaviour.
+    #[test]
+    fn disabled_tiering_keeps_everything_resident() {
+        let dir = tmp("disabled");
+        let mut tc = tcfg(3, 1);
+        tc.tiering.enabled = false;
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        for _ in 0..3 {
+            reg.create_tenant().unwrap();
+        }
+        let mut ctl = TieringController::new(tc.tiering.clone(), 3);
+        let arrivals: Vec<Arrival> = (0..12)
+            .map(|i| arrival(0, &format!("q item{i:04}"), 0))
+            .collect();
+        let out = replay_tiered(
+            &mut reg,
+            &mut ctl,
+            RouterConfig::default(),
+            &SimConfig::default(),
+            &arrivals,
+            4,
+        )
+        .unwrap();
+        assert_eq!(out.demotions, 0);
+        assert_eq!(out.hydrations, 0);
+        assert_eq!(reg.resident_count(), 3);
+        assert!(out.hydration_stall_ms.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -307,12 +307,19 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
 // Parser
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],
