@@ -197,6 +197,7 @@ impl Snapshotter {
         let pred_fresh = predictor.is_dirty() || !have_root;
         if !tree_fresh && !qa_fresh && !pred_fresh && dir.join(STATE_FILE).exists() {
             self.skipped += 1;
+            crate::obs_counter!("persist.dirty_skips").inc();
             return Ok(false);
         }
         self.sections_reused +=
@@ -224,13 +225,20 @@ impl Snapshotter {
         let tmp = dir.join(format!("{STATE_FILE}.tmp"));
         let fin = dir.join(STATE_FILE);
         let doc = self.root.as_ref().expect("root just ensured");
-        std::fs::write(&tmp, doc.to_string_pretty())
-            .with_context(|| format!("writing {}", tmp.display()))?;
+        let text = doc.to_string_pretty();
+        let snapshot_bytes = text.len();
+        std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
         std::fs::rename(&tmp, &fin).with_context(|| format!("committing {}", fin.display()))?;
         tree.mark_clean();
         qa.mark_clean();
         predictor.mark_clean();
         self.writes += 1;
+        crate::obs_counter!("persist.snapshot_writes").inc();
+        crate::obs_counter!("persist.bytes_written").add(snapshot_bytes as u64);
+        crate::obs::emit(
+            crate::obs::Event::new("checkpoint.written")
+                .field("bytes", snapshot_bytes as f64),
+        );
         Ok(true)
     }
 }

@@ -120,6 +120,10 @@ impl SliceStore {
             self.rebuild_from_files(&dir)?;
         }
         self.collect_orphans(&dir)?;
+        let adopted: usize = self.sizes.values().sum();
+        if adopted != 0 {
+            crate::obs_gauge!("store.resident_bytes").add(adopted as i64);
+        }
         // Commit the (possibly repaired) view so the directory is
         // consistent even if the process dies before the first put.
         self.write_manifest()
@@ -305,6 +309,8 @@ impl SliceStore {
             }
             return Err(e);
         }
+        crate::obs_counter!("store.puts").inc();
+        crate::obs_gauge!("store.resident_bytes").add(bytes as i64);
         Ok((id, bytes))
     }
 
@@ -312,6 +318,7 @@ impl SliceStore {
     /// checksum verification against the manifest).
     pub fn get(&mut self, id: SliceId) -> Result<QkvTensor> {
         self.loads += 1;
+        crate::obs_counter!("store.loads").inc();
         match self.path(id) {
             None => self
                 .mem
@@ -323,6 +330,9 @@ impl SliceStore {
                     std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?;
                 if let Some(&want) = self.checksums.get(&id) {
                     let got = fnv1a64(&buf);
+                    if got != want {
+                        crate::obs_counter!("store.checksum_failures").inc();
+                    }
                     anyhow::ensure!(
                         got == want,
                         "slice {id} checksum mismatch ({got:016x} != {want:016x})"
@@ -342,8 +352,12 @@ impl SliceStore {
     /// O(n), not O(n²) in manifest writes); returns total bytes freed.
     pub fn remove_many(&mut self, ids: &[SliceId]) -> usize {
         let mut freed = 0;
+        let mut removed = 0u64;
         for &id in ids {
             let bytes = self.sizes.remove(&id).unwrap_or(0);
+            if bytes != 0 {
+                removed += 1;
+            }
             self.checksums.remove(&id);
             match self.path(id) {
                 None => {
@@ -356,6 +370,13 @@ impl SliceStore {
             freed += bytes;
         }
         if freed != 0 {
+            crate::obs_counter!("store.evictions").add(removed);
+            crate::obs_gauge!("store.resident_bytes").sub(freed as i64);
+            crate::obs::emit(
+                crate::obs::Event::new("slice.evicted")
+                    .field("n", removed as f64)
+                    .field("freed_bytes", freed as f64),
+            );
             // best-effort: a failed manifest write self-heals at the next
             // open (the dangling entries' files are gone → dropped there)
             let _ = self.write_manifest();
@@ -386,6 +407,17 @@ impl SliceStore {
         let mut v: Vec<SliceId> = self.sizes.keys().copied().collect();
         v.sort_unstable();
         v
+    }
+}
+
+impl Drop for SliceStore {
+    fn drop(&mut self) {
+        // keep the global resident-bytes gauge consistent when a whole
+        // store goes away (e.g. a tenant shard demoting to the cold tier)
+        let resident: usize = self.sizes.values().sum();
+        if resident != 0 {
+            crate::obs_gauge!("store.resident_bytes").sub(resident as i64);
+        }
     }
 }
 

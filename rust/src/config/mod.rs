@@ -109,6 +109,59 @@ impl TieringConfig {
     }
 }
 
+/// Runtime telemetry knobs (the `obs` subsystem, DESIGN.md §12).
+/// Enabled by default: a recording call site costs one relaxed atomic
+/// load plus one relaxed read-modify-write, and `percache exp obs`
+/// holds the end-to-end overhead under 3%.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    pub enabled: bool,
+    /// Total event-journal capacity (records), split across stripes.
+    pub journal_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: true,
+            journal_capacity: 1024,
+        }
+    }
+}
+
+impl ObsConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut o = ObsConfig::default();
+        if let Some(b) = j.get("enabled").as_bool() {
+            o.enabled = b;
+        }
+        if let Some(v) = j.get("journal_capacity").as_usize() {
+            o.journal_capacity = v;
+        }
+        o.validate()?;
+        Ok(o)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.journal_capacity >= 1, "journal_capacity >= 1");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("enabled", self.enabled);
+        o.insert("journal_capacity", self.journal_capacity);
+        Json::Obj(o)
+    }
+
+    /// Push these knobs into the global obs registry (the CLI entry
+    /// points call this once after loading their config).
+    pub fn apply(&self) {
+        crate::obs::set_enabled(self.enabled);
+        crate::obs::registry().journal().set_capacity(self.journal_capacity);
+    }
+}
+
 /// Multi-tenant serving knobs (the `tenancy` subsystem).  Disabled by
 /// default: single-tenant mode is a registry with one shard holding the
 /// whole budget, which leaves the paper experiments untouched.
@@ -293,6 +346,9 @@ pub struct PerCacheConfig {
 
     // -- multi-tenant serving -----------------------------------------------
     pub tenancy: TenancyConfig,
+
+    // -- telemetry ------------------------------------------------------------
+    pub obs: ObsConfig,
 }
 
 impl Default for PerCacheConfig {
@@ -320,6 +376,7 @@ impl Default for PerCacheConfig {
                 .to_string(),
             persist_dir: None,
             tenancy: TenancyConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -390,6 +447,9 @@ impl PerCacheConfig {
         if j.get("tenancy").as_obj().is_some() {
             c.tenancy = TenancyConfig::from_json(j.get("tenancy"))?;
         }
+        if j.get("obs").as_obj().is_some() {
+            c.obs = ObsConfig::from_json(j.get("obs"))?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -418,6 +478,7 @@ impl PerCacheConfig {
         );
         anyhow::ensure!(self.decode_tokens >= 1, "decode_tokens >= 1");
         self.tenancy.validate()?;
+        self.obs.validate()?;
         Ok(())
     }
 
@@ -455,6 +516,7 @@ impl PerCacheConfig {
             o.insert("persist_dir", d.as_str());
         }
         o.insert("tenancy", self.tenancy.to_json());
+        o.insert("obs", self.obs.to_json());
         Json::Obj(o)
     }
 }
@@ -548,6 +610,29 @@ mod tests {
         assert!(c3.tenancy.tiering.enabled);
         assert_eq!(c3.tenancy.tiering.idle_ticks_to_demote, 48);
         assert_eq!(c3.tenancy.tiering.demote_watermark_frac, 0.85);
+    }
+
+    #[test]
+    fn obs_block_roundtrip_and_defaults() {
+        let mut c = PerCacheConfig::default();
+        assert!(c.obs.enabled, "telemetry must default on");
+        assert_eq!(c.obs.journal_capacity, 1024);
+        c.obs.enabled = false;
+        c.obs.journal_capacity = 64;
+        let j = c.to_json();
+        let c2 = PerCacheConfig::from_json(&j).unwrap();
+        assert!(!c2.obs.enabled);
+        assert_eq!(c2.obs.journal_capacity, 64);
+
+        // partial obs block keeps the other defaults
+        let j = Json::parse(r#"{"obs": {"journal_capacity": 256}}"#).unwrap();
+        let c3 = PerCacheConfig::from_json(&j).unwrap();
+        assert_eq!(c3.obs.journal_capacity, 256);
+        assert!(c3.obs.enabled);
+
+        // invalid capacity rejected
+        let j = Json::parse(r#"{"obs": {"journal_capacity": 0}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -246,6 +246,7 @@ impl<'rt> PerCache<'rt> {
                 rec.path = ServePath::QaHit;
                 rec.answer = tokens_to_text(&answer);
                 self.predictor.observe(query);
+                crate::metrics::record_query_obs(&rec);
                 return Ok(rec);
             }
         }
@@ -313,6 +314,7 @@ impl<'rt> PerCache<'rt> {
             self.qa.insert(query, emb, Some(dec.tokens.clone()), false);
         }
         self.predictor.observe(query);
+        crate::metrics::record_query_obs(&rec);
         Ok(rec)
     }
 

@@ -8,6 +8,7 @@
 pub mod ablation;
 pub mod common;
 pub mod motivation;
+pub mod obs_exp;
 pub mod overall;
 pub mod overhead;
 pub mod persistence_exp;

@@ -6,7 +6,7 @@ use anyhow::Result;
 use crate::runtime::Runtime;
 
 use super::{
-    ablation, motivation, overall, overhead, persistence_exp, scheduler_exp, showcase,
+    ablation, motivation, obs_exp, overall, overhead, persistence_exp, scheduler_exp, showcase,
     tenancy_exp, tiering_exp,
 };
 
@@ -26,12 +26,21 @@ pub const EXPERIMENTS: [&str; 18] = [
 /// machine-readable reports/BENCH_tenancy.json perf seed); `persistence`
 /// is the cold-vs-warm restart comparison (reports/BENCH_persistence.json);
 /// `tiering` is the warm/cold shard-residency comparison
-/// (reports/BENCH_tiering.json).
-pub const APPENDIX: [&str; 6] = ["fig21", "fig22", "fig23", "tenancy", "persistence", "tiering"];
+/// (reports/BENCH_tiering.json); `obs` measures telemetry overhead,
+/// enabled vs disabled, on the tenancy workload (reports/BENCH_obs.json).
+pub const APPENDIX: [&str; 7] = [
+    "fig21",
+    "fig22",
+    "fig23",
+    "tenancy",
+    "persistence",
+    "tiering",
+    "obs",
+];
 
 /// Experiments that run entirely at the cache level — no PJRT artifacts,
 /// dispatchable without a [`Runtime`] via [`run_offline`] (the CI path).
-pub const RUNTIME_FREE: [&str; 3] = ["tenancy", "persistence", "tiering"];
+pub const RUNTIME_FREE: [&str; 4] = ["tenancy", "persistence", "tiering", "obs"];
 
 pub fn is_runtime_free(name: &str) -> bool {
     RUNTIME_FREE.contains(&name)
@@ -45,6 +54,7 @@ pub fn run_offline(name: &str) -> Result<()> {
         "tenancy" => tenancy_exp::run_and_report()?,
         "persistence" => persistence_exp::run_and_report()?,
         "tiering" => tiering_exp::run_and_report()?,
+        "obs" => obs_exp::run_and_report()?,
         other => anyhow::bail!("'{other}' needs artifacts — runtime-free: {RUNTIME_FREE:?}"),
     }
     println!("[{name}] done in {:.1}s", t0.elapsed().as_secs_f64());
@@ -79,6 +89,7 @@ pub fn run_experiment(rt: &Runtime, name: &str) -> Result<()> {
         "tenancy" => tenancy_exp::tenancy(rt)?,
         "persistence" => persistence_exp::persistence(rt)?,
         "tiering" => tiering_exp::tiering(rt)?,
+        "obs" => obs_exp::obs(rt)?,
         other => anyhow::bail!(
             "unknown experiment '{other}' — known: {:?} + {:?}",
             EXPERIMENTS,
@@ -108,7 +119,15 @@ mod tests {
         for id in ["fig2", "fig14", "fig15a", "fig19", "fig20", "table1"] {
             assert!(EXPERIMENTS.contains(&id), "{id} missing");
         }
-        for id in ["fig21", "fig22", "fig23", "tenancy", "persistence", "tiering"] {
+        for id in [
+            "fig21",
+            "fig22",
+            "fig23",
+            "tenancy",
+            "persistence",
+            "tiering",
+            "obs",
+        ] {
             assert!(APPENDIX.contains(&id), "{id} missing");
         }
         for id in RUNTIME_FREE {

@@ -21,6 +21,8 @@
 //!   global memory governor, and the fair-scheduling request router.
 //! * [`tiering`] — warm/cold shard residency: idle shards demote to
 //!   their on-disk snapshot and page back on demand.
+//! * [`obs`] — runtime telemetry: the metrics registry, stage spans,
+//!   and the event journal every serving layer records into.
 //! * [`datasets`] / [`sim`] — synthetic workloads and device models.
 //! * [`exp`] — the paper-figure/table reproduction harness.
 //! * [`util`] / [`testkit`] / [`tokenizer`] / [`metrics`] — substrates.
@@ -47,6 +49,7 @@ pub mod exp;
 pub mod kb;
 pub mod llm;
 pub mod metrics;
+pub mod obs;
 pub mod predict;
 pub mod retrieval;
 pub mod runtime;

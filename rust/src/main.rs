@@ -5,9 +5,10 @@
 //! percache serve   [--model llama] [--dataset mised] [--user 0]
 //!                  [--persist-dir state/] [--checkpoint-secs 30]
 //!                  [--tiering --tenants 4] …
-//! percache exp     <fig2|…|table1|persistence|tiering|all>
+//! percache exp     <fig2|…|table1|persistence|tiering|obs|all>
 //!                  [--out reports] [--smoke]
 //! percache tenants [--tenants 8] [--arrivals 0] [--zipf 1.0] [--sweep]
+//! percache metrics [path] [--prom]
 //! percache info
 //! ```
 
@@ -32,6 +33,7 @@ fn real_main() -> Result<()> {
         "serve" => cmd_serve(),
         "exp" => cmd_exp(),
         "tenants" => cmd_tenants(),
+        "metrics" => cmd_metrics(),
         "info" => cmd_info(),
         _ => {
             println!(
@@ -40,6 +42,7 @@ fn real_main() -> Result<()> {
                  serve    run the interactive serving demo over a dataset user\n  \
                  exp      reproduce a paper figure/table (or `all`)\n  \
                  tenants  multi-tenant sharding demo/sweep (no artifacts needed)\n  \
+                 metrics  pretty-print a metrics dump (see serve --metrics-file)\n  \
                  info     print manifest / artifact summary\n\n\
                  run `percache <subcommand> --help` for flags"
             );
@@ -176,6 +179,12 @@ fn cmd_serve() -> Result<()> {
             "0",
             "crash-consistent snapshot cadence from the idle path (0 = only at exit)",
         )
+        .flag(
+            "metrics-file",
+            "",
+            "periodic telemetry dump path (obs snapshot as JSON + Prometheus text)",
+        )
+        .flag("metrics-interval-secs", "5", "telemetry dump cadence")
         .switch(
             "tiering",
             "tiered multi-tenant serving demo (warm/cold residency; no artifacts needed)",
@@ -184,6 +193,10 @@ fn cmd_serve() -> Result<()> {
         .flag("demote-idle-ticks", "2", "idle ticks before demotion for --tiering")
         .switch("verbose", "per-query breakdown");
     let a = cli.parse_env(1);
+    if a.get_bool("verbose") {
+        // one diagnostics path: tail the event journal to stderr
+        percache::obs::set_verbose(true);
+    }
     if a.get_bool("tiering") {
         return cmd_serve_tiered(&a);
     }
@@ -192,6 +205,7 @@ fn cmd_serve() -> Result<()> {
     let mut base = percache::config::PerCacheConfig::default();
     base.model = a.get("model").to_string();
     base.tau_query = a.get_f64("tau");
+    base.obs.apply();
     let persist_dir = a.get("persist-dir").to_string();
     if !persist_dir.is_empty() {
         base.persist_dir = Some(persist_dir.clone());
@@ -233,6 +247,9 @@ fn cmd_serve() -> Result<()> {
     let checkpoint_secs = a.get_usize("checkpoint-secs");
     let mut last_checkpoint = std::time::Instant::now();
     let mut checkpoints = 0u64;
+    let metrics_file = a.get("metrics-file").to_string();
+    let metrics_interval = a.get_usize("metrics-interval-secs").max(1) as u64;
+    let mut last_metrics = std::time::Instant::now();
     let mut rec = percache::metrics::Recorder::new();
     for (i, q) in data.queries.iter().enumerate() {
         let r = eng.serve(&q.text)?;
@@ -263,6 +280,11 @@ fn cmd_serve() -> Result<()> {
             }
             last_checkpoint = std::time::Instant::now();
         }
+        // periodic telemetry dump from the same idle path
+        if !metrics_file.is_empty() && last_metrics.elapsed().as_secs() >= metrics_interval {
+            let _ = percache::obs::dump_metrics_file(std::path::Path::new(&metrics_file), &[]);
+            last_metrics = std::time::Instant::now();
+        }
     }
     println!(
         "[done] mean={:.1}ms p95={:.1}ms qa_hit={:.0}% qkv_hit={:.0}% seg_reuse={:.0}%",
@@ -277,6 +299,10 @@ fn cmd_serve() -> Result<()> {
         println!(
             "[persist] cache state saved to {persist_dir} ({checkpoints} periodic checkpoints)"
         );
+    }
+    if !metrics_file.is_empty() {
+        percache::obs::dump_metrics_file(std::path::Path::new(&metrics_file), &[])?;
+        println!("[obs] metrics snapshot written to {metrics_file}");
     }
     Ok(())
 }
@@ -306,12 +332,18 @@ fn cmd_serve_tiered(a: &percache::util::cli::Args) -> Result<()> {
         min_resident: 1,
         ..TieringConfig::default()
     };
+    let metrics_file = match a.get("metrics-file") {
+        "" => None,
+        p => Some(std::path::PathBuf::from(p)),
+    };
     let handle = spawn_tiered_server(TieredServerConfig {
         tenancy,
         sim: SimConfig::default(),
         dir: std::path::PathBuf::from(&persist_dir),
         n_tenants: n,
         log: true,
+        metrics_file,
+        metrics_interval_secs: a.get_usize("metrics-interval-secs").max(1) as u64,
     });
     println!("[tiering] {n} tenants over {persist_dir} (cold tier = shard_<id>/ snapshots)");
 
@@ -364,6 +396,81 @@ fn cmd_serve_tiered(a: &percache::util::cli::Args) -> Result<()> {
         j.get("resident_bytes").as_usize().unwrap_or(0) / 1024,
     );
     println!("[tiering] full counters: {}", report_path.display());
+    Ok(())
+}
+
+/// `percache metrics <file|dir>`: pretty-print a metrics dump written
+/// by `percache serve --metrics-file` (tables by default, Prometheus
+/// text with `--prom`).
+fn cmd_metrics() -> Result<()> {
+    use anyhow::Context as _;
+    use percache::obs::MetricsSnapshot;
+    use percache::util::table::{fmt_ms, Table};
+
+    let cli = Cli::new("percache metrics — pretty-print a metrics snapshot dump")
+        .switch("prom", "print the Prometheus text exposition instead of tables");
+    let a = cli.parse_env(1);
+    let arg = a
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "reports/metrics.json".to_string());
+    let mut path = std::path::PathBuf::from(&arg);
+    if path.is_dir() {
+        path = path.join("metrics.json");
+    }
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = percache::util::json::Json::parse(&text).context("parsing metrics dump")?;
+    let snap = MetricsSnapshot::from_json(j.get("metrics"))
+        .context("dump missing a `metrics` snapshot section")?;
+    if a.get_bool("prom") {
+        print!("{}", percache::obs::prometheus::encode(&snap));
+        return Ok(());
+    }
+
+    let fmt_labels = |labels: &[(String, String)]| -> String {
+        labels
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    println!(
+        "[metrics] {} — snapshot at uptime {:.1}s",
+        path.display(),
+        snap.t_ms / 1e3
+    );
+    let mut counters = Table::new("Counters", &["name", "labels", "value"]);
+    for c in &snap.counters {
+        counters.row(vec![c.name.clone(), fmt_labels(&c.labels), c.value.to_string()]);
+    }
+    print!("{}", counters.render());
+    let mut gauges = Table::new("Gauges", &["name", "labels", "value"]);
+    for g in &snap.gauges {
+        gauges.row(vec![g.name.clone(), fmt_labels(&g.labels), g.value.to_string()]);
+    }
+    print!("{}", gauges.render());
+    let mut hists = Table::new(
+        "Histograms",
+        &["name", "labels", "count", "p50 ms", "p99 ms", "mean ms"],
+    );
+    for h in &snap.hists {
+        let mean = if h.count > 0 {
+            h.sum_ms / h.count as f64
+        } else {
+            0.0
+        };
+        hists.row(vec![
+            h.name.clone(),
+            fmt_labels(&h.labels),
+            h.count.to_string(),
+            fmt_ms(h.p50),
+            fmt_ms(h.p99),
+            fmt_ms(mean),
+        ]);
+    }
+    print!("{}", hists.render());
     Ok(())
 }
 

@@ -5,4 +5,4 @@ pub mod recorder;
 pub mod text;
 
 pub use flops::ModelDims;
-pub use recorder::{blank_record, QueryRecord, Recorder, ServePath, Stage};
+pub use recorder::{blank_record, record_query_obs, QueryRecord, Recorder, ServePath, Stage};

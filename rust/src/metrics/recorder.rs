@@ -158,6 +158,60 @@ impl Recorder {
     }
 }
 
+/// 1-in-N sampling for the per-stage breakdown histograms.  The serve
+/// fast path (a QA-bank hit) is only a few microseconds of real work,
+/// so recording every stage on every query would spend a visible slice
+/// of the telemetry budget (DESIGN.md §12); stage *distributions* are
+/// diagnostic, not SLO signals, and survive sampling unchanged.
+const STAGE_SAMPLE_EVERY: u64 = 8;
+
+/// Record one served query into the global telemetry registry.
+///
+/// Exact on every query: the serve-path counter and the end-to-end
+/// `engine.total_ms` histogram — the operator-facing SLO signals.
+/// Sampled 1-in-[`STAGE_SAMPLE_EVERY`]: the matched-segment histogram
+/// and the per-stage latency histograms (stages that did not run — 0 ms
+/// — are skipped so the distributions describe work actually done).
+/// Called by every serve path (engine and the cache-level sim); each
+/// series resolves once per call site, so the typical per-query cost is
+/// two relaxed atomic bumps plus one sampling tick.
+pub fn record_query_obs(rec: &QueryRecord) {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static STAGE_TICK: AtomicU64 = AtomicU64::new(0);
+
+    match rec.path {
+        ServePath::QaHit => crate::obs_counter!("engine.qa_hit").inc(),
+        ServePath::QkvHit => crate::obs_counter!("engine.qkv_hit").inc(),
+        ServePath::Full => crate::obs_counter!("engine.full").inc(),
+    }
+    crate::obs_hist!("engine.total_ms").record(rec.total_ms());
+    if STAGE_TICK.fetch_add(1, Ordering::Relaxed) % STAGE_SAMPLE_EVERY != 0 {
+        return;
+    }
+    crate::obs_hist!("engine.matched_segments").record(rec.matched_segments as f64);
+    if rec.embed_ms > 0.0 {
+        crate::obs_hist!("engine.embed_ms").record(rec.embed_ms);
+    }
+    if rec.qa_match_ms > 0.0 {
+        crate::obs_hist!("engine.qa_match_ms").record(rec.qa_match_ms);
+    }
+    if rec.retrieval_ms > 0.0 {
+        crate::obs_hist!("engine.retrieval_ms").record(rec.retrieval_ms);
+    }
+    if rec.tree_match_ms > 0.0 {
+        crate::obs_hist!("engine.tree_match_ms").record(rec.tree_match_ms);
+    }
+    if rec.cache_load_ms > 0.0 {
+        crate::obs_hist!("engine.cache_load_ms").record(rec.cache_load_ms);
+    }
+    if rec.prefill_ms > 0.0 {
+        crate::obs_hist!("engine.prefill_ms").record(rec.prefill_ms);
+    }
+    if rec.decode_ms > 0.0 {
+        crate::obs_hist!("engine.decode_ms").record(rec.decode_ms);
+    }
+}
+
 pub fn blank_record(query_id: usize) -> QueryRecord {
     QueryRecord {
         query_id,

@@ -1,0 +1,322 @@
+//! Bounded lock-striped ring-buffer event journal (DESIGN.md §12).
+//!
+//! Instrumentation sites emit structured [`Event`]s (tenant demoted,
+//! hydration finished with its stall, admission rejected with a reason,
+//! governor rebalance with per-shard deltas, checkpoint written, slice
+//! evicted).  The journal stamps each one with a global sequence number
+//! and a relative timestamp, then appends it to one of
+//! [`JOURNAL_STRIPES`] independently-locked rings so concurrent
+//! emitters rarely contend.  Overflow drops the oldest record in the
+//! stripe and counts it — the journal is a flight recorder, never a
+//! backpressure source.
+//!
+//! With `--verbose` the journal also echoes each record to stderr,
+//! which replaces the ad-hoc `println!`/`eprintln!` diagnostics the
+//! tiering and tenancy layers used to carry.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Number of independently-locked rings; emitters hash by sequence
+/// number, so bursts spread across stripes instead of serializing.
+pub const JOURNAL_STRIPES: usize = 8;
+
+/// Default total capacity across all stripes.
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+/// One structured event as built at an instrumentation site.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub kind: &'static str,
+    pub tenant: Option<usize>,
+    pub fields: Vec<(String, f64)>,
+    pub msg: String,
+}
+
+impl Event {
+    pub fn new(kind: &'static str) -> Self {
+        Event {
+            kind,
+            tenant: None,
+            fields: Vec::new(),
+            msg: String::new(),
+        }
+    }
+
+    pub fn tenant(mut self, t: usize) -> Self {
+        self.tenant = Some(t);
+        self
+    }
+
+    pub fn field(mut self, key: &str, value: f64) -> Self {
+        self.fields.push((key.to_string(), value));
+        self
+    }
+
+    pub fn msg(mut self, m: impl Into<String>) -> Self {
+        self.msg = m.into();
+        self
+    }
+}
+
+/// A journaled event: an [`Event`] plus its sequence number and the
+/// milliseconds since the journal was created.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRecord {
+    pub seq: u64,
+    pub t_ms: f64,
+    pub kind: String,
+    pub tenant: Option<usize>,
+    pub fields: Vec<(String, f64)>,
+    pub msg: String,
+}
+
+impl EventRecord {
+    /// Single-line rendering for the `--verbose` stderr tail.
+    pub fn render(&self) -> String {
+        let mut s = format!("[obs] #{} +{:.1}ms {}", self.seq, self.t_ms, self.kind);
+        if let Some(t) = self.tenant {
+            s.push_str(&format!(" tenant={t}"));
+        }
+        for (k, v) in &self.fields {
+            s.push_str(&format!(" {k}={v:.3}"));
+        }
+        if !self.msg.is_empty() {
+            s.push_str(&format!(" — {}", self.msg));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("seq", self.seq);
+        o.insert("t_ms", self.t_ms);
+        o.insert("kind", self.kind.as_str());
+        if let Some(t) = self.tenant {
+            o.insert("tenant", t);
+        }
+        let mut fields = Json::obj();
+        for (k, v) in &self.fields {
+            fields.insert(k.as_str(), *v);
+        }
+        o.insert("fields", fields);
+        if !self.msg.is_empty() {
+            o.insert("msg", self.msg.as_str());
+        }
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<EventRecord> {
+        let seq = j.get("seq").as_i64().context("event record: seq")? as u64;
+        let t_ms = j.get("t_ms").as_f64().context("event record: t_ms")?;
+        let kind = j
+            .get("kind")
+            .as_str()
+            .context("event record: kind")?
+            .to_string();
+        let tenant = j.get("tenant").as_usize();
+        let mut fields = Vec::new();
+        if let Some(o) = j.get("fields").as_obj() {
+            for (k, v) in o.iter() {
+                fields.push((k.to_string(), v.as_f64().context("event field")?));
+            }
+        }
+        let msg = j.get("msg").as_str().unwrap_or("").to_string();
+        Ok(EventRecord {
+            seq,
+            t_ms,
+            kind,
+            tenant,
+            fields,
+            msg,
+        })
+    }
+}
+
+/// The journal itself.  All configuration lives in atomics so emitters
+/// never take a lock just to discover the journal is quiet.
+pub struct Journal {
+    start: Instant,
+    seq: AtomicU64,
+    echo: AtomicBool,
+    trace_spans: AtomicBool,
+    cap_per_stripe: AtomicUsize,
+    stripes: Vec<Mutex<VecDeque<EventRecord>>>,
+    dropped: AtomicU64,
+}
+
+impl Default for Journal {
+    fn default() -> Self {
+        Journal {
+            start: Instant::now(),
+            seq: AtomicU64::new(0),
+            echo: AtomicBool::new(false),
+            trace_spans: AtomicBool::new(false),
+            cap_per_stripe: AtomicUsize::new((DEFAULT_CAPACITY / JOURNAL_STRIPES).max(1)),
+            stripes: (0..JOURNAL_STRIPES)
+                .map(|_| Mutex::new(VecDeque::new()))
+                .collect(),
+            dropped: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Journal {
+    pub fn new() -> Self {
+        Journal::default()
+    }
+
+    /// Echo every record to stderr (the `--verbose` tail).
+    pub fn set_echo(&self, on: bool) {
+        self.echo.store(on, Ordering::Relaxed);
+    }
+
+    pub fn echo(&self) -> bool {
+        self.echo.load(Ordering::Relaxed)
+    }
+
+    /// Also journal span completions (noisy; tied to `--verbose`).
+    pub fn set_trace_spans(&self, on: bool) {
+        self.trace_spans.store(on, Ordering::Relaxed);
+    }
+
+    pub fn trace_spans(&self) -> bool {
+        self.trace_spans.load(Ordering::Relaxed)
+    }
+
+    /// Resize the total capacity (split evenly across stripes).
+    pub fn set_capacity(&self, total: usize) {
+        self.cap_per_stripe
+            .store((total / JOURNAL_STRIPES).max(1), Ordering::Relaxed);
+    }
+
+    /// Records dropped to stay within capacity.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Total sequence numbers handed out (= events ever emitted).
+    pub fn emitted(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Stamp and append one event.
+    pub fn emit(&self, ev: Event) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let rec = EventRecord {
+            seq,
+            t_ms: self.start.elapsed().as_secs_f64() * 1e3,
+            kind: ev.kind.to_string(),
+            tenant: ev.tenant,
+            fields: ev.fields,
+            msg: ev.msg,
+        };
+        if self.echo() {
+            eprintln!("{}", rec.render());
+        }
+        let cap = self.cap_per_stripe.load(Ordering::Relaxed);
+        let mut ring = self.stripes[seq as usize % JOURNAL_STRIPES]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        ring.push_back(rec);
+        while ring.len() > cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Copy of every retained record, in emission order.
+    pub fn snapshot_events(&self) -> Vec<EventRecord> {
+        let mut out = Vec::new();
+        for stripe in &self.stripes {
+            let ring = stripe.lock().unwrap_or_else(|e| e.into_inner());
+            out.extend(ring.iter().cloned());
+        }
+        out.sort_by_key(|r| r.seq);
+        out
+    }
+
+    /// Drain every retained record, in emission order.
+    pub fn drain(&self) -> Vec<EventRecord> {
+        let mut out = Vec::new();
+        for stripe in &self.stripes {
+            let mut ring = stripe.lock().unwrap_or_else(|e| e.into_inner());
+            out.extend(ring.drain(..));
+        }
+        out.sort_by_key(|r| r.seq);
+        out
+    }
+
+    /// Retained records as a JSON array (newest state, debugging dumps).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.snapshot_events().iter().map(|r| r.to_json()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_in_sequence_and_drains() {
+        let j = Journal::new();
+        j.emit(Event::new("a").tenant(1).field("x", 2.5));
+        j.emit(Event::new("b").msg("hello"));
+        let recs = j.drain();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].seq, 0);
+        assert_eq!(recs[0].kind, "a");
+        assert_eq!(recs[0].tenant, Some(1));
+        assert_eq!(recs[0].fields, vec![("x".to_string(), 2.5)]);
+        assert_eq!(recs[1].kind, "b");
+        assert_eq!(recs[1].msg, "hello");
+        assert!(j.drain().is_empty(), "drain must empty the journal");
+        assert_eq!(j.emitted(), 2);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let j = Journal::new();
+        j.set_capacity(JOURNAL_STRIPES); // one record per stripe
+        for _ in 0..4 * JOURNAL_STRIPES {
+            j.emit(Event::new("tick"));
+        }
+        let recs = j.snapshot_events();
+        assert_eq!(recs.len(), JOURNAL_STRIPES);
+        assert_eq!(j.dropped(), 3 * JOURNAL_STRIPES as u64);
+        // the survivors are the newest record in each stripe
+        assert!(recs.iter().all(|r| r.seq >= 3 * JOURNAL_STRIPES as u64));
+    }
+
+    #[test]
+    fn record_json_round_trip() {
+        let j = Journal::new();
+        j.emit(
+            Event::new("governor.rebalance")
+                .tenant(3)
+                .field("delta_bytes", -4096.0)
+                .field("utility", 0.125)
+                .msg("shrink before grow"),
+        );
+        let rec = j.drain().remove(0);
+        let parsed = Json::parse(&rec.to_json().to_string()).unwrap();
+        let back = EventRecord::from_json(&parsed).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn render_mentions_kind_tenant_and_fields() {
+        let j = Journal::new();
+        j.emit(Event::new("tenant.demoted").tenant(7).field("freed", 123.0));
+        let line = j.snapshot_events()[0].render();
+        assert!(line.contains("tenant.demoted"));
+        assert!(line.contains("tenant=7"));
+        assert!(line.contains("freed=123.000"));
+    }
+}

@@ -1,0 +1,239 @@
+//! Lock-free metric primitives: counters, gauges, and log-scale
+//! fixed-bucket histograms (DESIGN.md §12).
+//!
+//! Everything here is a plain bag of atomics, so handles can be cloned
+//! into hot loops and bumped with `Ordering::Relaxed` operations: no
+//! locks, no allocation, no syscalls on the record path.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Number of histogram buckets: half-powers of two from ~1.4 µs to
+/// ~268 s, which spans everything the serving stack records (stage
+/// latencies, queue waits, hydration stalls).
+pub const N_BUCKETS: usize = 56;
+
+/// Inclusive upper bound of each bucket, in milliseconds:
+/// `bounds[i] = 1e-3 · 2^((i + 1) / 2)`.  Consecutive bounds differ by
+/// a factor of √2, so a quantile estimate taken from a bucket's
+/// midpoint is always within one bucket width of the exact value.
+pub fn bucket_bounds() -> &'static [f64; N_BUCKETS] {
+    static BOUNDS: OnceLock<[f64; N_BUCKETS]> = OnceLock::new();
+    BOUNDS.get_or_init(|| std::array::from_fn(|i| 1e-3 * 2f64.powf((i as f64 + 1.0) / 2.0)))
+}
+
+/// Bucket index for a recorded value.  Bucket `i` covers
+/// `(bounds[i-1], bounds[i]]`; NaN and tiny values land in bucket 0,
+/// +inf and huge values in the last bucket.
+pub fn bucket_index(v: f64) -> usize {
+    let bounds = bucket_bounds();
+    if v.is_nan() || v <= bounds[0] {
+        return 0;
+    }
+    bounds.partition_point(|&u| u < v).min(N_BUCKETS - 1)
+}
+
+/// Geometric midpoint of bucket `i` — guaranteed to lie inside the
+/// bucket, so quantile estimates built from it inherit the one-bucket
+/// error bound.
+pub fn representative(i: usize) -> f64 {
+    let bounds = bucket_bounds();
+    if i == 0 {
+        bounds[0]
+    } else {
+        (bounds[i - 1] * bounds[i]).sqrt()
+    }
+}
+
+/// Monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Signed gauge (resident bytes, queue depth, residency state, ...).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: i64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: i64) {
+        self.value.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log-scale histogram of millisecond samples.
+///
+/// The sum is kept in integer nanoseconds so concurrent recorders never
+/// need a CAS loop over a float and never lose fractional mass.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram::default()
+    }
+
+    /// Record one sample, in milliseconds.
+    #[inline]
+    pub fn record(&self, ms: f64) {
+        self.buckets[bucket_index(ms)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        if ms.is_finite() && ms > 0.0 {
+            self.sum_nanos
+                .fetch_add((ms * 1e6).round() as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples, in milliseconds.
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Point-in-time copy of the per-bucket counts.
+    pub fn bucket_counts(&self) -> [u64; N_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Nearest-rank quantile estimate for `q` in `[0, 1]`, using each
+    /// bucket's geometric midpoint as its representative value.
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_from_buckets(&self.bucket_counts(), q)
+    }
+}
+
+/// Nearest-rank quantile over a bucket-count vector (shared between the
+/// live histogram and its serialized snapshot form).
+pub fn quantile_from_buckets(counts: &[u64; N_BUCKETS], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return representative(i);
+        }
+    }
+    representative(N_BUCKETS - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_are_strictly_increasing_half_powers() {
+        let b = bucket_bounds();
+        for i in 1..N_BUCKETS {
+            assert!(b[i] > b[i - 1]);
+            let ratio = b[i] / b[i - 1];
+            assert!((ratio - 2f64.sqrt()).abs() < 1e-12, "ratio {ratio}");
+        }
+        assert!(b[0] < 2e-3, "lowest bound must be ~µs scale");
+        assert!(b[N_BUCKETS - 1] > 1e5, "highest bound must exceed 100 s");
+    }
+
+    #[test]
+    fn bucket_index_edges() {
+        let b = bucket_bounds();
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-1.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(b[0]), 0);
+        assert_eq!(bucket_index(b[3]), 3, "upper bound is inclusive");
+        assert_eq!(bucket_index(b[3] * 1.0001), 4);
+        assert_eq!(bucket_index(f64::INFINITY), N_BUCKETS - 1);
+        assert_eq!(bucket_index(1e12), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(10);
+        g.add(5);
+        g.sub(7);
+        assert_eq!(g.get(), 8);
+    }
+
+    #[test]
+    fn histogram_counts_and_sum() {
+        let h = Histogram::new();
+        h.record(1.0);
+        h.record(2.0);
+        h.record(4.0);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum_ms() - 7.0).abs() < 1e-6);
+        let counts = h.bucket_counts();
+        assert_eq!(counts.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn quantile_of_empty_is_zero() {
+        assert_eq!(Histogram::new().quantile(0.5), 0.0);
+    }
+}

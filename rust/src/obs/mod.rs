@@ -1,0 +1,160 @@
+//! Runtime telemetry: metrics registry, stage tracing, and the event
+//! journal (DESIGN.md §12).
+//!
+//! The serving stack used to run blind — measurement lived only in the
+//! experiment-side `metrics::recorder`, and the router, governor, and
+//! tiering controller logged through scattered `eprintln!`s.  This
+//! module is the sensor layer: every component records into one global
+//! [`MetricsRegistry`] of atomic counters, gauges, and log-scale
+//! histograms, emits structured events into a bounded lock-striped
+//! [`Journal`], and the serving loop periodically dumps typed
+//! snapshots (JSON via `util/json.rs`, Prometheus text via
+//! [`prometheus::encode`]) that `percache metrics` pretty-prints.
+//!
+//! Cost model: call sites cache a handle once (the `obs_counter!`
+//! family of macros does this with a `OnceLock` per call site), after
+//! which each record is one relaxed atomic load — the enabled check —
+//! plus one relaxed read-modify-write.  `percache exp obs` measures
+//! the end-to-end overhead on the tenancy workload and CI holds the
+//! enabled-vs-disabled p50 delta under 3%.
+
+pub mod journal;
+pub mod metric;
+pub mod prometheus;
+pub mod registry;
+pub mod snapshot;
+
+use std::sync::OnceLock;
+
+pub use journal::{Event, EventRecord, Journal};
+pub use metric::{bucket_bounds, bucket_index, Counter, Gauge, Histogram, N_BUCKETS};
+pub use registry::{CounterHandle, GaugeHandle, HistogramHandle, MetricsRegistry, SpanGuard};
+pub use snapshot::{CounterSnap, GaugeSnap, HistSnap, MetricsSnapshot};
+
+/// The process-wide registry every instrumentation site records into.
+/// Tests that need isolation build their own [`MetricsRegistry`].
+pub fn registry() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+/// Enable/disable all recording on the global registry.
+pub fn set_enabled(on: bool) {
+    registry().set_enabled(on);
+}
+
+pub fn enabled() -> bool {
+    registry().enabled()
+}
+
+/// `--verbose`: tail the event journal to stderr and journal spans too.
+pub fn set_verbose(on: bool) {
+    registry().journal().set_echo(on);
+    registry().journal().set_trace_spans(on);
+}
+
+/// Resolve a counter handle on the global registry.
+pub fn counter(name: &str) -> CounterHandle {
+    registry().counter(name)
+}
+
+pub fn counter_labeled(name: &str, labels: &[(&str, &str)]) -> CounterHandle {
+    registry().counter_labeled(name, labels)
+}
+
+/// Resolve a gauge handle on the global registry.
+pub fn gauge(name: &str) -> GaugeHandle {
+    registry().gauge(name)
+}
+
+pub fn gauge_labeled(name: &str, labels: &[(&str, &str)]) -> GaugeHandle {
+    registry().gauge_labeled(name, labels)
+}
+
+/// Resolve a histogram handle on the global registry.
+pub fn histogram(name: &str) -> HistogramHandle {
+    registry().histogram(name)
+}
+
+/// Start a stage span on the global registry.
+pub fn span(name: &'static str) -> SpanGuard {
+    registry().span(name)
+}
+
+/// Journal one structured event on the global registry.
+pub fn emit(ev: Event) {
+    registry().emit(ev);
+}
+
+/// Snapshot the global registry.
+pub fn snapshot() -> MetricsSnapshot {
+    registry().snapshot()
+}
+
+/// Serialize the global registry's current state to `path`: the typed
+/// snapshot as JSON plus its Prometheus text encoding, with optional
+/// extra sections (the tiered server folds its residency report in so
+/// it survives non-graceful exits).  Written atomically (tmp + rename).
+pub fn dump_metrics_file(
+    path: &std::path::Path,
+    extra: &[(&str, crate::util::json::Json)],
+) -> std::io::Result<()> {
+    let snap = snapshot();
+    let mut doc = crate::util::json::Json::obj();
+    doc.insert("uptime_ms", registry().uptime_ms());
+    doc.insert("metrics", snap.to_json());
+    doc.insert("prometheus", prometheus::encode(&snap));
+    for (k, v) in extra {
+        doc.insert(*k, v.clone());
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, crate::util::json::Json::Obj(doc).to_string_pretty())?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Counter on the global registry, resolved once per call site.
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<$crate::obs::CounterHandle> =
+            std::sync::OnceLock::new();
+        HANDLE.get_or_init(|| $crate::obs::counter($name))
+    }};
+}
+
+/// Gauge on the global registry, resolved once per call site.
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<$crate::obs::GaugeHandle> =
+            std::sync::OnceLock::new();
+        HANDLE.get_or_init(|| $crate::obs::gauge($name))
+    }};
+}
+
+/// Histogram on the global registry, resolved once per call site.
+#[macro_export]
+macro_rules! obs_hist {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<$crate::obs::HistogramHandle> =
+            std::sync::OnceLock::new();
+        HANDLE.get_or_init(|| $crate::obs::histogram($name))
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_cache_one_handle_per_site() {
+        let before = crate::obs_counter!("obs.self_test").get();
+        for _ in 0..3 {
+            crate::obs_counter!("obs.self_test").inc();
+        }
+        // global registry: other tests may run concurrently, so only
+        // assert on this site's own delta
+        assert!(crate::obs_counter!("obs.self_test").get() >= before + 3);
+        crate::obs_gauge!("obs.self_gauge").set(11);
+        crate::obs_hist!("obs.self_hist_ms").record(0.25);
+        assert!(crate::obs_hist!("obs.self_hist_ms").count() >= 1);
+    }
+}

@@ -1,0 +1,143 @@
+//! Prometheus text-format exposition for a [`MetricsSnapshot`]
+//! (DESIGN.md §12).
+//!
+//! Dotted metric names become underscore-mangled families under the
+//! `percache_` prefix: `router.wait_ms` → `percache_router_wait_ms`.
+//! Counters get the conventional `_total` suffix, histograms expand to
+//! the cumulative `_bucket{le=...}` / `_sum` / `_count` triplet, and
+//! labels render sorted so the output is byte-stable for tests.
+
+use std::fmt::Write as _;
+
+use super::metric::bucket_bounds;
+use super::snapshot::MetricsSnapshot;
+
+/// `router.wait_ms` → `percache_router_wait_ms`.
+pub fn family_name(name: &str) -> String {
+    let mangled: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    format!("percache_{mangled}")
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn fmt_bound(b: f64) -> String {
+    format!("{b:.6}")
+}
+
+/// Encode a snapshot in the Prometheus text exposition format.
+pub fn encode(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let mut last_family = String::new();
+    let mut type_line = |out: &mut String, fam: &str, kind: &str| {
+        if fam != last_family {
+            let _ = writeln!(out, "# TYPE {fam} {kind}");
+            last_family = fam.to_string();
+        }
+    };
+
+    for c in &snap.counters {
+        let fam = format!("{}_total", family_name(&c.name));
+        type_line(&mut out, &fam, "counter");
+        let _ = writeln!(out, "{fam}{} {}", label_block(&c.labels, None), c.value);
+    }
+    for g in &snap.gauges {
+        let fam = family_name(&g.name);
+        type_line(&mut out, &fam, "gauge");
+        let _ = writeln!(out, "{fam}{} {}", label_block(&g.labels, None), g.value);
+    }
+    let bounds = bucket_bounds();
+    for h in &snap.hists {
+        let fam = family_name(&h.name);
+        type_line(&mut out, &fam, "histogram");
+        let mut cumulative = 0u64;
+        for &(i, c) in &h.buckets {
+            cumulative += c;
+            let le = fmt_bound(bounds[i.min(bounds.len() - 1)]);
+            let _ = writeln!(
+                out,
+                "{fam}_bucket{} {cumulative}",
+                label_block(&h.labels, Some(("le", &le)))
+            );
+        }
+        let _ = writeln!(
+            out,
+            "{fam}_bucket{} {}",
+            label_block(&h.labels, Some(("le", "+Inf"))),
+            h.count
+        );
+        let _ = writeln!(
+            out,
+            "{fam}_sum{} {}",
+            label_block(&h.labels, None),
+            h.sum_ms
+        );
+        let _ = writeln!(
+            out,
+            "{fam}_count{} {}",
+            label_block(&h.labels, None),
+            h.count
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::MetricsRegistry;
+
+    #[test]
+    fn mangles_names_under_prefix() {
+        assert_eq!(family_name("router.wait_ms"), "percache_router_wait_ms");
+        assert_eq!(family_name("a-b.c"), "percache_a_b_c");
+    }
+
+    #[test]
+    fn encodes_all_three_kinds() {
+        let r = MetricsRegistry::new();
+        r.counter("router.admitted").add(7);
+        r.counter_labeled("router.rejected", &[("reason", "queue_full")])
+            .inc();
+        r.gauge("router.queue_depth").set(3);
+        r.histogram("router.wait_ms").record(2.0);
+        let text = encode(&r.snapshot());
+        assert!(text.contains("# TYPE percache_router_admitted_total counter"));
+        assert!(text.contains("percache_router_admitted_total 7"));
+        assert!(text.contains("percache_router_rejected_total{reason=\"queue_full\"} 1"));
+        assert!(text.contains("# TYPE percache_router_queue_depth gauge"));
+        assert!(text.contains("percache_router_queue_depth 3"));
+        assert!(text.contains("# TYPE percache_router_wait_ms histogram"));
+        assert!(text.contains("percache_router_wait_ms_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("percache_router_wait_ms_count 1"));
+        assert!(text.contains("percache_router_wait_ms_sum 2"));
+    }
+
+    #[test]
+    fn one_type_line_per_family() {
+        let r = MetricsRegistry::new();
+        r.counter_labeled("m.x", &[("t", "0")]).inc();
+        r.counter_labeled("m.x", &[("t", "1")]).inc();
+        let text = encode(&r.snapshot());
+        let type_lines = text
+            .lines()
+            .filter(|l| l.starts_with("# TYPE percache_m_x_total"))
+            .count();
+        assert_eq!(type_lines, 1);
+    }
+}

@@ -1,0 +1,293 @@
+//! Point-in-time metric snapshots and their JSON form (DESIGN.md §12).
+//!
+//! `MetricsRegistry::snapshot()` walks every series into a typed
+//! [`MetricsSnapshot`] that serializes via `util/json.rs` and parses
+//! back to an equal value, so periodic `--metrics-file` dumps can be
+//! diffed, replayed, and pretty-printed by `percache metrics`.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::metric::{quantile_from_buckets, N_BUCKETS};
+use super::registry::{MetricKey, MetricsRegistry};
+
+/// One counter series at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterSnap {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: u64,
+}
+
+/// One gauge series at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaugeSnap {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: i64,
+}
+
+/// One histogram series at snapshot time.  Buckets are sparse
+/// `(index, count)` pairs over the fixed log-scale bounds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnap {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub count: u64,
+    pub sum_ms: f64,
+    pub buckets: Vec<(usize, u64)>,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+impl HistSnap {
+    /// Dense bucket counts rebuilt from the sparse form.
+    pub fn dense_buckets(&self) -> [u64; N_BUCKETS] {
+        let mut dense = [0u64; N_BUCKETS];
+        for &(i, c) in &self.buckets {
+            if i < N_BUCKETS {
+                dense[i] = c;
+            }
+        }
+        dense
+    }
+
+    /// Quantile estimate recomputed from the snapshot's buckets.
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_from_buckets(&self.dense_buckets(), q)
+    }
+}
+
+/// Every series in the registry at one instant.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsSnapshot {
+    /// Registry uptime when the snapshot was taken, in milliseconds.
+    pub t_ms: f64,
+    pub counters: Vec<CounterSnap>,
+    pub gauges: Vec<GaugeSnap>,
+    pub hists: Vec<HistSnap>,
+}
+
+impl MetricsRegistry {
+    /// Walk every series into a typed snapshot (sorted by key, so two
+    /// snapshots of the same registry line up series-for-series).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot {
+            t_ms: self.uptime_ms(),
+            ..MetricsSnapshot::default()
+        };
+        self.visit(
+            |k, c| {
+                snap.counters.push(CounterSnap {
+                    name: k.name.clone(),
+                    labels: k.labels.clone(),
+                    value: c.get(),
+                });
+            },
+            |k, g| {
+                snap.gauges.push(GaugeSnap {
+                    name: k.name.clone(),
+                    labels: k.labels.clone(),
+                    value: g.get(),
+                });
+            },
+            |k, h| {
+                let counts = h.bucket_counts();
+                let buckets: Vec<(usize, u64)> = counts
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &c)| c > 0)
+                    .map(|(i, &c)| (i, c))
+                    .collect();
+                snap.hists.push(HistSnap {
+                    name: k.name.clone(),
+                    labels: k.labels.clone(),
+                    count: h.count(),
+                    sum_ms: h.sum_ms(),
+                    buckets,
+                    p50: quantile_from_buckets(&counts, 0.50),
+                    p99: quantile_from_buckets(&counts, 0.99),
+                });
+            },
+        );
+        snap
+    }
+}
+
+fn labels_to_json(labels: &[(String, String)]) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in labels {
+        o.insert(k.as_str(), v.as_str());
+    }
+    Json::Obj(o)
+}
+
+fn labels_from_json(j: &Json) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    if let Some(o) = j.as_obj() {
+        for (k, v) in o.iter() {
+            out.push((k.to_string(), v.as_str().unwrap_or("").to_string()));
+        }
+    }
+    out
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.insert("t_ms", self.t_ms);
+        let counters: Vec<Json> = self
+            .counters
+            .iter()
+            .map(|c| {
+                let mut o = Json::obj();
+                o.insert("name", c.name.as_str());
+                o.insert("labels", labels_to_json(&c.labels));
+                o.insert("value", c.value);
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("counters", Json::Arr(counters));
+        let gauges: Vec<Json> = self
+            .gauges
+            .iter()
+            .map(|g| {
+                let mut o = Json::obj();
+                o.insert("name", g.name.as_str());
+                o.insert("labels", labels_to_json(&g.labels));
+                o.insert("value", g.value);
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("gauges", Json::Arr(gauges));
+        let hists: Vec<Json> = self
+            .hists
+            .iter()
+            .map(|h| {
+                let mut o = Json::obj();
+                o.insert("name", h.name.as_str());
+                o.insert("labels", labels_to_json(&h.labels));
+                o.insert("count", h.count);
+                o.insert("sum_ms", h.sum_ms);
+                let buckets: Vec<Json> = h
+                    .buckets
+                    .iter()
+                    .map(|&(i, c)| Json::Arr(vec![Json::from(i), Json::from(c)]))
+                    .collect();
+                o.insert("buckets", Json::Arr(buckets));
+                o.insert("p50", h.p50);
+                o.insert("p99", h.p99);
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("hists", Json::Arr(hists));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Result<MetricsSnapshot> {
+        let t_ms = j.get("t_ms").as_f64().context("snapshot: t_ms")?;
+        let mut snap = MetricsSnapshot {
+            t_ms,
+            ..MetricsSnapshot::default()
+        };
+        for c in j.get("counters").as_arr().unwrap_or(&[]) {
+            snap.counters.push(CounterSnap {
+                name: c.get("name").as_str().context("counter: name")?.to_string(),
+                labels: labels_from_json(c.get("labels")),
+                value: c.get("value").as_i64().context("counter: value")? as u64,
+            });
+        }
+        for g in j.get("gauges").as_arr().unwrap_or(&[]) {
+            snap.gauges.push(GaugeSnap {
+                name: g.get("name").as_str().context("gauge: name")?.to_string(),
+                labels: labels_from_json(g.get("labels")),
+                value: g.get("value").as_i64().context("gauge: value")?,
+            });
+        }
+        for h in j.get("hists").as_arr().unwrap_or(&[]) {
+            let mut buckets = Vec::new();
+            for b in h.get("buckets").as_arr().unwrap_or(&[]) {
+                let i = b.idx(0).as_usize().context("hist bucket: index")?;
+                let c = b.idx(1).as_i64().context("hist bucket: count")? as u64;
+                buckets.push((i, c));
+            }
+            snap.hists.push(HistSnap {
+                name: h.get("name").as_str().context("hist: name")?.to_string(),
+                labels: labels_from_json(h.get("labels")),
+                count: h.get("count").as_i64().context("hist: count")? as u64,
+                sum_ms: h.get("sum_ms").as_f64().context("hist: sum_ms")?,
+                buckets,
+                p50: h.get("p50").as_f64().context("hist: p50")?,
+                p99: h.get("p99").as_f64().context("hist: p99")?,
+            });
+        }
+        Ok(snap)
+    }
+
+    /// Find one counter by family name (tests, CLI summaries).
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|c| c.name == name)
+            .map(|c| c.value)
+            .sum()
+    }
+
+    /// Find one gauge by family name (sums labeled series).
+    pub fn gauge_value(&self, name: &str) -> i64 {
+        self.gauges
+            .iter()
+            .filter(|g| g.name == name)
+            .map(|g| g.value)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_walks_all_series_sorted() {
+        let r = MetricsRegistry::new();
+        r.counter("b.second").inc();
+        r.counter("a.first").add(2);
+        r.gauge("g.depth").set(-3);
+        r.histogram("h.lat_ms").record(1.5);
+        let snap = r.snapshot();
+        let names: Vec<&str> = snap.counters.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["a.first", "b.second"], "BTreeMap order");
+        assert_eq!(snap.counter_value("a.first"), 2);
+        assert_eq!(snap.gauge_value("g.depth"), -3);
+        assert_eq!(snap.hists.len(), 1);
+        assert_eq!(snap.hists[0].count, 1);
+        assert!(snap.t_ms >= 0.0);
+    }
+
+    #[test]
+    fn hist_snap_quantile_matches_live() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram("q_ms");
+        for v in [0.5, 1.0, 2.0, 4.0, 8.0] {
+            h.record(v);
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.hists[0].quantile(0.5), h.quantile(0.5));
+        assert_eq!(snap.hists[0].p50, h.quantile(0.5));
+        assert_eq!(snap.hists[0].p99, h.quantile(0.99));
+    }
+
+    #[test]
+    fn labeled_series_round_trip() {
+        let r = MetricsRegistry::new();
+        r.counter_labeled("router.rejected", &[("reason", "queue_full")])
+            .add(4);
+        r.gauge_labeled("governor.shard_bytes", &[("tenant", "2")])
+            .set(4096);
+        let snap = r.snapshot();
+        let parsed = Json::parse(&snap.to_json().to_string()).unwrap();
+        let back = MetricsSnapshot::from_json(&parsed).unwrap();
+        assert_eq!(back, snap);
+    }
+}

@@ -133,6 +133,7 @@ impl MemoryGovernor {
         mut set: impl FnMut(TenantId, usize),
         force: bool,
     ) -> bool {
+        let _span = crate::obs::span("governor.rebalance_ms");
         let weights: Vec<(TenantId, f64)> =
             entries.iter().map(|&(t, u, _)| (t, u)).collect();
         let plan = self.plan_weights(&weights);
@@ -149,6 +150,7 @@ impl MemoryGovernor {
         });
         if !force && !moved {
             self.skipped += 1;
+            crate::obs_counter!("governor.rebalance_skipped").inc();
             return false;
         }
         // shrinks first so the global working set never overshoots
@@ -162,6 +164,15 @@ impl MemoryGovernor {
             }
         }
         self.rebalances += 1;
+        crate::obs_counter!("governor.rebalances").inc();
+        if crate::obs::enabled() {
+            let mut ev = crate::obs::Event::new("governor.rebalance");
+            for alloc in &plan {
+                let delta = alloc.bytes as f64 - current(alloc.tenant) as f64;
+                ev = ev.field(&format!("t{}_delta_bytes", alloc.tenant), delta);
+            }
+            crate::obs::emit(ev);
+        }
         true
     }
 

@@ -44,6 +44,24 @@ struct Slot {
     shard: Option<TenantShard>,
 }
 
+/// Numeric code for the per-tenant `tiering.residency` gauge
+/// (0 = hot, 1 = demoting, 2 = cold, 3 = hydrating).
+fn residency_code(r: Residency) -> i64 {
+    match r {
+        Residency::Hot => 0,
+        Residency::Demoting => 1,
+        Residency::Cold => 2,
+        Residency::Hydrating => 3,
+    }
+}
+
+fn note_residency(id: TenantId, r: Residency) {
+    if crate::obs::enabled() {
+        crate::obs::gauge_labeled("tiering.residency", &[("tenant", &format!("{id}"))])
+            .set(residency_code(r));
+    }
+}
+
 pub struct TenantRegistry {
     slots: Vec<Slot>,
     pub governor: MemoryGovernor,
@@ -259,6 +277,13 @@ impl TenantRegistry {
                     .map(|s| (s.id, self.boosted_utility(i, s), s.qkv_budget()))
             })
             .collect();
+        if crate::obs::enabled() {
+            for &(t, u, _) in &entries {
+                let tenant = format!("{t}");
+                crate::obs::gauge_labeled("governor.utility_milli", &[("tenant", &tenant)])
+                    .set((u * 1e3) as i64);
+            }
+        }
         let TenantRegistry { slots, governor, .. } = self;
         governor.rebalance_entries(
             &entries,
@@ -268,6 +293,11 @@ impl TenantRegistry {
                     .and_then(|sl| sl.shard.as_mut())
                 {
                     s.set_qkv_budget(bytes);
+                    if crate::obs::enabled() {
+                        let label = format!("{tenant}");
+                        crate::obs::gauge_labeled("governor.shard_bytes", &[("tenant", &label)])
+                            .set(bytes as i64);
+                    }
                 }
             },
             force,
@@ -350,8 +380,17 @@ impl TenantRegistry {
                 slot.shard = None;
                 slot.residency = Residency::Cold;
                 self.demotions += 1;
+                crate::obs_counter!("tiering.demotions").inc();
+                note_residency(id, Residency::Cold);
+                crate::obs::emit(
+                    crate::obs::Event::new("tenant.demoted")
+                        .tenant(id as usize)
+                        .field("freed_bytes", freed as f64),
+                );
                 // the freed budget flows to the remaining resident shards
                 self.rebalance_resident(true);
+                crate::obs_gauge!("tiering.resident_shards").set(self.resident_count() as i64);
+                crate::obs_gauge!("tiering.resident_bytes").set(self.resident_bytes() as i64);
                 Ok(freed)
             }
             Err(e) => {
@@ -410,7 +449,11 @@ impl TenantRegistry {
         slot.shard = Some(shard);
         slot.residency = Residency::Hot;
         self.hydrations += 1;
+        crate::obs_counter!("tiering.hydrations").inc();
+        note_residency(id, Residency::Hot);
         self.rebalance_resident(true);
+        crate::obs_gauge!("tiering.resident_shards").set(self.resident_count() as i64);
+        crate::obs_gauge!("tiering.resident_bytes").set(self.resident_bytes() as i64);
         Ok(())
     }
 

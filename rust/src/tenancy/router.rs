@@ -44,6 +44,17 @@ pub enum Rejection {
     UnknownTenant,
 }
 
+impl Rejection {
+    /// Stable label value for the `router.rejected{reason=...}` series.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Rejection::QueueFull => "queue_full",
+            Rejection::GlobalFull => "global_full",
+            Rejection::UnknownTenant => "unknown_tenant",
+        }
+    }
+}
+
 impl std::fmt::Display for Rejection {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -52,6 +63,17 @@ impl std::fmt::Display for Rejection {
             Rejection::UnknownTenant => write!(f, "unknown tenant"),
         }
     }
+}
+
+/// Count + journal one admission rejection (rejections are rare, so the
+/// labeled-series lookup off the hot path is fine).
+fn note_rejected(tenant: TenantId, why: Rejection) {
+    crate::obs::counter_labeled("router.rejected", &[("reason", why.label())]).inc();
+    crate::obs::emit(
+        crate::obs::Event::new("admission.rejected")
+            .tenant(tenant as usize)
+            .msg(why.label()),
+    );
 }
 
 /// Per-tenant queues + fair scheduler.
@@ -153,19 +175,23 @@ impl<T> Router<T> {
     pub fn try_push(&mut self, tenant: TenantId, item: T) -> Result<(), (Rejection, T)> {
         let Some(q) = self.queues.get_mut(tenant as usize) else {
             self.rejected += 1;
+            note_rejected(tenant, Rejection::UnknownTenant);
             return Err((Rejection::UnknownTenant, item));
         };
         if self.queued >= self.cfg.global_cap {
             self.rejected += 1;
+            note_rejected(tenant, Rejection::GlobalFull);
             return Err((Rejection::GlobalFull, item));
         }
         if q.len() >= self.cfg.queue_cap {
             self.rejected += 1;
+            note_rejected(tenant, Rejection::QueueFull);
             return Err((Rejection::QueueFull, item));
         }
         q.push_back(item);
         self.queued += 1;
         self.enqueued += 1;
+        crate::obs_counter!("router.admitted").inc();
         Ok(())
     }
 
@@ -368,18 +394,23 @@ pub fn run_tenant_loop_gated(
         }
         // completed hydrations make their tenants' queues poppable (the
         // callback also sees live queue depths — the queueing signal)
-        for t in poll_fn(&router.depths()) {
+        let depths = router.depths();
+        crate::obs_gauge!("router.queue_depth").set(depths.iter().sum::<usize>() as i64);
+        for t in poll_fn(&depths) {
             router.set_blocked(t, false);
         }
         // serve one request, picked fairly across tenants
         match router.pop() {
             Some((tenant, req)) => {
+                crate::obs_hist!("router.wait_ms")
+                    .record(req.submitted.elapsed().as_secs_f64() * 1e3);
                 let record = serve_fn(tenant, &req.query).unwrap_or_else(|e| {
                     let mut r = blank_record(req.id);
                     r.answer = format!("error: {e:#}");
                     r
                 });
                 let e2e_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+                crate::obs_hist!("router.e2e_ms").record(e2e_ms);
                 let _ = req.respond.send(Response {
                     id: req.id,
                     record,

@@ -14,7 +14,9 @@ use anyhow::Result;
 use crate::datasets::MultiTenantWorkload;
 use crate::embedding::hash_embed;
 use crate::llm::QkvTensor;
-use crate::metrics::{blank_record, ModelDims, QueryRecord, Recorder, ServePath, Stage};
+use crate::metrics::{
+    blank_record, record_query_obs, ModelDims, QueryRecord, Recorder, ServePath, Stage,
+};
 use crate::tokenizer::{fnv1a64, SEGMENT_TOKENS};
 
 use super::registry::TenantRegistry;
@@ -118,6 +120,7 @@ pub fn serve_one(
         rec.answer = crate::engine::tokens_to_text(&answer);
         shard.predictor.observe(query);
         shard.stats.note(ServePath::QaHit, full_prefill + decode_flops);
+        record_query_obs(&rec);
         return Ok(rec);
     }
 
@@ -165,6 +168,7 @@ pub fn serve_one(
     shard
         .stats
         .note(rec.path, (full_prefill + decode_flops).saturating_sub(rec.flops));
+    record_query_obs(&rec);
     Ok(rec)
 }
 

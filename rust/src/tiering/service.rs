@@ -15,9 +15,11 @@
 //! (`percache serve --tiering`).
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -25,7 +27,9 @@ use crate::config::TenancyConfig;
 use crate::metrics::QueryRecord;
 use crate::tenancy::router::run_tenant_loop_gated;
 use crate::tenancy::sim::{serve_one, SimConfig};
-use crate::tenancy::{RouterConfig, TenantId, TenantRegistry, TenantServerHandle};
+use crate::tenancy::{
+    HydrationSpec, RouterConfig, TenantId, TenantRegistry, TenantServerHandle,
+};
 use crate::tokenizer::fnv1a64;
 use crate::util::json::Json;
 
@@ -45,8 +49,12 @@ pub struct TieredServerConfig {
     /// Persistent registry base dir (the cold tier lives here).
     pub dir: PathBuf,
     pub n_tenants: usize,
-    /// Print demotion/hydration events (CLI demo).
+    /// Echo journal events to stderr (CLI demo / `--verbose`).
     pub log: bool,
+    /// Periodic metrics dump target (`--metrics-file`): the obs
+    /// snapshot plus the tiering report, rewritten from the idle path.
+    pub metrics_file: Option<PathBuf>,
+    pub metrics_interval_secs: u64,
 }
 
 struct State {
@@ -54,7 +62,11 @@ struct State {
     controller: TieringController,
     worker: HydrationWorker,
     sim: SimConfig,
-    log: bool,
+    /// Stall clocks for in-flight hydrations (started → installed).
+    hydration_started: HashMap<TenantId, Instant>,
+    metrics_file: Option<PathBuf>,
+    metrics_interval_secs: u64,
+    last_dump: Option<Instant>,
 }
 
 impl State {
@@ -68,6 +80,41 @@ impl State {
         ]
     }
 
+    /// Hand a hydration spec to the worker and start its stall clock.
+    /// `why` is the journal event kind ("hydration.started" for demand
+    /// misses, "prefetch.started" for forecast-driven warming).
+    fn submit_hydration(&mut self, spec: HydrationSpec, why: &'static str) {
+        let tenant = spec.tenant;
+        self.hydration_started.insert(tenant, Instant::now());
+        crate::obs::emit(crate::obs::Event::new(why).tenant(tenant as usize));
+        self.worker.submit(spec);
+    }
+
+    /// Record one hydration outcome: stall histogram + journal event.
+    fn note_hydrated(&mut self, tenant: TenantId, err: Option<String>) {
+        let stall_ms = self
+            .hydration_started
+            .remove(&tenant)
+            .map(|t| t.elapsed().as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        match err {
+            None => {
+                crate::obs_hist!("tiering.hydration_stall_ms").record(stall_ms);
+                crate::obs::emit(
+                    crate::obs::Event::new("hydration.finished")
+                        .tenant(tenant as usize)
+                        .field("stall_ms", stall_ms),
+                );
+            }
+            Some(msg) => crate::obs::emit(
+                crate::obs::Event::new("hydration.failed")
+                    .tenant(tenant as usize)
+                    .field("stall_ms", stall_ms)
+                    .msg(msg),
+            ),
+        }
+    }
+
     /// Feed the live queue depths into the registry (the backlog veto +
     /// governor boost) and install every hydration the worker finished;
     /// returns the tenants whose queues may unblock.
@@ -78,14 +125,12 @@ impl State {
             match built {
                 Ok(shard) => {
                     if self.registry.finish_hydration(tenant, shard).is_ok() {
-                        if self.log {
-                            println!("[tiering] tenant {tenant} hydrated");
-                        }
+                        self.note_hydrated(tenant, None);
                         ready.push(tenant);
                     }
                 }
                 Err(e) => {
-                    eprintln!("[tiering] tenant {tenant} hydration failed: {e:#}");
+                    self.note_hydrated(tenant, Some(format!("{e:#}")));
                     let _ = self.registry.abort_hydration(tenant);
                     // unblock so the queued requests drain through the
                     // synchronous fallback instead of waiting forever
@@ -108,11 +153,14 @@ impl State {
                     match self.worker.wait_one() {
                         Some((t, Ok(shard))) => {
                             self.registry.finish_hydration(t, shard)?;
+                            self.note_hydrated(t, None);
                         }
                         Some((t, Err(e))) => {
                             self.registry.abort_hydration(t)?;
+                            let msg = format!("{e:#}");
+                            self.note_hydrated(t, Some(msg.clone()));
                             if t == tenant {
-                                anyhow::bail!("hydration failed: {e:#}");
+                                anyhow::bail!("hydration failed: {msg}");
                             }
                         }
                         None => anyhow::bail!("hydration worker died"),
@@ -143,10 +191,7 @@ impl State {
             Some(Residency::Hydrating) => false,
             Some(Residency::Cold) => match self.registry.begin_hydration(tenant) {
                 Ok(spec) => {
-                    if self.log {
-                        println!("[tiering] tenant {tenant} cold — hydrating in background");
-                    }
-                    self.worker.submit(spec);
+                    self.submit_hydration(spec, "hydration.started");
                     false
                 }
                 Err(_) => true, // raced to Hot; serve normally
@@ -155,29 +200,77 @@ impl State {
         }
     }
 
-    /// One idle tick: run the controller (demotion + prefetch).
+    /// One idle tick: run the controller (demotion + prefetch), then
+    /// refresh the on-disk report + metrics dump so both survive a
+    /// non-graceful exit.
     fn idle(&mut self) {
+        let _span = crate::obs::span("tiering.tick_ms");
         match self.controller.tick(&mut self.registry) {
             Ok(report) => {
-                if self.log && !report.demoted.is_empty() {
-                    println!(
-                        "[tiering] tick {}: demoted {:?} (freed {} KB)",
-                        report.tick,
-                        report.demoted,
-                        report.freed_bytes / 1024
+                if !report.demoted.is_empty() {
+                    crate::obs::emit(
+                        crate::obs::Event::new("controller.demoted")
+                            .field("tick", report.tick as f64)
+                            .field("n", report.demoted.len() as f64)
+                            .field("freed_bytes", report.freed_bytes as f64),
                     );
                 }
                 for tenant in report.prefetch {
                     if let Ok(spec) = self.registry.begin_hydration(tenant) {
-                        if self.log {
-                            println!("[tiering] tenant {tenant} prefetching ahead of forecast");
-                        }
-                        self.worker.submit(spec);
+                        self.submit_hydration(spec, "prefetch.started");
                     }
                 }
             }
-            Err(e) => eprintln!("[tiering] controller tick failed: {e:#}"),
+            Err(e) => crate::obs::emit(
+                crate::obs::Event::new("controller.error").msg(format!("{e:#}")),
+            ),
         }
+        let _ = self.write_report();
+        self.maybe_dump_metrics();
+    }
+
+    /// The residency counters a demo/test reads back.
+    fn report_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("ticks", self.controller.tick_count());
+        o.insert("demotions", self.registry.demotions);
+        o.insert("hydrations", self.registry.hydrations);
+        o.insert("idle_demotions", self.controller.idle_demotions);
+        o.insert("pressure_demotions", self.controller.pressure_demotions);
+        o.insert("prefetches", self.controller.prefetches);
+        o.insert("resident_bytes", self.registry.resident_bytes());
+        o.insert("resident_count", self.registry.resident_count());
+        Json::Obj(o)
+    }
+
+    /// Rewrite `<dir>/tiering_report.json` (idle path + shutdown — not
+    /// only at shutdown, so the report survives a crash or SIGKILL).
+    fn write_report(&self) -> Result<()> {
+        let dir = self
+            .registry
+            .persist_dir()
+            .context("tiered registry is persistent")?;
+        std::fs::write(dir.join(REPORT_FILE), self.report_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Periodic `--metrics-file` dump from the idle path: the obs
+    /// snapshot (typed JSON + Prometheus text) with the tiering report
+    /// folded in.  The first tick writes immediately; later ticks
+    /// rewrite at the configured interval.
+    fn maybe_dump_metrics(&mut self) {
+        let Some(path) = self.metrics_file.clone() else {
+            return;
+        };
+        let due = match self.last_dump {
+            None => true,
+            Some(t) => t.elapsed().as_secs() >= self.metrics_interval_secs,
+        };
+        if !due {
+            return;
+        }
+        self.last_dump = Some(Instant::now());
+        let _ = crate::obs::dump_metrics_file(&path, &[("tiering", self.report_json())]);
     }
 
     /// Shutdown: make everything consistent on disk and leave the
@@ -188,29 +281,20 @@ impl State {
             match self.worker.wait_one() {
                 Some((t, Ok(shard))) => {
                     let _ = self.registry.finish_hydration(t, shard);
+                    self.note_hydrated(t, None);
                 }
-                Some((t, Err(_))) => {
+                Some((t, Err(e))) => {
                     let _ = self.registry.abort_hydration(t);
+                    self.note_hydrated(t, Some(format!("{e:#}")));
                 }
                 None => break,
             }
         }
         self.registry.save_all()?;
-        let mut o = Json::obj();
-        o.insert("ticks", self.controller.tick_count());
-        o.insert("demotions", self.registry.demotions);
-        o.insert("hydrations", self.registry.hydrations);
-        o.insert("idle_demotions", self.controller.idle_demotions);
-        o.insert("pressure_demotions", self.controller.pressure_demotions);
-        o.insert("prefetches", self.controller.prefetches);
-        o.insert("resident_bytes", self.registry.resident_bytes());
-        o.insert("resident_count", self.registry.resident_count());
-        let dir = self
-            .registry
-            .persist_dir()
-            .context("tiered registry is persistent")?
-            .clone();
-        std::fs::write(dir.join(REPORT_FILE), Json::Obj(o).to_string_pretty())?;
+        self.write_report()?;
+        if let Some(path) = &self.metrics_file {
+            let _ = crate::obs::dump_metrics_file(path, &[("tiering", self.report_json())]);
+        }
         Ok(())
     }
 }
@@ -231,6 +315,9 @@ pub fn spawn_tiered_server(cfg: TieredServerConfig) -> TenantServerHandle {
     let join = thread::Builder::new()
         .name("percache-tiered-server".into())
         .spawn(move || -> Result<()> {
+            if cfg.log {
+                crate::obs::set_verbose(true);
+            }
             let mut registry = TenantRegistry::open_or_create(&cfg.tenancy, cfg.dir.clone())?;
             while registry.len() < cfg.n_tenants {
                 registry.create_tenant()?;
@@ -242,7 +329,10 @@ pub fn spawn_tiered_server(cfg: TieredServerConfig) -> TenantServerHandle {
                 controller,
                 worker: HydrationWorker::spawn(),
                 sim: cfg.sim.clone(),
-                log: cfg.log,
+                hydration_started: HashMap::new(),
+                metrics_file: cfg.metrics_file.clone(),
+                metrics_interval_secs: cfg.metrics_interval_secs.max(1),
+                last_dump: None,
             });
             run_tenant_loop_gated(
                 rx,
@@ -291,6 +381,8 @@ mod tests {
             dir: dir.clone(),
             n_tenants: 2,
             log: false,
+            metrics_file: None,
+            metrics_interval_secs: 5,
         }
     }
 

@@ -1,0 +1,296 @@
+//! Integration tests for the telemetry subsystem (DESIGN.md §12):
+//! histogram bucket/quantile properties, concurrent-recording loss
+//! checks, snapshot JSON round-trips, the Prometheus text schema, and
+//! event-journal drain/replay.
+//!
+//! Every test that needs a disabled registry or exact counts builds its
+//! own local [`MetricsRegistry`] — the global registry's enabled flag
+//! is never toggled here, because the test harness runs in parallel.
+
+use std::sync::Arc;
+use std::thread;
+
+use percache::obs::metric::representative;
+use percache::obs::{
+    bucket_bounds, bucket_index, prometheus, Event, EventRecord, Journal, MetricsRegistry,
+    MetricsSnapshot,
+};
+use percache::testkit::{check, forall};
+use percache::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Histogram properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_samples_land_in_their_bucket() {
+    let bounds = bucket_bounds();
+    forall(
+        400,
+        // log-uniform over the full bucket range (~1 µs to ~270 s)
+        |rng| 1e-3 * 2f64.powf(rng.f32() as f64 * 28.0),
+        |&v| {
+            let i = bucket_index(v);
+            check(
+                v <= bounds[i] * (1.0 + 1e-12),
+                format!("{v} above its bucket bound {}", bounds[i]),
+            )?;
+            check(
+                i == 0 || v > bounds[i - 1],
+                format!("{v} at or below the previous bound {}", bounds[i - 1]),
+            )?;
+            // the representative must lie inside the same bucket
+            check(
+                bucket_index(representative(i)) == i,
+                format!("representative of bucket {i} escapes it"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_quantile_within_one_bucket_width_of_exact() {
+    forall(
+        150,
+        |rng| {
+            let n = rng.range(1, 200);
+            // keep samples above bounds[0] so bucket 0's one-sided
+            // representative cannot stretch the relative error
+            let vals: Vec<f64> = (0..n)
+                .map(|_| 2e-3 * 2f64.powf(rng.f32() as f64 * 23.0))
+                .collect();
+            let q = rng.f32() as f64;
+            (vals, q)
+        },
+        |(vals, q)| {
+            let r = MetricsRegistry::new();
+            let h = r.histogram("prop_ms");
+            for &v in vals {
+                h.record(v);
+            }
+            let mut sorted = vals.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let rank = ((*q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let exact = sorted[rank - 1];
+            let est = h.quantile(*q);
+            // estimate and exact share a bucket, and consecutive bounds
+            // differ by √2 — so the ratio is bounded by one bucket width
+            let lim = 2f64.sqrt() * 1.001;
+            let ratio = est / exact;
+            check(
+                (1.0 / lim..=lim).contains(&ratio),
+                format!("quantile q={q}: est {est} vs exact {exact} (ratio {ratio})"),
+            )
+        },
+    );
+}
+
+#[test]
+fn concurrent_recording_loses_nothing() {
+    const THREADS: usize = 8;
+    const PER: usize = 10_000;
+    let r = Arc::new(MetricsRegistry::new());
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let r = r.clone();
+        handles.push(thread::spawn(move || {
+            let c = r.counter("mt.count");
+            let g = r.gauge("mt.depth");
+            let h = r.histogram("mt.lat_ms");
+            for i in 0..PER {
+                c.inc();
+                g.add(1);
+                h.record(((t * PER + i) % 97) as f64 * 0.1 + 0.01);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = (THREADS * PER) as u64;
+    assert_eq!(r.counter("mt.count").get(), total, "lost counter increments");
+    assert_eq!(r.gauge("mt.depth").get(), total as i64, "lost gauge adds");
+    assert_eq!(r.histogram("mt.lat_ms").count(), total, "lost histogram samples");
+    let snap = r.snapshot();
+    let bucket_total: u64 = snap.hists[0].buckets.iter().map(|&(_, c)| c).sum();
+    assert_eq!(bucket_total, total, "bucket counts must sum to the sample count");
+    assert!(snap.hists[0].sum_ms > 0.0);
+}
+
+#[test]
+fn concurrent_journal_emissions_get_unique_seqs() {
+    const THREADS: usize = 8;
+    const PER: usize = 500;
+    let j = Arc::new(Journal::new());
+    j.set_capacity(2 * THREADS * PER);
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let j = j.clone();
+        handles.push(thread::spawn(move || {
+            for i in 0..PER {
+                j.emit(Event::new("tick").tenant(t).field("i", i as f64));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(j.emitted(), (THREADS * PER) as u64);
+    assert_eq!(j.dropped(), 0, "capacity was ample — nothing may drop");
+    let recs = j.snapshot_events();
+    assert_eq!(recs.len(), THREADS * PER);
+    for w in recs.windows(2) {
+        assert!(w[0].seq < w[1].seq, "duplicate or unsorted sequence numbers");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exposition: snapshot JSON + Prometheus text
+// ---------------------------------------------------------------------------
+
+/// A registry exercising every series kind, labeled and plain.
+fn populated_registry() -> MetricsRegistry {
+    let r = MetricsRegistry::new();
+    r.counter("router.admitted").add(5);
+    r.counter_labeled("router.rejected", &[("reason", "queue_full")])
+        .add(2);
+    r.counter_labeled("router.rejected", &[("reason", "global_full")])
+        .inc();
+    r.gauge("tiering.resident_bytes").set(12345);
+    r.gauge_labeled("governor.shard_bytes", &[("tenant", "1")])
+        .set(4096);
+    let h = r.histogram("engine.total_ms");
+    for v in [0.05, 0.4, 3.0, 7.0, 120.0] {
+        h.record(v);
+    }
+    r.histogram("tiering.hydration_stall_ms"); // registered but empty
+    r
+}
+
+#[test]
+fn snapshot_json_round_trip_is_lossless() {
+    let r = populated_registry();
+    let snap = r.snapshot();
+    let text = snap.to_json().to_string_pretty();
+    let back = MetricsSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, snap, "snapshot must survive JSON round-trip exactly");
+    // quantiles recomputed from the parsed sparse buckets agree
+    for (b, s) in back.hists.iter().zip(&snap.hists) {
+        assert_eq!(b.quantile(0.5), s.p50, "{}", s.name);
+        assert_eq!(b.quantile(0.99), s.p99, "{}", s.name);
+    }
+    // family lookups sum labeled series
+    assert_eq!(back.counter_value("router.rejected"), 3);
+    assert_eq!(back.gauge_value("governor.shard_bytes"), 4096);
+}
+
+#[test]
+fn prometheus_schema_and_counter_monotonicity() {
+    let r = populated_registry();
+    let s1 = r.snapshot();
+    let t1 = prometheus::encode(&s1);
+
+    // documented schema: percache_ prefix, _total on counters, TYPE
+    // lines, labeled series, cumulative le= buckets with +Inf
+    assert!(t1.contains("# TYPE percache_router_admitted_total counter"));
+    assert!(t1.contains("percache_router_admitted_total 5"));
+    assert!(t1.contains("percache_router_rejected_total{reason=\"queue_full\"} 2"));
+    assert!(t1.contains("percache_router_rejected_total{reason=\"global_full\"} 1"));
+    assert!(t1.contains("# TYPE percache_tiering_resident_bytes gauge"));
+    assert!(t1.contains("percache_tiering_resident_bytes 12345"));
+    assert!(t1.contains("percache_governor_shard_bytes{tenant=\"1\"} 4096"));
+    assert!(t1.contains("# TYPE percache_engine_total_ms histogram"));
+    assert!(t1.contains("percache_engine_total_ms_bucket{le=\"+Inf\"} 5"));
+    assert!(t1.contains("percache_engine_total_ms_count 5"));
+    for line in t1.lines() {
+        assert!(
+            line.starts_with("# TYPE percache_") || line.starts_with("percache_"),
+            "line outside the documented namespace: {line}"
+        );
+    }
+
+    // counters are monotone across successive snapshots
+    r.counter("router.admitted").add(3);
+    r.counter_labeled("router.rejected", &[("reason", "queue_full")])
+        .inc();
+    let s2 = r.snapshot();
+    for c1 in &s1.counters {
+        let c2 = s2
+            .counters
+            .iter()
+            .find(|c| c.name == c1.name && c.labels == c1.labels)
+            .expect("series must persist across snapshots");
+        assert!(c2.value >= c1.value, "counter went backwards: {}", c1.name);
+    }
+    assert!(prometheus::encode(&s2).contains("percache_router_admitted_total 8"));
+}
+
+#[test]
+fn metrics_dump_file_parses_back() {
+    // global registry — this test only records (it never toggles the
+    // enabled flag), so it is safe alongside the parallel suite
+    percache::obs::counter("obs_test.dump_marker").add(3);
+    let path = std::env::temp_dir().join(format!("percache_obs_dump_{}.json", std::process::id()));
+    percache::obs::dump_metrics_file(&path, &[("tiering", Json::from("ok"))]).unwrap();
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert!(j.get("uptime_ms").as_f64().unwrap() >= 0.0);
+    assert_eq!(j.get("tiering").as_str(), Some("ok"), "extra sections folded in");
+    let snap = MetricsSnapshot::from_json(j.get("metrics")).unwrap();
+    assert!(snap.counter_value("obs_test.dump_marker") >= 3);
+    let prom = j.get("prometheus").as_str().unwrap();
+    assert!(prom.contains("percache_obs_test_dump_marker_total"));
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// Event journal
+// ---------------------------------------------------------------------------
+
+#[test]
+fn journal_drains_and_replays_from_json() {
+    let j = Journal::new();
+    j.emit(Event::new("tenant.demoted").tenant(2).field("freed_bytes", 8192.0));
+    j.emit(Event::new("hydration.finished").tenant(2).field("stall_ms", 1.25));
+    j.emit(Event::new("admission.rejected").tenant(0).msg("queue_full"));
+
+    // replay: serialize the retained records, parse them back, compare
+    let dumped = j.to_json().to_string_pretty();
+    let parsed = Json::parse(&dumped).unwrap();
+    let replayed: Vec<EventRecord> = parsed
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|e| EventRecord::from_json(e).unwrap())
+        .collect();
+    assert_eq!(replayed, j.snapshot_events());
+
+    let drained = j.drain();
+    assert_eq!(drained.len(), 3);
+    assert_eq!(drained[0].kind, "tenant.demoted");
+    assert_eq!(drained[0].tenant, Some(2));
+    assert_eq!(drained[1].fields, vec![("stall_ms".to_string(), 1.25)]);
+    assert_eq!(drained[2].msg, "queue_full");
+    assert!(j.snapshot_events().is_empty(), "drain must empty the journal");
+    assert_eq!(j.emitted(), 3, "emitted count survives the drain");
+}
+
+#[test]
+fn disabling_a_local_registry_stops_all_recording() {
+    let r = MetricsRegistry::new();
+    let c = r.counter("q.count");
+    let h = r.histogram("q.lat_ms");
+    r.set_enabled(false);
+    c.inc();
+    h.record(1.0);
+    r.emit(Event::new("quiet").tenant(1));
+    let ms = r.span("q.span_ms").finish();
+    assert!(ms >= 0.0, "spans still measure while disabled");
+    let snap = r.snapshot();
+    assert_eq!(snap.counter_value("q.count"), 0);
+    assert_eq!(r.histogram("q.lat_ms").count(), 0);
+    assert_eq!(r.histogram("q.span_ms").count(), 0);
+    assert_eq!(r.journal().emitted(), 0);
+    r.set_enabled(true);
+    c.inc();
+    assert_eq!(r.counter("q.count").get(), 1, "handles observe re-enable");
+}
