@@ -1,0 +1,519 @@
+//! A lightweight Rust lexer for the `percache check` analysis pass.
+//!
+//! This is deliberately *not* a full Rust parser.  It produces a flat
+//! token stream (identifiers, numbers, string literals, punctuation)
+//! with line numbers, and collects comments separately so rules can
+//! scan for `// SAFETY:` contracts and `// percache-allow(...)`
+//! suppressions.  The token view is precise enough for the pattern
+//! matching our rules do (`.unwrap()`, `obs_hist!("name")`, `foo[i]`,
+//! `.lock()`) without the complexity of real parsing — the same
+//! hand-rolled-substrate philosophy as `util/json.rs`.
+//!
+//! Lexing corner cases handled because the crate's own sources hit
+//! them: nested block comments, raw strings (`r#"..."#`), byte
+//! strings, char literals vs. lifetimes after `'`, tuple-field access
+//! (`self.0.lock()` lexes `0` as a number without eating the dot),
+//! float exponents, and `..`/`..=` ranges.
+
+/// One lexical token kind.  String contents are kept verbatim
+/// (unescaped) — rules only need literal metric names, which never
+/// contain escapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`unwrap`, `fn`, `unsafe`, ...).
+    Ident(String),
+    /// Lifetime (`'a`) — kept distinct so `'x` is never mistaken for a char.
+    Lifetime(String),
+    /// Numeric literal, verbatim (`0`, `1_000`, `0xff`, `1e-3`).
+    Num(String),
+    /// String literal contents (without quotes / raw-string hashes).
+    Str(String),
+    /// Single punctuation character (`.`, `(`, `!`, ...).
+    Punct(char),
+}
+
+/// A token plus the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Tok,
+    pub line: usize,
+}
+
+/// A comment (line or block) with the 1-based line it starts on and
+/// its full text including the `//` / `/*` markers.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// Lex `src` into tokens and comments.  Never fails: anything
+/// unrecognized becomes a `Punct` and analysis proceeds — a best-effort
+/// scanner is the right trade for a linter over our own sources.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    Lexer::new(src).run()
+}
+
+struct Lexer<'a> {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+    src: &'a str,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Self {
+        Lexer {
+            chars: src.chars().collect(),
+            pos: 0,
+            line: 1,
+            src,
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, off: usize) -> Option<char> {
+        self.chars.get(self.pos + off).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+
+    fn run(mut self) -> (Vec<Token>, Vec<Comment>) {
+        let mut toks = Vec::new();
+        let mut comments = Vec::new();
+        while let Some(c) = self.peek() {
+            let line = self.line;
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek_at(1) == Some('/') {
+                comments.push(Comment {
+                    line,
+                    text: self.line_comment(),
+                });
+            } else if c == '/' && self.peek_at(1) == Some('*') {
+                comments.push(Comment {
+                    line,
+                    text: self.block_comment(),
+                });
+            } else if c == '"' {
+                let s = self.string_lit();
+                toks.push(Token {
+                    kind: Tok::Str(s),
+                    line,
+                });
+            } else if c == 'r' && matches!(self.peek_at(1), Some('"') | Some('#'))
+                && self.raw_string_ahead()
+            {
+                let s = self.raw_string_lit();
+                toks.push(Token {
+                    kind: Tok::Str(s),
+                    line,
+                });
+            } else if c == 'b' && self.peek_at(1) == Some('"') {
+                self.bump(); // b
+                let s = self.string_lit();
+                toks.push(Token {
+                    kind: Tok::Str(s),
+                    line,
+                });
+            } else if c == 'b' && self.peek_at(1) == Some('r') && self.byte_raw_string_ahead() {
+                self.bump(); // b
+                let s = self.raw_string_lit();
+                toks.push(Token {
+                    kind: Tok::Str(s),
+                    line,
+                });
+            } else if c == '\'' {
+                self.char_or_lifetime(&mut toks, line);
+            } else if c.is_ascii_digit() {
+                let n = self.number();
+                toks.push(Token {
+                    kind: Tok::Num(n),
+                    line,
+                });
+            } else if c == '_' || c.is_alphabetic() {
+                let id = self.ident();
+                toks.push(Token {
+                    kind: Tok::Ident(id),
+                    line,
+                });
+            } else {
+                self.bump();
+                toks.push(Token {
+                    kind: Tok::Punct(c),
+                    line,
+                });
+            }
+        }
+        (toks, comments)
+    }
+
+    fn line_comment(&mut self) -> String {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c == '\n' {
+                break;
+            }
+            self.bump();
+        }
+        self.chars[start..self.pos].iter().collect()
+    }
+
+    fn block_comment(&mut self) -> String {
+        let start = self.pos;
+        self.bump(); // '/'
+        self.bump(); // '*'
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(), self.peek_at(1)) {
+                (Some('/'), Some('*')) => {
+                    self.bump();
+                    self.bump();
+                    depth += 1;
+                }
+                (Some('*'), Some('/')) => {
+                    self.bump();
+                    self.bump();
+                    depth -= 1;
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => break,
+            }
+        }
+        self.chars[start..self.pos].iter().collect()
+    }
+
+    fn string_lit(&mut self) -> String {
+        self.bump(); // opening quote
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c == '\\' {
+                self.bump();
+                self.bump();
+            } else if c == '"' {
+                break;
+            } else {
+                self.bump();
+            }
+        }
+        let s: String = self.chars[start..self.pos].iter().collect();
+        self.bump(); // closing quote
+        s
+    }
+
+    /// True if the cursor (at `r`) starts a raw string: `r"` or `r#...#"`.
+    fn raw_string_ahead(&self) -> bool {
+        let mut off = 1;
+        while self.peek_at(off) == Some('#') {
+            off += 1;
+        }
+        self.peek_at(off) == Some('"')
+    }
+
+    /// True if the cursor (at `b`) starts a byte raw string: `br"` or `br#...#"`.
+    fn byte_raw_string_ahead(&self) -> bool {
+        let mut off = 2;
+        while self.peek_at(off) == Some('#') {
+            off += 1;
+        }
+        self.peek_at(off) == Some('"')
+    }
+
+    fn raw_string_lit(&mut self) -> String {
+        self.bump(); // r
+        let mut hashes = 0usize;
+        while self.peek() == Some('#') {
+            self.bump();
+            hashes += 1;
+        }
+        self.bump(); // opening quote
+        let start = self.pos;
+        let end;
+        'outer: loop {
+            match self.peek() {
+                Some('"') => {
+                    // candidate close: need `hashes` following '#'
+                    let mut ok = true;
+                    for i in 0..hashes {
+                        if self.peek_at(1 + i) != Some('#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        end = self.pos;
+                        self.bump(); // quote
+                        for _ in 0..hashes {
+                            self.bump();
+                        }
+                        break 'outer;
+                    }
+                    self.bump();
+                }
+                Some(_) => {
+                    self.bump();
+                }
+                None => {
+                    end = self.pos;
+                    break 'outer;
+                }
+            }
+        }
+        self.chars[start..end].iter().collect()
+    }
+
+    /// After a `'`: either a char literal (`'x'`, `'\n'`) or a
+    /// lifetime (`'a`, `'static`).  A backslash or a closing quote
+    /// right after the payload means char; otherwise lifetime.
+    fn char_or_lifetime(&mut self, toks: &mut Vec<Token>, line: usize) {
+        self.bump(); // '
+        if self.peek() == Some('\\') {
+            // escaped char literal
+            self.bump(); // backslash
+            self.bump(); // escaped char (enough for \n, \', \\, \0; \x.. and
+                         // \u{..} payloads lex as junk chars up to the close)
+            while let Some(c) = self.peek() {
+                self.bump();
+                if c == '\'' {
+                    break;
+                }
+            }
+            toks.push(Token {
+                kind: Tok::Punct('\''),
+                line,
+            });
+            return;
+        }
+        // collect ident-ish payload
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c == '_' || c.is_alphanumeric() {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        let payload: String = self.chars[start..self.pos].iter().collect();
+        if self.peek() == Some('\'') && self.pos - start <= 1 {
+            // 'x' — a char literal
+            self.bump();
+            toks.push(Token {
+                kind: Tok::Punct('\''),
+                line,
+            });
+        } else if payload.is_empty() {
+            // something like '(' as a char: ' ( ' — treat as char literal
+            self.bump(); // the char
+            if self.peek() == Some('\'') {
+                self.bump();
+            }
+            toks.push(Token {
+                kind: Tok::Punct('\''),
+                line,
+            });
+        } else {
+            toks.push(Token {
+                kind: Tok::Lifetime(payload),
+                line,
+            });
+        }
+    }
+
+    fn number(&mut self) -> String {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                self.bump();
+            } else if c == '.' {
+                // only part of the number if followed by a digit
+                // (so `self.0.lock` and `0..n` lex correctly)
+                match self.peek_at(1) {
+                    Some(d) if d.is_ascii_digit() => {
+                        self.bump();
+                    }
+                    _ => break,
+                }
+            } else if (c == '+' || c == '-')
+                && matches!(
+                    self.chars.get(self.pos.wrapping_sub(1)),
+                    Some('e') | Some('E')
+                )
+            {
+                // exponent sign: 1e-3
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.chars[start..self.pos].iter().collect()
+    }
+
+    fn ident(&mut self) -> String {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c == '_' || c.is_alphanumeric() {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.chars[start..self.pos].iter().collect()
+    }
+}
+
+impl Tok {
+    /// The identifier text, if this is an identifier.
+    pub fn ident(&self) -> Option<&str> {
+        match self {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// True if this token is the given punctuation character.
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self, Tok::Punct(p) if *p == c)
+    }
+
+    /// True if this token is the given identifier.
+    pub fn is_ident(&self, name: &str) -> bool {
+        matches!(self, Tok::Ident(s) if s == name)
+    }
+}
+
+// Keep `src` around for debugging even though rules use tokens only.
+impl<'a> std::fmt::Debug for Lexer<'a> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Lexer(pos={}, line={}, len={})", self.pos, self.line, self.src.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).0.into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn basic_tokens() {
+        let toks = kinds("fn main() { x.unwrap(); }");
+        assert!(toks.contains(&Tok::Ident("unwrap".into())));
+        assert!(toks.contains(&Tok::Punct('{')));
+    }
+
+    #[test]
+    fn tuple_field_access_keeps_dot() {
+        // self.0.lock() must lex as Ident(self) . Num(0) . Ident(lock) ( )
+        let toks = kinds("self.0.lock()");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Ident("self".into()),
+                Tok::Punct('.'),
+                Tok::Num("0".into()),
+                Tok::Punct('.'),
+                Tok::Ident("lock".into()),
+                Tok::Punct('('),
+                Tok::Punct(')'),
+            ]
+        );
+    }
+
+    #[test]
+    fn ranges_survive() {
+        let toks = kinds("0..n");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Num("0".into()),
+                Tok::Punct('.'),
+                Tok::Punct('.'),
+                Tok::Ident("n".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn floats_and_exponents() {
+        assert_eq!(kinds("1.5e-3"), vec![Tok::Num("1.5e-3".into())]);
+        assert_eq!(kinds("0xff_u8"), vec![Tok::Num("0xff_u8".into())]);
+    }
+
+    #[test]
+    fn strings_and_escapes() {
+        assert_eq!(
+            kinds(r#"("a.b", "q\"q")"#),
+            vec![
+                Tok::Punct('('),
+                Tok::Str("a.b".into()),
+                Tok::Punct(','),
+                Tok::Str("q\\\"q".into()),
+                Tok::Punct(')'),
+            ]
+        );
+    }
+
+    #[test]
+    fn raw_strings() {
+        assert_eq!(kinds(r##"r#"metric.name"#"##), vec![Tok::Str("metric.name".into())]);
+        assert_eq!(kinds(r#"r"plain""#), vec![Tok::Str("plain".into())]);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let toks = kinds("fn f<'a>(c: char) { let x = 'x'; }");
+        assert!(toks.contains(&Tok::Lifetime("a".into())));
+        // char literal reduced to a quote marker, not a lifetime
+        assert!(!toks.contains(&Tok::Lifetime("x".into())));
+    }
+
+    #[test]
+    fn comments_collected() {
+        let (toks, comments) = lex("// top\nfn f() {} /* block\nnested */\n");
+        assert_eq!(comments.len(), 2);
+        assert_eq!(comments[0].line, 1);
+        assert!(comments[0].text.starts_with("// top"));
+        assert!(comments[1].text.contains("nested"));
+        assert!(toks.iter().any(|t| t.kind.is_ident("fn")));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let (toks, comments) = lex("/* a /* b */ c */ fn f() {}");
+        assert_eq!(comments.len(), 1);
+        assert!(toks.iter().any(|t| t.kind.is_ident("fn")));
+    }
+
+    #[test]
+    fn line_numbers() {
+        let (toks, _) = lex("a\nb\n\nc");
+        let lines: Vec<usize> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn macro_call_shape() {
+        let toks = kinds(r#"crate::obs_hist!("engine.total_ms").record(v);"#);
+        let i = toks
+            .iter()
+            .position(|t| t.is_ident("obs_hist"))
+            .expect("obs_hist ident");
+        assert!(toks[i + 1].is_punct('!'));
+        assert!(toks[i + 2].is_punct('('));
+        assert_eq!(toks[i + 3], Tok::Str("engine.total_ms".into()));
+    }
+}

@@ -1,0 +1,284 @@
+//! `percache check` — a project-specific static analysis pass over the
+//! crate's own sources (DESIGN.md §13).
+//!
+//! Zero dependencies, hand-rolled like `util/json.rs` and `testkit`:
+//! a lightweight lexer ([`lexer`]), a per-file source model
+//! ([`source`]) and four rules ([`rules`]) grounded in hazards this
+//! codebase actually has — serve-path panics, lock-order cycles,
+//! metric-name drift against DESIGN.md §12, and undocumented
+//! `unsafe`.  Findings can be suppressed inline with
+//! `// percache-allow(<rule>): <justification>` placed on or directly
+//! above the offending line; an allow with an empty justification is
+//! itself a finding.
+//!
+//! The pass is wired as `percache check [--json reports/ANALYSIS.json]`
+//! and gates CI: any finding is a non-zero exit.
+
+pub mod lexer;
+pub mod rules;
+pub mod source;
+
+use crate::util::json::{Json, JsonObj};
+use source::SourceFile;
+use std::path::{Path, PathBuf};
+
+pub const RULE_PANIC_PATH: &str = "panic_path";
+pub const RULE_LOCK_ORDER: &str = "lock_order";
+pub const RULE_METRICS_SCHEMA: &str = "metrics_schema";
+pub const RULE_UNSAFE_AUDIT: &str = "unsafe_audit";
+pub const RULE_ALLOW_SYNTAX: &str = "allow_syntax";
+
+/// All rule names, for allow-comment validation.
+pub const ALL_RULES: &[&str] = &[
+    RULE_PANIC_PATH,
+    RULE_LOCK_ORDER,
+    RULE_METRICS_SCHEMA,
+    RULE_UNSAFE_AUDIT,
+];
+
+/// One diagnostic produced by a rule.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, file: &str, line: usize, message: String) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            message,
+        }
+    }
+
+    /// `file:line: [rule] message` — the human diagnostic line.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The result of one analysis run.
+pub struct Report {
+    /// Findings that survived allow-suppression, sorted by file/line.
+    pub findings: Vec<Finding>,
+    /// Number of findings suppressed by `percache-allow` comments.
+    pub suppressed: usize,
+    /// Number of files analysed.
+    pub files: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable findings JSON (composes with the `reports/`
+    /// convention: a top-level object with a versioned schema).
+    pub fn to_json(&self) -> Json {
+        let mut root = JsonObj::new();
+        root.insert("schema", Json::Str("percache.analysis/v1".to_string()));
+        root.insert("files_analyzed", Json::Num(self.files as f64));
+        root.insert("suppressed", Json::Num(self.suppressed as f64));
+        root.insert("finding_count", Json::Num(self.findings.len() as f64));
+        let list = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = JsonObj::new();
+                o.insert("rule", Json::Str(f.rule.to_string()));
+                o.insert("file", Json::Str(f.file.clone()));
+                o.insert("line", Json::Num(f.line as f64));
+                o.insert("message", Json::Str(f.message.clone()));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("findings", Json::Arr(list));
+        Json::Obj(root)
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, returning
+/// `(abs_path, rel_path)` pairs sorted by relative path.
+fn collect_sources(root: &Path) -> std::io::Result<Vec<(PathBuf, String)>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.push((path, rel));
+            }
+        }
+    }
+    out.sort_by(|a, b| a.1.cmp(&b.1));
+    Ok(out)
+}
+
+/// Analyse the source tree at `src_root` against the design doc at
+/// `design_path`.  This is the whole pass: load, run rules, apply
+/// allow-suppression, sort.
+pub fn analyze(src_root: &Path, design_path: &Path) -> anyhow::Result<Report> {
+    let sources = collect_sources(src_root)
+        .map_err(|e| anyhow::anyhow!("reading sources under {}: {e}", src_root.display()))?;
+    anyhow::ensure!(
+        !sources.is_empty(),
+        "no .rs files under {}",
+        src_root.display()
+    );
+    let design = std::fs::read_to_string(design_path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", design_path.display()))?;
+    let design_rel = design_path
+        .file_name()
+        .map(|n| n.to_string_lossy().to_string())
+        .unwrap_or_else(|| design_path.display().to_string());
+
+    let mut files = Vec::with_capacity(sources.len());
+    for (abs, rel) in &sources {
+        let text = std::fs::read_to_string(abs)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", abs.display()))?;
+        files.push(SourceFile::parse(&abs.to_string_lossy(), rel, &text));
+    }
+    Ok(run_rules(&files, &design, &design_rel))
+}
+
+/// Run every rule over pre-parsed files (separated from [`analyze`] so
+/// fixture tests can drive the engine on in-memory sources).
+pub fn run_rules(files: &[SourceFile], design: &str, design_rel: &str) -> Report {
+    let mut raw: Vec<Finding> = Vec::new();
+    for f in files {
+        raw.extend(rules::panic_path::check(f));
+        raw.extend(rules::unsafe_audit::check(f));
+    }
+    raw.extend(rules::lock_order::check_files(files));
+    raw.extend(rules::metrics_schema::check_files(files, design, design_rel));
+
+    // allow-suppression: an allow for rule R on line L suppresses R
+    // findings at L and L+1 in the same file.  Doc-side findings
+    // (anchored in DESIGN.md) cannot be allowed — fix the doc instead.
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for finding in raw {
+        let allowed = files
+            .iter()
+            .find(|f| f.rel == finding.file)
+            .map(|f| {
+                f.allows.iter().any(|a| {
+                    a.rule == finding.rule
+                        && !a.justification.is_empty()
+                        && (a.line == finding.line || a.line + 1 == finding.line)
+                })
+            })
+            .unwrap_or(false);
+        if allowed {
+            suppressed += 1;
+        } else {
+            findings.push(finding);
+        }
+    }
+
+    // allow hygiene: unknown rule names and missing justifications are
+    // findings themselves, so suppressions stay auditable.
+    for f in files {
+        for a in &f.allows {
+            if !ALL_RULES.contains(&a.rule.as_str()) {
+                findings.push(Finding::new(
+                    RULE_ALLOW_SYNTAX,
+                    &f.rel,
+                    a.line,
+                    format!("percache-allow names unknown rule `{}`", a.rule),
+                ));
+            } else if a.justification.is_empty() {
+                findings.push(Finding::new(
+                    RULE_ALLOW_SYNTAX,
+                    &f.rel,
+                    a.line,
+                    format!("percache-allow({}) requires a justification after `:`", a.rule),
+                ));
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Report {
+        findings,
+        suppressed,
+        files: files.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_design() -> &'static str {
+        "## §12 Telemetry\n| `m.ok_total`, `m.lat_ms` | counter |\n"
+    }
+
+    fn run_on(files: &[(&str, &str)]) -> Report {
+        let parsed: Vec<SourceFile> = files
+            .iter()
+            .map(|(rel, src)| SourceFile::parse(rel, rel, src))
+            .collect();
+        run_rules(&parsed, mini_design(), "DESIGN.md")
+    }
+
+    #[test]
+    fn allow_suppresses_and_counts() {
+        let src = "fn f() {\n    // percache-allow(panic_path): startup must die loudly\n    \
+                   x.unwrap();\n}";
+        let ok_metrics = "fn g() { crate::obs_counter!(\"m.ok_total\").inc(); \
+                          crate::obs_hist!(\"m.lat_ms\").record(1.0); }";
+        let r = run_on(&[("server/mod.rs", src), ("m.rs", ok_metrics)]);
+        assert!(r.is_clean(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn allow_without_justification_is_a_finding() {
+        let src = "fn f() {\n    // percache-allow(panic_path):\n    x.unwrap();\n}";
+        let ok_metrics = "fn g() { crate::obs_counter!(\"m.ok_total\").inc(); \
+                          crate::obs_hist!(\"m.lat_ms\").record(1.0); }";
+        let r = run_on(&[("server/mod.rs", src), ("m.rs", ok_metrics)]);
+        // the unwrap stays unsuppressed AND the empty allow is flagged
+        assert_eq!(r.findings.len(), 2, "{:?}", r.findings);
+        assert!(r.findings.iter().any(|f| f.rule == RULE_ALLOW_SYNTAX));
+        assert!(r.findings.iter().any(|f| f.rule == RULE_PANIC_PATH));
+    }
+
+    #[test]
+    fn unknown_rule_name_flagged() {
+        let src = "// percache-allow(no_such_rule): whatever\nfn f() {}";
+        let ok_metrics = "fn g() { crate::obs_counter!(\"m.ok_total\").inc(); \
+                          crate::obs_hist!(\"m.lat_ms\").record(1.0); }";
+        let r = run_on(&[("cache/mod.rs", src), ("m.rs", ok_metrics)]);
+        assert_eq!(r.findings.len(), 1);
+        assert!(r.findings[0].message.contains("no_such_rule"));
+    }
+
+    #[test]
+    fn findings_sorted_and_json_shaped() {
+        let bad = "fn f() { b.unwrap(); }\nfn g() { a.unwrap(); }";
+        let ok_metrics = "fn g() { crate::obs_counter!(\"m.ok_total\").inc(); \
+                          crate::obs_hist!(\"m.lat_ms\").record(1.0); }";
+        let r = run_on(&[("server/mod.rs", bad), ("m.rs", ok_metrics)]);
+        assert_eq!(r.findings.len(), 2);
+        assert!(r.findings[0].line < r.findings[1].line);
+        let js = r.to_json().to_string();
+        assert!(js.contains("percache.analysis/v1"));
+        assert!(js.contains("panic_path"));
+    }
+}

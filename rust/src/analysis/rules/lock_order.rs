@@ -1,0 +1,487 @@
+//! Rule `lock_order`: build the cross-module lock acquisition graph
+//! and report cycles as potential deadlocks.
+//!
+//! For each function we extract lock acquisitions — `.lock()`,
+//! zero-argument `.read()` / `.write()`, and the `util::sync`
+//! recovery helpers (`lock_or_recover` / `read_or_recover` /
+//! `write_or_recover`) — and the token span over which each guard is
+//! held.  When lock B is acquired strictly inside lock A's guard
+//! scope, we add a directed edge A→B.  A cycle in the resulting
+//! digraph means two call paths can interleave acquisitions in
+//! opposite orders — the classic deadlock shape.
+//!
+//! Lock identity is approximated from the receiver expression:
+//! `module_stem::receiver_tail` (e.g. `journal::stripes`), except
+//! receivers rooted at an UPPERCASE identifier (statics like
+//! `REGISTRY`), which keep the bare name so the same global lock
+//! unifies across files — that is what makes the graph cross-module.
+//!
+//! Guard scope: `let g = x.lock();` holds to the end of the enclosing
+//! block; a guard used as a temporary (`x.lock().push(..)`) holds to
+//! the end of the statement — the next `;` at the same depth — or
+//! through the `{...}` block when the statement is an `if let`/`for`/
+//! `while let` head (scrutinee temporaries live for the whole block).
+
+use crate::analysis::lexer::{Tok, Token};
+use crate::analysis::source::SourceFile;
+use crate::analysis::{Finding, RULE_LOCK_ORDER};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One acquisition site inside a function.
+struct Acq {
+    /// Canonical lock id (`file_stem::receiver` or bare static name).
+    id: String,
+    /// Token index of the acquiring method/function ident.
+    tok: usize,
+    /// Token index one past the end of the guard's scope.
+    scope_end: usize,
+    line: usize,
+}
+
+/// An edge in the global lock graph, with one witness site.
+pub struct Edge {
+    pub from: String,
+    pub to: String,
+    pub file: String,
+    pub line: usize,
+}
+
+const ACQ_METHODS: &[&str] = &["lock", "read", "write"];
+const ACQ_HELPERS: &[&str] = &["lock_or_recover", "read_or_recover", "write_or_recover"];
+
+pub fn check_files(files: &[SourceFile]) -> Vec<Finding> {
+    let edges = collect_edges(files);
+    report_cycles(&edges)
+}
+
+fn collect_edges(files: &[SourceFile]) -> Vec<Edge> {
+    let mut edges = Vec::new();
+    for file in files {
+        let stem = file
+            .rel
+            .rsplit('/')
+            .next()
+            .unwrap_or(&file.rel)
+            .trim_end_matches(".rs")
+            .to_string();
+        for f in &file.fns {
+            if file.in_test(f.body_start) {
+                continue;
+            }
+            let acqs = find_acquisitions(file, &stem, f.body_start, f.body_end);
+            for (i, a) in acqs.iter().enumerate() {
+                for b in acqs.iter().skip(i + 1) {
+                    if b.tok > a.tok && b.tok < a.scope_end && a.id != b.id {
+                        edges.push(Edge {
+                            from: a.id.clone(),
+                            to: b.id.clone(),
+                            file: file.rel.clone(),
+                            line: b.line,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Scan a function body for lock acquisitions and compute guard scopes.
+fn find_acquisitions(file: &SourceFile, stem: &str, start: usize, end: usize) -> Vec<Acq> {
+    let toks = &file.tokens;
+    let mut out = Vec::new();
+    let mut i = start;
+    while i < end {
+        let Some(name) = toks[i].kind.ident() else {
+            i += 1;
+            continue;
+        };
+        let open = i + 1;
+        let is_call = toks.get(open).map(|t| t.kind.is_punct('(')).unwrap_or(false);
+        if !is_call {
+            i += 1;
+            continue;
+        }
+        let method = ACQ_METHODS.contains(&name) && i > 0 && toks[i - 1].kind.is_punct('.');
+        let helper = ACQ_HELPERS.contains(&name);
+        if !method && !helper {
+            i += 1;
+            continue;
+        }
+        // zero-argument check for .read()/.write() (to skip io::Read /
+        // fmt writes like file.write(buf)); .lock() on std Mutex is
+        // also zero-arg.  Helpers take exactly the lock reference.
+        let close = match file.matching(open) {
+            Some(c) => c,
+            None => {
+                i += 1;
+                continue;
+            }
+        };
+        if method && close != open + 1 {
+            i += 1;
+            continue; // has arguments — not a std lock acquisition
+        }
+        let id = if method {
+            receiver_id(toks, i - 1, stem)
+        } else {
+            // helper: lock_or_recover(&self.q) / read_or_recover(&SHARED)
+            argument_id(toks, open, close, stem)
+        };
+        let Some(id) = id else {
+            i += 1;
+            continue;
+        };
+        let scope_end = guard_scope_end(file, i, close, end);
+        out.push(Acq {
+            id,
+            tok: i,
+            scope_end,
+            line: toks[i].line,
+        });
+        i = close + 1;
+    }
+    out
+}
+
+/// Walk backwards from the `.` before the acquiring method to build
+/// the receiver id.  Collects `ident`/`Num` segments joined by dots,
+/// jumping over `[...]` index groups and `(...)` call argument lists.
+fn receiver_id(toks: &[Token], mut i: usize, stem: &str) -> Option<String> {
+    // i points at the '.'; walk left
+    let mut segs: Vec<String> = Vec::new();
+    loop {
+        if i == 0 {
+            break;
+        }
+        i -= 1;
+        match &toks[i].kind {
+            Tok::Ident(s) => {
+                segs.push(s.clone());
+                // continue only through `.` or `::`
+                if i >= 1 && toks[i - 1].kind.is_punct('.') {
+                    i -= 1; // consume the dot, loop continues
+                } else if i >= 2 && toks[i - 1].kind.is_punct(':') && toks[i - 2].kind.is_punct(':')
+                {
+                    i -= 2;
+                } else {
+                    break;
+                }
+            }
+            Tok::Num(_) => {
+                segs.push("field".to_string());
+                if i >= 1 && toks[i - 1].kind.is_punct('.') {
+                    i -= 1;
+                } else {
+                    break;
+                }
+            }
+            Tok::Punct(']') | Tok::Punct(')') => {
+                // jump to the matching opener; the group contributes
+                // nothing to the id, but the expression continues left
+                let mut depth = 1usize;
+                let close_ch = if toks[i].kind.is_punct(']') { ']' } else { ')' };
+                let open_ch = if close_ch == ']' { '[' } else { '(' };
+                while i > 0 && depth > 0 {
+                    i -= 1;
+                    if toks[i].kind.is_punct(close_ch) {
+                        depth += 1;
+                    } else if toks[i].kind.is_punct(open_ch) {
+                        depth -= 1;
+                    }
+                }
+                // after the opener, expect an ident (vec name / fn name)
+                // on its left — loop naturally continues from here
+            }
+            _ => break,
+        }
+    }
+    finish_id(segs, stem)
+}
+
+/// Extract a lock id from a helper call's argument tokens:
+/// `lock_or_recover(&self.stripes[k])` → receiver walk from the close.
+fn argument_id(toks: &[Token], open: usize, close: usize, stem: &str) -> Option<String> {
+    if close <= open + 1 {
+        return None;
+    }
+    // Walk backwards from the token before `)` the same way as a
+    // method receiver — the argument's trailing path is the lock.
+    receiver_id_from_end(toks, close, stem)
+}
+
+fn receiver_id_from_end(toks: &[Token], close: usize, stem: &str) -> Option<String> {
+    // Reuse receiver_id by treating `close` (the `)`) position like the
+    // dot: walk left from close-1... but receiver_id expects i at a
+    // separator.  Simplest: synthesize by starting at `close` which the
+    // backward walker treats as a group only if it *is* ')' — instead
+    // start the generic walk at the last token of the argument.
+    receiver_id(toks, close, stem)
+}
+
+fn finish_id(mut segs: Vec<String>, stem: &str) -> Option<String> {
+    if segs.is_empty() {
+        return None;
+    }
+    segs.reverse();
+    // drop leading `self` / `crate` / `super` noise
+    while segs
+        .first()
+        .map(|s| s == "self" || s == "crate" || s == "super")
+        .unwrap_or(false)
+    {
+        segs.remove(0);
+    }
+    if segs.is_empty() {
+        return None;
+    }
+    let root_is_static = segs[0].chars().all(|c| c.is_ascii_uppercase() || c == '_');
+    let tail = segs.join(".");
+    if root_is_static {
+        Some(tail) // global: unify across files
+    } else {
+        Some(format!("{stem}::{tail}"))
+    }
+}
+
+/// Compute where the guard acquired at `acq_tok` stops being held.
+fn guard_scope_end(file: &SourceFile, acq_tok: usize, call_close: usize, fn_end: usize) -> usize {
+    let toks = &file.tokens;
+    // find the start of the enclosing statement: scan left for `;` or
+    // `{` at the same depth; check whether the statement begins `let`.
+    let mut j = acq_tok;
+    let mut depth = 0i32;
+    let mut stmt_start = 0usize;
+    while j > 0 {
+        j -= 1;
+        match toks[j].kind {
+            Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => depth += 1,
+            Tok::Punct('(') | Tok::Punct('[') => {
+                if depth == 0 {
+                    // we're inside a call's argument list — statement
+                    // boundary search continues outside it; treat the
+                    // opener's left as the boundary region
+                    stmt_start = j + 1;
+                    break;
+                }
+                depth -= 1;
+            }
+            Tok::Punct('{') => {
+                if depth == 0 {
+                    stmt_start = j + 1;
+                    break;
+                }
+                depth -= 1;
+            }
+            Tok::Punct(';') => {
+                if depth == 0 {
+                    stmt_start = j + 1;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let is_let = toks
+        .get(stmt_start)
+        .map(|t| t.kind.is_ident("let"))
+        .unwrap_or(false);
+    if is_let {
+        // guard bound to a name: held to the end of the enclosing block
+        return enclosing_block_end(file, acq_tok).unwrap_or(fn_end);
+    }
+    // temporary: held to the next `;` at depth 0, or through a `{...}`
+    // block if one opens first (if-let / while-let / for / match heads)
+    let mut k = call_close + 1;
+    let mut d = 0i32;
+    while k < fn_end {
+        match toks[k].kind {
+            Tok::Punct('(') | Tok::Punct('[') => d += 1,
+            Tok::Punct(')') | Tok::Punct(']') => d -= 1,
+            Tok::Punct(';') if d == 0 => return k,
+            Tok::Punct('{') if d == 0 => {
+                // scrutinee temporary lives through the block
+                return file.matching(k).unwrap_or(fn_end);
+            }
+            Tok::Punct('}') if d == 0 => return k, // end of expr block
+            _ => {}
+        }
+        k += 1;
+    }
+    fn_end
+}
+
+/// The `}` closing the innermost block containing `tok`.
+fn enclosing_block_end(file: &SourceFile, tok: usize) -> Option<usize> {
+    let toks = &file.tokens;
+    let mut depth = 0i32;
+    let mut k = tok;
+    while k > 0 {
+        k -= 1;
+        match toks[k].kind {
+            Tok::Punct('}') => depth += 1,
+            Tok::Punct('{') => {
+                if depth == 0 {
+                    return file.matching(k);
+                }
+                depth -= 1;
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// DFS cycle detection over the edge list; reports each cycle once,
+/// anchored at its lexically-first witness edge.
+fn report_cycles(edges: &[Edge]) -> Vec<Finding> {
+    let mut adj: BTreeMap<&str, Vec<&Edge>> = BTreeMap::new();
+    for e in edges {
+        adj.entry(&e.from).or_default().push(e);
+    }
+    let mut findings = Vec::new();
+    let mut reported: BTreeSet<String> = BTreeSet::new();
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for &start in &nodes {
+        let mut stack: Vec<(&str, Vec<&Edge>)> = vec![(start, Vec::new())];
+        let mut visited: BTreeSet<&str> = BTreeSet::new();
+        while let Some((node, path)) = stack.pop() {
+            if let Some(outs) = adj.get(node) {
+                for &e in outs {
+                    if e.to == start {
+                        // cycle closed
+                        let mut cyc: Vec<&str> = path.iter().map(|p| p.from.as_str()).collect();
+                        cyc.push(node);
+                        cyc.push(&e.to);
+                        // canonical key: sorted node set
+                        let mut key_nodes: Vec<&str> = cyc.clone();
+                        key_nodes.sort_unstable();
+                        key_nodes.dedup();
+                        let key = key_nodes.join(" ");
+                        if reported.insert(key) {
+                            let witness = path.first().copied().unwrap_or(e);
+                            findings.push(Finding::new(
+                                RULE_LOCK_ORDER,
+                                &witness.file,
+                                witness.line,
+                                format!(
+                                    "potential deadlock: lock-order cycle {}",
+                                    cyc.join(" -> ")
+                                ),
+                            ));
+                        }
+                    } else if !path.iter().any(|p| p.from == e.to) && visited.insert(e.to.as_str())
+                    {
+                        let mut next = path.clone();
+                        next.push(e);
+                        stack.push((e.to.as_str(), next));
+                    }
+                }
+            }
+        }
+    }
+    findings
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edges_of(files: &[(&str, &str)]) -> Vec<(String, String)> {
+        let parsed: Vec<SourceFile> = files
+            .iter()
+            .map(|(rel, src)| SourceFile::parse(rel, rel, src))
+            .collect();
+        collect_edges(&parsed)
+            .into_iter()
+            .map(|e| (e.from, e.to))
+            .collect()
+    }
+
+    #[test]
+    fn nested_let_guards_make_edge() {
+        let src = "fn f(&self) { let a = self.alpha.lock(); let b = self.beta.lock(); \
+                   use_both(a, b); }";
+        let es = edges_of(&[("m.rs", src)]);
+        assert_eq!(es, vec![("m::alpha".to_string(), "m::beta".to_string())]);
+    }
+
+    #[test]
+    fn sequential_temporaries_no_edge() {
+        // guard dropped at each `;` — no nesting
+        let src = "fn f(&self) { self.alpha.lock().push(1); self.beta.lock().push(2); }";
+        assert!(edges_of(&[("m.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn read_then_write_same_lock_no_edge() {
+        // same id ⇒ no edge (reader/writer upgrade is a different bug
+        // class, and our registry does read-drop-then-write correctly)
+        let src = "fn f(&self) { if let Some(x) = self.map.read().get(k) { return x; } \
+                   self.map.write().insert(k, v); }";
+        assert!(edges_of(&[("m.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn statics_unify_across_files() {
+        let a = "fn f() { let g = LOCK_A.lock(); LOCK_B.lock().touch(); drop(g); }";
+        let b = "fn g() { let h = LOCK_B.lock(); LOCK_A.lock().touch(); drop(h); }";
+        let es = edges_of(&[("a.rs", a), ("b.rs", b)]);
+        assert!(es.contains(&("LOCK_A".to_string(), "LOCK_B".to_string())));
+        assert!(es.contains(&("LOCK_B".to_string(), "LOCK_A".to_string())));
+        let parsed = vec![
+            SourceFile::parse("a.rs", "a.rs", a),
+            SourceFile::parse("b.rs", "b.rs", b),
+        ];
+        let findings = check_files(&parsed);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("cycle"));
+    }
+
+    #[test]
+    fn io_write_with_args_not_an_acquisition() {
+        let src = "fn f(w: &mut W, buf: &[u8]) { w.write(buf).ok(); \
+                   w.inner.read_to_end(buf).ok(); }";
+        assert!(edges_of(&[("m.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn helper_calls_are_acquisitions() {
+        let src = "fn f(&self) { let a = lock_or_recover(&self.alpha); \
+                   read_or_recover(&self.beta).len(); drop(a); }";
+        let es = edges_of(&[("m.rs", src)]);
+        assert_eq!(es, vec![("m::alpha".to_string(), "m::beta".to_string())]);
+    }
+
+    #[test]
+    fn indexed_receiver_contributes_container_name() {
+        let src = "fn f(&self, k: usize) { self.stripes[k].lock().push(1); }";
+        let parsed = SourceFile::parse("j.rs", "j.rs", src);
+        let acqs = find_acquisitions(&parsed, "j", 0, parsed.tokens.len());
+        assert_eq!(acqs.len(), 1);
+        assert_eq!(acqs[0].id, "j::stripes");
+    }
+
+    #[test]
+    fn test_code_skipped() {
+        let src = "#[cfg(test)]\nmod tests { fn t(&self) { let a = self.x.lock(); \
+                   self.y.lock(); } }";
+        assert!(edges_of(&[("m.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn three_lock_cycle_detected() {
+        let a = "fn f() { let g = LOCK_A.lock(); LOCK_B.lock().t(); drop(g); }\n\
+                 fn g() { let g = LOCK_B.lock(); LOCK_C.lock().t(); drop(g); }";
+        let b = "fn h() { let g = LOCK_C.lock(); LOCK_A.lock().t(); drop(g); }";
+        let parsed = vec![
+            SourceFile::parse("a.rs", "a.rs", a),
+            SourceFile::parse("b.rs", "b.rs", b),
+        ];
+        let findings = check_files(&parsed);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("LOCK_A"));
+        assert!(findings[0].message.contains("LOCK_C"));
+    }
+}

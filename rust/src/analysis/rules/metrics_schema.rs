@@ -1,0 +1,436 @@
+//! Rule `metrics_schema`: every metric name in code must follow the
+//! DESIGN.md §12 naming scheme and appear in the documented metric
+//! table — and every documented family must still exist in code.
+//! Drift between code and doc is an error in *both* directions.
+//!
+//! Extraction matches the obs emission surface exactly: the
+//! `obs_counter!/obs_gauge!/obs_hist!` macros and the
+//! `counter/gauge/histogram/span/counter_labeled/gauge_labeled/
+//! histogram_labeled` free functions, each taking the series name as
+//! the first string literal.  The obs module's own definitions pass
+//! names through as parameters (never literals), so they don't match.
+//!
+//! Doc parsing: backticked entries in the §12 markdown table rows
+//! (lines starting with `|`).  Entries may contain `*` globs
+//! (`tiering.resident_*`) and `<ident>` placeholders
+//! (`engine.<stage>_ms`); single-word entries without a dot are label
+//! names, not metric families, and are ignored.
+
+use crate::analysis::lexer::Tok;
+use crate::analysis::source::SourceFile;
+use crate::analysis::{Finding, RULE_METRICS_SCHEMA};
+
+/// Macro names whose first string argument is a metric name.
+const METRIC_MACROS: &[(&str, Kind)] = &[
+    ("obs_counter", Kind::Counter),
+    ("obs_gauge", Kind::Gauge),
+    ("obs_hist", Kind::Histogram),
+];
+
+/// Free functions whose first string argument is a metric name.
+const METRIC_FNS: &[(&str, Kind)] = &[
+    ("counter", Kind::Counter),
+    ("counter_labeled", Kind::Counter),
+    ("gauge", Kind::Gauge),
+    ("gauge_labeled", Kind::Gauge),
+    ("histogram", Kind::Histogram),
+    ("histogram_labeled", Kind::Histogram),
+    ("span", Kind::Histogram),
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// One metric-name usage extracted from code.
+pub struct MetricUse {
+    pub name: String,
+    pub kind: Kind,
+    pub file: String,
+    pub line: usize,
+}
+
+/// Extract metric-name usages from one file (skipping test code and
+/// the macro/function *definitions* in `obs/`, which take the name as
+/// a parameter rather than a literal, so they never match anyway).
+pub fn extract_uses(file: &SourceFile) -> Vec<MetricUse> {
+    let toks = &file.tokens;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if file.in_test(i) {
+            continue;
+        }
+        let Some(name) = toks[i].kind.ident() else { continue };
+        // macro: ident ! ( "name"
+        if let Some(&(_, kind)) = METRIC_MACROS.iter().find(|(m, _)| *m == name) {
+            if toks.get(i + 1).map(|t| t.kind.is_punct('!')).unwrap_or(false)
+                && toks.get(i + 2).map(|t| t.kind.is_punct('(')).unwrap_or(false)
+            {
+                if let Some(Tok::Str(s)) = toks.get(i + 3).map(|t| &t.kind) {
+                    out.push(MetricUse {
+                        name: s.clone(),
+                        kind,
+                        file: file.rel.clone(),
+                        line: toks[i].line,
+                    });
+                }
+            }
+            continue;
+        }
+        // function: ident ( "name"   — but not a macro definition's
+        // `macro_rules!` body (no string literal directly follows there)
+        if let Some(&(_, kind)) = METRIC_FNS.iter().find(|(m, _)| *m == name) {
+            if toks.get(i + 1).map(|t| t.kind.is_punct('(')).unwrap_or(false) {
+                if let Some(Tok::Str(s)) = toks.get(i + 2).map(|t| &t.kind) {
+                    // require the metric shape here: fn names like
+                    // `write` won't collide, but e.g. `span("x")` in a
+                    // doc example would — the dot requirement filters
+                    // incidental single-word strings.
+                    if s.contains('.') {
+                        out.push(MetricUse {
+                            name: s.clone(),
+                            kind,
+                            file: file.rel.clone(),
+                            line: toks[i].line,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A documented metric family pattern from the §12 table.
+pub struct DocPattern {
+    pub pattern: String,
+    pub line: usize,
+}
+
+/// Parse the documented metric families out of DESIGN.md §12: all
+/// backticked, dot-containing entries on table rows (`|`-prefixed
+/// lines) between the §12 heading and the next `## ` heading.
+pub fn parse_doc_patterns(design: &str) -> Vec<DocPattern> {
+    let mut out = Vec::new();
+    let mut in_section = false;
+    for (ln, line) in design.lines().enumerate() {
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("## ") {
+            in_section = trimmed.contains("§12");
+            continue;
+        }
+        if !in_section || !trimmed.starts_with('|') {
+            continue;
+        }
+        for span in backticked(trimmed) {
+            // strip label annotations like `router.rejected{reason}`
+            let pat = span.split('{').next().unwrap_or("").trim();
+            if pat.contains('.') && is_metric_shape(pat) {
+                out.push(DocPattern {
+                    pattern: pat.to_string(),
+                    line: ln + 1,
+                });
+            }
+        }
+    }
+    out
+}
+
+fn backticked(line: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(a) = rest.find('`') {
+        let tail = &rest[a + 1..];
+        let Some(b) = tail.find('`') else { break };
+        out.push(&tail[..b]);
+        rest = &tail[b + 1..];
+    }
+    out
+}
+
+/// Name scheme: `layer.metric[...]` — lowercase alphanumeric/underscore
+/// segments joined by dots, at least two segments, starting with a
+/// letter.  `*` and `<ident>` are allowed only in doc patterns.
+fn is_metric_shape(s: &str) -> bool {
+    if !s.starts_with(|c: char| c.is_ascii_lowercase()) {
+        return false;
+    }
+    let mut segs = 0;
+    for seg in s.split('.') {
+        if seg.is_empty() {
+            return false;
+        }
+        segs += 1;
+        let mut chars = seg.chars().peekable();
+        while let Some(c) = chars.next() {
+            match c {
+                'a'..='z' | '0'..='9' | '_' | '*' => {}
+                '<' => {
+                    // placeholder `<ident>`
+                    let mut ok = false;
+                    for p in chars.by_ref() {
+                        if p == '>' {
+                            ok = true;
+                            break;
+                        }
+                        if !(p.is_ascii_lowercase() || p == '_') {
+                            return false;
+                        }
+                    }
+                    if !ok {
+                        return false;
+                    }
+                }
+                _ => return false,
+            }
+        }
+    }
+    segs >= 2
+}
+
+/// Does `name` (a concrete code-side metric) conform to the strict
+/// naming scheme (no globs/placeholders)?
+pub fn valid_name(name: &str) -> bool {
+    is_metric_shape(name) && !name.contains('*') && !name.contains('<')
+}
+
+/// Match a concrete name against a doc pattern with `*` (matches
+/// `[a-z0-9_]*`) and `<ident>` (matches `[a-z0-9_]+`) wildcards.
+pub fn pattern_matches(pattern: &str, name: &str) -> bool {
+    // translate the pattern to segments of literal/wildcard pieces and
+    // run a simple backtracking match.
+    fn name_char(c: char) -> bool {
+        c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'
+    }
+    fn match_from(pat: &[char], name: &[char]) -> bool {
+        if pat.is_empty() {
+            return name.is_empty();
+        }
+        match pat[0] {
+            '*' => {
+                // greedy-with-backtracking over [a-z0-9_]*
+                let mut k = 0;
+                loop {
+                    if match_from(&pat[1..], &name[k..]) {
+                        return true;
+                    }
+                    if k < name.len() && name_char(name[k]) {
+                        k += 1;
+                    } else {
+                        return false;
+                    }
+                }
+            }
+            '<' => {
+                // skip to '>' in pattern; consume one-or-more name chars
+                let close = pat.iter().position(|&c| c == '>').unwrap_or(pat.len() - 1);
+                let rest = &pat[close + 1..];
+                let mut k = 1; // at least one char
+                if name.is_empty() || !name_char(name[0]) {
+                    return false;
+                }
+                loop {
+                    if match_from(rest, &name[k..]) {
+                        return true;
+                    }
+                    if k < name.len() && name_char(name[k]) {
+                        k += 1;
+                    } else {
+                        return false;
+                    }
+                }
+            }
+            c => {
+                if name.first() == Some(&c) {
+                    match_from(&pat[1..], &name[1..])
+                } else {
+                    false
+                }
+            }
+        }
+    }
+    let p: Vec<char> = pattern.chars().collect();
+    let n: Vec<char> = name.chars().collect();
+    match_from(&p, &n)
+}
+
+/// Run the full conformance check: code↔doc in both directions plus
+/// the naming-scheme and histogram-suffix rules.
+pub fn check_files(files: &[SourceFile], design: &str, design_rel: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let patterns = parse_doc_patterns(design);
+    if patterns.is_empty() {
+        findings.push(Finding::new(
+            RULE_METRICS_SCHEMA,
+            design_rel,
+            1,
+            "no metric table found in DESIGN.md §12 — cannot check conformance".to_string(),
+        ));
+        return findings;
+    }
+    let mut uses: Vec<MetricUse> = Vec::new();
+    for f in files {
+        uses.extend(extract_uses(f));
+    }
+    for u in &uses {
+        if !valid_name(&u.name) {
+            findings.push(Finding::new(
+                RULE_METRICS_SCHEMA,
+                &u.file,
+                u.line,
+                format!(
+                    "metric `{}` violates the §12 naming scheme (lowercase dotted `layer.metric`)",
+                    u.name
+                ),
+            ));
+            continue;
+        }
+        if u.kind == Kind::Histogram && !u.name.ends_with("_ms") {
+            findings.push(Finding::new(
+                RULE_METRICS_SCHEMA,
+                &u.file,
+                u.line,
+                format!(
+                    "histogram `{}` should end in `_ms` per §12 (latencies in milliseconds)",
+                    u.name
+                ),
+            ));
+        }
+        if !patterns.iter().any(|p| pattern_matches(&p.pattern, &u.name)) {
+            findings.push(Finding::new(
+                RULE_METRICS_SCHEMA,
+                &u.file,
+                u.line,
+                format!("metric `{}` is not documented in the DESIGN.md §12 table", u.name),
+            ));
+        }
+    }
+    // reverse direction: documented but unused
+    for p in &patterns {
+        if !uses.iter().any(|u| pattern_matches(&p.pattern, &u.name)) {
+            findings.push(Finding::new(
+                RULE_METRICS_SCHEMA,
+                design_rel,
+                p.line,
+                format!(
+                    "documented metric family `{}` has no emitting call site in code",
+                    p.pattern
+                ),
+            ));
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = "\
+# Design
+## §12 Telemetry
+| family | kind |
+|---|---|
+| `router.admitted` / `router.rejected`{`reason`} | counter |
+| `engine.<stage>_ms`, `engine.matched_segments` | histogram |
+| `tiering.resident_*` | gauge |
+## §13 Next
+| `not.in_section` | x |
+";
+
+    #[test]
+    fn doc_patterns_parsed() {
+        let pats: Vec<String> = parse_doc_patterns(DOC).into_iter().map(|p| p.pattern).collect();
+        assert!(pats.contains(&"router.admitted".to_string()));
+        assert!(pats.contains(&"engine.<stage>_ms".to_string()));
+        assert!(pats.contains(&"tiering.resident_*".to_string()));
+        // label words and out-of-section entries excluded
+        assert!(!pats.iter().any(|p| p == "reason"));
+        assert!(!pats.iter().any(|p| p == "not.in_section"));
+    }
+
+    #[test]
+    fn name_scheme() {
+        assert!(valid_name("router.e2e_ms")); // digits allowed
+        assert!(valid_name("a.b_c"));
+        assert!(!valid_name("NoCaps.x"));
+        assert!(!valid_name("single"));
+        assert!(!valid_name("trailing."));
+        assert!(!valid_name("tiering.resident_*")); // globs are doc-only
+    }
+
+    #[test]
+    fn wildcard_matching() {
+        assert!(pattern_matches("tiering.resident_*", "tiering.resident_bytes"));
+        assert!(pattern_matches("tiering.resident_*", "tiering.resident_"));
+        assert!(!pattern_matches("tiering.resident_*", "tiering.demotions"));
+        assert!(pattern_matches("engine.<stage>_ms", "engine.prefill_ms"));
+        assert!(!pattern_matches("engine.<stage>_ms", "engine._ms"));
+        assert!(pattern_matches("router.admitted", "router.admitted"));
+        assert!(!pattern_matches("router.admitted", "router.admitted_x"));
+    }
+
+    fn uses_of(src: &str) -> Vec<(String, Kind)> {
+        let f = SourceFile::parse("m.rs", "m.rs", src);
+        extract_uses(&f).into_iter().map(|u| (u.name, u.kind)).collect()
+    }
+
+    #[test]
+    fn extraction_macros_and_fns() {
+        let src = r#"
+            fn f() {
+                crate::obs_counter!("engine.qa_hit").inc();
+                crate::obs_hist!("engine.total_ms").record(1.0);
+                crate::obs::counter_labeled("router.rejected", &[("reason", l)]);
+                let _g = crate::obs::span("tiering.tick_ms");
+            }
+        "#;
+        let us = uses_of(src);
+        assert_eq!(us.len(), 4);
+        assert!(us.contains(&("engine.qa_hit".to_string(), Kind::Counter)));
+        assert!(us.contains(&("tiering.tick_ms".to_string(), Kind::Histogram)));
+    }
+
+    #[test]
+    fn extraction_skips_tests_and_param_defs() {
+        // definitions pass the name through as a parameter — no literal
+        let src = "pub fn counter(name: &str) {}\n#[cfg(test)]\n\
+                   mod t { fn x() { crate::obs_counter!(\"x.y\").inc(); } }";
+        assert!(uses_of(src).is_empty());
+    }
+
+    #[test]
+    fn io_write_string_not_a_metric() {
+        // single-word strings through non-obs fns are filtered by the
+        // dot requirement; `write` isn't a metric fn at all.
+        let src = "fn f(w: &mut W) { w.write(\"x\"); gauge(\"plain\"); }";
+        assert!(uses_of(src).is_empty());
+    }
+
+    #[test]
+    fn conformance_both_directions() {
+        let code = r#"
+            fn f() {
+                crate::obs_counter!("router.admitted").inc();
+                crate::obs_hist!("engine.prefill_ms").record(1.0);
+                crate::obs_counter!("router.BAD").inc();
+                crate::obs_hist!("engine.matched_segments").record(1.0);
+                crate::obs_counter!("undocumented.thing").inc();
+            }
+        "#;
+        let files = vec![SourceFile::parse("m.rs", "m.rs", code)];
+        let fs = check_files(&files, DOC, "DESIGN.md");
+        // router.BAD: bad scheme; matched_segments: hist w/o _ms;
+        // undocumented.thing: not in doc; router.rejected +
+        // tiering.resident_*: documented but unused.
+        assert!(fs.iter().any(|f| f.message.contains("router.BAD")));
+        assert!(fs.iter().any(|f| f.message.contains("engine.matched_segments")));
+        assert!(fs.iter().any(|f| f.message.contains("undocumented.thing")));
+        assert!(fs.iter().any(|f| f.message.contains("router.rejected")));
+        assert!(fs.iter().any(|f| f.message.contains("tiering.resident_*")));
+        assert_eq!(fs.len(), 5, "{fs:?}");
+    }
+}

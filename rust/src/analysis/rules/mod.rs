@@ -1,0 +1,12 @@
+//! The rules of the `percache check` analysis pass.
+//!
+//! Per-file rules (`panic_path`, `unsafe_audit`) expose
+//! `check(&SourceFile) -> Vec<Finding>`; whole-tree rules
+//! (`lock_order`, `metrics_schema`) expose `check_files(...)` because
+//! their findings depend on cross-file state (the global lock graph,
+//! the code↔doc metric diff).  See DESIGN.md §13 for how to add one.
+
+pub mod lock_order;
+pub mod metrics_schema;
+pub mod panic_path;
+pub mod unsafe_audit;

@@ -1,0 +1,204 @@
+//! Rule `panic_path`: no `unwrap()/expect()/panic!`-family macros or
+//! unchecked indexing in serve-path modules.
+//!
+//! A panic on a serve path unwinds a tenant loop or poisons a shared
+//! lock; everything the router/registry/tiering/obs layers do per
+//! request must degrade, not die.  The rule covers exactly the modules
+//! a request flows through; batch/experiment code (`exp/`, `sim/`,
+//! `datasets/`...) may still unwrap.  Test code is always skipped.
+
+use crate::analysis::lexer::Tok;
+use crate::analysis::source::SourceFile;
+use crate::analysis::{Finding, RULE_PANIC_PATH};
+
+/// Module prefixes (relative to the src root) that constitute the
+/// serve path.  A trailing `/` means a whole directory.
+const SERVE_PATHS: &[&str] = &[
+    "server/",
+    "tenancy/router.rs",
+    "tenancy/registry.rs",
+    "tiering/service.rs",
+    "tiering/controller.rs",
+    "obs/",
+];
+
+/// Identifiers whose presence before `[` means the bracket is *not*
+/// an index expression (slice patterns, `for x in xs[..]`, etc.).
+const NON_RECEIVER_KEYWORDS: &[&str] = &[
+    "return", "break", "in", "match", "if", "else", "loop", "while", "for", "move", "ref", "mut",
+    "let", "as", "box", "vec",
+];
+
+pub fn applies(rel: &str) -> bool {
+    SERVE_PATHS.iter().any(|p| {
+        if let Some(dir) = p.strip_suffix('/') {
+            rel.starts_with(dir) && rel.len() > dir.len()
+        } else {
+            rel == *p
+        }
+    })
+}
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    if !applies(&file.rel) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let toks = &file.tokens;
+    for i in 0..toks.len() {
+        if file.in_test(i) {
+            continue;
+        }
+        let t = &toks[i];
+        // `.unwrap(` / `.expect(` — exact idents, so unwrap_or /
+        // unwrap_or_else / expect_err-free variants don't match.
+        if let Some(name) = t.kind.ident() {
+            if (name == "unwrap" || name == "expect")
+                && i > 0
+                && toks[i - 1].kind.is_punct('.')
+                && toks.get(i + 1).map(|n| n.kind.is_punct('(')).unwrap_or(false)
+            {
+                out.push(Finding::new(
+                    RULE_PANIC_PATH,
+                    &file.rel,
+                    t.line,
+                    format!(
+                        ".{name}() on a serve path can panic; \
+                         handle the error or use util::sync helpers"
+                    ),
+                ));
+                continue;
+            }
+            // panic-family macros
+            if matches!(name, "panic" | "unreachable" | "todo" | "unimplemented")
+                && toks.get(i + 1).map(|n| n.kind.is_punct('!')).unwrap_or(false)
+            {
+                out.push(Finding::new(
+                    RULE_PANIC_PATH,
+                    &file.rel,
+                    t.line,
+                    format!(
+                        "{name}! on a serve path aborts the request loop; \
+                         return an error instead"
+                    ),
+                ));
+                continue;
+            }
+        }
+        // unchecked indexing: `expr[index]` where expr ends in an
+        // identifier / `)` / `]` and the index is not a bare integer
+        // literal or a pure range.
+        if t.kind.is_punct('[') {
+            let is_index_expr = match i.checked_sub(1).map(|p| &toks[p].kind) {
+                Some(Tok::Ident(name)) => !NON_RECEIVER_KEYWORDS.contains(&name.as_str()),
+                Some(Tok::Punct(')')) | Some(Tok::Punct(']')) => true,
+                _ => false,
+            };
+            if !is_index_expr {
+                continue;
+            }
+            let Some(close) = file.matching(i) else { continue };
+            let inner = &toks[i + 1..close];
+            if inner.is_empty() {
+                continue; // `[]` — type position
+            }
+            // bare integer literal index (tuple-struct-like fixed access)
+            // is fine: `bounds[0]` can only be wrong if the array is
+            // empty, which the type system rules out for our arrays.
+            if inner.len() == 1 {
+                if let Tok::Num(_) = inner[0].kind {
+                    continue;
+                }
+            }
+            // range slicing (`[..]`, `[a..b]`, `[..=n]`) is recognised
+            // by two *adjacent* dot tokens; bounds are usually checked
+            // `len()` values, so we only flag direct element indexing.
+            let is_range = inner
+                .windows(2)
+                .any(|w| w[0].kind.is_punct('.') && w[1].kind.is_punct('.'));
+            if is_range {
+                continue;
+            }
+            out.push(Finding::new(
+                RULE_PANIC_PATH,
+                &file.rel,
+                t.line,
+                "unchecked indexing on a serve path can panic; use .get()/.get_mut()".to_string(),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile::parse(rel, rel, src);
+        check(&f)
+    }
+
+    #[test]
+    fn scope_limited_to_serve_paths() {
+        assert!(applies("server/mod.rs"));
+        assert!(applies("obs/journal.rs"));
+        assert!(applies("tenancy/router.rs"));
+        assert!(!applies("tenancy/governor.rs"));
+        assert!(!applies("exp/mod.rs"));
+        assert!(!applies("server")); // the bare dir name is not a file
+    }
+
+    #[test]
+    fn flags_unwrap_and_expect() {
+        let fs = findings("server/mod.rs", "fn f() { x.unwrap(); y.expect(\"m\"); }");
+        assert_eq!(fs.len(), 2);
+        assert_eq!(fs[0].line, 1);
+    }
+
+    #[test]
+    fn unwrap_or_is_fine() {
+        let fs = findings(
+            "server/mod.rs",
+            "fn f() { x.unwrap_or(0); y.unwrap_or_else(|| 1); z.unwrap_or_default(); }",
+        );
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn flags_panic_macros() {
+        let fs = findings(
+            "obs/mod.rs",
+            "fn f() { panic!(\"no\"); unreachable!(); todo!(); }",
+        );
+        assert_eq!(fs.len(), 3);
+    }
+
+    #[test]
+    fn flags_indexing_but_not_literals_or_ranges() {
+        let fs = findings("server/mod.rs", "fn f(v: &[u8], i: usize) { let _ = v[i]; }");
+        assert_eq!(fs.len(), 1);
+        let fs = findings("server/mod.rs", "fn f(v: &[u8]) { let _ = v[0]; }");
+        assert!(fs.is_empty());
+        let fs = findings("server/mod.rs", "fn f(v: &[u8], n: usize) { let _ = &v[..n]; }");
+        assert!(fs.is_empty());
+        // dots from method calls inside the index do not read as a range
+        let fs = findings("server/mod.rs", "fn f(v: &[u8], i: usize) { v[i.min(v.len() - 1)]; }");
+        assert_eq!(fs.len(), 1);
+    }
+
+    #[test]
+    fn skips_test_modules_and_attr_slices() {
+        let src = "#[cfg(test)]\nmod tests { fn t() { x.unwrap(); v[i]; } }";
+        assert!(findings("server/mod.rs", src).is_empty());
+        // `#[derive(Debug)]` style attribute brackets are not indexing
+        let fs = findings("server/mod.rs", "#[derive(Debug)]\nstruct S;");
+        assert!(fs.is_empty());
+    }
+
+    #[test]
+    fn chained_call_receiver_indexing_flagged() {
+        let fs = findings("server/mod.rs", "fn f() { g()[h]; }");
+        assert_eq!(fs.len(), 1);
+    }
+}

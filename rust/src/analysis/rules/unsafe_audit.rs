@@ -1,0 +1,90 @@
+//! Rule `unsafe_audit`: the crate's policy is that only `runtime/`
+//! (the PJRT FFI boundary) may contain `unsafe`, and every `unsafe`
+//! there must carry a `// SAFETY:` contract comment within a few
+//! lines above it.  Everywhere else `#![deny(unsafe_code)]` holds and
+//! this rule backs it up at analysis time (so fixtures and generated
+//! code get the same treatment as compiled code).
+
+use crate::analysis::source::SourceFile;
+use crate::analysis::{Finding, RULE_UNSAFE_AUDIT};
+
+/// How many lines above an `unsafe` token a `// SAFETY:` comment may
+/// sit and still count as documenting it.
+const SAFETY_WINDOW: usize = 5;
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let in_runtime = file.rel.starts_with("runtime/") || file.rel == "runtime.rs";
+    for (i, t) in file.tokens.iter().enumerate() {
+        if !t.kind.is_ident("unsafe") {
+            continue;
+        }
+        if file.in_test(i) {
+            continue;
+        }
+        if !in_runtime {
+            out.push(Finding::new(
+                RULE_UNSAFE_AUDIT,
+                &file.rel,
+                t.line,
+                "unsafe outside runtime/ — the crate policy is \
+                 #![deny(unsafe_code)] everywhere else"
+                    .to_string(),
+            ));
+        } else if !file.comment_near(t.line, SAFETY_WINDOW, "SAFETY:") {
+            out.push(Finding::new(
+                RULE_UNSAFE_AUDIT,
+                &file.rel,
+                t.line,
+                "unsafe block without a // SAFETY: contract comment".to_string(),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile::parse(rel, rel, src);
+        check(&f)
+    }
+
+    #[test]
+    fn unsafe_outside_runtime_flagged() {
+        let fs = findings("cache/store.rs", "fn f() { unsafe { g() } }");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].message.contains("outside runtime/"));
+    }
+
+    #[test]
+    fn runtime_unsafe_needs_safety_comment() {
+        let fs = findings("runtime/mod.rs", "fn f() { unsafe { g() } }");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].message.contains("SAFETY:"));
+    }
+
+    #[test]
+    fn runtime_unsafe_with_safety_passes() {
+        let src = "fn f() {\n    // SAFETY: caller guarantees ptr valid for len reads\n    \
+                   unsafe { g() }\n}";
+        assert!(findings("runtime/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_window_bounded() {
+        // a SAFETY: comment 10 lines up does not cover the block
+        let mut src = String::from("// SAFETY: too far away\n");
+        src.push_str(&"\n".repeat(9));
+        src.push_str("fn f() { unsafe { g() } }\n");
+        assert_eq!(findings("runtime/mod.rs", &src).len(), 1);
+    }
+
+    #[test]
+    fn the_word_unsafe_in_string_is_fine() {
+        let fs = findings("cache/store.rs", "fn f() { log(\"unsafe stuff\"); }");
+        assert!(fs.is_empty());
+    }
+}

@@ -1,0 +1,314 @@
+//! Source-file model for the analysis pass: a lexed file plus the
+//! derived structure rules need — a matching-bracket index, the
+//! `#[cfg(test)]` token ranges (so rules can skip test code), extracted
+//! function spans (for per-function lock scoping), and the
+//! `percache-allow` suppression map parsed from comments.
+
+use super::lexer::{self, Comment, Tok, Token};
+
+/// An inline suppression: `// percache-allow(<rule>): <justification>`.
+/// It suppresses findings of `rule` on its own line and the next line
+/// (so it can sit above the offending statement, the usual style).
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub justification: String,
+    pub line: usize,
+}
+
+/// One extracted `fn` item: its name and the token range of its body
+/// (indices into `SourceFile::tokens`, `body_start` = index of `{`,
+/// `body_end` = index of the matching `}`).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub line: usize,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// A lexed source file with derived structure.
+pub struct SourceFile {
+    /// Absolute (or as-given) path, for diagnostics.
+    pub path: String,
+    /// Path relative to the analysis root, unix-style (`tenancy/router.rs`).
+    pub rel: String,
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+    /// For each token index holding an open bracket `( [ {`, the index
+    /// of its matching close bracket (and vice versa). usize::MAX when
+    /// unmatched.
+    pub match_idx: Vec<usize>,
+    /// Token ranges `[start, end]` (inclusive) covered by `#[cfg(test)]` items.
+    pub test_ranges: Vec<(usize, usize)>,
+    pub fns: Vec<FnSpan>,
+    pub allows: Vec<Allow>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, rel: &str, text: &str) -> SourceFile {
+        let (tokens, comments) = lexer::lex(text);
+        let match_idx = bracket_match(&tokens);
+        let test_ranges = find_test_ranges(&tokens, &match_idx);
+        let fns = find_fns(&tokens, &match_idx);
+        let allows = parse_allows(&comments);
+        SourceFile {
+            path: path.to_string(),
+            rel: rel.replace('\\', "/"),
+            tokens,
+            comments,
+            match_idx,
+            test_ranges,
+            fns,
+            allows,
+        }
+    }
+
+    /// True if token index `i` falls inside a `#[cfg(test)]` item.
+    pub fn in_test(&self, i: usize) -> bool {
+        self.test_ranges.iter().any(|&(s, e)| i >= s && i <= e)
+    }
+
+    /// The matching bracket index for token `i`, if any.
+    pub fn matching(&self, i: usize) -> Option<usize> {
+        match self.match_idx.get(i) {
+            Some(&m) if m != usize::MAX => Some(m),
+            _ => None,
+        }
+    }
+
+    /// True if a comment containing `needle` appears on `line` or
+    /// within `above` lines before it.  Used for `// SAFETY:` contracts.
+    pub fn comment_near(&self, line: usize, above: usize, needle: &str) -> bool {
+        self.comments.iter().any(|c| {
+            c.line <= line && c.line + above >= line && c.text.contains(needle)
+        })
+    }
+}
+
+/// Compute the matching-bracket table over `( ) [ ] { }`.
+fn bracket_match(tokens: &[Token]) -> Vec<usize> {
+    let mut out = vec![usize::MAX; tokens.len()];
+    let mut stack: Vec<(char, usize)> = Vec::new();
+    for (i, t) in tokens.iter().enumerate() {
+        match t.kind {
+            Tok::Punct(c @ ('(' | '[' | '{')) => stack.push((c, i)),
+            Tok::Punct(c @ (')' | ']' | '}')) => {
+                let want = match c {
+                    ')' => '(',
+                    ']' => '[',
+                    _ => '{',
+                };
+                // pop until we find the matching opener (tolerates the
+                // stray brackets a token-level view can produce)
+                while let Some((open, oi)) = stack.pop() {
+                    if open == want {
+                        out[oi] = i;
+                        out[i] = oi;
+                        break;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Find token ranges covered by `#[cfg(test)]` attributes: the
+/// attribute itself through the end of the item it decorates (the
+/// matching `}` of the next `{` at this level).
+fn find_test_ranges(tokens: &[Token], match_idx: &[usize]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 5 < tokens.len() {
+        let is_cfg_test = tokens[i].kind.is_punct('#')
+            && tokens[i + 1].kind.is_punct('[')
+            && tokens[i + 2].kind.is_ident("cfg")
+            && tokens[i + 3].kind.is_punct('(')
+            && tokens[i + 4].kind.is_ident("test")
+            && tokens[i + 5].kind.is_punct(')');
+        if is_cfg_test {
+            // skip to end of the attribute `]`
+            let attr_end = match_idx.get(i + 1).copied().unwrap_or(usize::MAX);
+            let mut j = if attr_end != usize::MAX { attr_end + 1 } else { i + 6 };
+            // find the `{` opening the decorated item's body
+            while j < tokens.len() && !tokens[j].kind.is_punct('{') {
+                // a `;` first means a braceless item (e.g. `mod tests;`)
+                if tokens[j].kind.is_punct(';') {
+                    break;
+                }
+                j += 1;
+            }
+            if j < tokens.len() && tokens[j].kind.is_punct('{') {
+                let close = match_idx.get(j).copied().unwrap_or(usize::MAX);
+                if close != usize::MAX {
+                    out.push((i, close));
+                    i = close + 1;
+                    continue;
+                }
+            }
+            out.push((i, j.min(tokens.len().saturating_sub(1))));
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Extract `fn` items: `fn <name> ... {` with the `{` found at zero
+/// extra paren/bracket depth (so where-clauses and argument lists with
+/// closures don't confuse the body detection).
+fn find_fns(tokens: &[Token], match_idx: &[usize]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        if tokens[i].kind.is_ident("fn") {
+            let name = match tokens.get(i + 1).and_then(|t| t.kind.ident()) {
+                Some(n) => n.to_string(),
+                None => {
+                    i += 1;
+                    continue;
+                }
+            };
+            let line = tokens[i].line;
+            // scan forward for the body `{`, skipping bracketed groups
+            let mut j = i + 2;
+            let mut found = None;
+            while j < tokens.len() {
+                match tokens[j].kind {
+                    Tok::Punct('{') => {
+                        found = Some(j);
+                        break;
+                    }
+                    Tok::Punct('(') | Tok::Punct('[') => {
+                        let m = match_idx.get(j).copied().unwrap_or(usize::MAX);
+                        if m == usize::MAX {
+                            break;
+                        }
+                        j = m + 1;
+                    }
+                    Tok::Punct(';') => break, // trait method declaration
+                    _ => j += 1,
+                }
+            }
+            if let Some(open) = found {
+                if let Some(&close) = match_idx.get(open) {
+                    if close != usize::MAX {
+                        out.push(FnSpan {
+                            name,
+                            line,
+                            body_start: open,
+                            body_end: close,
+                        });
+                        i += 2;
+                        continue;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Parse `percache-allow(<rule>): <justification>` from comments.
+/// An allow with an empty justification is still recorded (the engine
+/// reports it as a finding of its own — justifications are mandatory).
+fn parse_allows(comments: &[Comment]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for c in comments {
+        let mut rest = c.text.as_str();
+        while let Some(at) = rest.find("percache-allow(") {
+            let after = &rest[at + "percache-allow(".len()..];
+            let Some(close) = after.find(')') else { break };
+            let rule = after[..close].trim().to_string();
+            let tail = &after[close + 1..];
+            let justification = tail
+                .strip_prefix(':')
+                .map(|t| t.trim_end_matches(['*', '/']).trim().to_string())
+                .unwrap_or_default();
+            out.push(Allow {
+                rule,
+                justification,
+                line: c.line,
+            });
+            rest = tail;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bracket_matching() {
+        let f = SourceFile::parse("t.rs", "t.rs", "fn f(a: u8) { (a, [a]) }");
+        let open = f
+            .tokens
+            .iter()
+            .position(|t| t.kind.is_punct('{'))
+            .expect("open brace");
+        let close = f.matching(open).expect("matched");
+        assert!(f.tokens[close].kind.is_punct('}'));
+        assert_eq!(f.matching(close), Some(open));
+    }
+
+    #[test]
+    fn test_ranges_detected() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n fn t() { x.unwrap(); }\n}\n";
+        let f = SourceFile::parse("t.rs", "t.rs", src);
+        let unwrap_idx = f
+            .tokens
+            .iter()
+            .position(|t| t.kind.is_ident("unwrap"))
+            .expect("unwrap");
+        assert!(f.in_test(unwrap_idx));
+        let live_idx = f
+            .tokens
+            .iter()
+            .position(|t| t.kind.is_ident("live"))
+            .expect("live");
+        assert!(!f.in_test(live_idx));
+    }
+
+    #[test]
+    fn fn_extraction_skips_where_and_args() {
+        let src = "fn g<T>(f: impl Fn(u8) -> u8) -> u8 where T: Clone { f(1) }";
+        let f = SourceFile::parse("t.rs", "t.rs", src);
+        assert_eq!(f.fns.len(), 1);
+        assert_eq!(f.fns[0].name, "g");
+        assert!(f.tokens[f.fns[0].body_start].kind.is_punct('{'));
+    }
+
+    #[test]
+    fn trait_decl_has_no_body() {
+        let f = SourceFile::parse("t.rs", "t.rs", "trait T { fn a(&self); fn b(&self) {} }");
+        assert_eq!(f.fns.len(), 1);
+        assert_eq!(f.fns[0].name, "b");
+    }
+
+    #[test]
+    fn allow_parsing() {
+        let src = "// percache-allow(panic_path): startup is allowed to die\nx.unwrap();\n\
+                   // percache-allow(lock_order):\ny();\n";
+        let f = SourceFile::parse("t.rs", "t.rs", src);
+        assert_eq!(f.allows.len(), 2);
+        assert_eq!(f.allows[0].rule, "panic_path");
+        assert_eq!(f.allows[0].justification, "startup is allowed to die");
+        assert_eq!(f.allows[0].line, 1);
+        assert_eq!(f.allows[1].rule, "lock_order");
+        assert!(f.allows[1].justification.is_empty());
+    }
+
+    #[test]
+    fn comment_near_safety() {
+        let src = "// SAFETY: ptr is valid for len reads\nlet s = unsafe { f() };\n";
+        let f = SourceFile::parse("t.rs", "t.rs", src);
+        assert!(f.comment_near(2, 5, "SAFETY:"));
+        assert!(!f.comment_near(2, 5, "NOPE:"));
+    }
+}

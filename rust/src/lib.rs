@@ -23,6 +23,9 @@
 //!   their on-disk snapshot and page back on demand.
 //! * [`obs`] — runtime telemetry: the metrics registry, stage spans,
 //!   and the event journal every serving layer records into.
+//! * [`analysis`] — the `percache check` static analysis pass over the
+//!   crate's own sources (panic paths, lock order, metric schema,
+//!   unsafe audit — DESIGN.md §13).
 //! * [`datasets`] / [`sim`] — synthetic workloads and device models.
 //! * [`exp`] — the paper-figure/table reproduction harness.
 //! * [`util`] / [`testkit`] / [`tokenizer`] / [`metrics`] — substrates.
@@ -32,6 +35,11 @@
 // built by mutating a `default()`).  Allowed explicitly so the CI
 // clippy gate (`-D warnings`) enforces everything else; shrinking this
 // list is tracked cleanup, not a blocker.
+// Crate policy (enforced twice: here at compile time, and by the
+// `unsafe_audit` rule in `percache check`): only `runtime/` — the PJRT
+// FFI boundary — may contain `unsafe`, and each block needs a
+// `// SAFETY:` contract.
+#![deny(unsafe_code)]
 #![allow(clippy::ptr_arg)]
 #![allow(clippy::inherent_to_string)]
 #![allow(clippy::new_without_default)]
@@ -39,6 +47,7 @@
 #![allow(clippy::len_without_is_empty)]
 #![allow(clippy::type_complexity)]
 
+pub mod analysis;
 pub mod baselines;
 pub mod cache;
 pub mod config;
@@ -52,6 +61,7 @@ pub mod metrics;
 pub mod obs;
 pub mod predict;
 pub mod retrieval;
+#[allow(unsafe_code)] // PJRT FFI boundary — the one module allowed unsafe
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

@@ -9,12 +9,14 @@
 //!                  [--out reports] [--smoke]
 //! percache tenants [--tenants 8] [--arrivals 0] [--zipf 1.0] [--sweep]
 //! percache metrics [path] [--prom]
+//! percache check   [--json reports/ANALYSIS.json]
 //! percache info
 //! ```
 
 // Same seed-tree style allowance as rust/src/lib.rs (configs are built
 // by mutating a `default()`); the CI clippy gate enforces the rest.
 #![allow(clippy::field_reassign_with_default)]
+#![deny(unsafe_code)]
 
 use anyhow::Result;
 use percache::util::cli::Cli;
@@ -34,6 +36,7 @@ fn real_main() -> Result<()> {
         "exp" => cmd_exp(),
         "tenants" => cmd_tenants(),
         "metrics" => cmd_metrics(),
+        "check" => cmd_check(),
         "info" => cmd_info(),
         _ => {
             println!(
@@ -43,6 +46,7 @@ fn real_main() -> Result<()> {
                  exp      reproduce a paper figure/table (or `all`)\n  \
                  tenants  multi-tenant sharding demo/sweep (no artifacts needed)\n  \
                  metrics  pretty-print a metrics dump (see serve --metrics-file)\n  \
+                 check    run the static analysis pass over the crate sources\n  \
                  info     print manifest / artifact summary\n\n\
                  run `percache <subcommand> --help` for flags"
             );
@@ -471,6 +475,56 @@ fn cmd_metrics() -> Result<()> {
         ]);
     }
     print!("{}", hists.render());
+    Ok(())
+}
+
+/// `percache check`: the project-specific static analysis pass
+/// (DESIGN.md §13).  Non-zero exit on any finding, so CI can gate on
+/// it; `--json` additionally writes the machine-readable report.
+fn cmd_check() -> Result<()> {
+    let cli = Cli::new("percache check — static analysis over the crate's own sources")
+        .flag("json", "", "also write the findings report to this path")
+        .flag(
+            "src",
+            concat!(env!("CARGO_MANIFEST_DIR"), "/src"),
+            "source root to analyse",
+        )
+        .flag(
+            "design",
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../DESIGN.md"),
+            "design doc for the metrics-schema rule",
+        );
+    let a = cli.parse_env(1);
+    let src_root = std::path::PathBuf::from(a.get("src"));
+    let design = std::path::PathBuf::from(a.get("design"));
+    let report = percache::analysis::analyze(&src_root, &design)?;
+
+    let json_path = a.get("json").to_string();
+    if !json_path.is_empty() {
+        let p = std::path::Path::new(&json_path);
+        if let Some(dir) = p.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(p, report.to_json().to_string_pretty())?;
+        println!("[check] findings report written to {json_path}");
+    }
+
+    for f in &report.findings {
+        eprintln!("{}", f.render());
+    }
+    println!(
+        "[check] {} files analysed, {} findings, {} suppressed by percache-allow",
+        report.files,
+        report.findings.len(),
+        report.suppressed
+    );
+    anyhow::ensure!(
+        report.is_clean(),
+        "percache check failed with {} finding(s)",
+        report.findings.len()
+    );
     Ok(())
 }
 

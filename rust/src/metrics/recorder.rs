@@ -188,6 +188,7 @@ pub fn record_query_obs(rec: &QueryRecord) {
     if STAGE_TICK.fetch_add(1, Ordering::Relaxed) % STAGE_SAMPLE_EVERY != 0 {
         return;
     }
+    // percache-allow(metrics_schema): a count histogram documented in §12; the `_ms` suffix is reserved for latencies
     crate::obs_hist!("engine.matched_segments").record(rec.matched_segments as f64);
     if rec.embed_ms > 0.0 {
         crate::obs_hist!("engine.embed_ms").record(rec.embed_ms);

@@ -221,9 +221,10 @@ impl Journal {
             eprintln!("{}", rec.render());
         }
         let cap = self.cap_per_stripe.load(Ordering::Relaxed);
-        let mut ring = self.stripes[seq as usize % JOURNAL_STRIPES]
-            .lock()
-            .unwrap_or_else(|e| e.into_inner());
+        let mut ring = crate::util::sync::lock_or_recover(
+            // percache-allow(panic_path): index is modulo JOURNAL_STRIPES, the fixed length of `stripes`
+            &self.stripes[seq as usize % JOURNAL_STRIPES],
+        );
         ring.push_back(rec);
         while ring.len() > cap {
             ring.pop_front();
@@ -235,7 +236,7 @@ impl Journal {
     pub fn snapshot_events(&self) -> Vec<EventRecord> {
         let mut out = Vec::new();
         for stripe in &self.stripes {
-            let ring = stripe.lock().unwrap_or_else(|e| e.into_inner());
+            let ring = crate::util::sync::lock_or_recover(stripe);
             out.extend(ring.iter().cloned());
         }
         out.sort_by_key(|r| r.seq);
@@ -246,7 +247,7 @@ impl Journal {
     pub fn drain(&self) -> Vec<EventRecord> {
         let mut out = Vec::new();
         for stripe in &self.stripes {
-            let mut ring = stripe.lock().unwrap_or_else(|e| e.into_inner());
+            let mut ring = crate::util::sync::lock_or_recover(stripe);
             out.extend(ring.drain(..));
         }
         out.sort_by_key(|r| r.seq);

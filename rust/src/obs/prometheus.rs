@@ -68,6 +68,7 @@ pub fn encode(snap: &MetricsSnapshot) -> String {
         let mut cumulative = 0u64;
         for &(i, c) in &h.buckets {
             cumulative += c;
+            // percache-allow(panic_path): index explicitly clamped to the last bound
             let le = fmt_bound(bounds[i.min(bounds.len() - 1)]);
             let _ = writeln!(
                 out,

@@ -290,13 +290,13 @@ impl MetricsRegistry {
         mut on_gauge: impl FnMut(&MetricKey, &Gauge),
         mut on_hist: impl FnMut(&MetricKey, &Histogram),
     ) {
-        for (k, c) in self.counters.read().unwrap_or_else(|e| e.into_inner()).iter() {
+        for (k, c) in crate::util::sync::read_or_recover(&self.counters).iter() {
             on_counter(k, c);
         }
-        for (k, g) in self.gauges.read().unwrap_or_else(|e| e.into_inner()).iter() {
+        for (k, g) in crate::util::sync::read_or_recover(&self.gauges).iter() {
             on_gauge(k, g);
         }
-        for (k, h) in self.hists.read().unwrap_or_else(|e| e.into_inner()).iter() {
+        for (k, h) in crate::util::sync::read_or_recover(&self.hists).iter() {
             on_hist(k, h);
         }
     }
@@ -305,11 +305,10 @@ impl MetricsRegistry {
 /// Get-or-create under a read-mostly lock: the fast path is a shared
 /// read; only a genuinely new series takes the write lock.
 fn lookup<T: Default>(map: &RwLock<BTreeMap<MetricKey, Arc<T>>>, key: MetricKey) -> Arc<T> {
-    if let Some(v) = map.read().unwrap_or_else(|e| e.into_inner()).get(&key) {
+    if let Some(v) = crate::util::sync::read_or_recover(map).get(&key) {
         return v.clone();
     }
-    map.write()
-        .unwrap_or_else(|e| e.into_inner())
+    crate::util::sync::write_or_recover(map)
         .entry(key)
         .or_default()
         .clone()

@@ -46,8 +46,8 @@ impl HistSnap {
     pub fn dense_buckets(&self) -> [u64; N_BUCKETS] {
         let mut dense = [0u64; N_BUCKETS];
         for &(i, c) in &self.buckets {
-            if i < N_BUCKETS {
-                dense[i] = c;
+            if let Some(slot) = dense.get_mut(i) {
+                *slot = c;
             }
         }
         dense

@@ -187,6 +187,11 @@ impl Runtime {
                 .buffer_from_host_buffer(data, dims, None)
                 .context("uploading f32 tensor"),
             Input::F32Ref(ptr, len, dims) => {
+                // SAFETY: the `Input::F32Ref` constructor contract
+                // requires `ptr` valid for `len` f32 reads for the
+                // lifetime of this call; `buffer_from_host_buffer`
+                // copies the data to the device before returning, so
+                // the borrow does not outlive the upload.
                 let slice = unsafe { std::slice::from_raw_parts(*ptr, *len) };
                 self.client
                     .buffer_from_host_buffer(slice, dims, None)

@@ -50,7 +50,7 @@ impl JoinCell {
     }
 
     pub fn join(&self) -> anyhow::Result<()> {
-        let handle = self.0.lock().unwrap().take();
+        let handle = crate::util::sync::lock_or_recover(&self.0).take();
         match handle {
             Some(h) => h
                 .join()
@@ -165,6 +165,7 @@ pub fn spawn_with<S: 'static>(
             );
             Ok(())
         })
+        // percache-allow(panic_path): thread-spawn failure at process start is unrecoverable resource exhaustion; dying loudly beats serving without a loop
         .expect("spawn server thread");
     ServerHandle {
         tx,

@@ -157,6 +157,7 @@ impl TenantRegistry {
     /// the configuration under which the paper experiments run unchanged.
     pub fn single_tenant(cfg: &TenancyConfig) -> Self {
         let mut reg = Self::new(cfg);
+        // percache-allow(panic_path): constructor precondition — create_tenant on a fresh registry only fails if max_tenants == 0, a config bug worth dying on
         reg.create_tenant().expect("max_tenants >= 1");
         reg
     }
@@ -373,7 +374,12 @@ impl TenantRegistry {
             slot.residency.label()
         );
         slot.residency = Residency::Demoting;
-        let shard = slot.shard.as_mut().expect("hot slot holds a shard");
+        let Some(shard) = slot.shard.as_mut() else {
+            // a Hot slot without a shard is an invariant breach, but a
+            // refused demotion degrades better than a dead router loop
+            slot.residency = Residency::Hot;
+            anyhow::bail!("tenant {id} slot is hot but holds no shard");
+        };
         match shard.save() {
             Ok(_wrote) => {
                 let freed = shard.bytes_used();

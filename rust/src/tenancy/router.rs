@@ -207,10 +207,10 @@ impl<T> Router<T> {
         }
         for step in 0..n {
             let t = (self.cursor + step) % n;
-            if self.blocked[t] {
+            if self.blocked.get(t).copied().unwrap_or(false) {
                 continue;
             }
-            if let Some(item) = self.queues[t].pop_front() {
+            if let Some(item) = self.queues.get_mut(t).and_then(|q| q.pop_front()) {
                 self.cursor = (t + 1) % n;
                 self.queued -= 1;
                 self.popped += 1;
@@ -470,6 +470,7 @@ pub fn spawn_tenant_server<S: 'static>(
             );
             Ok(())
         })
+        // percache-allow(panic_path): thread-spawn failure at process start is unrecoverable resource exhaustion; dying loudly beats serving without a loop
         .expect("spawn tenant server thread");
     TenantServerHandle {
         tx,

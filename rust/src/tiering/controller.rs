@@ -137,7 +137,10 @@ impl TieringController {
             if self.imminently_active(id, now) {
                 continue;
             }
-            let idle = self.trackers[id as usize].idle_ticks(now);
+            let idle = self
+                .trackers
+                .get(id as usize)
+                .map_or(0, |t| t.idle_ticks(now));
             if idle >= self.cfg.idle_ticks_to_demote {
                 report.freed_bytes += registry.demote_tenant(id)?;
                 report.demoted.push(id);
@@ -194,7 +197,7 @@ impl TieringController {
             .filter(|&id| registry.residency(id) == Some(Residency::Hot))
             .filter(|&id| registry.queue_depth(id) == 0)
             .filter(|&id| !self.imminently_active(id, now))
-            .max_by_key(|&id| self.trackers[id as usize].idle_ticks(now))
+            .max_by_key(|&id| self.trackers.get(id as usize).map_or(0, |t| t.idle_ticks(now)))
     }
 }
 
@@ -237,6 +240,7 @@ impl HydrationWorker {
                     }
                 }
             })
+            // percache-allow(panic_path): thread-spawn failure at process start is unrecoverable resource exhaustion; dying loudly beats serving without a worker
             .expect("spawn hydration worker thread");
         HydrationWorker {
             tx: Some(jtx),

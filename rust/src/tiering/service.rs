@@ -345,6 +345,7 @@ pub fn spawn_tiered_server(cfg: TieredServerConfig) -> TenantServerHandle {
             );
             state.borrow_mut().finish()
         })
+        // percache-allow(panic_path): thread-spawn failure at process start is unrecoverable resource exhaustion; dying loudly beats serving without a loop
         .expect("spawn tiered server thread");
     TenantServerHandle::from_parts(tx, join)
 }

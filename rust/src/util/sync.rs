@@ -1,0 +1,73 @@
+//! Poison-recovering lock acquisition.
+//!
+//! A `std::sync` lock is poisoned when a holder panics.  On our serve
+//! paths that must not cascade: the data a panicking holder was
+//! mutating is per-request scratch or monotonic telemetry, and the
+//! surviving threads (router loops, the hydration worker, metric
+//! scrapes) are more useful running with possibly-stale state than
+//! dead.  These helpers recover the guard from a poisoned lock
+//! instead of propagating the panic, which is the crate-wide policy
+//! the `panic_path` analysis rule enforces (DESIGN.md §13).
+//!
+//! Deliberately metric-free: the obs registry itself locks through
+//! these helpers, so emitting telemetry here could recurse.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering the guard if poisoned.
+pub fn read_or_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering the guard if poisoned.
+pub fn write_or_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn recovers_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_or_recover(&m), 7);
+        *lock_or_recover(&m) = 8;
+        assert_eq!(*lock_or_recover(&m), 8);
+    }
+
+    #[test]
+    fn recovers_poisoned_rwlock() {
+        let l = Arc::new(RwLock::new(1u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(*read_or_recover(&l), 1);
+        *write_or_recover(&l) = 2;
+        assert_eq!(*read_or_recover(&l), 2);
+    }
+
+    #[test]
+    fn plain_path_unaffected() {
+        let m = Mutex::new(vec![1, 2]);
+        lock_or_recover(&m).push(3);
+        assert_eq!(lock_or_recover(&m).len(), 3);
+    }
+}

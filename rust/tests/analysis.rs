@@ -1,0 +1,224 @@
+//! Integration tests for `percache check` (DESIGN.md §13): each rule
+//! is demonstrated on a seeded fixture tree under
+//! `tests/analysis_fixtures/` — the seeded violations must be found,
+//! and adding `// percache-allow(<rule>): ...` above each must make
+//! the run pass — plus a meta-test keeping the real source tree clean.
+
+use std::path::{Path, PathBuf};
+
+use percache::analysis::source::SourceFile;
+use percache::analysis::{
+    analyze, run_rules, Report, RULE_LOCK_ORDER, RULE_METRICS_SCHEMA, RULE_PANIC_PATH,
+    RULE_UNSAFE_AUDIT,
+};
+
+fn fixture_root(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/analysis_fixtures")
+        .join(name)
+}
+
+/// Run the full pipeline (file collection included) over one fixture.
+fn analyze_fixture(name: &str) -> Report {
+    let root = fixture_root(name);
+    analyze(&root.join("src"), &root.join("DESIGN.md")).expect("fixture analyzes")
+}
+
+/// Load one fixture's sources as in-memory `(rel, text)` pairs plus
+/// its design doc, for the allow-insertion round trips.
+fn load_fixture(name: &str) -> (Vec<(String, String)>, String) {
+    let root = fixture_root(name);
+    let src = root.join("src");
+    let mut files = Vec::new();
+    let mut stack = vec![src.clone()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).expect("fixture dir") {
+            let path = entry.expect("fixture entry").path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+                let rel = path
+                    .strip_prefix(&src)
+                    .expect("under src")
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                files.push((rel, std::fs::read_to_string(&path).expect("fixture read")));
+            }
+        }
+    }
+    files.sort();
+    let design = std::fs::read_to_string(root.join("DESIGN.md")).expect("fixture design");
+    (files, design)
+}
+
+fn run(files: &[(String, String)], design: &str) -> Report {
+    let parsed: Vec<SourceFile> = files
+        .iter()
+        .map(|(rel, text)| SourceFile::parse(rel, rel, text))
+        .collect();
+    run_rules(&parsed, design, "DESIGN.md")
+}
+
+/// Insert a `percache-allow` comment directly above every code-side
+/// finding, per file, and return the patched sources.  Doc-anchored
+/// findings (file == "DESIGN.md") are left alone — they cannot be
+/// allowed by design.
+fn with_allows(files: &[(String, String)], report: &Report) -> Vec<(String, String)> {
+    let mut out = files.to_vec();
+    for (rel, text) in out.iter_mut() {
+        let mut targets: Vec<(usize, &str)> = report
+            .findings
+            .iter()
+            .filter(|f| f.file == *rel)
+            .map(|f| (f.line, f.rule))
+            .collect();
+        if targets.is_empty() {
+            continue;
+        }
+        // insert bottom-up so earlier line numbers stay valid
+        targets.sort_by(|a, b| b.0.cmp(&a.0));
+        let mut lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        for (line, rule) in targets {
+            lines.insert(
+                line - 1,
+                format!("// percache-allow({rule}): fixture suppression round-trip"),
+            );
+        }
+        *text = lines.join("\n");
+    }
+    out
+}
+
+#[test]
+fn panic_fixture_finds_all_seeded_hazards() {
+    let report = analyze_fixture("panic");
+    assert_eq!(report.findings.len(), 4, "{:?}", report.findings);
+    assert!(report.findings.iter().all(|f| f.rule == RULE_PANIC_PATH));
+    // all in the serve-path file; the cache/ unwrap is out of scope
+    assert!(report.findings.iter().all(|f| f.file == "server/mod.rs"));
+    let msgs: Vec<&str> = report.findings.iter().map(|f| f.message.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains(".unwrap()")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains(".expect()")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("panic!")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("unchecked indexing")), "{msgs:?}");
+    // the fixture's own allow already suppresses one unwrap
+    assert_eq!(report.suppressed, 1);
+}
+
+#[test]
+fn panic_fixture_passes_with_allows() {
+    let (files, design) = load_fixture("panic");
+    let before = run(&files, &design);
+    assert_eq!(before.findings.len(), 4);
+    let after = run(&with_allows(&files, &before), &design);
+    assert!(after.is_clean(), "{:?}", after.findings);
+    assert_eq!(after.suppressed, 5, "4 inserted allows + 1 pre-existing");
+}
+
+#[test]
+fn lock_fixture_reports_three_lock_cycle_once() {
+    let report = analyze_fixture("lock");
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    let f = &report.findings[0];
+    assert_eq!(f.rule, RULE_LOCK_ORDER);
+    for lock in ["LOCK_A", "LOCK_B", "LOCK_C"] {
+        assert!(f.message.contains(lock), "{}", f.message);
+    }
+    assert!(f.message.contains("cycle"), "{}", f.message);
+}
+
+#[test]
+fn lock_fixture_passes_with_allow_at_witness() {
+    let (files, design) = load_fixture("lock");
+    let before = run(&files, &design);
+    assert_eq!(before.findings.len(), 1);
+    let after = run(&with_allows(&files, &before), &design);
+    assert!(after.is_clean(), "{:?}", after.findings);
+    assert_eq!(after.suppressed, 1);
+}
+
+#[test]
+fn metrics_fixture_drifts_in_both_directions() {
+    let report = analyze_fixture("metrics");
+    assert_eq!(report.findings.len(), 4, "{:?}", report.findings);
+    assert!(report.findings.iter().all(|f| f.rule == RULE_METRICS_SCHEMA));
+    let has = |needle: &str| report.findings.iter().any(|f| f.message.contains(needle));
+    assert!(has("Fixture.Bad"), "naming-scheme violation");
+    assert!(has("fixture.count"), "histogram without _ms suffix");
+    assert!(has("fixture.undocumented"), "used but not documented");
+    assert!(has("fixture.unused_total"), "documented but not used");
+    // the reverse-direction finding anchors in the doc, not in code
+    let unused = report
+        .findings
+        .iter()
+        .find(|f| f.message.contains("fixture.unused_total"))
+        .expect("reverse finding");
+    assert_eq!(unused.file, "DESIGN.md");
+}
+
+#[test]
+fn metrics_doc_findings_cannot_be_allowed() {
+    let (files, design) = load_fixture("metrics");
+    let before = run(&files, &design);
+    assert_eq!(before.findings.len(), 4);
+    // allows fix the three code-side findings; the doc-anchored
+    // documented-but-unused finding survives — the doc must change.
+    let after = run(&with_allows(&files, &before), &design);
+    assert_eq!(after.findings.len(), 1, "{:?}", after.findings);
+    assert_eq!(after.findings[0].file, "DESIGN.md");
+    assert_eq!(after.suppressed, 3);
+}
+
+#[test]
+fn unsafe_fixture_policy_and_contract() {
+    let report = analyze_fixture("unsafe");
+    assert_eq!(report.findings.len(), 2, "{:?}", report.findings);
+    assert!(report.findings.iter().all(|f| f.rule == RULE_UNSAFE_AUDIT));
+    let outside = report
+        .findings
+        .iter()
+        .find(|f| f.file == "cache/mod.rs")
+        .expect("policy finding");
+    assert!(outside.message.contains("outside runtime/"));
+    let contract = report
+        .findings
+        .iter()
+        .find(|f| f.file == "runtime/mod.rs")
+        .expect("contract finding");
+    assert!(contract.message.contains("SAFETY:"));
+}
+
+#[test]
+fn unsafe_fixture_passes_with_allows() {
+    let (files, design) = load_fixture("unsafe");
+    let before = run(&files, &design);
+    assert_eq!(before.findings.len(), 2);
+    let after = run(&with_allows(&files, &before), &design);
+    assert!(after.is_clean(), "{:?}", after.findings);
+    assert_eq!(after.suppressed, 2);
+}
+
+#[test]
+fn findings_json_schema_stable() {
+    let report = analyze_fixture("panic");
+    let js = report.to_json().to_string();
+    assert!(js.contains("\"schema\":\"percache.analysis/v1\""), "{js}");
+    assert!(js.contains("\"finding_count\":4"), "{js}");
+    assert!(js.contains("\"suppressed\":1"), "{js}");
+    assert!(js.contains("panic_path"), "{js}");
+    assert!(js.contains("server/mod.rs"), "{js}");
+}
+
+/// The meta-test: the real source tree must stay clean against the
+/// real DESIGN.md.  This is the same run `percache check` gates CI
+/// with; a failure here means either fix the code, fix the §12 table,
+/// or add a justified `percache-allow`.
+#[test]
+fn real_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let design = Path::new(env!("CARGO_MANIFEST_DIR")).join("../DESIGN.md");
+    let report = analyze(&src, &design).expect("analysis runs");
+    assert!(report.files > 30, "expected the whole crate, got {} files", report.files);
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.render()).collect();
+    assert!(report.is_clean(), "findings on the real tree:\n{}", rendered.join("\n"));
+}

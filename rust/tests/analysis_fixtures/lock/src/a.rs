@@ -1,0 +1,19 @@
+//! Fixture: two legs of a three-lock cycle over cross-file statics.
+//! `LOCK_*` roots are ALL-UPPERCASE, so the rule unifies them with the
+//! acquisitions in `b.rs`.
+
+pub fn emit() {
+    crate::obs_counter!("fixture.ok").inc();
+}
+
+pub fn a_then_b() {
+    let g = LOCK_A.lock();
+    LOCK_B.lock().touch();
+    drop(g);
+}
+
+pub fn b_then_c() {
+    let g = LOCK_B.lock();
+    LOCK_C.lock().touch();
+    drop(g);
+}

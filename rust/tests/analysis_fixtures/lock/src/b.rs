@@ -1,0 +1,8 @@
+//! Fixture: the closing leg — C before A — which turns the acquisition
+//! graph into a cycle LOCK_A -> LOCK_B -> LOCK_C -> LOCK_A.
+
+pub fn c_then_a() {
+    let g = LOCK_C.lock();
+    LOCK_A.lock().touch();
+    drop(g);
+}

@@ -1,0 +1,10 @@
+//! Fixture: metric-name drift in every direction the rule checks.
+//! First two emissions are conformant; the rest are seeded findings.
+
+pub fn emit() {
+    crate::obs_counter!("fixture.ok").inc();
+    crate::obs_hist!("fixture.lat_ms").record(1.0);
+    crate::obs_counter!("Fixture.Bad").inc();
+    crate::obs_hist!("fixture.count").record(2.0);
+    crate::obs_counter!("fixture.undocumented").inc();
+}

@@ -1,0 +1,7 @@
+//! Fixture: a non-serve-path module — `.unwrap()` here is batch code
+//! and must NOT be flagged by `panic_path`.
+
+pub fn batch(x: Option<u8>) -> u8 {
+    crate::obs_counter!("fixture.ok").inc();
+    x.unwrap()
+}

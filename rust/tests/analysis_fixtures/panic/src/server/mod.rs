@@ -1,0 +1,19 @@
+//! Fixture: seeded serve-path panic hazards, one per line, in a
+//! module the `panic_path` rule covers.  Never compiled — parsed by
+//! `rust/tests/analysis.rs`.
+
+pub fn seeded(v: &[u8], i: usize) -> u8 {
+    let x: Option<u8> = None;
+    let a = x.unwrap();
+    let b = x.expect("boom");
+    if v.is_empty() {
+        panic!("empty");
+    }
+    let c = v[i];
+    a + b + c
+}
+
+pub fn allowed(x: Option<u8>) -> u8 {
+    // percache-allow(panic_path): fixture — demonstrates inline suppression
+    x.unwrap()
+}

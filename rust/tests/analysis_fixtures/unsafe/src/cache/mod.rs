@@ -1,0 +1,10 @@
+//! Fixture: `unsafe` outside `runtime/` violates the crate policy no
+//! matter how it is commented.
+
+pub fn emit() {
+    crate::obs_counter!("fixture.ok").inc();
+}
+
+pub fn peek(p: *const u8) -> u8 {
+    unsafe { *p }
+}

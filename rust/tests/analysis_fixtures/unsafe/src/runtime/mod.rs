@@ -1,0 +1,11 @@
+//! Fixture: `unsafe` is permitted in `runtime/`, but only with a
+//! `// SAFETY:` contract comment close above it.
+
+pub fn undocumented(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+pub fn documented(p: *const u8) -> u8 {
+    // SAFETY: fixture — caller guarantees `p` is valid for one read
+    unsafe { *p }
+}
