@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         let mut router: Router<u64> = Router::new(RouterConfig {
             queue_cap: 1 << 20,
             global_cap: 1 << 20,
+            ..RouterConfig::default()
         });
         for _ in 0..tenants {
             router.register_tenant();

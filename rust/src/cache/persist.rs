@@ -121,6 +121,16 @@ fn predictor_section(predictor: &QueryPredictor) -> Json {
                 .collect(),
         ),
     );
+    pj.insert(
+        "arrival_ticks",
+        Json::Arr(
+            predictor
+                .arrival_ticks()
+                .iter()
+                .map(|&t| Json::Num(t as f64))
+                .collect(),
+        ),
+    );
     Json::Obj(pj)
 }
 
@@ -358,6 +368,18 @@ pub fn load_state(
             history += 1;
         }
     }
+    // arrival ticks (periodicity signal for prefetch forecasts); absent
+    // in pre-scenario snapshots, which restore with an empty buffer
+    for t in j
+        .get("predictor")
+        .get("arrival_ticks")
+        .as_arr()
+        .unwrap_or(&[])
+    {
+        if let Some(n) = t.as_usize() {
+            predictor.observe_arrival(n as u64);
+        }
+    }
     // the replayed history equals the snapshot: nothing new to persist
     predictor.mark_clean();
 
@@ -410,6 +432,8 @@ mod tests {
             qa.insert("beta query", emb(0.0, 1.0), None, true);
             let mut pred = QueryPredictor::new(1);
             pred.observe("alpha query");
+            pred.observe_arrival(3);
+            pred.observe_arrival(9);
             save_state(&dir, &tree, &qa, &pred).unwrap();
             (tree.bytes_used(), qa.bytes_used())
         };
@@ -428,6 +452,12 @@ mod tests {
         let hit = qa.match_query(&emb(1.0, 0.0), 0.85).expect("restored qa hit");
         assert_eq!(hit.1, vec![4, 5]);
         assert_eq!(pred.history_len(), 1);
+        assert_eq!(
+            pred.arrival_ticks(),
+            &[3, 9],
+            "arrival ticks must survive the snapshot"
+        );
+        assert!(!pred.is_dirty(), "restore leaves the predictor clean");
         tree.check_invariants().unwrap();
         qa.check_invariants().unwrap();
         let _ = std::fs::remove_dir_all(&dir);

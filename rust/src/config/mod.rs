@@ -43,6 +43,18 @@ pub struct TieringConfig {
     /// Scheduled prefetches start hydrating this many ticks before the
     /// forecasted active period.
     pub prefetch_lead_ticks: u64,
+    /// Cold-tier disk budget in bytes (0 = unlimited): demoted shard
+    /// snapshots beyond the cap evict oldest-demotion-first.
+    pub cold_bytes_cap: usize,
+    /// Ask each shard's own `QueryPredictor` for a periodicity forecast
+    /// at demotion time and schedule the prefetch it implies (on by
+    /// default; a predictor that has never seen arrival ticks simply
+    /// forecasts nothing).
+    pub predictor_prefetch: bool,
+    /// SLO veto: a tenant whose windowed SLO-miss rate is at or above
+    /// this is never a demotion/pressure victim, and prefetch hydration
+    /// is deferred while the system-wide miss rate sits above it.
+    pub slo_veto_miss_rate: f64,
 }
 
 impl Default for TieringConfig {
@@ -54,6 +66,9 @@ impl Default for TieringConfig {
             demote_watermark_frac: 0.85,
             min_resident: 1,
             prefetch_lead_ticks: 2,
+            cold_bytes_cap: 0,
+            predictor_prefetch: true,
+            slo_veto_miss_rate: 0.5,
         }
     }
 }
@@ -79,6 +94,15 @@ impl TieringConfig {
         if let Some(v) = j.get("prefetch_lead_ticks").as_usize() {
             t.prefetch_lead_ticks = v as u64;
         }
+        if let Some(v) = j.get("cold_bytes_cap").as_usize() {
+            t.cold_bytes_cap = v;
+        }
+        if let Some(b) = j.get("predictor_prefetch").as_bool() {
+            t.predictor_prefetch = b;
+        }
+        if let Some(v) = j.get("slo_veto_miss_rate").as_f64() {
+            t.slo_veto_miss_rate = v;
+        }
         t.validate()?;
         Ok(t)
     }
@@ -94,6 +118,10 @@ impl TieringConfig {
             "demote_watermark_frac must be in (0,1]"
         );
         anyhow::ensure!(self.min_resident >= 1, "min_resident >= 1");
+        anyhow::ensure!(
+            self.slo_veto_miss_rate > 0.0 && self.slo_veto_miss_rate <= 1.0,
+            "slo_veto_miss_rate must be in (0,1]"
+        );
         Ok(())
     }
 
@@ -105,6 +133,9 @@ impl TieringConfig {
         o.insert("demote_watermark_frac", self.demote_watermark_frac);
         o.insert("min_resident", self.min_resident);
         o.insert("prefetch_lead_ticks", self.prefetch_lead_ticks);
+        o.insert("cold_bytes_cap", self.cold_bytes_cap);
+        o.insert("predictor_prefetch", self.predictor_prefetch);
+        o.insert("slo_veto_miss_rate", self.slo_veto_miss_rate);
         Json::Obj(o)
     }
 }
@@ -162,6 +193,113 @@ impl ObsConfig {
     }
 }
 
+/// SLO-aware control knobs (DESIGN.md §14): how per-tenant SLO-miss and
+/// queue-delay signals, read back from the obs metrics registry, feed
+/// the governor's utility and the router's load shedding.  With no
+/// signals published (`TenantRegistry::set_slo_signals` never called)
+/// every knob is inert and behaviour matches the pre-SLO control plane.
+#[derive(Debug, Clone)]
+pub struct SloConfig {
+    /// Utility boost per unit of windowed SLO-miss rate.
+    pub miss_weight: f64,
+    /// Utility boost per unit of queue-delay/target ratio (the ratio is
+    /// clamped to 1 so delay alone cannot dominate).
+    pub delay_weight: f64,
+    /// Cap on the combined SLO utility boost: saturated signals scale
+    /// every shard uniformly instead of thrashing the plan.
+    pub boost_cap: f64,
+    /// Windowed miss rate at which a tenant's shedding streak grows.
+    pub shed_miss_rate: f64,
+    /// Windowed miss rate at which an engaged shed starts cooling off.
+    pub unshed_miss_rate: f64,
+    /// Consecutive violating (resp. healthy) windows before shedding
+    /// engages (resp. disengages).
+    pub shed_windows: u32,
+    /// While shedding, the router admits only up to this fraction of
+    /// the per-tenant queue cap (min 1).
+    pub shed_queue_frac: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            miss_weight: 2.0,
+            delay_weight: 1.0,
+            boost_cap: 4.0,
+            shed_miss_rate: 0.5,
+            unshed_miss_rate: 0.1,
+            shed_windows: 2,
+            shed_queue_frac: 0.125,
+        }
+    }
+}
+
+impl SloConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut s = SloConfig::default();
+        if let Some(v) = j.get("miss_weight").as_f64() {
+            s.miss_weight = v;
+        }
+        if let Some(v) = j.get("delay_weight").as_f64() {
+            s.delay_weight = v;
+        }
+        if let Some(v) = j.get("boost_cap").as_f64() {
+            s.boost_cap = v;
+        }
+        if let Some(v) = j.get("shed_miss_rate").as_f64() {
+            s.shed_miss_rate = v;
+        }
+        if let Some(v) = j.get("unshed_miss_rate").as_f64() {
+            s.unshed_miss_rate = v;
+        }
+        if let Some(v) = j.get("shed_windows").as_usize() {
+            s.shed_windows = v as u32;
+        }
+        if let Some(v) = j.get("shed_queue_frac").as_f64() {
+            s.shed_queue_frac = v;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.miss_weight >= 0.0, "miss_weight must be >= 0");
+        anyhow::ensure!(self.delay_weight >= 0.0, "delay_weight must be >= 0");
+        anyhow::ensure!(self.boost_cap >= 0.0, "boost_cap must be >= 0");
+        anyhow::ensure!(
+            self.shed_miss_rate > 0.0 && self.shed_miss_rate <= 1.0,
+            "shed_miss_rate must be in (0,1]"
+        );
+        anyhow::ensure!(
+            self.unshed_miss_rate >= 0.0 && self.unshed_miss_rate < self.shed_miss_rate,
+            "unshed_miss_rate must be in [0, shed_miss_rate)"
+        );
+        anyhow::ensure!(self.shed_windows >= 1, "shed_windows >= 1");
+        anyhow::ensure!(
+            self.shed_queue_frac > 0.0 && self.shed_queue_frac <= 1.0,
+            "shed_queue_frac must be in (0,1]"
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("miss_weight", self.miss_weight);
+        o.insert("delay_weight", self.delay_weight);
+        o.insert("boost_cap", self.boost_cap);
+        o.insert("shed_miss_rate", self.shed_miss_rate);
+        o.insert("unshed_miss_rate", self.unshed_miss_rate);
+        o.insert("shed_windows", self.shed_windows as usize);
+        o.insert("shed_queue_frac", self.shed_queue_frac);
+        Json::Obj(o)
+    }
+
+    /// The per-tenant queue cap while shedding is engaged.
+    pub fn shed_queue_cap(&self, queue_cap: usize) -> usize {
+        ((queue_cap as f64 * self.shed_queue_frac) as usize).max(1)
+    }
+}
+
 /// Multi-tenant serving knobs (the `tenancy` subsystem).  Disabled by
 /// default: single-tenant mode is a registry with one shard holding the
 /// whole budget, which leaves the paper experiments untouched.
@@ -190,6 +328,9 @@ pub struct TenancyConfig {
     pub queue_weight: f64,
     /// Warm/cold shard tiering (off by default).
     pub tiering: TieringConfig,
+    /// SLO-aware governor boost + admission shedding (inert until SLO
+    /// signals are published, see DESIGN.md §14).
+    pub slo: SloConfig,
 }
 
 impl Default for TenancyConfig {
@@ -207,6 +348,7 @@ impl Default for TenancyConfig {
             utility_alpha: 0.2,
             queue_weight: 0.5,
             tiering: TieringConfig::default(),
+            slo: SloConfig::default(),
         }
     }
 }
@@ -250,6 +392,9 @@ impl TenancyConfig {
         if j.get("tiering").as_obj().is_some() {
             t.tiering = TieringConfig::from_json(j.get("tiering"))?;
         }
+        if j.get("slo").as_obj().is_some() {
+            t.slo = SloConfig::from_json(j.get("slo"))?;
+        }
         t.validate()?;
         Ok(t)
     }
@@ -273,6 +418,7 @@ impl TenancyConfig {
         );
         anyhow::ensure!(self.queue_weight >= 0.0, "queue_weight must be >= 0");
         self.tiering.validate()?;
+        self.slo.validate()?;
         Ok(())
     }
 
@@ -290,6 +436,7 @@ impl TenancyConfig {
         o.insert("utility_alpha", self.utility_alpha);
         o.insert("queue_weight", self.queue_weight);
         o.insert("tiering", self.tiering.to_json());
+        o.insert("slo", self.slo.to_json());
         Json::Obj(o)
     }
 }
@@ -632,6 +779,43 @@ mod tests {
 
         // invalid capacity rejected
         let j = Json::parse(r#"{"obs": {"journal_capacity": 0}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn slo_block_roundtrip_and_defaults() {
+        let mut c = PerCacheConfig::default();
+        assert_eq!(c.tenancy.slo.shed_windows, 2);
+        assert_eq!(c.tenancy.slo.shed_queue_cap(32), 4);
+        c.tenancy.slo.miss_weight = 3.0;
+        c.tenancy.slo.shed_miss_rate = 0.6;
+        c.tenancy.tiering.cold_bytes_cap = 1 << 20;
+        c.tenancy.tiering.predictor_prefetch = false;
+        let j = c.to_json();
+        let c2 = PerCacheConfig::from_json(&j).unwrap();
+        assert_eq!(c2.tenancy.slo.miss_weight, 3.0);
+        assert_eq!(c2.tenancy.slo.shed_miss_rate, 0.6);
+        assert_eq!(c2.tenancy.tiering.cold_bytes_cap, 1 << 20);
+        assert!(!c2.tenancy.tiering.predictor_prefetch);
+
+        // partial slo block keeps the other defaults
+        let j = Json::parse(r#"{"tenancy": {"slo": {"boost_cap": 8.0}}}"#).unwrap();
+        let c3 = PerCacheConfig::from_json(&j).unwrap();
+        assert_eq!(c3.tenancy.slo.boost_cap, 8.0);
+        assert_eq!(c3.tenancy.slo.delay_weight, 1.0);
+        assert_eq!(c3.tenancy.tiering.cold_bytes_cap, 0, "cold tier unlimited by default");
+        assert!(c3.tenancy.tiering.predictor_prefetch);
+    }
+
+    #[test]
+    fn slo_invalid_rejected() {
+        let j = Json::parse(r#"{"tenancy": {"slo": {"shed_miss_rate": 0.0}}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"tenancy": {"slo": {"unshed_miss_rate": 0.9}}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err(), "unshed must stay below shed");
+        let j = Json::parse(r#"{"tenancy": {"slo": {"shed_queue_frac": 0.0}}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"tenancy": {"tiering": {"slo_veto_miss_rate": 1.5}}}"#).unwrap();
         assert!(PerCacheConfig::from_json(&j).is_err());
     }
 

@@ -21,6 +21,8 @@
 use crate::predict::{DETAIL_TEMPLATES, GENERAL_TEMPLATES};
 use crate::util::rng::Rng;
 
+pub mod traces;
+
 pub const DATASETS: [&str; 4] = ["mised", "enronqa", "email", "dialog"];
 pub const USERS_PER_DATASET: usize = 5;
 

@@ -1,0 +1,379 @@
+//! Seeded load traces for the scenario harness (`percache exp
+//! scenarios`, DESIGN.md §14): deterministic multi-tenant arrival
+//! streams with per-tenant SLO targets, shaped after the load patterns
+//! the paper's third claim ("adapt configurations to dynamic system
+//! loads") has to survive.
+//!
+//! Four scenarios:
+//!
+//! * **diurnal** — each tenant wakes periodically (phase-offset active
+//!   windows), the pattern the per-tenant `QueryPredictor` can learn and
+//!   the tiering prefetch hook can warm shards ahead of;
+//! * **bursty** — a background trickle punctured by flash crowds: one
+//!   tenant's arrival rate jumps far past serving capacity for a few
+//!   ticks, with cache-busting unique queries;
+//! * **churn** — tenants arrive, live for a window, and leave; each
+//!   entry opens with an onboarding flood of cold queries (exercises the
+//!   cold tier and its disk budget);
+//! * **adversarial** — sustained overload of unique queries on unique
+//!   segment paths across every tenant: zero cache reuse, every SLO
+//!   signal saturates.  Used to pin that admission sheds load before
+//!   the governor thrashes allocations.
+//!
+//! Everything is derived from `TraceSpec.seed` through `util::rng::Rng`
+//! — same seed, same trace, byte for byte.  Time is virtual: a trace is
+//! `ticks` scheduling rounds, each `tick_ms` modeled milliseconds wide;
+//! the replay in `exp::scenarios_exp` serves against the same modeled
+//! clock, so latencies and SLO misses are reproducible across machines.
+
+use anyhow::Result;
+
+use crate::tenancy::sim::{Arrival, SimConfig};
+use crate::tenancy::TenantId;
+use crate::tokenizer::{fnv1a64, SEGMENT_TOKENS};
+use crate::util::rng::Rng;
+
+/// Scenario names, in report order.
+pub const SCENARIOS: [&str; 4] = ["diurnal", "bursty", "churn", "adversarial"];
+
+/// Requests at full modeled cost one tick can serve: the capacity the
+/// rates below are calibrated against (`tick_ms = CAPACITY_PER_TICK ×`
+/// the modeled full-serve latency).
+pub const CAPACITY_PER_TICK: usize = 8;
+
+/// Queries reused per tenant outside floods (repeats hit the QA bank).
+const TOPICS: usize = 2;
+const VARIANTS: usize = 3;
+
+/// Trace shape (full vs `--smoke`).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpec {
+    pub tenants: usize,
+    pub ticks: usize,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    pub fn full(seed: u64) -> Self {
+        TraceSpec {
+            tenants: 6,
+            ticks: 240,
+            seed,
+        }
+    }
+
+    pub fn smoke(seed: u64) -> Self {
+        TraceSpec {
+            tenants: 4,
+            ticks: 96,
+            seed,
+        }
+    }
+}
+
+/// One scenario: per-tick arrival batches plus per-tenant p99 SLO
+/// targets in modeled milliseconds.
+#[derive(Debug, Clone)]
+pub struct ScenarioTrace {
+    pub name: String,
+    pub tenants: usize,
+    /// Modeled wall-width of one scheduling tick, ms.
+    pub tick_ms: f64,
+    /// `ticks[t]` = the arrivals stamped at tick `t`'s start.
+    pub ticks: Vec<Vec<Arrival>>,
+    /// Per-tenant p99 end-to-end SLO bound, modeled ms.
+    pub slo_p99_ms: Vec<f64>,
+    pub seed: u64,
+}
+
+impl ScenarioTrace {
+    pub fn n_ticks(&self) -> usize {
+        self.ticks.len()
+    }
+
+    pub fn total_arrivals(&self) -> usize {
+        self.ticks.iter().map(|t| t.len()).sum()
+    }
+}
+
+/// Modeled latency of one full-cost serve (4-segment prefill + decode)
+/// under the default sim cost model — the unit every rate, tick width
+/// and SLO target in this module is calibrated in.
+pub fn modeled_full_serve_ms() -> f64 {
+    let cfg = SimConfig::default();
+    let s_tokens = 4 * SEGMENT_TOKENS;
+    let flops =
+        cfg.dims.prefill_full(s_tokens) + cfg.decode_tokens as u64 * cfg.dims.decode_step(s_tokens);
+    flops as f64 / (cfg.gflops * 1e6)
+}
+
+/// Tick width: the modeled budget for [`CAPACITY_PER_TICK`] full serves.
+pub fn tick_width_ms() -> f64 {
+    CAPACITY_PER_TICK as f64 * modeled_full_serve_ms()
+}
+
+/// Per-tenant SLO targets: one tick of queueing headroom, with tenant 0
+/// a premium tenant holding a tighter bound.
+fn slo_targets(tenants: usize) -> Vec<f64> {
+    let base = tick_width_ms();
+    (0..tenants)
+        .map(|t| if t == 0 { base * 0.75 } else { base })
+        .collect()
+}
+
+/// A reusable pool query: verbatim repeats land in the QA bank, same
+/// topic shares a cached 2-chunk segment path.
+fn pool_arrival(tenant: TenantId, i: usize) -> Arrival {
+    let topic = i % TOPICS;
+    let variant = (i / TOPICS) % VARIANTS;
+    let q = format!("tenant{tenant:02} topic{topic} phrasing{variant} daily digest request");
+    let tag = |part: &str| fnv1a64(format!("t{tenant}/topic{topic}/{part}").as_bytes());
+    Arrival {
+        seg_keys: vec![fnv1a64(b"sys"), tag("a"), tag("b"), fnv1a64(q.as_bytes())],
+        tenant,
+        query: q,
+    }
+}
+
+/// A cache-busting query: unique text on a unique segment path, so
+/// neither the QA bank nor the QKV tree can help.
+fn unique_arrival(tenant: TenantId, uid: u64) -> Arrival {
+    let q = format!("tenant{tenant:02} novel{uid:08} audit trail lookup item{uid}");
+    let tag = |part: &str| fnv1a64(format!("t{tenant}/u{uid}/{part}").as_bytes());
+    Arrival {
+        seg_keys: vec![fnv1a64(b"sys"), tag("a"), tag("b"), fnv1a64(q.as_bytes())],
+        tenant,
+        query: q,
+    }
+}
+
+/// Phase-offset periodic active windows; period and duty cycle derived
+/// from the spec so a smoke trace still covers 4 full cycles.
+pub fn diurnal(spec: &TraceSpec) -> ScenarioTrace {
+    let period = (spec.ticks / 4).max(8);
+    let duty = (period / 4).max(2);
+    let mut seq = vec![0usize; spec.tenants];
+    let mut ticks = Vec::with_capacity(spec.ticks);
+    for tick in 0..spec.ticks {
+        let mut batch = Vec::new();
+        for t in 0..spec.tenants {
+            let phase = (t * period / spec.tenants) % period;
+            let pos = (tick + period - phase) % period;
+            if pos < duty {
+                // active window: a moderate 4/tick, well under capacity
+                for _ in 0..4 {
+                    batch.push(pool_arrival(t as TenantId, seq[t]));
+                    seq[t] += 1;
+                }
+            }
+        }
+        ticks.push(batch);
+    }
+    ScenarioTrace {
+        name: "diurnal".into(),
+        tenants: spec.tenants,
+        tick_ms: tick_width_ms(),
+        ticks,
+        slo_p99_ms: slo_targets(spec.tenants),
+        seed: spec.seed,
+    }
+}
+
+/// Background trickle + flash crowds: every quarter of the trace one
+/// tenant's rate jumps to ~4× capacity for a few ticks, with unique
+/// queries so the crowd cannot be served from cache.
+pub fn bursty(spec: &TraceSpec) -> ScenarioTrace {
+    let mut rng = Rng::new(spec.seed ^ 0xB0657);
+    let crowd_len = 6usize.min(spec.ticks / 8).max(3);
+    let crowd_gap = (spec.ticks / 4).max(crowd_len * 2);
+    let crowd_rate = CAPACITY_PER_TICK * 4;
+    // pick each crowd's victim tenant up front (deterministic from seed)
+    let crowds: Vec<(usize, TenantId)> = (0..spec.ticks / crowd_gap)
+        .map(|k| {
+            let start = k * crowd_gap + crowd_gap / 3 + rng.below(3);
+            (start, rng.below(spec.tenants) as TenantId)
+        })
+        .collect();
+    let mut seq = vec![0usize; spec.tenants];
+    let mut uid = 0u64;
+    let mut ticks = Vec::with_capacity(spec.ticks);
+    for tick in 0..spec.ticks {
+        let mut batch = Vec::new();
+        // trickle: each tenant one pool query every other tick
+        for t in 0..spec.tenants {
+            if (tick + t) % 2 == 0 {
+                batch.push(pool_arrival(t as TenantId, seq[t]));
+                seq[t] += 1;
+            }
+        }
+        for &(start, victim) in &crowds {
+            if tick >= start && tick < start + crowd_len {
+                for _ in 0..crowd_rate {
+                    batch.push(unique_arrival(victim, uid));
+                    uid += 1;
+                }
+            }
+        }
+        ticks.push(batch);
+    }
+    ScenarioTrace {
+        name: "bursty".into(),
+        tenants: spec.tenants,
+        tick_ms: tick_width_ms(),
+        ticks,
+        slo_p99_ms: slo_targets(spec.tenants),
+        seed: spec.seed,
+    }
+}
+
+/// Sliding tenant population: tenant `t` is live for a two-stride
+/// window starting at `t × stride`, opening with an onboarding flood of
+/// cold queries, then a steady pool rate.  Departed tenants idle out to
+/// the cold tier, growing it monotonically — the disk-budget workload.
+pub fn churn(spec: &TraceSpec) -> ScenarioTrace {
+    let stride = (spec.ticks / spec.tenants).max(4);
+    let life = stride * 2;
+    let flood_ticks = 3usize;
+    let flood_rate = 12usize;
+    let mut seq = vec![0usize; spec.tenants];
+    let mut uid = 0u64;
+    let mut ticks = Vec::with_capacity(spec.ticks);
+    for tick in 0..spec.ticks {
+        let mut batch = Vec::new();
+        for t in 0..spec.tenants {
+            let entry = t * stride;
+            if tick < entry || tick >= entry + life {
+                continue;
+            }
+            if tick - entry < flood_ticks {
+                // onboarding flood: cold, unique, far above fair share
+                for _ in 0..flood_rate {
+                    batch.push(unique_arrival(t as TenantId, uid));
+                    uid += 1;
+                }
+            } else {
+                for _ in 0..3 {
+                    batch.push(pool_arrival(t as TenantId, seq[t]));
+                    seq[t] += 1;
+                }
+            }
+        }
+        ticks.push(batch);
+    }
+    ScenarioTrace {
+        name: "churn".into(),
+        tenants: spec.tenants,
+        tick_ms: tick_width_ms(),
+        ticks,
+        slo_p99_ms: slo_targets(spec.tenants),
+        seed: spec.seed,
+    }
+}
+
+/// Sustained cache-thrashing overload: every tick carries 1.5× capacity
+/// of unique queries spread round-robin across all tenants.  Nothing
+/// hits, every tenant's SLO signal saturates, and the only defenses are
+/// admission shedding and a governor that does not thrash.
+pub fn adversarial(spec: &TraceSpec) -> ScenarioTrace {
+    let rate = CAPACITY_PER_TICK * 3 / 2;
+    let mut uid = 0u64;
+    let mut ticks = Vec::with_capacity(spec.ticks);
+    for tick in 0..spec.ticks {
+        let mut batch = Vec::with_capacity(rate);
+        for i in 0..rate {
+            let t = ((tick * rate + i) % spec.tenants) as TenantId;
+            batch.push(unique_arrival(t, uid));
+            uid += 1;
+        }
+        ticks.push(batch);
+    }
+    ScenarioTrace {
+        name: "adversarial".into(),
+        tenants: spec.tenants,
+        tick_ms: tick_width_ms(),
+        ticks,
+        slo_p99_ms: slo_targets(spec.tenants),
+        seed: spec.seed,
+    }
+}
+
+/// Build one scenario by name.
+pub fn scenario(name: &str, spec: &TraceSpec) -> Result<ScenarioTrace> {
+    match name {
+        "diurnal" => Ok(diurnal(spec)),
+        "bursty" => Ok(bursty(spec)),
+        "churn" => Ok(churn(spec)),
+        "adversarial" => Ok(adversarial(spec)),
+        other => anyhow::bail!("unknown scenario '{other}' (have {SCENARIOS:?})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SEED: u64 = 0x5CE7A710;
+
+    #[test]
+    fn traces_are_seed_deterministic() {
+        for name in SCENARIOS {
+            let spec = TraceSpec::smoke(SEED);
+            let a = scenario(name, &spec).unwrap();
+            let b = scenario(name, &spec).unwrap();
+            assert_eq!(a.n_ticks(), b.n_ticks(), "{name}");
+            for (x, y) in a.ticks.iter().flatten().zip(b.ticks.iter().flatten()) {
+                assert_eq!(x.tenant, y.tenant, "{name}");
+                assert_eq!(x.query, y.query, "{name}");
+                assert_eq!(x.seg_keys, y.seg_keys, "{name}");
+            }
+            assert_eq!(a.slo_p99_ms, b.slo_p99_ms, "{name}");
+        }
+    }
+
+    #[test]
+    fn every_scenario_has_arrivals_for_every_tenant() {
+        for name in SCENARIOS {
+            let spec = TraceSpec::smoke(SEED);
+            let tr = scenario(name, &spec).unwrap();
+            assert_eq!(tr.n_ticks(), spec.ticks);
+            assert_eq!(tr.slo_p99_ms.len(), spec.tenants);
+            for t in 0..spec.tenants {
+                assert!(
+                    tr.ticks.iter().flatten().any(|a| a.tenant == t as TenantId),
+                    "{name}: tenant {t} never arrives"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_peaks_exceed_capacity_and_diurnal_does_not() {
+        let spec = TraceSpec::smoke(SEED);
+        let b = bursty(&spec);
+        let peak = b.ticks.iter().map(|t| t.len()).max().unwrap_or(0);
+        assert!(
+            peak > CAPACITY_PER_TICK * 2,
+            "flash crowd must exceed capacity: peak {peak}"
+        );
+        let d = diurnal(&spec);
+        // diurnal windows overlap at most briefly; total stays moderate
+        assert!(d.total_arrivals() > 0);
+    }
+
+    #[test]
+    fn adversarial_queries_never_repeat() {
+        let spec = TraceSpec::smoke(SEED);
+        let tr = adversarial(&spec);
+        let mut seen = std::collections::HashSet::new();
+        for a in tr.ticks.iter().flatten() {
+            assert!(seen.insert(a.query.clone()), "repeat: {}", a.query);
+        }
+    }
+
+    #[test]
+    fn premium_tenant_has_the_tighter_slo() {
+        let spec = TraceSpec::smoke(SEED);
+        let tr = churn(&spec);
+        assert!(tr.slo_p99_ms[0] < tr.slo_p99_ms[1]);
+    }
+}

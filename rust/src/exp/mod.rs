@@ -13,6 +13,7 @@ pub mod overall;
 pub mod overhead;
 pub mod persistence_exp;
 pub mod runner;
+pub mod scenarios_exp;
 pub mod scheduler_exp;
 pub mod showcase;
 pub mod tenancy_exp;

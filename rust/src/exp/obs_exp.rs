@@ -116,6 +116,7 @@ fn run_arm(shape: &Shape, enabled: bool) -> Result<Vec<f64>> {
     let mut router: Router<Arrival> = Router::new(RouterConfig {
         queue_cap: tc.queue_cap,
         global_cap: tc.global_queue_cap,
+        ..RouterConfig::default()
     });
     for _ in 0..shape.tenants {
         router.register_tenant();

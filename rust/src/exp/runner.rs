@@ -6,8 +6,8 @@ use anyhow::Result;
 use crate::runtime::Runtime;
 
 use super::{
-    ablation, motivation, obs_exp, overall, overhead, persistence_exp, scheduler_exp, showcase,
-    tenancy_exp, tiering_exp,
+    ablation, motivation, obs_exp, overall, overhead, persistence_exp, scenarios_exp,
+    scheduler_exp, showcase, tenancy_exp, tiering_exp,
 };
 
 /// All experiment ids, in paper order.
@@ -27,8 +27,11 @@ pub const EXPERIMENTS: [&str; 18] = [
 /// is the cold-vs-warm restart comparison (reports/BENCH_persistence.json);
 /// `tiering` is the warm/cold shard-residency comparison
 /// (reports/BENCH_tiering.json); `obs` measures telemetry overhead,
-/// enabled vs disabled, on the tenancy workload (reports/BENCH_obs.json).
-pub const APPENDIX: [&str; 7] = [
+/// enabled vs disabled, on the tenancy workload (reports/BENCH_obs.json);
+/// `scenarios` is the trace-driven SLO co-design suite — four workload
+/// scenarios across static/SLO × tiering-on/off arms
+/// (reports/BENCH_scenarios.json, gated vs a committed baseline).
+pub const APPENDIX: [&str; 8] = [
     "fig21",
     "fig22",
     "fig23",
@@ -36,11 +39,12 @@ pub const APPENDIX: [&str; 7] = [
     "persistence",
     "tiering",
     "obs",
+    "scenarios",
 ];
 
 /// Experiments that run entirely at the cache level — no PJRT artifacts,
 /// dispatchable without a [`Runtime`] via [`run_offline`] (the CI path).
-pub const RUNTIME_FREE: [&str; 4] = ["tenancy", "persistence", "tiering", "obs"];
+pub const RUNTIME_FREE: [&str; 5] = ["tenancy", "persistence", "tiering", "obs", "scenarios"];
 
 pub fn is_runtime_free(name: &str) -> bool {
     RUNTIME_FREE.contains(&name)
@@ -55,6 +59,7 @@ pub fn run_offline(name: &str) -> Result<()> {
         "persistence" => persistence_exp::run_and_report()?,
         "tiering" => tiering_exp::run_and_report()?,
         "obs" => obs_exp::run_and_report()?,
+        "scenarios" => scenarios_exp::run_and_report()?,
         other => anyhow::bail!("'{other}' needs artifacts — runtime-free: {RUNTIME_FREE:?}"),
     }
     println!("[{name}] done in {:.1}s", t0.elapsed().as_secs_f64());
@@ -90,6 +95,7 @@ pub fn run_experiment(rt: &Runtime, name: &str) -> Result<()> {
         "persistence" => persistence_exp::persistence(rt)?,
         "tiering" => tiering_exp::tiering(rt)?,
         "obs" => obs_exp::obs(rt)?,
+        "scenarios" => scenarios_exp::scenarios(rt)?,
         other => anyhow::bail!(
             "unknown experiment '{other}' — known: {:?} + {:?}",
             EXPERIMENTS,
@@ -127,6 +133,7 @@ mod tests {
             "persistence",
             "tiering",
             "obs",
+            "scenarios",
         ] {
             assert!(APPENDIX.contains(&id), "{id} missing");
         }

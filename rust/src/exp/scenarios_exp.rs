@@ -1,0 +1,728 @@
+//! Trace-driven scenario suite (`percache exp scenarios`): the SLO
+//! co-design experiment of DESIGN.md §14.
+//!
+//! Four deterministic workload scenarios (`datasets::traces`: diurnal,
+//! bursty, churn, adversarial) replay under a virtual clock through the
+//! full control plane — router admission, SLO monitor, governor,
+//! tiering controller — across a 2×2 arm grid:
+//!
+//! * **static** — SLO signals recorded but never actuated (the
+//!   pre-§14 behaviour: plain utility governor, no shedding).
+//! * **slo** — the monitor's windowed signals feed the governor boost
+//!   and the router's hysteretic admission shedding.
+//! * **static_tiered** / **slo_tiered** — the same pair with warm/cold
+//!   shard tiering enabled (predictor-fed prefetch, cold-tier disk
+//!   budget on the churn scenario).
+//!
+//! Time is modeled, not measured: the clock advances by the analytic
+//! serve cost (`tenancy::sim`) plus a fixed per-serve overhead, and a
+//! cold pop pays a hydration (or rebuild-after-eviction) stall.  Every
+//! number in the report is therefore seed-deterministic, which is what
+//! lets CI gate on `reports/BENCH_scenarios.json` against a committed
+//! baseline (`--baseline`, 10% regression budget on miss rates and
+//! p99s).
+//!
+//! The acceptance bar asserted in-harness: on the overload scenarios
+//! (bursty, churn) the SLO arm must beat the static arm on SLO-miss
+//! rate — strictly, tiered and untiered alike.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::{TenancyConfig, TieringConfig};
+use crate::datasets::traces::{
+    modeled_full_serve_ms, scenario, ScenarioTrace, TraceSpec, SCENARIOS,
+};
+use crate::metrics::ServePath;
+use crate::obs::MetricsRegistry;
+use crate::runtime::Runtime;
+use crate::tenancy::sim::{serve_one, sim_slice_bytes, SimConfig};
+use crate::tenancy::{
+    Rejection, Router, RouterConfig, SloMonitor, TenantId, TenantRegistry,
+};
+use crate::tiering::TieringController;
+use crate::util::bench::percentile;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::common::reports_dir;
+use super::tiering_exp::smoke_mode;
+
+/// Fixed per-serve scheduling overhead, modeled ms (keeps QA hits from
+/// being literally free, so backlogs drain in finite virtual time).
+const SERVE_OVERHEAD_MS: f64 = 0.02;
+/// A cold pop stalls for this multiple of one full-cost serve
+/// (hydration from disk, or an empty-rebuild after cold eviction).
+const HYDRATE_STALL_FACTOR: f64 = 2.0;
+/// Global QKV budget in sim slices (tight enough that the governor's
+/// split matters, roomy enough that pool queries stay cacheable).
+const GLOBAL_SLICES: usize = 96;
+/// Cold-tier disk budget applied to the churn scenario's tiered arms —
+/// churn retires tenants permanently, so snapshots accumulate and the
+/// budget's oldest-first eviction gets exercised.
+const COLD_BYTES_CAP: usize = 32 * 1024;
+/// Tiered arms: demote after this many idle ticks.
+const IDLE_TICKS_TO_DEMOTE: u64 = 6;
+/// Tiered arms: prefetch lead, ticks.
+const PREFETCH_LEAD_TICKS: u64 = 2;
+/// The deterministic trace seed shared by every arm.
+const TRACE_SEED: u64 = 0x5CE7A710;
+
+/// One tenant's latency/SLO outcome in one arm.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub served: u64,
+    pub missed: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// One (scenario, arm) replay outcome.
+#[derive(Debug, Clone)]
+pub struct ArmOutcome {
+    pub arm: String,
+    pub slo_aware: bool,
+    pub tiering: bool,
+    pub per_tenant: Vec<TenantStats>,
+    pub served: u64,
+    pub missed: u64,
+    /// SLO misses / serves over the whole run.
+    pub miss_rate: f64,
+    pub shed_rejected: u64,
+    pub other_rejected: u64,
+    pub qa_hits: u64,
+    pub qkv_hits: u64,
+    pub full_serves: u64,
+    /// Cold pops that paid a synchronous hydration stall.
+    pub demand_stalls: u64,
+    /// Forecast-driven hydrations (off the serving clock).
+    pub prefetch_hydrations: u64,
+    pub cold_evictions: u64,
+    /// Evicted tenants restarted empty on demand.
+    pub recreations: u64,
+    pub rebalances: u64,
+    /// Per-tenant budget-direction reversals summed over the run — the
+    /// governor-thrash proxy the adversarial scenario watches.
+    pub budget_flips: u64,
+    /// Resident QKV bytes sampled after every controller tick.
+    pub resident_bytes_ticks: Vec<usize>,
+}
+
+/// One scenario across all four arms.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub scenario: String,
+    pub tenants: usize,
+    pub ticks: usize,
+    pub slo_p99_ms: Vec<f64>,
+    pub arms: Vec<ArmOutcome>,
+}
+
+impl ScenarioOutcome {
+    pub fn arm(&self, name: &str) -> Option<&ArmOutcome> {
+        self.arms.iter().find(|a| a.arm == name)
+    }
+}
+
+fn arm_name(slo_aware: bool, tiering: bool) -> &'static str {
+    match (slo_aware, tiering) {
+        (false, false) => "static",
+        (true, false) => "slo",
+        (false, true) => "static_tiered",
+        (true, true) => "slo_tiered",
+    }
+}
+
+/// Count per-tenant budget-direction reversals over the per-tick budget
+/// snapshots (zeros — non-resident ticks — and flat stretches ignored).
+fn budget_flips(series: &[Vec<usize>], tenants: usize) -> u64 {
+    let mut flips = 0u64;
+    for t in 0..tenants {
+        let mut last: Option<usize> = None;
+        let mut last_dir = 0i8;
+        for snap in series {
+            let b = snap.get(t).copied().unwrap_or(0);
+            if b == 0 {
+                continue;
+            }
+            if let Some(prev) = last {
+                let dir = match b.cmp(&prev) {
+                    std::cmp::Ordering::Greater => 1i8,
+                    std::cmp::Ordering::Less => -1i8,
+                    std::cmp::Ordering::Equal => 0i8,
+                };
+                if dir != 0 {
+                    if last_dir != 0 && dir != last_dir {
+                        flips += 1;
+                    }
+                    last_dir = dir;
+                }
+            }
+            last = Some(b);
+        }
+    }
+    flips
+}
+
+/// Replay one scenario trace through one arm under the virtual clock.
+///
+/// Each tick: enqueue the tick's arrivals (admission control), serve
+/// until the tick's deadline, close the SLO window, and run one
+/// controller tick.  When `slo_aware`, the closed window's signals are
+/// published to the governor and the shedding decision to the router;
+/// otherwise the monitor only measures.  After the trace ends the
+/// backlog drains on the same cadence with empty arrival batches.
+pub fn replay_scenario(
+    trace: &ScenarioTrace,
+    slo_aware: bool,
+    tiering: bool,
+    predictor_prefetch: bool,
+    state_dir: &Path,
+) -> Result<ArmOutcome> {
+    let arm = arm_name(slo_aware, tiering);
+    let sim = SimConfig::default();
+    let n = trace.tenants;
+
+    let mut tc = TenancyConfig::default();
+    tc.enabled = true;
+    tc.max_tenants = n;
+    tc.global_qkv_bytes = GLOBAL_SLICES * sim_slice_bytes();
+    tc.tiering = TieringConfig {
+        enabled: tiering,
+        idle_ticks_to_demote: IDLE_TICKS_TO_DEMOTE,
+        prefetch_lead_ticks: PREFETCH_LEAD_TICKS,
+        min_resident: 1,
+        predictor_prefetch,
+        cold_bytes_cap: if tiering && trace.name == "churn" {
+            COLD_BYTES_CAP
+        } else {
+            0
+        },
+        ..TieringConfig::default()
+    };
+
+    let mut registry = if tiering {
+        let dir = state_dir.join(format!("{}_{arm}", trace.name));
+        let _ = std::fs::remove_dir_all(&dir);
+        TenantRegistry::open_or_create(&tc, dir)?
+    } else {
+        TenantRegistry::new(&tc)
+    };
+    for _ in 0..n {
+        registry.create_tenant()?;
+    }
+
+    let local_metrics = MetricsRegistry::new();
+    let mut monitor = SloMonitor::new(&tc.slo, &trace.slo_p99_ms, &local_metrics);
+
+    let mut router: Router<(crate::tenancy::sim::Arrival, f64)> = Router::new(RouterConfig {
+        queue_cap: tc.queue_cap,
+        global_cap: tc.global_queue_cap,
+        shed_queue_cap: tc.slo.shed_queue_cap(tc.queue_cap),
+    });
+    for _ in 0..n {
+        router.register_tenant();
+    }
+    let mut ctl = TieringController::new(tc.tiering.clone(), n);
+
+    let stall_ms = HYDRATE_STALL_FACTOR * modeled_full_serve_ms();
+    let tick_ms = trace.tick_ms;
+
+    let mut clock = 0.0f64;
+    let mut e2e: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut shed_rejected = 0u64;
+    let mut other_rejected = 0u64;
+    let (mut qa_hits, mut qkv_hits, mut full_serves) = (0u64, 0u64, 0u64);
+    let mut demand_stalls = 0u64;
+    let mut prefetch_hydrations = 0u64;
+    let mut cold_evictions = 0u64;
+    let mut recreations = 0u64;
+    let mut rebalances = 0u64;
+    let mut resident_bytes_ticks = Vec::new();
+    let mut budget_series: Vec<Vec<usize>> = Vec::new();
+
+    let n_ticks = trace.n_ticks();
+    let mut k = 0usize;
+    loop {
+        let draining = k >= n_ticks;
+        if draining && router.is_empty() {
+            break;
+        }
+        anyhow::ensure!(
+            k < n_ticks * 4 + 1024,
+            "scenario '{}' arm '{arm}': backlog failed to drain",
+            trace.name
+        );
+        let tick_start = k as f64 * tick_ms;
+        let deadline = tick_start + tick_ms;
+        if clock < tick_start {
+            clock = tick_start;
+        }
+
+        if !draining {
+            for a in &trace.ticks[k] {
+                match router.try_push(a.tenant, (a.clone(), tick_start)) {
+                    Ok(()) => {
+                        ctl.note_request(a.tenant);
+                        // feed the periodicity forecaster in controller
+                        // tick units (the controller's `now` after this
+                        // tick closes is k+1)
+                        if let Some(s) = registry.shard_mut(a.tenant) {
+                            s.predictor.observe_arrival(ctl.tick_count() + 1);
+                        }
+                    }
+                    Err((Rejection::Shed, _)) => shed_rejected += 1,
+                    Err(_) => other_rejected += 1,
+                }
+            }
+        }
+        registry.set_queue_depths(&router.depths());
+
+        while clock < deadline {
+            let Some((tenant, (a, arr_ms))) = router.pop() else {
+                break;
+            };
+            if registry.shard(tenant).is_none() {
+                if registry.cold_evicted(tenant) {
+                    registry.recreate_evicted(tenant)?;
+                    recreations += 1;
+                } else {
+                    registry.hydrate_tenant(tenant)?;
+                    demand_stalls += 1;
+                }
+                clock += stall_ms;
+            }
+            let queue_delay = (clock - arr_ms).max(0.0);
+            let shard = registry
+                .shard_mut(tenant)
+                .ok_or_else(|| anyhow::anyhow!("tenant {tenant} not resident after hydration"))?;
+            let rec = serve_one(&sim, shard, &a.query, &a.seg_keys)?;
+            clock += SERVE_OVERHEAD_MS + rec.prefill_ms + rec.decode_ms;
+            match rec.path {
+                ServePath::QaHit => qa_hits += 1,
+                ServePath::QkvHit => qkv_hits += 1,
+                ServePath::Full => full_serves += 1,
+            }
+            let e2e_ms = clock - arr_ms;
+            monitor.record(tenant, e2e_ms, queue_delay);
+            e2e[tenant as usize].push(e2e_ms);
+            if registry.note_serve() {
+                rebalances += 1;
+            }
+        }
+        registry.set_queue_depths(&router.depths());
+
+        // close the scheduling window; in the SLO arms the signals
+        // actuate the governor boost and the admission shed
+        let signals = monitor.close_window();
+        if slo_aware {
+            registry.set_slo_signals(&signals);
+            for t in 0..n as TenantId {
+                router.set_shed(t, monitor.shedding(t));
+            }
+        }
+        let rep = ctl.tick(&mut registry)?;
+        cold_evictions += rep.cold_evicted.len() as u64;
+        for t in rep.prefetch {
+            // forecast-driven hydration happens off the serving clock —
+            // that is the entire point of prefetching
+            registry.hydrate_tenant(t)?;
+            prefetch_hydrations += 1;
+        }
+        resident_bytes_ticks.push(registry.resident_bytes());
+        budget_series.push(
+            (0..n as TenantId)
+                .map(|t| registry.shard(t).map(|s| s.qkv_budget()).unwrap_or(0))
+                .collect(),
+        );
+        k += 1;
+    }
+    registry.check_invariants()?;
+
+    let mut per_tenant = Vec::with_capacity(n);
+    for t in 0..n as TenantId {
+        let (served, missed) = monitor.totals(t);
+        let mut lat = e2e[t as usize].clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        per_tenant.push(TenantStats {
+            served,
+            missed,
+            p50_ms: if lat.is_empty() { 0.0 } else { percentile(&lat, 50.0) },
+            p99_ms: if lat.is_empty() { 0.0 } else { percentile(&lat, 99.0) },
+        });
+    }
+    let served: u64 = per_tenant.iter().map(|t| t.served).sum();
+    let missed: u64 = per_tenant.iter().map(|t| t.missed).sum();
+    Ok(ArmOutcome {
+        arm: arm.to_string(),
+        slo_aware,
+        tiering,
+        budget_flips: budget_flips(&budget_series, n),
+        per_tenant,
+        served,
+        missed,
+        miss_rate: if served > 0 {
+            missed as f64 / served as f64
+        } else {
+            0.0
+        },
+        shed_rejected,
+        other_rejected,
+        qa_hits,
+        qkv_hits,
+        full_serves,
+        demand_stalls,
+        prefetch_hydrations,
+        cold_evictions,
+        recreations,
+        rebalances,
+        resident_bytes_ticks,
+    })
+}
+
+/// Replay every scenario across the four arms and assert the §14
+/// acceptance bar in-harness: on bursty and churn, the SLO arm's miss
+/// rate must be strictly below the static arm's (tiered pair included).
+pub fn sweep(smoke: bool, state_root: &Path) -> Result<Vec<ScenarioOutcome>> {
+    let spec = if smoke {
+        TraceSpec::smoke(TRACE_SEED)
+    } else {
+        TraceSpec::full(TRACE_SEED)
+    };
+    let mut out = Vec::new();
+    for name in SCENARIOS {
+        let trace = scenario(name, &spec)?;
+        let arms = vec![
+            replay_scenario(&trace, false, false, true, state_root)?,
+            replay_scenario(&trace, true, false, true, state_root)?,
+            replay_scenario(&trace, false, true, true, state_root)?,
+            replay_scenario(&trace, true, true, true, state_root)?,
+        ];
+        let sc = ScenarioOutcome {
+            scenario: name.to_string(),
+            tenants: trace.tenants,
+            ticks: trace.n_ticks(),
+            slo_p99_ms: trace.slo_p99_ms.clone(),
+            arms,
+        };
+        if matches!(name, "bursty" | "churn") {
+            for (governed, baseline) in [("slo", "static"), ("slo_tiered", "static_tiered")] {
+                let g = sc.arm(governed).map(|a| a.miss_rate).unwrap_or(1.0);
+                let b = sc.arm(baseline).map(|a| a.miss_rate).unwrap_or(0.0);
+                anyhow::ensure!(
+                    g < b,
+                    "{name}: SLO arm '{governed}' miss rate {g:.4} must be strictly \
+                     below '{baseline}' {b:.4}"
+                );
+            }
+        }
+        out.push(sc);
+    }
+    Ok(out)
+}
+
+fn tenant_json(t: &TenantStats) -> Json {
+    let mut o = Json::obj();
+    o.insert("served", t.served);
+    o.insert("missed", t.missed);
+    o.insert("p50_ms", t.p50_ms);
+    o.insert("p99_ms", t.p99_ms);
+    Json::Obj(o)
+}
+
+fn arm_json(a: &ArmOutcome) -> Json {
+    let mut o = Json::obj();
+    o.insert("arm", a.arm.as_str());
+    o.insert("slo_aware", a.slo_aware);
+    o.insert("tiering", a.tiering);
+    o.insert("served", a.served);
+    o.insert("missed", a.missed);
+    o.insert("miss_rate", a.miss_rate);
+    o.insert("shed_rejected", a.shed_rejected);
+    o.insert("other_rejected", a.other_rejected);
+    o.insert("qa_hits", a.qa_hits);
+    o.insert("qkv_hits", a.qkv_hits);
+    o.insert("full_serves", a.full_serves);
+    o.insert("demand_stalls", a.demand_stalls);
+    o.insert("prefetch_hydrations", a.prefetch_hydrations);
+    o.insert("cold_evictions", a.cold_evictions);
+    o.insert("recreations", a.recreations);
+    o.insert("rebalances", a.rebalances);
+    o.insert("budget_flips", a.budget_flips);
+    o.insert(
+        "per_tenant",
+        Json::Arr(a.per_tenant.iter().map(tenant_json).collect()),
+    );
+    let rb = &a.resident_bytes_ticks;
+    o.insert(
+        "resident_bytes",
+        Json::Arr(rb.iter().map(|&b| Json::from(b)).collect()),
+    );
+    Json::Obj(o)
+}
+
+/// The `BENCH_scenarios.json` document.  Deliberately timestamp-free:
+/// the replay is deterministic, so byte-identical reruns are part of
+/// the contract (and what the baseline gate leans on).
+pub fn bench_json(outcomes: &[ScenarioOutcome], smoke: bool) -> Json {
+    let mut root = Json::obj();
+    root.insert("bench", "scenarios");
+    root.insert("smoke", smoke);
+    root.insert("seed", TRACE_SEED);
+    root.insert("global_qkv_bytes", GLOBAL_SLICES * sim_slice_bytes());
+    let list = outcomes
+        .iter()
+        .map(|sc| {
+            let mut o = Json::obj();
+            o.insert("scenario", sc.scenario.as_str());
+            o.insert("tenants", sc.tenants);
+            o.insert("ticks", sc.ticks);
+            o.insert(
+                "slo_p99_ms",
+                Json::Arr(sc.slo_p99_ms.iter().map(|&v| Json::from(v)).collect()),
+            );
+            o.insert("arms", Json::Arr(sc.arms.iter().map(arm_json).collect()));
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("scenarios", Json::Arr(list));
+    Json::Obj(root)
+}
+
+/// Regression budget: `fresh` may exceed `base` by at most 10% plus a
+/// small absolute slack (so a zero baseline doesn't demand zero).
+fn regressed(fresh: f64, base: f64, abs_slack: f64) -> bool {
+    fresh > base * 1.10 + abs_slack
+}
+
+/// Compare a fresh bench document against the committed baseline.
+/// Returns the list of violations (empty = gate passes); entries
+/// present in only one document are skipped — regenerate the baseline
+/// when arms or scenarios change shape.
+pub fn baseline_violations(fresh: &Json, base: &Json) -> Vec<String> {
+    let mut violations = Vec::new();
+    let empty: &[Json] = &[];
+    let base_scenarios = base.get("scenarios").as_arr().unwrap_or(empty);
+    for sc in fresh.get("scenarios").as_arr().unwrap_or(empty) {
+        let name = sc.get("scenario").as_str().unwrap_or("?");
+        let Some(bsc) = base_scenarios
+            .iter()
+            .find(|b| b.get("scenario").as_str() == sc.get("scenario").as_str())
+        else {
+            continue;
+        };
+        let base_arms = bsc.get("arms").as_arr().unwrap_or(empty);
+        for arm in sc.get("arms").as_arr().unwrap_or(empty) {
+            let arm_name = arm.get("arm").as_str().unwrap_or("?");
+            let Some(barm) = base_arms
+                .iter()
+                .find(|b| b.get("arm").as_str() == arm.get("arm").as_str())
+            else {
+                continue;
+            };
+            let fresh_miss = arm.get("miss_rate").as_f64().unwrap_or(0.0);
+            let base_miss = barm.get("miss_rate").as_f64().unwrap_or(0.0);
+            if regressed(fresh_miss, base_miss, 0.01) {
+                violations.push(format!(
+                    "{name}/{arm_name}: miss_rate {fresh_miss:.4} regressed past \
+                     baseline {base_miss:.4} + 10%"
+                ));
+            }
+            let max_p99 = |j: &Json| -> f64 {
+                j.get("per_tenant")
+                    .as_arr()
+                    .unwrap_or(empty)
+                    .iter()
+                    .map(|t| t.get("p99_ms").as_f64().unwrap_or(0.0))
+                    .fold(0.0, f64::max)
+            };
+            let fresh_p99 = max_p99(arm);
+            let base_p99 = max_p99(barm);
+            if regressed(fresh_p99, base_p99, 0.1) {
+                violations.push(format!(
+                    "{name}/{arm_name}: worst tenant p99 {fresh_p99:.3}ms regressed past \
+                     baseline {base_p99:.3}ms + 10%"
+                ));
+            }
+        }
+    }
+    violations
+}
+
+/// Gate against `path`.  A missing baseline bootstraps: the fresh
+/// document is written there (commit it to arm the gate); an existing
+/// baseline fails the run on any >10% miss-rate or p99 regression.
+fn check_baseline(fresh: &Json, path: &Path) -> Result<()> {
+    if !path.exists() {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, fresh.to_string_pretty())?;
+        println!(
+            "[scenarios] no baseline at {} — bootstrapped one from this run; \
+             commit it to arm the regression gate",
+            path.display()
+        );
+        return Ok(());
+    }
+    let text = std::fs::read_to_string(path)?;
+    let base = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("unparseable baseline {}: {e:?}", path.display()))?;
+    let violations = baseline_violations(fresh, &base);
+    if violations.is_empty() {
+        println!("[scenarios] baseline gate passed ({})", path.display());
+        Ok(())
+    } else {
+        anyhow::bail!(
+            "scenario bench regressed vs {}:\n  {}",
+            path.display(),
+            violations.join("\n  ")
+        )
+    }
+}
+
+/// Shared by the exp registry, the offline dispatcher and tests.
+pub fn run_and_report() -> Result<()> {
+    let smoke = smoke_mode();
+    let state_dir = std::env::temp_dir().join(format!(
+        "percache_scenarios_exp_{}",
+        std::process::id()
+    ));
+    let outcomes = sweep(smoke, &state_dir)?;
+    let _ = std::fs::remove_dir_all(&state_dir);
+
+    let mut table = Table::new(
+        "scenarios: SLO-aware governor/admission vs static, per scenario",
+        &[
+            "scenario", "arm", "served", "miss rate", "shed", "worst p99 ms", "stalls",
+            "prefetches", "cold evict", "flips",
+        ],
+    );
+    for sc in &outcomes {
+        for a in &sc.arms {
+            let worst_p99 = a
+                .per_tenant
+                .iter()
+                .map(|t| t.p99_ms)
+                .fold(0.0, f64::max);
+            table.row(vec![
+                sc.scenario.clone(),
+                a.arm.clone(),
+                a.served.to_string(),
+                format!("{:.1}%", a.miss_rate * 100.0),
+                a.shed_rejected.to_string(),
+                format!("{worst_p99:.2}"),
+                a.demand_stalls.to_string(),
+                a.prefetch_hydrations.to_string(),
+                a.cold_evictions.to_string(),
+                a.budget_flips.to_string(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+
+    let dir = reports_dir();
+    table.emit(&dir, "scenarios");
+    let doc = bench_json(&outcomes, smoke);
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_scenarios.json");
+    std::fs::write(&path, doc.to_string_pretty())?;
+    println!("[scenarios] wrote {}", path.display());
+
+    if let Ok(baseline) = std::env::var("PERCACHE_BASELINE") {
+        if !baseline.is_empty() {
+            check_baseline(&doc, &PathBuf::from(baseline))?;
+        }
+    }
+    Ok(())
+}
+
+/// `percache exp scenarios` entry point (runtime unused: cache-level
+/// replay under a virtual clock).
+pub fn scenarios(_rt: &Runtime) -> Result<()> {
+    run_and_report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("percache_scenexp_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn smoke_sweep_covers_every_scenario_and_arm() {
+        let dir = tmp("shape");
+        let outcomes = sweep(true, &dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(outcomes.len(), SCENARIOS.len());
+        for sc in &outcomes {
+            assert_eq!(sc.arms.len(), 4, "{}", sc.scenario);
+            for arm in ["static", "slo", "static_tiered", "slo_tiered"] {
+                let a = sc.arm(arm).unwrap_or_else(|| panic!("{arm} missing"));
+                assert!(a.served > 0, "{}/{arm} served nothing", sc.scenario);
+                assert_eq!(a.per_tenant.len(), sc.tenants);
+                assert!(!a.resident_bytes_ticks.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn bench_json_is_parseable_and_deterministic() {
+        let a = sweep(true, &tmp("det_a")).unwrap();
+        let b = sweep(true, &tmp("det_b")).unwrap();
+        let _ = std::fs::remove_dir_all(tmp("det_a"));
+        let _ = std::fs::remove_dir_all(tmp("det_b"));
+        let ja = bench_json(&a, true).to_string_pretty();
+        let jb = bench_json(&b, true).to_string_pretty();
+        assert_eq!(ja, jb, "scenario replay must be deterministic");
+        let parsed = Json::parse(&ja).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("scenarios"));
+        assert_eq!(
+            parsed.get("scenarios").as_arr().map(|s| s.len()),
+            Some(SCENARIOS.len())
+        );
+    }
+
+    #[test]
+    fn baseline_gate_flags_regressions_and_tolerates_shape_drift() {
+        let dir = tmp("base");
+        let outcomes = sweep(true, &dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        let doc = bench_json(&outcomes, true);
+        // identical docs pass
+        assert!(baseline_violations(&doc, &doc).is_empty());
+        // a worsened copy violates
+        let mut worse = outcomes.clone();
+        for sc in &mut worse {
+            for a in &mut sc.arms {
+                a.miss_rate = a.miss_rate * 2.0 + 0.5;
+            }
+        }
+        let fresh = bench_json(&worse, true);
+        assert!(!baseline_violations(&fresh, &doc).is_empty());
+        // unknown scenarios/arms in the fresh doc are skipped, not fatal
+        let mut empty_base = Json::obj();
+        empty_base.insert("scenarios", Json::Arr(Vec::new()));
+        assert!(baseline_violations(&fresh, &Json::Obj(empty_base)).is_empty());
+    }
+
+    #[test]
+    fn budget_flips_counts_direction_reversals_only() {
+        // grow, grow, shrink, grow → two reversals; zeros skipped
+        let series = vec![
+            vec![10, 0],
+            vec![20, 0],
+            vec![30, 5],
+            vec![25, 5],
+            vec![0, 5],
+            vec![40, 5],
+        ];
+        assert_eq!(budget_flips(&series, 2), 2);
+        // monotone series never flips
+        let mono = vec![vec![1], vec![2], vec![3]];
+        assert_eq!(budget_flips(&mono, 1), 0);
+    }
+}

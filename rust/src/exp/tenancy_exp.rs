@@ -67,6 +67,7 @@ pub fn sweep() -> Result<Vec<TenancyCell>> {
             RouterConfig {
                 queue_cap: tc.queue_cap,
                 global_cap: tc.global_queue_cap,
+                ..RouterConfig::default()
             },
             &sim,
             &arrivals,

@@ -213,6 +213,7 @@ fn run_arm(
         RouterConfig {
             queue_cap: tc.queue_cap,
             global_cap: tc.global_queue_cap,
+            ..RouterConfig::default()
         },
         &SimConfig::default(),
         stream,

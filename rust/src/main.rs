@@ -100,6 +100,7 @@ fn cmd_tenants() -> Result<()> {
         RouterConfig {
             queue_cap: tc.queue_cap,
             global_cap: tc.global_queue_cap,
+            shed_queue_cap: tc.slo.shed_queue_cap(tc.queue_cap),
         },
         &SimConfig::default(),
         &arrivals,
@@ -531,6 +532,12 @@ fn cmd_check() -> Result<()> {
 fn cmd_exp() -> Result<()> {
     let cli = Cli::new("percache exp — reproduce paper figures/tables")
         .flag("out", "reports", "CSV output directory")
+        .flag(
+            "baseline",
+            "",
+            "bench-regression gate: compare BENCH json against this committed \
+             baseline (scenarios; bootstraps the file when missing)",
+        )
         .switch("smoke", "small deterministic workloads (CI-sized)");
     let a = cli.parse_env(1);
     let which = a
@@ -541,6 +548,9 @@ fn cmd_exp() -> Result<()> {
     std::env::set_var("PERCACHE_REPORTS", a.get("out"));
     if a.get_bool("smoke") {
         std::env::set_var("PERCACHE_SMOKE", "1");
+    }
+    if !a.get("baseline").is_empty() {
+        std::env::set_var("PERCACHE_BASELINE", a.get("baseline"));
     }
     // cache-level experiments run anywhere: no artifacts, no warm-up
     if percache::exp::is_runtime_free(&which) {

@@ -42,9 +42,20 @@ pub const DETAIL_TEMPLATES: &[&str] = &[
 /// History buffer capacity (recent queries considered for style mimicry).
 pub const HISTORY_CAP: usize = 16;
 
+/// Arrival-tick buffer capacity (recent activity considered for the
+/// next-active-period forecast).
+pub const ARRIVAL_TICKS_CAP: usize = 64;
+
+/// Ticks of silence that end one activity burst and start the next.
+const BURST_GAP_TICKS: u64 = 3;
+
 #[derive(Debug)]
 pub struct QueryPredictor {
     history: VecDeque<String>,
+    /// Controller ticks at which this tenant received queries (deduped
+    /// consecutively, capped) — the signal behind
+    /// [`Self::forecast_next_active`].
+    arrival_ticks: Vec<u64>,
     rng: Rng,
     /// Persisted state (the history buffer) changed since the last
     /// [`Self::mark_clean`] — incremental snapshots skip clean predictors.
@@ -58,6 +69,7 @@ impl QueryPredictor {
     pub fn new(seed: u64) -> Self {
         QueryPredictor {
             history: VecDeque::new(),
+            arrival_ticks: Vec::new(),
             rng: Rng::new(seed),
             dirty: false,
             knowledge_rounds: 0,
@@ -72,6 +84,60 @@ impl QueryPredictor {
         }
         self.history.push_back(query.to_string());
         self.dirty = true;
+    }
+
+    /// Record that this tenant received at least one query at a tiering
+    /// controller tick.  Consecutive duplicates collapse (one entry per
+    /// active tick), and the buffer is capped at [`ARRIVAL_TICKS_CAP`].
+    pub fn observe_arrival(&mut self, tick: u64) {
+        if self.arrival_ticks.last() == Some(&tick) {
+            return;
+        }
+        if self.arrival_ticks.len() == ARRIVAL_TICKS_CAP {
+            self.arrival_ticks.remove(0);
+        }
+        self.arrival_ticks.push(tick);
+        self.dirty = true;
+    }
+
+    /// Active-tick history, oldest first (persistence + reporting).
+    pub fn arrival_ticks(&self) -> &[u64] {
+        &self.arrival_ticks
+    }
+
+    /// Forecast the tick at which this tenant's next active period
+    /// starts, from the periodicity of its arrival history.
+    ///
+    /// Activity is grouped into bursts (gaps > [`BURST_GAP_TICKS`] split
+    /// them); with at least three burst starts whose last two
+    /// inter-burst periods agree within 25%, the next start is
+    /// extrapolated at the mean period.  Irregular traffic forecasts
+    /// nothing — a wrong prefetch costs memory, no forecast costs only
+    /// a hydration stall.
+    pub fn forecast_next_active(&self) -> Option<u64> {
+        let mut starts: Vec<u64> = Vec::new();
+        let mut prev: Option<u64> = None;
+        for &t in &self.arrival_ticks {
+            let new_burst = match prev {
+                Some(p) => t.saturating_sub(p) > BURST_GAP_TICKS,
+                None => true,
+            };
+            if new_burst {
+                starts.push(t);
+            }
+            prev = Some(t);
+        }
+        if starts.len() < 3 {
+            return None;
+        }
+        let n = starts.len();
+        let p1 = starts[n - 1] - starts[n - 2];
+        let p2 = starts[n - 2] - starts[n - 3];
+        // reject periods that disagree by more than 25% of the larger
+        if p1.abs_diff(p2) * 4 > p1.max(p2) {
+            return None;
+        }
+        Some(starts[n - 1] + (p1 + p2) / 2)
     }
 
     /// Whether persisted state changed since the last [`Self::mark_clean`].
@@ -267,6 +333,50 @@ mod tests {
             p.observe(&format!("query number {i}"));
         }
         assert_eq!(p.history_len(), HISTORY_CAP);
+    }
+
+    #[test]
+    fn arrival_ticks_dedupe_and_cap() {
+        let mut p = QueryPredictor::new(5);
+        p.observe_arrival(3);
+        p.observe_arrival(3); // consecutive duplicate collapses
+        p.observe_arrival(4);
+        assert_eq!(p.arrival_ticks(), &[3, 4]);
+        for t in 0..(ARRIVAL_TICKS_CAP as u64 * 2) {
+            p.observe_arrival(100 + t);
+        }
+        assert_eq!(p.arrival_ticks().len(), ARRIVAL_TICKS_CAP);
+        assert!(p.is_dirty());
+    }
+
+    #[test]
+    fn periodic_arrivals_forecast_the_next_burst() {
+        let mut p = QueryPredictor::new(6);
+        // three bursts of 3 active ticks, period 12: starts 0, 12, 24
+        for start in [0u64, 12, 24] {
+            for off in 0..3 {
+                p.observe_arrival(start + off);
+            }
+        }
+        assert_eq!(
+            p.forecast_next_active(),
+            Some(36),
+            "period-12 bursts must forecast the fourth start"
+        );
+    }
+
+    #[test]
+    fn irregular_arrivals_forecast_nothing() {
+        let mut p = QueryPredictor::new(7);
+        assert_eq!(p.forecast_next_active(), None, "empty history");
+        // two bursts are not enough evidence
+        for t in [0u64, 1, 12, 13] {
+            p.observe_arrival(t);
+        }
+        assert_eq!(p.forecast_next_active(), None, "two bursts");
+        // a third burst at a wildly different period is rejected
+        p.observe_arrival(50);
+        assert_eq!(p.forecast_next_active(), None, "periods disagree");
     }
 
     #[test]

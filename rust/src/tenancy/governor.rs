@@ -10,6 +10,16 @@
 //! 2. every shard receives at least the floor — in particular a shard
 //!    with nonzero utility is never starved to zero bytes.
 //!
+//! The utilities this module receives are already *boosted* by the
+//! registry: `TenantRegistry::boosted_utility` multiplies each shard's
+//! raw utility by its queue depth and by its windowed SLO signal
+//! (miss rate + queue delay, published per scheduling window via
+//! `TenantRegistry::set_slo_signals` — the §14 sensor path).  The boost
+//! is capped, so saturated overload scales every shard uniformly and
+//! the plan holds instead of thrashing; the exact-sum and floor
+//! properties below are weight-independent, which is what the scenario
+//! suite's saturated-signal property test pins down.
+//!
 //! A hysteresis band suppresses rebalances whose largest relative budget
 //! move is below a threshold, so LFU state is not churned by noise.
 //! Budget application goes through `TenantShard::set_qkv_budget`, i.e.

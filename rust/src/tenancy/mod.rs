@@ -38,9 +38,11 @@ pub mod registry;
 pub mod router;
 pub mod shard;
 pub mod sim;
+pub mod slo;
 
 pub use governor::{Allocation, GovernorConfig, MemoryGovernor};
 pub use multi::MultiTenantEngine;
 pub use registry::{HydrationSpec, TenantRegistry};
 pub use router::{Rejection, Router, RouterConfig, TenantCommand, TenantServerHandle};
 pub use shard::{ShardStats, TenantId, TenantShard};
+pub use slo::{SloMonitor, SloSignal};

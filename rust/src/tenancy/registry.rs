@@ -14,7 +14,7 @@
 //! resident shards, so demoting a shard returns its bytes to the global
 //! pool for the hot shards to absorb.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
@@ -23,6 +23,7 @@ use crate::tiering::Residency;
 
 use super::governor::{Allocation, GovernorConfig, MemoryGovernor};
 use super::shard::{TenantId, TenantShard};
+use super::slo::SloSignal;
 
 /// Everything a (possibly background) hydration needs to rebuild a cold
 /// shard from its snapshot directory.
@@ -38,10 +39,39 @@ pub struct HydrationSpec {
     pub utility_alpha: f64,
 }
 
-/// One tenant's slot: residency state + the shard when resident.
+/// One tenant's slot: residency state + the shard when resident, plus
+/// cold-tier accounting for the disk budget.
 struct Slot {
     residency: Residency,
     shard: Option<TenantShard>,
+    /// On-disk snapshot size measured at demotion (0 while resident).
+    cold_bytes: u64,
+    /// Monotonic demotion stamp: the cold-tier LRU order.
+    demote_seq: u64,
+    /// The cold snapshot was evicted by the disk budget; hydration must
+    /// fail loudly and [`TenantRegistry::recreate_evicted`] is the only
+    /// way back.
+    evicted: bool,
+}
+
+/// Total bytes under a directory tree (0 on any I/O error: sizing is
+/// accounting, not correctness).
+fn dir_bytes(path: &Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(path) else {
+        return 0;
+    };
+    let mut total = 0u64;
+    for entry in entries.flatten() {
+        let Ok(meta) = entry.metadata() else {
+            continue;
+        };
+        if meta.is_dir() {
+            total += dir_bytes(&entry.path());
+        } else {
+            total += meta.len();
+        }
+    }
+    total
 }
 
 /// Numeric code for the per-tenant `tiering.residency` gauge
@@ -73,9 +103,15 @@ pub struct TenantRegistry {
     /// Router queue depths, fed via [`Self::set_queue_depths`]; boosts
     /// the governor utility of backlogged tenants.
     queue_depths: Vec<usize>,
+    /// Per-tenant SLO signals, fed via [`Self::set_slo_signals`]; boosts
+    /// governor utility for tenants missing their latency targets.
+    slo_signals: Vec<SloSignal>,
+    /// Monotonic demotion counter stamping cold-tier LRU order.
+    demote_stamp: u64,
     /// Tiering counters (reporting).
     pub demotions: u64,
     pub hydrations: u64,
+    pub cold_evictions: u64,
 }
 
 impl TenantRegistry {
@@ -91,8 +127,11 @@ impl TenantRegistry {
             serves_since_rebalance: 0,
             dir: None,
             queue_depths: Vec::new(),
+            slo_signals: Vec::new(),
+            demote_stamp: 0,
             demotions: 0,
             hydrations: 0,
+            cold_evictions: 0,
         }
     }
 
@@ -192,6 +231,9 @@ impl TenantRegistry {
         self.slots.push(Slot {
             residency: Residency::Hot,
             shard: Some(shard),
+            cold_bytes: 0,
+            demote_seq: 0,
+            evicted: false,
         });
         self.queue_depths.push(0);
         self.rebalance_resident(true);
@@ -258,11 +300,51 @@ impl TenantRegistry {
         self.queue_depths.get(id as usize).copied().unwrap_or(0)
     }
 
+    /// Feed per-tenant SLO signals (windowed miss rate + queue-delay
+    /// quantile, read back from the obs registry by the SLO monitor):
+    /// tenants missing their latency targets gain governor utility.
+    /// Never calling this (or passing an empty slice) leaves the
+    /// pre-SLO behaviour untouched.
+    pub fn set_slo_signals(&mut self, signals: &[SloSignal]) {
+        self.slo_signals.resize(self.slots.len(), SloSignal::default());
+        for (i, s) in self.slo_signals.iter_mut().enumerate() {
+            *s = signals.get(i).copied().unwrap_or_default();
+        }
+    }
+
+    pub fn slo_signal(&self, id: TenantId) -> SloSignal {
+        self.slo_signals
+            .get(id as usize)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Multiplicative SLO boost for one tenant's governor utility:
+    /// `1 + min(miss_weight·miss_rate + delay_weight·delay_ratio,
+    /// boost_cap)`.  The cap is what keeps saturated overload stable —
+    /// when every tenant pegs its signals the boost is uniform, relative
+    /// weights are unchanged, and the governor's hysteresis holds the
+    /// plan instead of thrashing it.
+    fn slo_boost(&self, idx: usize) -> f64 {
+        let Some(sig) = self.slo_signals.get(idx) else {
+            return 1.0;
+        };
+        let delay_ratio = if sig.target_ms > 0.0 {
+            (sig.queue_delay_ms / sig.target_ms).min(1.0)
+        } else {
+            0.0
+        };
+        let raw = self.cfg.slo.miss_weight * sig.miss_rate.clamp(0.0, 1.0)
+            + self.cfg.slo.delay_weight * delay_ratio;
+        1.0 + raw.min(self.cfg.slo.boost_cap)
+    }
+
     /// Governor utility of one resident shard, boosted by its queue
-    /// depth (the queueing signal from the router).
+    /// depth (the queueing signal from the router) and its SLO signal
+    /// (miss rate + queue delay, from the SLO monitor).
     fn boosted_utility(&self, idx: usize, shard: &TenantShard) -> f64 {
         let depth = self.queue_depths.get(idx).copied().unwrap_or(0);
-        shard.utility() * (1.0 + self.cfg.queue_weight * depth as f64)
+        shard.utility() * (1.0 + self.cfg.queue_weight * depth as f64) * self.slo_boost(idx)
     }
 
     /// Plan + apply budgets over the resident shards through the
@@ -360,10 +442,11 @@ impl TenantRegistry {
     /// budget back to the resident shards.  Returns the resident bytes
     /// freed.  A failed snapshot leaves the shard Hot and resident.
     pub fn demote_tenant(&mut self, id: TenantId) -> Result<usize> {
-        anyhow::ensure!(
-            self.dir.is_some(),
-            "demotion requires a persistent registry (open_or_create)"
-        );
+        let shard_dir = self
+            .dir
+            .as_ref()
+            .map(|base| base.join(format!("shard_{id}")))
+            .context("demotion requires a persistent registry (open_or_create)")?;
         let slot = self
             .slots
             .get_mut(id as usize)
@@ -385,6 +468,10 @@ impl TenantRegistry {
                 let freed = shard.bytes_used();
                 slot.shard = None;
                 slot.residency = Residency::Cold;
+                slot.cold_bytes = dir_bytes(&shard_dir);
+                slot.evicted = false;
+                self.demote_stamp += 1;
+                slot.demote_seq = self.demote_stamp;
                 self.demotions += 1;
                 crate::obs_counter!("tiering.demotions").inc();
                 note_residency(id, Residency::Cold);
@@ -397,6 +484,7 @@ impl TenantRegistry {
                 self.rebalance_resident(true);
                 crate::obs_gauge!("tiering.resident_shards").set(self.resident_count() as i64);
                 crate::obs_gauge!("tiering.resident_bytes").set(self.resident_bytes() as i64);
+                crate::obs_gauge!("tiering.cold_bytes").set(self.cold_bytes() as i64);
                 Ok(freed)
             }
             Err(e) => {
@@ -404,6 +492,109 @@ impl TenantRegistry {
                 Err(e.context(format!("demoting tenant {id}")))
             }
         }
+    }
+
+    /// Cold-tier footprint: snapshot bytes of every cold, non-evicted
+    /// shard (measured at demotion time).
+    pub fn cold_bytes(&self) -> u64 {
+        self.slots
+            .iter()
+            .filter(|s| s.residency == Residency::Cold && !s.evicted)
+            .map(|s| s.cold_bytes)
+            .sum()
+    }
+
+    /// The cold shard demoted longest ago (the disk budget's LRU
+    /// victim); None when the cold tier is empty.
+    pub fn oldest_cold(&self) -> Option<TenantId> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.residency == Residency::Cold && !s.evicted)
+            .min_by_key(|(_, s)| s.demote_seq)
+            .map(|(i, _)| i as TenantId)
+    }
+
+    /// Was this tenant's cold snapshot evicted by the disk budget?
+    pub fn cold_evicted(&self, id: TenantId) -> bool {
+        matches!(self.slots.get(id as usize), Some(s) if s.evicted)
+    }
+
+    /// Evict a cold shard's snapshot from disk (the cold-tier budget's
+    /// LRU victim).  The tenant stays Cold but marked evicted: a later
+    /// hydration fails loudly, and [`Self::recreate_evicted`] is the
+    /// explicit restart path.  Returns the snapshot bytes freed.
+    pub fn evict_cold(&mut self, id: TenantId) -> Result<u64> {
+        let shard_dir = self
+            .dir
+            .as_ref()
+            .map(|base| base.join(format!("shard_{id}")))
+            .context("cold eviction requires a persistent registry")?;
+        let slot = self
+            .slots
+            .get_mut(id as usize)
+            .with_context(|| format!("unknown tenant {id}"))?;
+        anyhow::ensure!(
+            slot.residency == Residency::Cold && !slot.evicted,
+            "tenant {id} is {}{}, only cold snapshots evict",
+            slot.residency.label(),
+            if slot.evicted { " (already evicted)" } else { "" }
+        );
+        std::fs::remove_dir_all(&shard_dir)
+            .with_context(|| format!("evicting cold snapshot {}", shard_dir.display()))?;
+        let freed = slot.cold_bytes;
+        slot.cold_bytes = 0;
+        slot.evicted = true;
+        self.cold_evictions += 1;
+        crate::obs_counter!("tiering.cold_evictions").inc();
+        crate::obs_gauge!("tiering.cold_bytes").set(self.cold_bytes() as i64);
+        crate::obs::emit(
+            crate::obs::Event::new("tenant.cold_evicted")
+                .tenant(id as usize)
+                .field("freed_bytes", freed as f64),
+        );
+        Ok(freed)
+    }
+
+    /// Restart an evicted tenant from scratch: installs a fresh, empty
+    /// Hot shard in a new snapshot directory.  The cache contents are
+    /// gone — that is the disk budget's explicit cost — but the tenant
+    /// serves again.
+    pub fn recreate_evicted(&mut self, id: TenantId) -> Result<()> {
+        let shard_dir = self
+            .dir
+            .as_ref()
+            .map(|base| base.join(format!("shard_{id}")))
+            .context("recreate_evicted requires a persistent registry")?;
+        let slot = self
+            .slots
+            .get_mut(id as usize)
+            .with_context(|| format!("unknown tenant {id}"))?;
+        anyhow::ensure!(
+            slot.residency == Residency::Cold && slot.evicted,
+            "tenant {id} is {}, recreate_evicted is only for evicted cold tenants",
+            slot.residency.label()
+        );
+        let shard = TenantShard::open_or_create(
+            id,
+            self.cfg.qa_bytes_per_tenant,
+            self.cfg.global_qkv_bytes,
+            self.cfg.utility_alpha,
+            shard_dir,
+        )?;
+        let slot = self
+            .slots
+            .get_mut(id as usize)
+            .with_context(|| format!("unknown tenant {id}"))?;
+        slot.shard = Some(shard);
+        slot.residency = Residency::Hot;
+        slot.evicted = false;
+        note_residency(id, Residency::Hot);
+        crate::obs::emit(crate::obs::Event::new("tenant.recreated").tenant(id as usize));
+        self.rebalance_resident(true);
+        crate::obs_gauge!("tiering.resident_shards").set(self.resident_count() as i64);
+        crate::obs_gauge!("tiering.resident_bytes").set(self.resident_bytes() as i64);
+        Ok(())
     }
 
     /// Start paging a Cold shard back in: marks it Hydrating and returns
@@ -423,6 +614,11 @@ impl TenantRegistry {
             slot.residency == Residency::Cold,
             "tenant {id} is {}, only cold shards hydrate",
             slot.residency.label()
+        );
+        anyhow::ensure!(
+            !slot.evicted,
+            "tenant {id} cold snapshot was evicted by the cold-tier disk \
+             budget; recreate_evicted starts it fresh"
         );
         slot.residency = Residency::Hydrating;
         Ok(HydrationSpec {
@@ -690,5 +886,120 @@ mod tests {
         );
         assert_eq!(reg.queue_depth(1), 8);
         reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn slo_misses_boost_the_governed_plan() {
+        let mut reg = TenantRegistry::new(&cfg(1 << 20));
+        for _ in 0..2 {
+            reg.create_tenant().unwrap();
+        }
+        // identical utility signals on both shards
+        for id in 0..2u32 {
+            for _ in 0..16 {
+                reg.shard_mut(id)
+                    .unwrap()
+                    .stats
+                    .note(ServePath::QkvHit, 1_000_000);
+            }
+        }
+        // tenant 1 is blowing its SLO: planned share must grow past 0's
+        reg.set_slo_signals(&[
+            SloSignal::default(),
+            SloSignal {
+                miss_rate: 0.8,
+                queue_delay_ms: 40.0,
+                target_ms: 20.0,
+                window_served: 16,
+            },
+        ]);
+        let plan = reg.plan();
+        let b0 = plan.iter().find(|a| a.tenant == 0).unwrap().bytes;
+        let b1 = plan.iter().find(|a| a.tenant == 1).unwrap().bytes;
+        assert!(
+            b1 > b0,
+            "SLO-missing tenant must out-plan the healthy one ({b1} vs {b0})"
+        );
+        assert!(reg.slo_signal(1).miss_rate > 0.0);
+
+        // saturated signals on every tenant boost uniformly: the plan
+        // returns to parity instead of amplifying noise (anti-thrash)
+        reg.set_slo_signals(&[
+            SloSignal {
+                miss_rate: 1.0,
+                queue_delay_ms: 100.0,
+                target_ms: 20.0,
+                window_served: 16,
+            },
+            SloSignal {
+                miss_rate: 1.0,
+                queue_delay_ms: 100.0,
+                target_ms: 20.0,
+                window_served: 16,
+            },
+        ]);
+        let plan = reg.plan();
+        let b0 = plan.iter().find(|a| a.tenant == 0).unwrap().bytes;
+        let b1 = plan.iter().find(|a| a.tenant == 1).unwrap().bytes;
+        assert!(
+            b0.abs_diff(b1) <= 1,
+            "uniformly saturated SLO signals must keep parity ({b0} vs {b1})"
+        );
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cold_eviction_is_oldest_first_and_hydration_fails_loudly() {
+        let dir = tmp("cold_evict");
+        let tc = cfg(64 * 3088);
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        for _ in 0..3 {
+            reg.create_tenant().unwrap();
+        }
+        let t = QkvTensor::zeros(1, 4, 64);
+        for id in 0..3u32 {
+            reg.shard_mut(id)
+                .unwrap()
+                .insert_path(&[id as u64 + 1], vec![t.clone()])
+                .unwrap();
+        }
+        // demote in the order 1, 0 — tenant 1 is the oldest cold shard
+        reg.demote_tenant(1).unwrap();
+        reg.demote_tenant(0).unwrap();
+        assert!(reg.cold_bytes() > 0, "cold snapshots must have bytes");
+        assert_eq!(reg.oldest_cold(), Some(1), "LRU victim is first-demoted");
+
+        let freed = reg.evict_cold(1).unwrap();
+        assert!(freed > 0, "eviction must report freed snapshot bytes");
+        assert!(reg.cold_evicted(1));
+        assert_eq!(reg.cold_evictions, 1);
+        assert_eq!(
+            reg.oldest_cold(),
+            Some(0),
+            "evicted shards leave the LRU order"
+        );
+        assert!(
+            !dir.join("shard_1").exists(),
+            "eviction must remove the snapshot directory"
+        );
+
+        // hydrating the evicted shard fails loudly...
+        let err = reg.hydrate_tenant(1).unwrap_err().to_string();
+        assert!(
+            err.contains("evicted"),
+            "hydration error must name the eviction, got: {err}"
+        );
+        // ...double eviction is refused, hot tenants are refused...
+        assert!(reg.evict_cold(1).is_err());
+        assert!(reg.evict_cold(2).is_err());
+        // ...and recreate_evicted is the explicit way back (fresh cache)
+        reg.recreate_evicted(1).unwrap();
+        assert_eq!(reg.residency(1), Some(Residency::Hot));
+        assert!(
+            reg.shard_mut(1).unwrap().prefix_match(&[2]).is_empty(),
+            "recreated shard starts empty — the eviction's explicit cost"
+        );
+        reg.check_invariants().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -25,6 +25,10 @@ pub struct RouterConfig {
     pub queue_cap: usize,
     /// Max queued requests across all tenants.
     pub global_cap: usize,
+    /// Per-tenant queue cap while load shedding is engaged for that
+    /// tenant ([`Router::set_shed`], DESIGN.md §14).  Must be below
+    /// `queue_cap` to have any effect.
+    pub shed_queue_cap: usize,
 }
 
 impl Default for RouterConfig {
@@ -32,6 +36,7 @@ impl Default for RouterConfig {
         RouterConfig {
             queue_cap: 32,
             global_cap: 256,
+            shed_queue_cap: 4,
         }
     }
 }
@@ -42,6 +47,10 @@ pub enum Rejection {
     QueueFull,
     GlobalFull,
     UnknownTenant,
+    /// Load shedding under sustained SLO violation: the tenant's queue
+    /// is clamped to `shed_queue_cap` so latency for what *is* admitted
+    /// stays bounded.
+    Shed,
 }
 
 impl Rejection {
@@ -51,6 +60,7 @@ impl Rejection {
             Rejection::QueueFull => "queue_full",
             Rejection::GlobalFull => "global_full",
             Rejection::UnknownTenant => "unknown_tenant",
+            Rejection::Shed => "shed",
         }
     }
 }
@@ -61,6 +71,7 @@ impl std::fmt::Display for Rejection {
             Rejection::QueueFull => write!(f, "per-tenant queue full"),
             Rejection::GlobalFull => write!(f, "global queue full"),
             Rejection::UnknownTenant => write!(f, "unknown tenant"),
+            Rejection::Shed => write!(f, "load shed under SLO violation"),
         }
     }
 }
@@ -88,6 +99,9 @@ pub struct Router<T> {
     /// Blocked queues are skipped by `pop` (cold tenant, hydration
     /// pending); requests still enqueue.
     blocked: Vec<bool>,
+    /// Shedding tenants admit only up to `shed_queue_cap` queued
+    /// requests; the SLO monitor drives this per window.
+    shed: Vec<bool>,
     /// Next tenant the scheduler looks at (rotates on every pop).
     cursor: usize,
     queued: usize,
@@ -102,6 +116,7 @@ impl<T> Router<T> {
             cfg,
             queues: Vec::new(),
             blocked: Vec::new(),
+            shed: Vec::new(),
             cursor: 0,
             queued: 0,
             enqueued: 0,
@@ -114,6 +129,7 @@ impl<T> Router<T> {
     pub fn register_tenant(&mut self) -> TenantId {
         self.queues.push(VecDeque::new());
         self.blocked.push(false);
+        self.shed.push(false);
         (self.queues.len() - 1) as TenantId
     }
 
@@ -152,6 +168,19 @@ impl<T> Router<T> {
         self.blocked.get(tenant as usize).copied().unwrap_or(false)
     }
 
+    /// Engage or release load shedding for a tenant (the SLO monitor's
+    /// sustained-violation actuator): while engaged, admission clamps
+    /// the tenant's queue to `shed_queue_cap`.
+    pub fn set_shed(&mut self, tenant: TenantId, shed: bool) {
+        if let Some(s) = self.shed.get_mut(tenant as usize) {
+            *s = shed;
+        }
+    }
+
+    pub fn is_shedding(&self, tenant: TenantId) -> bool {
+        self.shed.get(tenant as usize).copied().unwrap_or(false)
+    }
+
     /// Lift every block (shutdown drains: the caller serves the rest
     /// with synchronous hydration).
     pub fn unblock_all(&mut self) {
@@ -182,6 +211,13 @@ impl<T> Router<T> {
             self.rejected += 1;
             note_rejected(tenant, Rejection::GlobalFull);
             return Err((Rejection::GlobalFull, item));
+        }
+        if self.shed.get(tenant as usize).copied().unwrap_or(false)
+            && q.len() >= self.cfg.shed_queue_cap
+        {
+            self.rejected += 1;
+            note_rejected(tenant, Rejection::Shed);
+            return Err((Rejection::Shed, item));
         }
         if q.len() >= self.cfg.queue_cap {
             self.rejected += 1;
@@ -486,6 +522,7 @@ mod tests {
         let mut r = Router::new(RouterConfig {
             queue_cap,
             global_cap,
+            ..RouterConfig::default()
         });
         for _ in 0..tenants {
             r.register_tenant();
@@ -565,6 +602,43 @@ mod tests {
     }
 
     #[test]
+    fn shedding_clamps_one_tenant_and_spares_the_rest() {
+        let mut r: Router<usize> = Router::new(RouterConfig {
+            queue_cap: 8,
+            global_cap: 64,
+            shed_queue_cap: 2,
+        });
+        for _ in 0..2 {
+            r.register_tenant();
+        }
+        r.set_shed(0, true);
+        assert!(r.is_shedding(0) && !r.is_shedding(1));
+        r.try_push(0, 1).unwrap();
+        r.try_push(0, 2).unwrap();
+        // shed tenant clamped to shed_queue_cap, not queue_cap
+        assert_eq!(r.try_push(0, 3).unwrap_err().0, Rejection::Shed);
+        // other tenants keep the full cap
+        for i in 0..8 {
+            r.try_push(1, 10 + i).unwrap();
+        }
+        assert_eq!(r.try_push(1, 99).unwrap_err().0, Rejection::QueueFull);
+        // releasing the shed restores normal admission
+        r.set_shed(0, false);
+        r.try_push(0, 3).unwrap();
+        assert_eq!(r.queue_len(0), 3);
+        // the global cap still outranks the shed verdict
+        let mut r: Router<usize> = Router::new(RouterConfig {
+            queue_cap: 8,
+            global_cap: 1,
+            shed_queue_cap: 2,
+        });
+        r.register_tenant();
+        r.set_shed(0, true);
+        r.try_push(0, 1).unwrap();
+        assert_eq!(r.try_push(0, 2).unwrap_err().0, Rejection::GlobalFull);
+    }
+
+    #[test]
     fn blocked_queue_admits_but_is_not_popped() {
         let mut r = router(4, 8, 2);
         r.try_push(0, 1).unwrap();
@@ -634,6 +708,7 @@ mod tests {
             RouterConfig {
                 queue_cap: 0,
                 global_cap: 8,
+                ..RouterConfig::default()
             },
             1,
             || Ok(()),

@@ -317,6 +317,7 @@ mod tests {
         let rc = RouterConfig {
             queue_cap: 4,
             global_cap: 8,
+            ..RouterConfig::default()
         };
         // one big batch: only 4 of 20 fit tenant 0's queue per round
         let out = replay(&mut reg, rc, &cfg, &arrivals, 20).unwrap();

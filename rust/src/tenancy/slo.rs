@@ -1,0 +1,259 @@
+//! SLO monitoring: the sensor-to-actuator bridge of the SLO-aware
+//! control plane (DESIGN.md §14).
+//!
+//! [`SloMonitor`] records every served request's end-to-end latency and
+//! queue delay into an obs [`MetricsRegistry`] (`slo.e2e_ms` /
+//! `slo.queue_delay_ms` histograms, `slo.served` / `slo.misses`
+//! counters, all labeled by tenant), then — once per scheduling window
+//! — reads those series *back from the registry* to derive per-tenant
+//! [`SloSignal`]s: the windowed SLO-miss rate and the queue-delay
+//! quantile.  The signals feed three actuators:
+//!
+//! * the governor's utility boost (`TenantRegistry::set_slo_signals`),
+//! * router admission shedding (`Router::set_shed`, driven by the
+//!   sustained-violation state machine here), and
+//! * tiering demotion/prefetch vetoes (the `TieringController` reads
+//!   the same signals back through `TenantRegistry::slo_signal`).
+//!
+//! Shedding is hysteretic: it engages only after `shed_windows`
+//! consecutive windows at or above `shed_miss_rate`, and disengages
+//! only after the same number of windows at or below
+//! `unshed_miss_rate`, so a single bad window never flaps admission.
+
+use crate::config::SloConfig;
+use crate::obs::{CounterHandle, GaugeHandle, HistogramHandle, MetricsRegistry};
+use crate::tenancy::TenantId;
+
+/// One tenant's windowed SLO state, as consumed by governor, router and
+/// tiering controller.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SloSignal {
+    /// SLO misses / serves over the last closed window (carries the
+    /// previous value through empty windows).
+    pub miss_rate: f64,
+    /// p90 queue delay, modeled ms (cumulative histogram quantile).
+    pub queue_delay_ms: f64,
+    /// The tenant's p99 end-to-end SLO bound, ms.
+    pub target_ms: f64,
+    /// Serves inside the window (0 = signal carried over).
+    pub window_served: u64,
+}
+
+/// Per-tenant handle bundle into the metrics registry.
+struct TenantSeries {
+    served: CounterHandle,
+    misses: CounterHandle,
+    e2e: HistogramHandle,
+    delay: HistogramHandle,
+    rate_milli: GaugeHandle,
+}
+
+/// Records per-request SLO outcomes and closes scheduling windows into
+/// [`SloSignal`]s plus a hysteretic load-shedding decision per tenant.
+pub struct SloMonitor {
+    cfg: SloConfig,
+    targets: Vec<f64>,
+    series: Vec<TenantSeries>,
+    shed_active: GaugeHandle,
+    shed_engaged: CounterHandle,
+    // counter values at the last window close (for windowed deltas)
+    base_served: Vec<u64>,
+    base_missed: Vec<u64>,
+    last_rate: Vec<f64>,
+    hot_streak: Vec<u32>,
+    cool_streak: Vec<u32>,
+    shedding: Vec<bool>,
+}
+
+impl SloMonitor {
+    /// One monitor per replay/serving loop; `targets[t]` is tenant t's
+    /// p99 SLO bound in ms.  The registry is usually a local one so
+    /// runs stay isolated, but the global registry works too.
+    pub fn new(cfg: &SloConfig, targets: &[f64], reg: &MetricsRegistry) -> Self {
+        let series = (0..targets.len())
+            .map(|t| {
+                let tenant = t.to_string();
+                let labels: &[(&str, &str)] = &[("tenant", tenant.as_str())];
+                TenantSeries {
+                    served: reg.counter_labeled("slo.served", labels),
+                    misses: reg.counter_labeled("slo.misses", labels),
+                    e2e: reg.histogram_labeled("slo.e2e_ms", labels),
+                    delay: reg.histogram_labeled("slo.queue_delay_ms", labels),
+                    rate_milli: reg.gauge_labeled("slo.miss_rate_milli", labels),
+                }
+            })
+            .collect();
+        let n = targets.len();
+        SloMonitor {
+            cfg: cfg.clone(),
+            targets: targets.to_vec(),
+            series,
+            shed_active: reg.gauge("shed.active"),
+            shed_engaged: reg.counter("shed.engaged"),
+            base_served: vec![0; n],
+            base_missed: vec![0; n],
+            last_rate: vec![0.0; n],
+            hot_streak: vec![0; n],
+            cool_streak: vec![0; n],
+            shedding: vec![false; n],
+        }
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn target_ms(&self, tenant: TenantId) -> f64 {
+        self.targets.get(tenant as usize).copied().unwrap_or(0.0)
+    }
+
+    /// Record one served request: end-to-end latency vs the tenant's
+    /// target, plus the share of it spent queued.
+    pub fn record(&self, tenant: TenantId, e2e_ms: f64, queue_delay_ms: f64) {
+        let Some(s) = self.series.get(tenant as usize) else {
+            return;
+        };
+        s.e2e.record(e2e_ms);
+        s.delay.record(queue_delay_ms);
+        s.served.inc();
+        if e2e_ms > self.target_ms(tenant) {
+            s.misses.inc();
+        }
+    }
+
+    /// Close the current window: read the counters back from the
+    /// registry, derive per-tenant signals, and advance the shedding
+    /// state machine.
+    pub fn close_window(&mut self) -> Vec<SloSignal> {
+        let mut signals = Vec::with_capacity(self.series.len());
+        for t in 0..self.series.len() {
+            let s = &self.series[t];
+            let served = s.served.get();
+            let missed = s.misses.get();
+            let d_served = served.saturating_sub(self.base_served[t]);
+            let d_missed = missed.saturating_sub(self.base_missed[t]);
+            self.base_served[t] = served;
+            self.base_missed[t] = missed;
+            let rate = if d_served > 0 {
+                d_missed as f64 / d_served as f64
+            } else {
+                // empty window: carry the last evidence forward
+                self.last_rate[t]
+            };
+            self.last_rate[t] = rate;
+            s.rate_milli.set((rate * 1e3) as i64);
+
+            if d_served > 0 {
+                if rate >= self.cfg.shed_miss_rate {
+                    self.hot_streak[t] += 1;
+                    self.cool_streak[t] = 0;
+                } else if rate <= self.cfg.unshed_miss_rate {
+                    self.cool_streak[t] += 1;
+                    self.hot_streak[t] = 0;
+                } else {
+                    self.hot_streak[t] = 0;
+                    self.cool_streak[t] = 0;
+                }
+            } else {
+                // no traffic: an idle tenant cannot be violating
+                self.hot_streak[t] = 0;
+                self.cool_streak[t] += 1;
+            }
+            if !self.shedding[t] && self.hot_streak[t] >= self.cfg.shed_windows {
+                self.shedding[t] = true;
+                self.shed_engaged.inc();
+            } else if self.shedding[t] && self.cool_streak[t] >= self.cfg.shed_windows {
+                self.shedding[t] = false;
+            }
+
+            signals.push(SloSignal {
+                miss_rate: rate,
+                queue_delay_ms: s.delay.quantile(0.9),
+                target_ms: self.targets[t],
+                window_served: d_served,
+            });
+        }
+        let active = self.shedding.iter().filter(|&&b| b).count();
+        self.shed_active.set(active as i64);
+        signals
+    }
+
+    /// Is admission shedding currently engaged for this tenant?
+    pub fn shedding(&self, tenant: TenantId) -> bool {
+        self.shedding.get(tenant as usize).copied().unwrap_or(false)
+    }
+
+    pub fn any_shedding(&self) -> bool {
+        self.shedding.iter().any(|&b| b)
+    }
+
+    /// Cumulative (whole-run) serve / miss counts for reporting.
+    pub fn totals(&self, tenant: TenantId) -> (u64, u64) {
+        self.series
+            .get(tenant as usize)
+            .map(|s| (s.served.get(), s.misses.get()))
+            .unwrap_or((0, 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor(targets: &[f64]) -> (SloMonitor, MetricsRegistry) {
+        let reg = MetricsRegistry::new();
+        let m = SloMonitor::new(&SloConfig::default(), targets, &reg);
+        (m, reg)
+    }
+
+    #[test]
+    fn windowed_miss_rate_reads_back_from_the_registry() {
+        let (mut m, _reg) = monitor(&[10.0, 20.0]);
+        m.record(0, 5.0, 1.0); // meets
+        m.record(0, 15.0, 9.0); // misses
+        m.record(1, 19.0, 2.0); // meets
+        let sig = m.close_window();
+        assert_eq!(sig.len(), 2);
+        assert!((sig[0].miss_rate - 0.5).abs() < 1e-9);
+        assert_eq!(sig[0].window_served, 2);
+        assert!((sig[1].miss_rate - 0.0).abs() < 1e-9);
+        // an empty window carries the previous rate forward
+        let sig = m.close_window();
+        assert!((sig[0].miss_rate - 0.5).abs() < 1e-9);
+        assert_eq!(sig[0].window_served, 0);
+    }
+
+    #[test]
+    fn shedding_engages_after_sustained_violation_and_cools_off() {
+        let (mut m, _reg) = monitor(&[10.0]);
+        // one violating window is not enough
+        m.record(0, 50.0, 40.0);
+        m.close_window();
+        assert!(!m.shedding(0));
+        // a second consecutive violating window engages
+        m.record(0, 50.0, 40.0);
+        m.close_window();
+        assert!(m.shedding(0), "two violating windows must engage shedding");
+        assert_eq!(m.totals(0), (2, 2));
+        // healthy windows cool it off after the same streak length
+        m.record(0, 1.0, 0.0);
+        m.close_window();
+        assert!(m.shedding(0), "one healthy window must not disengage");
+        m.record(0, 1.0, 0.0);
+        m.close_window();
+        assert!(!m.shedding(0), "sustained health must disengage");
+    }
+
+    #[test]
+    fn idle_windows_cool_shedding_down() {
+        let (mut m, _reg) = monitor(&[10.0]);
+        for _ in 0..2 {
+            m.record(0, 99.0, 90.0);
+            m.close_window();
+        }
+        assert!(m.shedding(0));
+        m.close_window();
+        m.close_window();
+        assert!(!m.shedding(0), "an idle tenant cannot stay shed");
+    }
+}

@@ -39,6 +39,9 @@ pub struct TickReport {
     /// Cold tenants whose forecasted active period is within the
     /// prefetch lead: the caller should start hydrating them now.
     pub prefetch: Vec<TenantId>,
+    /// Cold snapshots evicted by the disk budget this tick (oldest
+    /// first); these tenants restart empty via `recreate_evicted`.
+    pub cold_evicted: Vec<TenantId>,
 }
 
 /// Per-tenant activity tracking + the demote/prefetch policy.
@@ -123,7 +126,9 @@ impl TieringController {
         }
 
         // idle demotions, in id order (deterministic): a tenant with
-        // queued work is never a candidate, whatever its hit rate
+        // queued work is never a candidate, whatever its hit rate, and
+        // one currently blowing its SLO keeps its warm cache (demoting
+        // it would convert a latency problem into a worse one)
         for id in 0..registry.len() as TenantId {
             if registry.resident_count() <= self.cfg.min_resident {
                 break;
@@ -133,6 +138,23 @@ impl TieringController {
             }
             if registry.queue_depth(id) > 0 {
                 continue;
+            }
+            if self.slo_vetoed(registry, id) {
+                continue;
+            }
+            // before judging idleness, let the tenant's own predictor
+            // schedule its next forecasted active period — a periodic
+            // (diurnal) tenant then demotes *with* a return forecast, so
+            // the prefetch below warms it ahead of the next burst
+            if self.cfg.predictor_prefetch && !self.has_pending_forecast(id, now) {
+                if let Some(at) = registry
+                    .shard(id)
+                    .and_then(|s| s.predictor.forecast_next_active())
+                {
+                    if at > now {
+                        self.scheduled.push((id, at));
+                    }
+                }
             }
             if self.imminently_active(id, now) {
                 continue;
@@ -163,15 +185,36 @@ impl TieringController {
             self.pressure_demotions += 1;
         }
 
+        // cold-tier disk budget: the snapshots themselves are bounded.
+        // Evict oldest-first (LRU by demotion stamp) until under the
+        // cap; an evicted tenant restarts empty via recreate_evicted.
+        if self.cfg.cold_bytes_cap > 0 {
+            while registry.cold_bytes() > self.cfg.cold_bytes_cap as u64 {
+                let Some(victim) = registry.oldest_cold() else {
+                    break;
+                };
+                registry.evict_cold(victim)?;
+                report.cold_evicted.push(victim);
+            }
+        }
+
         // prefetch: start hydrating cold shards whose forecasted active
         // period is within the lead window.  A forecast whose shard is
         // still hot is kept until the burst actually starts (it goes on
         // vetoing demotion); a fired or expired forecast is dropped.
+        // Under fleet-wide SLO violation every forecast is deferred —
+        // hydration work (and the RAM it re-adds) would feed the very
+        // overload the governor is shedding.
+        if self.global_slo_pressure(registry) {
+            return Ok(report);
+        }
         let lead = self.cfg.prefetch_lead_ticks;
         let mut keep = Vec::new();
         for &(tenant, at_tick) in &self.scheduled {
             if at_tick > now + lead {
                 keep.push((tenant, at_tick));
+            } else if registry.cold_evicted(tenant) {
+                // nothing on disk to warm; the forecast is moot
             } else if registry.residency(tenant) == Some(Residency::Cold) {
                 report.prefetch.push(tenant);
                 self.prefetches += 1;
@@ -183,6 +226,32 @@ impl TieringController {
         Ok(report)
     }
 
+    /// Demotion veto: the tenant's windowed SLO miss rate is at or past
+    /// the veto threshold (signals default to zero when no SLO monitor
+    /// feeds the registry, so the veto is inert outside SLO arms).
+    fn slo_vetoed(&self, registry: &TenantRegistry, id: TenantId) -> bool {
+        registry.slo_signal(id).miss_rate >= self.cfg.slo_veto_miss_rate
+    }
+
+    /// Served-weighted fleet miss rate at or past the veto threshold:
+    /// the deferral signal for prefetch hydrations.
+    fn global_slo_pressure(&self, registry: &TenantRegistry) -> bool {
+        let mut served = 0u64;
+        let mut missed = 0.0f64;
+        for id in 0..registry.len() as TenantId {
+            let sig = registry.slo_signal(id);
+            served += sig.window_served;
+            missed += sig.miss_rate * sig.window_served as f64;
+        }
+        served > 0 && missed / served as f64 >= self.cfg.slo_veto_miss_rate
+    }
+
+    /// Whether a forecast for `tenant` is already scheduled in the
+    /// future (the predictor re-forecasting every tick would thrash).
+    fn has_pending_forecast(&self, tenant: TenantId, now: u64) -> bool {
+        self.scheduled.iter().any(|&(t, at)| t == tenant && at > now)
+    }
+
     /// Whether a forecasted active period makes demoting `tenant` now
     /// pointless (it would hydrate right back within the lead window).
     fn imminently_active(&self, tenant: TenantId, now: u64) -> bool {
@@ -191,12 +260,15 @@ impl TieringController {
             .any(|&(t, at)| t == tenant && at <= now + self.cfg.prefetch_lead_ticks)
     }
 
-    /// Least-recently-active hot tenant with no queued work.
+    /// Least-recently-active hot tenant with no queued work (and not
+    /// SLO-vetoed: pressure never strips the cache of a tenant already
+    /// missing its latency target).
     fn pressure_victim(&self, registry: &TenantRegistry, now: u64) -> Option<TenantId> {
         (0..registry.len() as TenantId)
             .filter(|&id| registry.residency(id) == Some(Residency::Hot))
             .filter(|&id| registry.queue_depth(id) == 0)
             .filter(|&id| !self.imminently_active(id, now))
+            .filter(|&id| !self.slo_vetoed(registry, id))
             .max_by_key(|&id| self.trackers.get(id as usize).map_or(0, |t| t.idle_ticks(now)))
     }
 }
@@ -467,6 +539,132 @@ mod tests {
             !rep.demoted.contains(&1),
             "imminently-active shard must not demote"
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cold_budget_evicts_oldest_and_blocks_hydration() {
+        let dir = tmp("cold_budget");
+        let mut tc = tcfg(64);
+        tc.tiering.idle_ticks_to_demote = 1000; // only the budget acts
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        for _ in 0..3 {
+            reg.create_tenant().unwrap();
+        }
+        for id in 0..3 {
+            touch_tenant(&mut reg, id);
+        }
+        // tenant 1 demoted first: the oldest snapshot, the LRU victim
+        reg.demote_tenant(1).unwrap();
+        reg.demote_tenant(2).unwrap();
+        let total = reg.cold_bytes();
+        assert!(total > 0);
+        // cap admits one snapshot but not both
+        tc.tiering.cold_bytes_cap = (total - 1) as usize;
+        let mut ctl = TieringController::new(tc.tiering.clone(), 3);
+        ctl.note_request(0);
+        let rep = ctl.tick(&mut reg).unwrap();
+        assert_eq!(rep.cold_evicted, vec![1], "oldest cold snapshot goes first");
+        assert_eq!(reg.oldest_cold(), Some(2), "newer snapshot survives");
+        assert!(reg.cold_bytes() <= tc.tiering.cold_bytes_cap as u64);
+
+        // the evicted tenant's hydration fails loudly; the survivor's works
+        let err = reg.hydrate_tenant(1).unwrap_err().to_string();
+        assert!(err.contains("evicted"), "loud failure, got: {err}");
+        reg.hydrate_tenant(2).unwrap();
+        assert_eq!(reg.residency(2), Some(Residency::Hot));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn slo_violation_vetoes_demotion_and_defers_prefetch() {
+        use crate::tenancy::SloSignal;
+        let dir = tmp("slo_veto");
+        let mut tc = tcfg(64);
+        tc.tiering.prefetch_lead_ticks = 2;
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        touch_tenant(&mut reg, 1);
+        let violating = SloSignal {
+            miss_rate: 0.9,
+            queue_delay_ms: 50.0,
+            target_ms: 20.0,
+            window_served: 16,
+        };
+        // tenant 1 idles but is missing its SLO: demotion is vetoed
+        reg.set_slo_signals(&[SloSignal::default(), violating]);
+        let mut ctl = TieringController::new(tc.tiering.clone(), 2);
+        for _ in 0..6 {
+            ctl.note_request(0);
+            ctl.tick(&mut reg).unwrap();
+        }
+        assert_eq!(
+            reg.residency(1),
+            Some(Residency::Hot),
+            "SLO-missing tenants keep their warm cache"
+        );
+        // signal clears: the same idleness now demotes
+        reg.set_slo_signals(&[SloSignal::default(), SloSignal::default()]);
+        for _ in 0..4 {
+            ctl.note_request(0);
+            ctl.tick(&mut reg).unwrap();
+        }
+        assert_eq!(reg.residency(1), Some(Residency::Cold));
+
+        // fleet-wide violation defers prefetch hydration entirely
+        reg.set_slo_signals(&[violating, SloSignal::default()]);
+        ctl.schedule_active(1, ctl.tick_count() + 1);
+        ctl.note_request(0);
+        let rep = ctl.tick(&mut reg).unwrap();
+        assert!(
+            rep.prefetch.is_empty(),
+            "prefetch must defer under fleet-wide SLO pressure"
+        );
+        reg.set_slo_signals(&[SloSignal::default(), SloSignal::default()]);
+        ctl.note_request(0);
+        let rep = ctl.tick(&mut reg).unwrap();
+        assert_eq!(rep.prefetch, vec![1], "deferred forecast fires once clear");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn predictor_periodicity_feeds_prefetch() {
+        let dir = tmp("pred_prefetch");
+        let mut tc = tcfg(64);
+        tc.tiering.prefetch_lead_ticks = 2;
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        touch_tenant(&mut reg, 1);
+        // tenant 1's predictor saw three bursts, period 12 → next at 36
+        for start in [0u64, 12, 24] {
+            for off in 0..3 {
+                reg.shard_mut(1).unwrap().predictor.observe_arrival(start + off);
+            }
+        }
+        let mut ctl = TieringController::new(tc.tiering.clone(), 2);
+        let mut prefetched_at = None;
+        for _ in 0..40 {
+            ctl.note_request(0);
+            let rep = ctl.tick(&mut reg).unwrap();
+            if rep.prefetch.contains(&1) {
+                prefetched_at = Some(rep.tick);
+                reg.hydrate_tenant(1).unwrap();
+                break;
+            }
+        }
+        assert_eq!(
+            prefetched_at,
+            Some(34),
+            "forecast 36 minus lead 2: hydration starts at tick 34"
+        );
+        assert_eq!(
+            reg.residency(1),
+            Some(Residency::Hot),
+            "shard is warm before its forecasted burst"
+        );
+        assert!(ctl.prefetches >= 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

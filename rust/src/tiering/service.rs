@@ -311,6 +311,7 @@ pub fn spawn_tiered_server(cfg: TieredServerConfig) -> TenantServerHandle {
     let router_cfg = RouterConfig {
         queue_cap: cfg.tenancy.queue_cap,
         global_cap: cfg.tenancy.global_queue_cap,
+        shed_queue_cap: cfg.tenancy.slo.shed_queue_cap(cfg.tenancy.queue_cap),
     };
     let join = thread::Builder::new()
         .name("percache-tiered-server".into())

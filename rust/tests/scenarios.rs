@@ -1,0 +1,158 @@
+//! Trace-driven scenario suite (DESIGN.md §14): end-to-end properties
+//! of the SLO-aware control plane — determinism, the governor's
+//! exact-sum/floor invariants under saturated SLO signals, strict
+//! SLO-arm dominance on the overload scenarios, shed-before-thrash on
+//! the adversarial one, and predictor-fed prefetch cutting hydration
+//! stalls on the diurnal one.
+
+use std::path::PathBuf;
+
+use percache::config::TenancyConfig;
+use percache::datasets::traces::{scenario, TraceSpec};
+use percache::exp::scenarios_exp::{bench_json, replay_scenario, sweep, ScenarioOutcome};
+use percache::metrics::ServePath;
+use percache::tenancy::sim::sim_slice_bytes;
+use percache::tenancy::{SloSignal, TenantId, TenantRegistry};
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("percache_scen_it_{tag}_{}", std::process::id()))
+}
+
+/// One smoke sweep shared by the assertions below (the sweep itself
+/// already enforces the bursty/churn dominance bar in-harness).
+fn smoke_sweep(tag: &str) -> Vec<ScenarioOutcome> {
+    let dir = tmp(tag);
+    let out = sweep(true, &dir).expect("smoke sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+#[test]
+fn sweep_is_deterministic_across_runs() {
+    let a = smoke_sweep("det_a");
+    let b = smoke_sweep("det_b");
+    assert_eq!(
+        bench_json(&a, true).to_string_pretty(),
+        bench_json(&b, true).to_string_pretty(),
+        "two sweeps over the same seed must be byte-identical"
+    );
+}
+
+#[test]
+fn governor_plan_sums_exactly_and_respects_floor_under_saturated_slo() {
+    let n = 4usize;
+    let mut tc = TenancyConfig::default();
+    tc.enabled = true;
+    tc.max_tenants = n;
+    tc.global_qkv_bytes = 96 * sim_slice_bytes();
+    let mut reg = TenantRegistry::new(&tc);
+    for _ in 0..n {
+        reg.create_tenant().unwrap();
+    }
+    // skewed utilities so the proportional split is non-trivial
+    for t in 0..n {
+        let shard = reg.shard_mut(t as TenantId).unwrap();
+        for _ in 0..(t + 1) * 4 {
+            shard.stats.note(ServePath::QkvHit, 1_000_000);
+        }
+    }
+    // every tenant pegs its SLO signal and carries a deep queue — the
+    // saturated-overload worst case for plan stability
+    let signals: Vec<SloSignal> = (0..n)
+        .map(|_| SloSignal {
+            miss_rate: 1.0,
+            queue_delay_ms: 500.0,
+            target_ms: 20.0,
+            window_served: 32,
+        })
+        .collect();
+    reg.set_slo_signals(&signals);
+    reg.set_queue_depths(&vec![32; n]);
+
+    let plan = reg.plan();
+    assert_eq!(plan.len(), n);
+    let total: usize = plan.iter().map(|a| a.bytes).sum();
+    assert_eq!(
+        total, tc.global_qkv_bytes,
+        "the governed plan must sum exactly to the global budget"
+    );
+    let fair = tc.global_qkv_bytes / n;
+    let floor = (fair as f64 * tc.floor_frac) as usize;
+    for a in &plan {
+        assert!(
+            a.bytes >= floor,
+            "tenant {} allocated {} below the floor {floor} under saturated signals",
+            a.tenant,
+            a.bytes
+        );
+    }
+}
+
+#[test]
+fn slo_arms_strictly_dominate_static_on_overload_scenarios() {
+    let outcomes = smoke_sweep("dom");
+    for name in ["bursty", "churn"] {
+        let sc = outcomes
+            .iter()
+            .find(|s| s.scenario == name)
+            .unwrap_or_else(|| panic!("{name} missing from sweep"));
+        for (governed, baseline) in [("slo", "static"), ("slo_tiered", "static_tiered")] {
+            let g = sc.arm(governed).unwrap().miss_rate;
+            let b = sc.arm(baseline).unwrap().miss_rate;
+            assert!(
+                g < b,
+                "{name}: {governed} miss rate {g:.4} must beat {baseline} {b:.4}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adversarial_overload_sheds_admission_without_thrashing_the_governor() {
+    let outcomes = smoke_sweep("adv");
+    let sc = outcomes
+        .iter()
+        .find(|s| s.scenario == "adversarial")
+        .expect("adversarial missing");
+    let slo = sc.arm("slo").unwrap();
+    let stat = sc.arm("static").unwrap();
+    assert!(
+        slo.shed_rejected > 0,
+        "sustained overload must engage admission shedding"
+    );
+    assert_eq!(
+        stat.shed_rejected, 0,
+        "the static arm must never shed (its router is never told to)"
+    );
+    // saturated signals boost every tenant uniformly: the governed plan
+    // must not oscillate more than the static arm's beyond slack
+    assert!(
+        slo.budget_flips <= stat.budget_flips + 2 * sc.tenants as u64,
+        "SLO boost thrashes the governor: {} flips vs static {}",
+        slo.budget_flips,
+        stat.budget_flips
+    );
+}
+
+#[test]
+fn diurnal_predictor_prefetch_cuts_demand_stalls() {
+    let spec = TraceSpec::smoke(0x5CE7A710);
+    let trace = scenario("diurnal", &spec).unwrap();
+    let dir_off = tmp("pf_off");
+    let dir_on = tmp("pf_on");
+    let no_prefetch = replay_scenario(&trace, false, true, false, &dir_off).unwrap();
+    let prefetched = replay_scenario(&trace, false, true, true, &dir_on).unwrap();
+    let _ = std::fs::remove_dir_all(&dir_off);
+    let _ = std::fs::remove_dir_all(&dir_on);
+    assert_eq!(no_prefetch.prefetch_hydrations, 0);
+    assert!(
+        prefetched.prefetch_hydrations > 0,
+        "the periodicity forecast must drive at least one prefetch"
+    );
+    assert!(
+        prefetched.demand_stalls < no_prefetch.demand_stalls,
+        "prefetch must strictly reduce demand hydration stalls: {} vs {}",
+        prefetched.demand_stalls,
+        no_prefetch.demand_stalls
+    );
+}
