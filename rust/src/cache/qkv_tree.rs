@@ -196,6 +196,21 @@ impl QkvTree {
         slices: Vec<QkvTensor>,
         store: &mut SliceStore,
     ) -> Result<()> {
+        self.insert_path_shared(keys, slices, &[], store)
+    }
+
+    /// [`Self::insert_path`] with per-segment share-eligibility: segments
+    /// flagged `true` may be interned in the cross-tenant slice pool
+    /// (when the store has one attached) instead of stored privately.
+    /// `shared` may be shorter than `keys` — missing flags mean private,
+    /// so `&[]` is exactly the single-tenant insert path.
+    pub fn insert_path_shared(
+        &mut self,
+        keys: &[SegKey],
+        slices: Vec<QkvTensor>,
+        shared: &[bool],
+        store: &mut SliceStore,
+    ) -> Result<()> {
         anyhow::ensure!(
             keys.len() == slices.len(),
             "keys/slices length mismatch: {} vs {}",
@@ -234,7 +249,8 @@ impl QkvTree {
                 }
             };
             if self.nodes[idx].slice.is_none() {
-                let (sid, bytes) = store.put(tensor)?;
+                let share = shared.get(depth).copied().unwrap_or(false);
+                let (sid, bytes) = store.put_keyed(*key, tensor, share)?;
                 self.nodes[idx].slice = Some(sid);
                 self.nodes[idx].slice_bytes = bytes;
                 self.bytes_used += bytes;
@@ -373,6 +389,58 @@ impl QkvTree {
     /// unreferenced store entries).
     pub fn slice_ids(&self) -> Vec<SliceId> {
         self.nodes.iter().filter_map(|n| n.slice).collect()
+    }
+
+    /// Detach a slice the store could not serve (e.g. quarantined after
+    /// a checksum mismatch) so future matches stop treating it as
+    /// cached.  The node structure survives — exactly the state an LFU
+    /// eviction leaves behind.  Returns false if no node held the id.
+    pub fn drop_slice(&mut self, sid: SliceId, store: &mut SliceStore) -> bool {
+        let idx = match self.nodes.iter().position(|n| n.slice == Some(sid)) {
+            None => return false,
+            Some(i) => i,
+        };
+        self.nodes[idx].slice = None;
+        self.bytes_used -= self.nodes[idx].slice_bytes;
+        self.nodes[idx].slice_bytes = 0;
+        self.dirty = true;
+        // release whatever accounting the store still holds (a
+        // quarantined slice is usually already gone — this is a no-op)
+        store.remove(sid);
+        true
+    }
+
+    /// Copy-on-write: make the slice at the end of `keys` private (deep
+    /// copy out of the shared pool; see [`SliceStore::make_private`]),
+    /// recharging this tree's budget with the slice's full byte size and
+    /// re-enforcing it.  Returns false when the path or slice is absent.
+    pub fn privatize(&mut self, keys: &[SegKey], store: &mut SliceStore) -> Result<bool> {
+        let mut level = &self.roots;
+        let mut idx = None;
+        for key in keys {
+            match level.get(key) {
+                Some(&i) => {
+                    idx = Some(i);
+                    level = &self.nodes[i].children;
+                }
+                None => return Ok(false),
+            }
+        }
+        let idx = match idx {
+            None => return Ok(false),
+            Some(i) => i,
+        };
+        let sid = match self.nodes[idx].slice {
+            None => return Ok(false),
+            Some(s) => s,
+        };
+        let new_bytes = store.make_private(sid)?;
+        let old_bytes = self.nodes[idx].slice_bytes;
+        self.nodes[idx].slice_bytes = new_bytes;
+        self.bytes_used = self.bytes_used - old_bytes + new_bytes;
+        self.dirty = true;
+        self.enforce_budget(store, &[idx]);
+        Ok(true)
     }
 
     /// Internal-consistency check for property tests: byte accounting must
@@ -591,6 +659,89 @@ mod tests {
         let snap = tree.export();
         let restored = QkvTree::restore(tree.byte_limit(), &snap, &mut store).unwrap();
         assert!(!restored.is_dirty());
+    }
+
+    fn pooled_store(cap_slices: usize, tenant: u32) -> SliceStore {
+        let handle = crate::pool::PoolHandle::new(
+            crate::pool::SlicePool::memory(cap_slices * bytes_one()).shared(),
+            tenant,
+        );
+        SliceStore::memory_with_pool(handle)
+    }
+
+    #[test]
+    fn shared_inserts_charge_handles_not_payloads() {
+        let mut store = pooled_store(8, 0);
+        let mut tree = QkvTree::new(10 * bytes_one());
+        tree.insert_path_shared(
+            &[1, 2],
+            vec![tensor(1.0), tensor(2.0)],
+            &[true, false],
+            &mut store,
+        )
+        .unwrap();
+        let handle = crate::pool::HANDLE_BYTES;
+        assert_eq!(tree.bytes_used(), handle + bytes_one());
+        assert_eq!(store.pooled_count(), 1);
+        assert_eq!(tree.match_prefix(&[1, 2]).len(), 2);
+        // shard invariant: every tree slice has a store entry
+        assert_eq!(store.count(), tree.slice_count());
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evicting_pooled_slice_releases_the_reference() {
+        let mut store = pooled_store(8, 0);
+        let mut tree = QkvTree::new(10 * bytes_one());
+        tree.insert_path_shared(&[1], vec![tensor(1.0)], &[true], &mut store)
+            .unwrap();
+        let sid = tree.slice_ids()[0];
+        let key = store.pool_key_of(sid).unwrap();
+        tree.set_byte_limit(0, &mut store);
+        assert_eq!(tree.slice_count(), 0);
+        assert_eq!(store.pooled_count(), 0, "pool ref released on eviction");
+        assert!(store.pool_probe(key).is_some(), "entry stays warm, zero-ref");
+        tree.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn privatize_recharges_budget_and_unshares() {
+        let mut store = pooled_store(8, 0);
+        let mut tree = QkvTree::new(10 * bytes_one());
+        tree.insert_path_shared(
+            &[1, 2],
+            vec![tensor(1.0), tensor(2.0)],
+            &[true, true],
+            &mut store,
+        )
+        .unwrap();
+        let before = tree.bytes_used();
+        assert!(tree.privatize(&[1, 2], &mut store).unwrap());
+        assert_eq!(
+            tree.bytes_used(),
+            before - crate::pool::HANDLE_BYTES + bytes_one(),
+            "budget recharged with the full private size"
+        );
+        assert_eq!(store.pooled_count(), 1, "only the targeted slice copied");
+        // the private copy still serves matches, and invariants hold
+        assert_eq!(tree.match_prefix(&[1, 2]).len(), 2);
+        tree.check_invariants().unwrap();
+        // absent paths / sliceless nodes are a clean false
+        assert!(!tree.privatize(&[1, 99], &mut store).unwrap());
+    }
+
+    #[test]
+    fn drop_slice_degrades_to_structural_node() {
+        let mut store = SliceStore::memory();
+        let mut tree = QkvTree::new(10 * bytes_one());
+        tree.insert_path(&[1, 2], vec![tensor(1.0), tensor(2.0)], &mut store)
+            .unwrap();
+        let sid = tree.match_prefix(&[1, 2]).slices[1];
+        assert!(tree.drop_slice(sid, &mut store));
+        assert_eq!(tree.match_prefix(&[1, 2]).len(), 1, "slice gone");
+        assert_eq!(tree.structural_match(&[1, 2]), 2, "structure survives");
+        assert!(!tree.drop_slice(sid, &mut store), "second drop is a no-op");
+        tree.check_invariants().unwrap();
     }
 
     #[test]

@@ -18,10 +18,12 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::llm::QkvTensor;
+use crate::pool::{PoolHandle, PoolKey, HANDLE_BYTES};
 use crate::tokenizer::fnv1a64;
 use crate::util::json::Json;
 
@@ -45,16 +47,22 @@ pub enum Backend {
 /// Slice store with exact byte accounting (the tree enforces the budget).
 pub struct SliceStore {
     backend: Backend,
-    mem: HashMap<SliceId, QkvTensor>,
+    mem: HashMap<SliceId, Arc<QkvTensor>>,
     sizes: HashMap<SliceId, usize>,
     /// fnv1a64 over the slice file bytes (disk backend only).
     checksums: HashMap<SliceId, u64>,
+    /// Slices interned in the shared pool: id → content key.  Their
+    /// `sizes` entry is [`HANDLE_BYTES`]; the payload lives in the pool.
+    pooled: HashMap<SliceId, PoolKey>,
+    pool: Option<PoolHandle>,
     next_id: SliceId,
     /// Counters for Table 1-style reporting.
     pub loads: u64,
     pub stores: u64,
     /// Unreferenced/invalid slice files removed while (re)opening a dir.
     pub orphans_removed: u64,
+    /// Slices dropped on a checksum mismatch (first failed `get`).
+    pub quarantined: u64,
 }
 
 impl SliceStore {
@@ -76,17 +84,62 @@ impl SliceStore {
         Ok(store)
     }
 
+    /// Like [`Self::disk`], but attached to the cross-tenant slice pool:
+    /// manifest entries tagged with a pool key re-acquire their pool
+    /// references (the per-tenant refcount rebuild of a warm restart);
+    /// tagged entries whose key the pool no longer holds are dropped.
+    pub fn disk_with_pool(dir: PathBuf, pool: PoolHandle) -> Result<Self> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating slice dir {}", dir.display()))?;
+        let mut store = Self::new(Backend::Disk(dir));
+        store.pool = Some(pool);
+        store.open_dir()?;
+        Ok(store)
+    }
+
+    /// Memory backend attached to the cross-tenant slice pool.
+    pub fn memory_with_pool(pool: PoolHandle) -> Self {
+        let mut store = Self::new(Backend::Memory);
+        store.pool = Some(pool);
+        store
+    }
+
     fn new(backend: Backend) -> Self {
         SliceStore {
             backend,
             mem: HashMap::new(),
             sizes: HashMap::new(),
             checksums: HashMap::new(),
+            pooled: HashMap::new(),
+            pool: None,
             next_id: 1,
             loads: 0,
             stores: 0,
             orphans_removed: 0,
+            quarantined: 0,
         }
+    }
+
+    /// Whether a shared pool is attached (pooling enabled for this store).
+    pub fn has_pool(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Pool probe for position-aware reuse: the chunk's KV if the shared
+    /// pool holds it, composable at any prompt offset.  None when no
+    /// pool is attached or the key isn't resident.
+    pub fn pool_probe(&self, key: PoolKey) -> Option<Arc<QkvTensor>> {
+        self.pool.as_ref()?.probe(key)
+    }
+
+    /// Content key of a pooled slice (None for private slices).
+    pub fn pool_key_of(&self, id: SliceId) -> Option<PoolKey> {
+        self.pooled.get(&id).copied()
+    }
+
+    /// Number of this store's slices that live in the shared pool.
+    pub fn pooled_count(&self) -> usize {
+        self.pooled.len()
     }
 
     /// Disk directory backing this store (None for the memory backend).
@@ -157,9 +210,24 @@ impl SliceStore {
                 "slice id {id} out of range (next_id {next})"
             );
             anyhow::ensure!(
-                self.sizes.insert(id, bytes).is_none(),
+                !self.sizes.contains_key(&id),
                 "duplicate slice id {id}"
             );
+            if let Some(key_hex) = e.get("pool").as_str() {
+                // pooled handle: payload lives in the shared pool.
+                // Re-acquire the reference; a pool that dropped the key
+                // (or no attached pool) just shrinks the warm cache.
+                let key = PoolKey::from_str_radix(key_hex, 16)
+                    .with_context(|| format!("bad pool key hex {key_hex:?}"))?;
+                if let Some(p) = &self.pool {
+                    if p.acquire(key).is_some() {
+                        self.sizes.insert(id, HANDLE_BYTES);
+                        self.pooled.insert(id, key);
+                    }
+                }
+                continue;
+            }
+            self.sizes.insert(id, bytes);
             self.checksums.insert(id, sum);
         }
         self.next_id = next;
@@ -172,6 +240,9 @@ impl SliceStore {
     fn validate_entries(&mut self) -> Result<()> {
         let ids: Vec<SliceId> = self.sizes.keys().copied().collect();
         for id in ids {
+            if self.pooled.contains_key(&id) {
+                continue; // no local file: payload is in the pool
+            }
             let p = self.path(id).expect("disk backend");
             let ok = match std::fs::metadata(&p) {
                 Ok(m) => m.len() as usize == self.sizes[&id],
@@ -257,6 +328,9 @@ impl SliceStore {
                     "checksum",
                     format!("{:016x}", self.checksums.get(id).copied().unwrap_or(0)),
                 );
+                if let Some(key) = self.pooled.get(id) {
+                    o.insert("pool", format!("{key:016x}"));
+                }
                 Json::Obj(o)
             })
             .collect();
@@ -278,7 +352,7 @@ impl SliceStore {
         let bytes = tensor.byte_size() + 16;
         match self.path(id) {
             None => {
-                self.mem.insert(id, tensor);
+                self.mem.insert(id, Arc::new(tensor));
             }
             Some(p) => {
                 let buf = encode_slice(&tensor);
@@ -314,16 +388,68 @@ impl SliceStore {
         Ok((id, bytes))
     }
 
+    /// Persist a slice under its segment content key.  When a pool is
+    /// attached and the slice is shared-eligible, the payload is
+    /// interned in the cross-tenant pool and this store only accounts a
+    /// [`HANDLE_BYTES`] handle; otherwise (no pool, private slice, or
+    /// the pool rejected the intern under capacity pressure) this is
+    /// exactly [`Self::put`] — the single-tenant path is byte-identical.
+    pub fn put_keyed(
+        &mut self,
+        key: PoolKey,
+        tensor: QkvTensor,
+        shared: bool,
+    ) -> Result<(SliceId, usize)> {
+        if shared {
+            if let Some(pool) = self.pool.clone() {
+                if pool.intern(key, &tensor) {
+                    let id = self.next_id;
+                    self.sizes.insert(id, HANDLE_BYTES);
+                    self.pooled.insert(id, key);
+                    self.next_id += 1;
+                    self.stores += 1;
+                    if let Err(e) = self.write_manifest() {
+                        // roll back: a failed put must leave the store
+                        // (and the pool refcount) unchanged
+                        self.sizes.remove(&id);
+                        self.pooled.remove(&id);
+                        pool.release(key);
+                        self.next_id -= 1;
+                        self.stores -= 1;
+                        return Err(e);
+                    }
+                    crate::obs_counter!("store.puts").inc();
+                    crate::obs_gauge!("store.resident_bytes").add(HANDLE_BYTES as i64);
+                    return Ok((id, HANDLE_BYTES));
+                }
+            }
+        }
+        self.put(tensor)
+    }
+
     /// Load a slice (on-demand from disk for the Disk backend, with
-    /// checksum verification against the manifest).
-    pub fn get(&mut self, id: SliceId) -> Result<QkvTensor> {
+    /// checksum verification against the manifest; pooled slices come
+    /// back as the pool's shared allocation).  The payload is
+    /// `Arc`-shared — hot-path gets never copy tensor data.
+    ///
+    /// A disk slice whose bytes no longer match the manifest checksum is
+    /// *quarantined* on the first mismatch — dropped from the manifest,
+    /// file GC'd, `slice.quarantined` journaled — so one corrupt file
+    /// degrades to a cache miss instead of failing identically forever.
+    pub fn get(&mut self, id: SliceId) -> Result<Arc<QkvTensor>> {
         self.loads += 1;
         crate::obs_counter!("store.loads").inc();
+        if let Some(&key) = self.pooled.get(&id) {
+            let pool = self.pool.as_ref().context("pooled slice without a pool")?;
+            return pool
+                .get(key)
+                .with_context(|| format!("pooled slice {id} (key {key:016x}) left the pool"));
+        }
         match self.path(id) {
             None => self
                 .mem
                 .get(&id)
-                .cloned()
+                .map(Arc::clone)
                 .with_context(|| format!("slice {id} missing from memory store")),
             Some(p) => {
                 let buf =
@@ -332,15 +458,86 @@ impl SliceStore {
                     let got = fnv1a64(&buf);
                     if got != want {
                         crate::obs_counter!("store.checksum_failures").inc();
+                        self.quarantine(id, &p);
+                        anyhow::bail!(
+                            "slice {id} checksum mismatch ({got:016x} != {want:016x}); quarantined"
+                        );
                     }
-                    anyhow::ensure!(
-                        got == want,
-                        "slice {id} checksum mismatch ({got:016x} != {want:016x})"
-                    );
                 }
-                decode_slice(&buf)
+                decode_slice(&buf).map(Arc::new)
             }
         }
+    }
+
+    /// Drop a corrupt slice so it can never fail the same way twice:
+    /// manifest entry removed, file GC'd, accounting released.
+    fn quarantine(&mut self, id: SliceId, path: &Path) {
+        let bytes = self.sizes.remove(&id).unwrap_or(0);
+        self.checksums.remove(&id);
+        let _ = std::fs::remove_file(path);
+        // best-effort: a failed manifest write self-heals at the next
+        // open (the entry's file is gone → dropped by validation there)
+        let _ = self.write_manifest();
+        self.quarantined += 1;
+        if bytes != 0 {
+            crate::obs_gauge!("store.resident_bytes").sub(bytes as i64);
+        }
+        crate::obs::emit(
+            crate::obs::Event::new("slice.quarantined")
+                .field("id", id as f64)
+                .field("bytes", bytes as f64),
+        );
+    }
+
+    /// Copy-on-write: turn a pooled slice into a private copy under the
+    /// same id (deep copy of the payload; the pool reference is
+    /// released).  Returns the slice's new byte size so the owning tree
+    /// can recharge its budget.  A no-op (returning the current size)
+    /// for slices that are already private.
+    pub fn make_private(&mut self, id: SliceId) -> Result<usize> {
+        let key = match self.pooled.get(&id) {
+            None => {
+                return self
+                    .size_of(id)
+                    .with_context(|| format!("slice {id} not in store"));
+            }
+            Some(&k) => k,
+        };
+        let pool = self.pool.clone().context("pooled slice without a pool")?;
+        let shared = pool
+            .get(key)
+            .with_context(|| format!("pooled slice {id} (key {key:016x}) left the pool"))?;
+        let tensor: QkvTensor = (*shared).clone();
+        let bytes = tensor.byte_size() + 16;
+        // commit the private payload before flipping any accounting, so
+        // a failure leaves the slice pooled and fully readable
+        match self.path(id) {
+            None => {
+                self.mem.insert(id, Arc::new(tensor));
+            }
+            Some(p) => {
+                let buf = encode_slice(&tensor);
+                let sum = fnv1a64(&buf);
+                if let Err(e) =
+                    std::fs::write(&p, &buf).with_context(|| format!("writing {}", p.display()))
+                {
+                    let _ = std::fs::remove_file(&p);
+                    return Err(e);
+                }
+                self.checksums.insert(id, sum);
+            }
+        }
+        self.pooled.remove(&id);
+        self.sizes.insert(id, bytes);
+        pool.release(key);
+        let _ = self.write_manifest();
+        crate::obs_gauge!("store.resident_bytes").add(bytes as i64 - HANDLE_BYTES as i64);
+        crate::obs::emit(
+            crate::obs::Event::new("pool.cow")
+                .field("key", key as f64)
+                .field("bytes", bytes as f64),
+        );
+        Ok(bytes)
     }
 
     /// Delete a slice; returns the bytes freed.
@@ -359,12 +556,20 @@ impl SliceStore {
                 removed += 1;
             }
             self.checksums.remove(&id);
-            match self.path(id) {
-                None => {
-                    self.mem.remove(&id);
+            if let Some(key) = self.pooled.remove(&id) {
+                // drop this store's reference; the pool keeps the entry
+                // warm until capacity pressure evicts it
+                if let Some(pool) = &self.pool {
+                    pool.release(key);
                 }
-                Some(p) => {
-                    let _ = std::fs::remove_file(p);
+            } else {
+                match self.path(id) {
+                    None => {
+                        self.mem.remove(&id);
+                    }
+                    Some(p) => {
+                        let _ = std::fs::remove_file(p);
+                    }
                 }
             }
             freed += bytes;
@@ -418,6 +623,13 @@ impl Drop for SliceStore {
         if resident != 0 {
             crate::obs_gauge!("store.resident_bytes").sub(resident as i64);
         }
+        // release every pool reference this store held, so a demoted or
+        // dropped shard never strands pool bytes behind dead refcounts
+        if let Some(pool) = self.pool.take() {
+            for (_, key) in self.pooled.drain() {
+                pool.release(key);
+            }
+        }
     }
 }
 
@@ -430,7 +642,8 @@ fn parse_slice_file_name(name: &str) -> Option<SliceId> {
     SliceId::from_str_radix(hex, 16).ok()
 }
 
-fn encode_slice(tensor: &QkvTensor) -> Vec<u8> {
+// `pub(crate)` so the pool's payload files share this wire format.
+pub(crate) fn encode_slice(tensor: &QkvTensor) -> Vec<u8> {
     let mut buf = Vec::with_capacity(tensor.byte_size() + 16);
     buf.extend_from_slice(&MAGIC.to_le_bytes());
     buf.extend_from_slice(&(tensor.layers as u32).to_le_bytes());
@@ -442,7 +655,7 @@ fn encode_slice(tensor: &QkvTensor) -> Vec<u8> {
     buf
 }
 
-fn decode_slice(buf: &[u8]) -> Result<QkvTensor> {
+pub(crate) fn decode_slice(buf: &[u8]) -> Result<QkvTensor> {
     anyhow::ensure!(buf.len() >= 16, "slice file too short");
     let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
     anyhow::ensure!(magic == MAGIC, "bad slice magic");
@@ -485,7 +698,7 @@ mod tests {
         let t = tensor(1.0);
         let (id, bytes) = s.put(t.clone()).unwrap();
         assert_eq!(bytes, t.byte_size() + 16);
-        assert_eq!(s.get(id).unwrap(), t);
+        assert_eq!(*s.get(id).unwrap(), t);
         assert_eq!(s.remove(id), bytes);
         assert!(s.get(id).is_err());
         assert_eq!(s.count(), 0);
@@ -498,7 +711,7 @@ mod tests {
         let t = tensor(-3.25);
         let (id, _) = s.put(t.clone()).unwrap();
         let loaded = s.get(id).unwrap();
-        assert_eq!(loaded, t);
+        assert_eq!(*loaded, t);
         assert_eq!(s.loads, 1);
         s.remove(id);
         assert!(s.get(id).is_err());
@@ -535,12 +748,12 @@ mod tests {
         };
         let mut s = SliceStore::disk(dir.clone()).unwrap();
         assert_eq!(s.count(), 2, "reopen must keep committed slices");
-        assert_eq!(s.get(a).unwrap(), ta);
-        assert_eq!(s.get(b).unwrap(), tb);
+        assert_eq!(*s.get(a).unwrap(), ta);
+        assert_eq!(*s.get(b).unwrap(), tb);
         let (c, _) = s.put(tensor(3.0)).unwrap();
         assert!(c > b, "resumed id {c} must not collide with {a}/{b}");
         // the old slices are untouched by the new put
-        assert_eq!(s.get(a).unwrap(), ta);
+        assert_eq!(*s.get(a).unwrap(), ta);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -589,10 +802,181 @@ mod tests {
         std::fs::write(dir.join(slice_file_name(7)), encode_slice(&t)).unwrap();
         let mut s = SliceStore::disk(dir.clone()).unwrap();
         assert_eq!(s.count(), 1);
-        assert_eq!(s.get(7).unwrap(), t);
+        assert_eq!(*s.get(7).unwrap(), t);
         let (id, _) = s.put(tensor(5.0)).unwrap();
         assert_eq!(id, 8, "ids resume past the adopted max");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn memory_gets_share_one_allocation() {
+        let mut s = SliceStore::memory();
+        let (id, _) = s.put(tensor(2.5)).unwrap();
+        let a = s.get(id).unwrap();
+        let b = s.get(id).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hot-path gets must not deep-copy");
+    }
+
+    #[test]
+    fn checksum_mismatch_quarantines_on_first_get() {
+        let dir = tmp_dir("quarantine");
+        let mut s = SliceStore::disk(dir.clone()).unwrap();
+        let (good, _) = s.put(tensor(1.0)).unwrap();
+        let (bad, _) = s.put(tensor(2.0)).unwrap();
+        let p = dir.join(slice_file_name(bad));
+        // flip one byte, keeping the length (so only the checksum trips)
+        let mut buf = std::fs::read(&p).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0xFF;
+        std::fs::write(&p, &buf).unwrap();
+
+        let err = s.get(bad).unwrap_err().to_string();
+        assert!(err.contains("quarantined"), "got: {err}");
+        assert_eq!(s.quarantined, 1);
+        assert!(!s.contains(bad), "quarantined slice leaves the store");
+        assert!(!p.exists(), "quarantined file is GC'd");
+        // the second failure mode of the old behavior: the entry stayed
+        // in the manifest and failed identically forever — now it's a
+        // clean miss, and a reopen agrees
+        assert!(s.get(bad).is_err());
+        assert_eq!(s.quarantined, 1, "no double-quarantine");
+        drop(s);
+        let mut s = SliceStore::disk(dir.clone()).unwrap();
+        assert!(!s.contains(bad));
+        assert_eq!(*s.get(good).unwrap(), tensor(1.0), "good slice unaffected");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_put_rolls_back_completely() {
+        let dir = tmp_dir("rollback");
+        let mut s = SliceStore::disk(dir.clone()).unwrap();
+        s.put(tensor(1.0)).unwrap();
+        let before_count = s.count();
+        let before_next = s.next_id();
+        let before_stores = s.stores;
+
+        // force the slice-file write to fail: a directory squats on the
+        // path the next put would use
+        let squat = dir.join(slice_file_name(before_next));
+        std::fs::create_dir_all(&squat).unwrap();
+        assert!(s.put(tensor(2.0)).is_err());
+        std::fs::remove_dir_all(&squat).unwrap();
+        assert_eq!(s.count(), before_count, "no accounting leaked");
+        assert_eq!(s.next_id(), before_next, "no id consumed");
+        assert_eq!(s.stores, before_stores);
+
+        // force the manifest commit to fail instead: a directory squats
+        // on the manifest tmp path
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::create_dir_all(&tmp).unwrap();
+        assert!(s.put(tensor(3.0)).is_err());
+        std::fs::remove_dir_all(&tmp).unwrap();
+        assert_eq!(s.count(), before_count);
+        assert_eq!(s.next_id(), before_next);
+        assert!(
+            !dir.join(slice_file_name(before_next)).exists(),
+            "rolled-back slice file removed"
+        );
+        // the store still works after both failures
+        let (id, _) = s.put(tensor(4.0)).unwrap();
+        assert_eq!(*s.get(id).unwrap(), tensor(4.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn pool_handle(cap_slices: usize, tenant: u32) -> crate::pool::PoolHandle {
+        let bytes = tensor(0.0).byte_size() + 16;
+        crate::pool::PoolHandle::new(
+            crate::pool::SlicePool::memory(cap_slices * bytes).shared(),
+            tenant,
+        )
+    }
+
+    #[test]
+    fn pooled_put_get_remove_roundtrip() {
+        let h = pool_handle(8, 0);
+        let mut s = SliceStore::memory_with_pool(h.clone());
+        let t = tensor(6.0);
+        let (id, bytes) = s.put_keyed(0xC0FFEE, t.clone(), true).unwrap();
+        assert_eq!(bytes, HANDLE_BYTES, "pooled slice charges only a handle");
+        assert_eq!(s.size_of(id), Some(HANDLE_BYTES));
+        assert_eq!(s.pooled_count(), 1);
+        assert_eq!(*s.get(id).unwrap(), t);
+        assert!(Arc::ptr_eq(
+            &s.get(id).unwrap(),
+            &s.pool_probe(0xC0FFEE).unwrap()
+        ));
+        assert_eq!(s.remove(id), HANDLE_BYTES);
+        assert!(s.get(id).is_err());
+        // the pool keeps the entry warm at zero refs
+        assert!(s.pool_probe(0xC0FFEE).is_some());
+    }
+
+    #[test]
+    fn unshared_or_poolless_put_keyed_matches_put() {
+        // no pool attached: put_keyed is exactly put
+        let mut plain = SliceStore::memory();
+        let (id, bytes) = plain.put_keyed(1, tensor(1.0), true).unwrap();
+        assert_eq!(bytes, tensor(1.0).byte_size() + 16);
+        assert_eq!(*plain.get(id).unwrap(), tensor(1.0));
+        // pool attached but slice not shared-eligible: private too
+        let mut pooled = SliceStore::memory_with_pool(pool_handle(8, 0));
+        let (_, b2) = pooled.put_keyed(1, tensor(1.0), false).unwrap();
+        assert_eq!(b2, bytes);
+        assert_eq!(pooled.pooled_count(), 0);
+    }
+
+    #[test]
+    fn reopen_with_pool_rebuilds_refcounts() {
+        let dir = tmp_dir("poolreopen");
+        let pool = crate::pool::SlicePool::memory(1 << 20).shared();
+        let h = crate::pool::PoolHandle::new(Arc::clone(&pool), 7);
+        let t = tensor(3.5);
+        let (pid, prv) = {
+            let mut s = SliceStore::disk_with_pool(dir.clone(), h.clone()).unwrap();
+            let (pid, _) = s.put_keyed(0xAA, t.clone(), true).unwrap();
+            let (prv, _) = s.put(tensor(9.0)).unwrap();
+            (pid, prv)
+        };
+        // the drop released the shard's reference; the entry stays warm
+        assert_eq!(crate::util::sync::lock_or_recover(&pool).refcount(0xAA), 0);
+        let mut s = SliceStore::disk_with_pool(dir.clone(), h).unwrap();
+        assert_eq!(
+            crate::util::sync::lock_or_recover(&pool).refcount(0xAA),
+            1,
+            "reopen re-acquires the pool reference"
+        );
+        assert_eq!(s.size_of(pid), Some(HANDLE_BYTES));
+        assert_eq!(*s.get(pid).unwrap(), t);
+        assert_eq!(*s.get(prv).unwrap(), tensor(9.0));
+        // reopening WITHOUT a pool drops the pooled entry, keeps private
+        drop(s);
+        let s = SliceStore::disk(dir.clone()).unwrap();
+        assert!(!s.contains(pid), "pooled entry dropped without a pool");
+        assert!(s.contains(prv));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn make_private_copies_and_never_aliases() {
+        let h = pool_handle(8, 0);
+        let mut s = SliceStore::memory_with_pool(h.clone());
+        let t = tensor(1.5);
+        let (id, _) = s.put_keyed(0xBEE, t.clone(), true).unwrap();
+        let pooled_arc = s.pool_probe(0xBEE).unwrap();
+        let bytes = s.make_private(id).unwrap();
+        assert_eq!(bytes, t.byte_size() + 16);
+        assert_eq!(s.pooled_count(), 0);
+        assert_eq!(s.size_of(id), Some(bytes));
+        let private_arc = s.get(id).unwrap();
+        assert!(
+            !Arc::ptr_eq(&pooled_arc, &private_arc),
+            "COW must never alias the pool entry"
+        );
+        assert_eq!(*private_arc, t, "payload copied intact");
+        // the pool reference was released; already-private is a no-op
+        assert!(s.pool_probe(0xBEE).is_some(), "pool entry survives, warm");
+        assert_eq!(s.make_private(id).unwrap(), bytes);
     }
 
     #[test]

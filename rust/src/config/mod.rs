@@ -300,6 +300,79 @@ impl SloConfig {
     }
 }
 
+/// Cross-tenant content-addressed slice pool knobs (the `pool`
+/// subsystem, DESIGN.md §15).  Disabled by default: every shard stores
+/// all of its slices privately — byte-identical to pre-pool behaviour.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    pub enabled: bool,
+    /// Pool capacity in bytes, reserved off the top of
+    /// `global_qkv_bytes`; the governor plans the remainder across
+    /// shards, so exclusive allocations + the pool reserve still sum
+    /// exactly to the global budget.
+    pub pool_bytes: usize,
+    /// Position-aware reuse (RAGCache's reorder-vs-recompute
+    /// trade-off): compose a pooled chunk's cached KV into prompts
+    /// where the chunk appears at a different offset, paying the
+    /// re-anchor surcharge, instead of recomputing it from scratch.
+    pub reanchor: bool,
+    /// Modeled re-anchor cost, as a fraction of a full prefill of the
+    /// re-anchored segment.
+    pub reanchor_cost_frac: f64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            enabled: false,
+            pool_bytes: 16 << 20,
+            reanchor: false,
+            reanchor_cost_frac: 0.25,
+        }
+    }
+}
+
+impl PoolConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut p = PoolConfig::default();
+        if let Some(b) = j.get("enabled").as_bool() {
+            p.enabled = b;
+        }
+        if let Some(v) = j.get("pool_bytes").as_usize() {
+            p.pool_bytes = v;
+        }
+        if let Some(b) = j.get("reanchor").as_bool() {
+            p.reanchor = b;
+        }
+        if let Some(v) = j.get("reanchor_cost_frac").as_f64() {
+            p.reanchor_cost_frac = v;
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.enabled || self.pool_bytes >= 1,
+            "pool_bytes must be >= 1 when the pool is enabled"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.reanchor_cost_frac),
+            "reanchor_cost_frac must be in [0,1]"
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("enabled", self.enabled);
+        o.insert("pool_bytes", self.pool_bytes);
+        o.insert("reanchor", self.reanchor);
+        o.insert("reanchor_cost_frac", self.reanchor_cost_frac);
+        Json::Obj(o)
+    }
+}
+
 /// Multi-tenant serving knobs (the `tenancy` subsystem).  Disabled by
 /// default: single-tenant mode is a registry with one shard holding the
 /// whole budget, which leaves the paper experiments untouched.
@@ -331,6 +404,8 @@ pub struct TenancyConfig {
     /// SLO-aware governor boost + admission shedding (inert until SLO
     /// signals are published, see DESIGN.md §14).
     pub slo: SloConfig,
+    /// Cross-tenant content-addressed slice pool (off by default).
+    pub pool: PoolConfig,
 }
 
 impl Default for TenancyConfig {
@@ -349,6 +424,7 @@ impl Default for TenancyConfig {
             queue_weight: 0.5,
             tiering: TieringConfig::default(),
             slo: SloConfig::default(),
+            pool: PoolConfig::default(),
         }
     }
 }
@@ -395,6 +471,9 @@ impl TenancyConfig {
         if j.get("slo").as_obj().is_some() {
             t.slo = SloConfig::from_json(j.get("slo"))?;
         }
+        if j.get("pool").as_obj().is_some() {
+            t.pool = PoolConfig::from_json(j.get("pool"))?;
+        }
         t.validate()?;
         Ok(t)
     }
@@ -419,6 +498,11 @@ impl TenancyConfig {
         anyhow::ensure!(self.queue_weight >= 0.0, "queue_weight must be >= 0");
         self.tiering.validate()?;
         self.slo.validate()?;
+        self.pool.validate()?;
+        anyhow::ensure!(
+            !self.pool.enabled || self.pool.pool_bytes < self.global_qkv_bytes,
+            "pool_bytes must leave shard budget under global_qkv_bytes"
+        );
         Ok(())
     }
 
@@ -437,6 +521,7 @@ impl TenancyConfig {
         o.insert("queue_weight", self.queue_weight);
         o.insert("tiering", self.tiering.to_json());
         o.insert("slo", self.slo.to_json());
+        o.insert("pool", self.pool.to_json());
         Json::Obj(o)
     }
 }
@@ -757,6 +842,43 @@ mod tests {
         assert!(c3.tenancy.tiering.enabled);
         assert_eq!(c3.tenancy.tiering.idle_ticks_to_demote, 48);
         assert_eq!(c3.tenancy.tiering.demote_watermark_frac, 0.85);
+    }
+
+    #[test]
+    fn pool_block_roundtrip_and_defaults() {
+        let mut c = PerCacheConfig::default();
+        assert!(!c.tenancy.pool.enabled, "pool must default off");
+        c.tenancy.pool.enabled = true;
+        c.tenancy.pool.pool_bytes = 4 << 20;
+        c.tenancy.pool.reanchor = true;
+        c.tenancy.pool.reanchor_cost_frac = 0.5;
+        let j = c.to_json();
+        let c2 = PerCacheConfig::from_json(&j).unwrap();
+        assert!(c2.tenancy.pool.enabled);
+        assert_eq!(c2.tenancy.pool.pool_bytes, 4 << 20);
+        assert!(c2.tenancy.pool.reanchor);
+        assert_eq!(c2.tenancy.pool.reanchor_cost_frac, 0.5);
+
+        // partial pool block keeps the other defaults
+        let j = Json::parse(r#"{"tenancy": {"pool": {"enabled": true}}}"#).unwrap();
+        let c3 = PerCacheConfig::from_json(&j).unwrap();
+        assert!(c3.tenancy.pool.enabled);
+        assert_eq!(c3.tenancy.pool.pool_bytes, 16 << 20);
+        assert!(!c3.tenancy.pool.reanchor);
+        assert_eq!(c3.tenancy.pool.reanchor_cost_frac, 0.25);
+    }
+
+    #[test]
+    fn pool_invalid_rejected() {
+        let j = Json::parse(r#"{"tenancy": {"pool": {"reanchor_cost_frac": 1.5}}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"tenancy": {"pool": {"enabled": true, "pool_bytes": 0}}}"#)
+            .unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        // pool must fit strictly inside the global budget
+        let big = r#"{"tenancy": {"pool": {"enabled": true, "pool_bytes": 999999999999}}}"#;
+        let j = Json::parse(big).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err(), "pool larger than global budget");
     }
 
     #[test]

@@ -330,6 +330,11 @@ pub struct TenantTrace {
 pub struct MultiTenantWorkload {
     pub tenants: Vec<TenantTrace>,
     pub arrivals: Vec<(usize, usize)>,
+    /// Topics with index below this draw from a corpus common to every
+    /// tenant (identical chunk content → identical segment keys), the
+    /// overlap cross-tenant dedup exploits.  0 = fully private
+    /// workloads, the pre-pool behaviour.
+    pub shared_topics: usize,
 }
 
 /// Generate a multi-tenant workload: `n_tenants` tenants cycling through
@@ -341,6 +346,21 @@ pub fn multi_tenant(
     total_arrivals: usize,
     zipf_s: f64,
     seed: u64,
+) -> MultiTenantWorkload {
+    multi_tenant_shared(n_tenants, total_arrivals, zipf_s, seed, 0.0)
+}
+
+/// [`multi_tenant`] with a public-corpus knob: `shared_corpus_frac` of
+/// each tenant's topics (lowest indices first) comes from a pool common
+/// to all tenants, so their chunk segment keys collide across tenants —
+/// the overlap `percache exp dedup` measures.  At 0.0 this is exactly
+/// [`multi_tenant`].
+pub fn multi_tenant_shared(
+    n_tenants: usize,
+    total_arrivals: usize,
+    zipf_s: f64,
+    seed: u64,
+    shared_corpus_frac: f64,
 ) -> MultiTenantWorkload {
     assert!(n_tenants > 0, "need at least one tenant");
     let mut rng = Rng::new(seed ^ 0x7E4A47);
@@ -364,7 +384,18 @@ pub fn multi_tenant(
         arrivals.push((t, next_seq[t]));
         next_seq[t] += 1;
     }
-    MultiTenantWorkload { tenants, arrivals }
+    let min_topics = tenants
+        .iter()
+        .map(|t| t.data.documents.len())
+        .min()
+        .unwrap_or(0);
+    let shared_topics =
+        (shared_corpus_frac.clamp(0.0, 1.0) * min_topics as f64).round() as usize;
+    MultiTenantWorkload {
+        tenants,
+        arrivals,
+        shared_topics,
+    }
 }
 
 /// All users of all datasets (the paper's 20-user evaluation set).
@@ -496,6 +527,23 @@ mod tests {
         );
         // distinct tenants map to distinct (dataset, user) traces here
         assert_ne!(w.tenants[0].data.documents, w.tenants[1].data.documents);
+    }
+
+    #[test]
+    fn shared_corpus_frac_scales_public_topics() {
+        let none = multi_tenant_shared(4, 100, 1.0, 42, 0.0);
+        assert_eq!(none.shared_topics, 0, "frac 0.0 keeps everything private");
+        let half = multi_tenant_shared(4, 100, 1.0, 42, 0.5);
+        let all = multi_tenant_shared(4, 100, 1.0, 42, 1.0);
+        assert!(half.shared_topics > 0, "frac 0.5 must mark topics public");
+        assert!(all.shared_topics > half.shared_topics);
+        // the knob changes only the sharedness, not the arrival stream
+        assert_eq!(none.arrivals, all.arrivals);
+        // out-of-range fracs clamp instead of exploding
+        assert_eq!(
+            multi_tenant_shared(4, 100, 1.0, 42, 7.5).shared_topics,
+            all.shared_topics
+        );
     }
 
     #[test]

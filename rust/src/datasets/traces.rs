@@ -132,6 +132,7 @@ fn pool_arrival(tenant: TenantId, i: usize) -> Arrival {
         seg_keys: vec![fnv1a64(b"sys"), tag("a"), tag("b"), fnv1a64(q.as_bytes())],
         tenant,
         query: q,
+        shared: Vec::new(),
     }
 }
 
@@ -144,6 +145,7 @@ fn unique_arrival(tenant: TenantId, uid: u64) -> Arrival {
         seg_keys: vec![fnv1a64(b"sys"), tag("a"), tag("b"), fnv1a64(q.as_bytes())],
         tenant,
         query: q,
+        shared: Vec::new(),
     }
 }
 

@@ -17,7 +17,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::cache::{slice_prompt, QaBank, QkvTree, SliceStore, Snapshotter};
+use crate::cache::{slice_prompt, QaBank, QkvTree, SliceId, SliceStore, Snapshotter};
 use crate::config::{PerCacheConfig, PopulationMode};
 use crate::embedding::Embedder;
 use crate::kb::KnowledgeBank;
@@ -269,12 +269,7 @@ impl<'rt> PerCache<'rt> {
             rec.tree_match_ms = t.ms();
             if !m.is_empty() {
                 let t = Stage::start();
-                let mut parts = Vec::with_capacity(m.len());
-                for sid in &m.slices {
-                    parts.push(self.store.get(*sid).context("loading cached slice")?);
-                }
-                let refs: Vec<&QkvTensor> = parts.iter().collect();
-                prefix = Some(QkvTensor::concat(&refs));
+                prefix = self.load_matched(&m.slices);
                 rec.cache_load_ms = t.ms();
             }
         }
@@ -337,6 +332,28 @@ impl<'rt> PerCache<'rt> {
         (tokens, keys)
     }
 
+    /// Load matched slices and concatenate them into one prefix tensor.
+    /// A slice that fails to load — quarantined on a checksum mismatch,
+    /// or a pooled slice whose shared bytes were evicted while this
+    /// engine was cold — is dropped from the tree and the query degrades
+    /// to a full prefill: cache reuse is an optimization, never a
+    /// correctness risk.
+    fn load_matched(&mut self, slices: &[SliceId]) -> Option<QkvTensor> {
+        let mut parts = Vec::with_capacity(slices.len());
+        for sid in slices {
+            match self.store.get(*sid) {
+                Ok(t) => parts.push(t),
+                Err(_) => {
+                    crate::obs_counter!("engine.slice_load_failures").inc();
+                    self.tree.drop_slice(*sid, &mut self.store);
+                    return None;
+                }
+            }
+        }
+        let refs: Vec<&QkvTensor> = parts.iter().map(|a| a.as_ref()).collect();
+        Some(QkvTensor::concat(&refs))
+    }
+
     // ------------------------------------------------------------------
     // population path (idle time)
     // ------------------------------------------------------------------
@@ -368,12 +385,7 @@ impl<'rt> PerCache<'rt> {
         if self.cfg.qkv_enabled && seg_keys.len() > 1 {
             let m = self.tree.match_prefix(&seg_keys[..seg_keys.len() - 1]);
             if !m.is_empty() {
-                let mut parts = Vec::with_capacity(m.len());
-                for sid in &m.slices {
-                    parts.push(self.store.get(*sid)?);
-                }
-                let refs: Vec<&QkvTensor> = parts.iter().collect();
-                prefix = Some(QkvTensor::concat(&refs));
+                prefix = self.load_matched(&m.slices);
             }
         }
 
@@ -481,12 +493,7 @@ impl<'rt> PerCache<'rt> {
             if self.cfg.qkv_enabled && seg_keys.len() > 1 {
                 let m = self.tree.match_prefix(&seg_keys[..seg_keys.len() - 1]);
                 if !m.is_empty() {
-                    let mut parts = Vec::with_capacity(m.len());
-                    for sid in &m.slices {
-                        parts.push(self.store.get(*sid)?);
-                    }
-                    let refs: Vec<&QkvTensor> = parts.iter().collect();
-                    prefix = Some(QkvTensor::concat(&refs));
+                    prefix = self.load_matched(&m.slices);
                 }
             }
             let pre = self

@@ -1,0 +1,335 @@
+//! Cross-tenant dedup experiment (`percache exp dedup`): per-tenant-copy
+//! vs content-addressed slice pool over a workload with a shared corpus.
+//!
+//! Both arms replay the *same* arrival stream (same tenants, same
+//! queries, same share-eligibility flags) under the same global memory
+//! budget; only the pool config differs.  The per-tenant-copy arm stores
+//! every tenant's copy of the public chunks privately; the pooled arm
+//! interns them once and charges each tenant an amortized share.  Emits
+//! the human table + CSV plus `reports/BENCH_dedup.json`: resident
+//! bytes per arm, dedup ratio, hit-rate parity, and the exact-sum
+//! accounting check (private plans + pool reserve == global budget).
+//! `--smoke` (or PERCACHE_SMOKE=1) shrinks the sweep for CI.
+
+use anyhow::Result;
+
+use crate::config::TenancyConfig;
+use crate::datasets;
+use crate::runtime::Runtime;
+use crate::tenancy::sim::{arrivals_from_workload, replay, sim_slice_bytes, SimConfig};
+use crate::tenancy::{RouterConfig, TenantRegistry};
+use crate::util::json::Json;
+use crate::util::sync::lock_or_recover;
+use crate::util::table::Table;
+
+use super::common::reports_dir;
+
+/// Tenant counts swept (full mode).
+pub const TENANT_COUNTS: [usize; 5] = [1, 2, 4, 8, 16];
+const SMOKE_COUNTS: [usize; 3] = [1, 2, 4];
+const ARRIVALS_PER_TENANT: usize = 40;
+const SMOKE_ARRIVALS_PER_TENANT: usize = 12;
+/// Global QKV budget, sized so the largest sweep point's working set
+/// fits in both arms — the comparison measures bytes *needed*, not
+/// eviction churn.
+const GLOBAL_SLICES: usize = 320;
+/// Pool reservation (carved out of the same global budget).
+const POOL_SLICES: usize = 32;
+/// Fraction of each tenant's topics drawn from the shared public corpus.
+const SHARED_FRAC: f64 = 0.6;
+
+fn smoke() -> bool {
+    std::env::var("PERCACHE_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn tenant_counts() -> &'static [usize] {
+    if smoke() {
+        &SMOKE_COUNTS
+    } else {
+        &TENANT_COUNTS
+    }
+}
+
+fn arrivals_per_tenant() -> usize {
+    if smoke() {
+        SMOKE_ARRIVALS_PER_TENANT
+    } else {
+        ARRIVALS_PER_TENANT
+    }
+}
+
+/// One sweep point: the per-tenant-copy arm vs the pooled arm.
+#[derive(Debug, Clone)]
+pub struct DedupCell {
+    pub tenants: usize,
+    pub arrivals: usize,
+    /// Resident cache bytes (shards + pool) after replay, per arm.
+    pub base_resident_bytes: usize,
+    pub pooled_resident_bytes: usize,
+    /// base / pooled — >1 means the pool saved memory.
+    pub dedup_ratio: f64,
+    /// Fraction of requests served off some cache layer, per arm.
+    pub base_hit_rate: f64,
+    pub pooled_hit_rate: f64,
+    /// Pool occupancy at the end of the pooled arm.
+    pub pool_entries: usize,
+    pub pool_bytes: usize,
+    /// Position-aware reuses (reorder-vs-recompute) in the pooled arm.
+    pub reanchored: u64,
+    /// Exact-sum accounting: private plans + reserve == global.
+    pub base_plan_bytes: usize,
+    pub pooled_plan_bytes: usize,
+    pub reserved_bytes: usize,
+    pub global_bytes: usize,
+}
+
+struct ArmOutcome {
+    arrivals: usize,
+    resident_bytes: usize,
+    hit_rate: f64,
+    pool_entries: usize,
+    pool_bytes: usize,
+    reanchored: u64,
+    plan_bytes: usize,
+    reserved_bytes: usize,
+}
+
+fn run_arm(n: usize, pooled: bool) -> Result<ArmOutcome> {
+    let slice = sim_slice_bytes();
+    let mut tc = TenancyConfig {
+        enabled: true,
+        max_tenants: n.max(1),
+        global_qkv_bytes: GLOBAL_SLICES * slice,
+        rebalance_every: 16,
+        ..TenancyConfig::default()
+    };
+    let mut sim = SimConfig::default();
+    if pooled {
+        tc.pool.enabled = true;
+        tc.pool.pool_bytes = POOL_SLICES * slice;
+        tc.pool.reanchor = true;
+        sim.reanchor = true;
+        sim.reanchor_cost_frac = tc.pool.reanchor_cost_frac;
+    }
+    let mut reg = TenantRegistry::new(&tc);
+    for _ in 0..n {
+        reg.create_tenant()?;
+    }
+    let w = datasets::multi_tenant_shared(
+        n,
+        n * arrivals_per_tenant(),
+        1.0,
+        0xD0D0 + n as u64,
+        SHARED_FRAC,
+    );
+    let arrivals = arrivals_from_workload(&w);
+    let reanchored_before = crate::obs_counter!("pool.reanchored").get();
+    let out = replay(
+        &mut reg,
+        RouterConfig {
+            queue_cap: tc.queue_cap,
+            global_cap: tc.global_queue_cap,
+            ..RouterConfig::default()
+        },
+        &sim,
+        &arrivals,
+        8,
+    )?;
+    reg.check_invariants()?;
+
+    let served: usize = out.per_tenant.iter().map(|r| r.len()).sum();
+    let hits: usize = out
+        .per_tenant
+        .iter()
+        .flat_map(|r| r.records.iter())
+        .filter(|q| q.path != crate::metrics::ServePath::Full)
+        .count();
+    Ok(ArmOutcome {
+        arrivals: arrivals.len(),
+        resident_bytes: reg.resident_bytes() + reg.pool_bytes_used(),
+        hit_rate: if served == 0 {
+            0.0
+        } else {
+            hits as f64 / served as f64
+        },
+        pool_entries: reg
+            .pool()
+            .map(|p| lock_or_recover(p).len())
+            .unwrap_or(0),
+        pool_bytes: reg.pool_bytes_used(),
+        reanchored: crate::obs_counter!("pool.reanchored").get() - reanchored_before,
+        plan_bytes: reg.plan().iter().map(|a| a.bytes).sum(),
+        reserved_bytes: reg.governor.reserved_bytes(),
+    })
+}
+
+/// Run the sweep (pure; unit-testable without a runtime).
+pub fn sweep() -> Result<Vec<DedupCell>> {
+    let global = GLOBAL_SLICES * sim_slice_bytes();
+    let mut cells = Vec::new();
+    for &n in tenant_counts() {
+        let base = run_arm(n, false)?;
+        let pool = run_arm(n, true)?;
+        cells.push(DedupCell {
+            tenants: n,
+            arrivals: base.arrivals,
+            base_resident_bytes: base.resident_bytes,
+            pooled_resident_bytes: pool.resident_bytes,
+            dedup_ratio: base.resident_bytes as f64 / pool.resident_bytes.max(1) as f64,
+            base_hit_rate: base.hit_rate,
+            pooled_hit_rate: pool.hit_rate,
+            pool_entries: pool.pool_entries,
+            pool_bytes: pool.pool_bytes,
+            reanchored: pool.reanchored,
+            base_plan_bytes: base.plan_bytes,
+            pooled_plan_bytes: pool.plan_bytes,
+            reserved_bytes: pool.reserved_bytes,
+            global_bytes: global,
+        });
+    }
+    Ok(cells)
+}
+
+/// `percache exp dedup` entry point (runtime unused: cache-level sim).
+pub fn dedup(_rt: &Runtime) -> Result<()> {
+    run_and_report()
+}
+
+/// Shared by the exp registry and CI.
+pub fn run_and_report() -> Result<()> {
+    let cells = sweep()?;
+    let mut table = Table::new(
+        "dedup: per-tenant-copy vs pooled resident bytes at fixed global budget",
+        &[
+            "tenants", "arrivals", "base KB", "pooled KB", "ratio", "base hit",
+            "pool hit", "pool entries", "reanchored",
+        ],
+    );
+    for c in &cells {
+        table.row(vec![
+            c.tenants.to_string(),
+            c.arrivals.to_string(),
+            format!("{:.0}", c.base_resident_bytes as f64 / 1024.0),
+            format!("{:.0}", c.pooled_resident_bytes as f64 / 1024.0),
+            format!("{:.2}x", c.dedup_ratio),
+            format!("{:.0}%", c.base_hit_rate * 100.0),
+            format!("{:.0}%", c.pooled_hit_rate * 100.0),
+            c.pool_entries.to_string(),
+            c.reanchored.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    let dir = reports_dir();
+    table.emit(&dir, "dedup");
+    write_bench_json(&cells, &dir)?;
+    Ok(())
+}
+
+/// Emit `<dir>/BENCH_dedup.json` — the dedup perf-trajectory seed.
+pub fn write_bench_json(cells: &[DedupCell], dir: &std::path::Path) -> Result<()> {
+    let mut root = Json::obj();
+    root.insert("bench", "dedup");
+    root.insert("global_qkv_bytes", GLOBAL_SLICES * sim_slice_bytes());
+    root.insert("pool_bytes_cap", POOL_SLICES * sim_slice_bytes());
+    root.insert("shared_corpus_frac", SHARED_FRAC);
+    let series: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.insert("tenants", c.tenants);
+            o.insert("arrivals", c.arrivals);
+            o.insert("base_resident_bytes", c.base_resident_bytes);
+            o.insert("pooled_resident_bytes", c.pooled_resident_bytes);
+            o.insert("dedup_ratio", c.dedup_ratio);
+            o.insert("base_hit_rate", c.base_hit_rate);
+            o.insert("pooled_hit_rate", c.pooled_hit_rate);
+            o.insert("pool_entries", c.pool_entries);
+            o.insert("pool_bytes", c.pool_bytes);
+            o.insert("reanchored", c.reanchored);
+            o.insert("base_plan_bytes", c.base_plan_bytes);
+            o.insert("pooled_plan_bytes", c.pooled_plan_bytes);
+            o.insert("reserved_bytes", c.reserved_bytes);
+            o.insert("base_plan_exact", c.base_plan_bytes == c.global_bytes);
+            o.insert(
+                "pooled_plan_exact",
+                c.pooled_plan_bytes + c.reserved_bytes == c.global_bytes,
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("series", Json::Arr(series));
+
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_dedup.json");
+    std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
+    println!("[dedup] wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_dedups_sublinearly_with_hit_parity_and_exact_plans() {
+        let cells = sweep().unwrap();
+        assert_eq!(cells.len(), tenant_counts().len());
+        for (c, &n) in cells.iter().zip(tenant_counts()) {
+            assert_eq!(c.tenants, n);
+            assert!(c.arrivals > 0);
+            // accounting is exact in both arms: private plans sum to the
+            // global budget minus whatever the pool reserved
+            assert_eq!(c.base_plan_bytes, c.global_bytes, "base plan at n={n}");
+            assert_eq!(
+                c.pooled_plan_bytes + c.reserved_bytes,
+                c.global_bytes,
+                "pooled plan + reserve at n={n}"
+            );
+            // hit rates no worse than the per-tenant-copy baseline
+            // (reanchoring can only add reuse; tiny epsilon for jitter)
+            assert!(
+                c.pooled_hit_rate >= c.base_hit_rate - 0.02,
+                "pooled hit {:.3} worse than base {:.3} at n={n}",
+                c.pooled_hit_rate,
+                c.base_hit_rate
+            );
+        }
+        // with ≥2 tenants over a shared corpus, interning must save bytes…
+        let last = cells.last().unwrap();
+        assert!(
+            last.dedup_ratio > 1.05,
+            "no dedup at n={}: {:.3}x",
+            last.tenants,
+            last.dedup_ratio
+        );
+        assert!(last.pool_entries > 0, "pool never populated");
+        // …and resident bytes must grow sublinearly in tenant count:
+        // strictly below scaling the single-tenant footprint linearly
+        let first = &cells[0];
+        assert_eq!(first.tenants, 1);
+        assert!(
+            last.pooled_resident_bytes < last.tenants * first.pooled_resident_bytes,
+            "pooled arm scaled linearly: {} tenants, {} vs 1-tenant {}",
+            last.tenants,
+            last.pooled_resident_bytes,
+            first.pooled_resident_bytes
+        );
+    }
+
+    #[test]
+    fn bench_json_is_parseable() {
+        let tmp = std::env::temp_dir().join(format!("percache_dedupexp_{}", std::process::id()));
+        let cells = sweep().unwrap();
+        write_bench_json(&cells, &tmp).unwrap();
+        let text = std::fs::read_to_string(tmp.join("BENCH_dedup.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("dedup"));
+        let series = j.get("series").as_arr().unwrap();
+        assert_eq!(series.len(), tenant_counts().len());
+        for s in series {
+            assert_eq!(s.get("base_plan_exact").as_bool(), Some(true));
+            assert_eq!(s.get("pooled_plan_exact").as_bool(), Some(true));
+        }
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

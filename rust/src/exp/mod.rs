@@ -7,6 +7,7 @@
 
 pub mod ablation;
 pub mod common;
+pub mod dedup_exp;
 pub mod motivation;
 pub mod obs_exp;
 pub mod overall;

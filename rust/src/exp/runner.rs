@@ -6,7 +6,7 @@ use anyhow::Result;
 use crate::runtime::Runtime;
 
 use super::{
-    ablation, motivation, obs_exp, overall, overhead, persistence_exp, scenarios_exp,
+    ablation, dedup_exp, motivation, obs_exp, overall, overhead, persistence_exp, scenarios_exp,
     scheduler_exp, showcase, tenancy_exp, tiering_exp,
 };
 
@@ -30,8 +30,10 @@ pub const EXPERIMENTS: [&str; 18] = [
 /// enabled vs disabled, on the tenancy workload (reports/BENCH_obs.json);
 /// `scenarios` is the trace-driven SLO co-design suite — four workload
 /// scenarios across static/SLO × tiering-on/off arms
-/// (reports/BENCH_scenarios.json, gated vs a committed baseline).
-pub const APPENDIX: [&str; 8] = [
+/// (reports/BENCH_scenarios.json, gated vs a committed baseline);
+/// `dedup` compares per-tenant-copy vs cross-tenant pooled slice
+/// storage over a shared corpus (reports/BENCH_dedup.json).
+pub const APPENDIX: [&str; 9] = [
     "fig21",
     "fig22",
     "fig23",
@@ -40,11 +42,13 @@ pub const APPENDIX: [&str; 8] = [
     "tiering",
     "obs",
     "scenarios",
+    "dedup",
 ];
 
 /// Experiments that run entirely at the cache level — no PJRT artifacts,
 /// dispatchable without a [`Runtime`] via [`run_offline`] (the CI path).
-pub const RUNTIME_FREE: [&str; 5] = ["tenancy", "persistence", "tiering", "obs", "scenarios"];
+pub const RUNTIME_FREE: [&str; 6] =
+    ["tenancy", "persistence", "tiering", "obs", "scenarios", "dedup"];
 
 pub fn is_runtime_free(name: &str) -> bool {
     RUNTIME_FREE.contains(&name)
@@ -60,6 +64,7 @@ pub fn run_offline(name: &str) -> Result<()> {
         "tiering" => tiering_exp::run_and_report()?,
         "obs" => obs_exp::run_and_report()?,
         "scenarios" => scenarios_exp::run_and_report()?,
+        "dedup" => dedup_exp::run_and_report()?,
         other => anyhow::bail!("'{other}' needs artifacts — runtime-free: {RUNTIME_FREE:?}"),
     }
     println!("[{name}] done in {:.1}s", t0.elapsed().as_secs_f64());
@@ -96,6 +101,7 @@ pub fn run_experiment(rt: &Runtime, name: &str) -> Result<()> {
         "tiering" => tiering_exp::tiering(rt)?,
         "obs" => obs_exp::obs(rt)?,
         "scenarios" => scenarios_exp::scenarios(rt)?,
+        "dedup" => dedup_exp::dedup(rt)?,
         other => anyhow::bail!(
             "unknown experiment '{other}' — known: {:?} + {:?}",
             EXPERIMENTS,
@@ -134,6 +140,7 @@ mod tests {
             "tiering",
             "obs",
             "scenarios",
+            "dedup",
         ] {
             assert!(APPENDIX.contains(&id), "{id} missing");
         }

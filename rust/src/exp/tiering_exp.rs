@@ -124,6 +124,7 @@ fn arrival(tenant: TenantId, i: usize) -> Arrival {
         seg_keys: vec![fnv1a64(b"sys"), tag("a"), tag("b"), fnv1a64(q.as_bytes())],
         tenant,
         query: q,
+        shared: Vec::new(),
     }
 }
 

@@ -19,6 +19,8 @@
 //!   combinations, behind one `CachePolicy` trait.
 //! * [`tenancy`] — multi-tenant cache sharding: per-tenant shards, the
 //!   global memory governor, and the fair-scheduling request router.
+//! * [`pool`] — the cross-tenant content-addressed slice pool shared
+//!   chunks dedup into (refcounted, copy-on-write — DESIGN.md §15).
 //! * [`tiering`] — warm/cold shard residency: idle shards demote to
 //!   their on-disk snapshot and page back on demand.
 //! * [`obs`] — runtime telemetry: the metrics registry, stage spans,
@@ -59,6 +61,7 @@ pub mod kb;
 pub mod llm;
 pub mod metrics;
 pub mod obs;
+pub mod pool;
 pub mod predict;
 pub mod retrieval;
 #[allow(unsafe_code)] // PJRT FFI boundary — the one module allowed unsafe

@@ -5,7 +5,7 @@
 //! percache serve   [--model llama] [--dataset mised] [--user 0]
 //!                  [--persist-dir state/] [--checkpoint-secs 30]
 //!                  [--tiering --tenants 4] …
-//! percache exp     <fig2|…|table1|persistence|tiering|obs|all>
+//! percache exp     <fig2|…|table1|persistence|tiering|obs|dedup|all>
 //!                  [--out reports] [--smoke]
 //! percache tenants [--tenants 8] [--arrivals 0] [--zipf 1.0] [--sweep]
 //! percache metrics [path] [--prom]

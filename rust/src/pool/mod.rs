@@ -1,0 +1,765 @@
+//! Cross-tenant content-addressed slice pool (DESIGN.md §15).
+//!
+//! Identical public chunks (same segment content hash) used to be
+//! cached once *per tenant shard*; this module stores each such slice
+//! exactly once, device-wide, beneath the per-tenant [`SliceStore`]s.
+//! Shards intern shared-eligible slices here (refcounted per tenant),
+//! keep a tiny fixed-size handle in their own accounting, and copy a
+//! slice back out (copy-on-write) if they ever need a private mutable
+//! version.  The governor charges each tenant its exclusive bytes plus
+//! an amortized share of pooled bytes (`bytes / refcount`, largest-
+//! remainder rounded so shares sum exactly), which is what keeps plans
+//! summing exactly to the global budget.
+//!
+//! Eviction is refcount-and-LFU aware: only zero-reference entries are
+//! evictable (an entry a live tree still points at is never dropped
+//! under it), least-frequently-used first.  When the pool is full of
+//! referenced entries an intern is *rejected* and the caller falls back
+//! to a private copy — correctness never depends on pool admission.
+//!
+//! On-disk pools carry their own versioned manifest
+//! (`pool_manifest.json`) with per-entry content key, byte size and
+//! checksum.  Refcounts are deliberately *not* persisted: on a warm
+//! restart every entry reopens at zero references and each shard's own
+//! manifest re-acquires its references as it reopens (per-tenant
+//! refcount rebuild), so a tenant that never comes back can never strand
+//! pool bytes.
+//!
+//! [`SliceStore`]: crate::cache::SliceStore
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::llm::QkvTensor;
+use crate::tokenizer::fnv1a64;
+use crate::util::json::Json;
+use crate::util::sync::lock_or_recover;
+
+/// Segment content hash (the QKV tree's `SegKey`).
+pub type PoolKey = u64;
+/// Tenant identity as the pool sees it (matches `tenancy::TenantId`).
+pub type PoolTenant = u32;
+
+/// Bytes a pooled slice charges to its owning shard's budget: the
+/// handle (id → content key mapping + refcount), not the payload.  The
+/// payload is charged once, globally, via the governor's reserve.
+pub const HANDLE_BYTES: usize = 16;
+
+/// Pool manifest schema version; readers reject anything else.
+pub const POOL_MANIFEST_VERSION: usize = 1;
+/// Manifest file name inside a pool directory.
+pub const POOL_MANIFEST_FILE: &str = "pool_manifest.json";
+const POOL_MANIFEST_MAGIC: &str = "percache-pool";
+
+/// One pooled slice: payload (lazily loaded for disk pools), encoded
+/// byte size, per-tenant reference counts and an LFU frequency.
+struct PoolEntry {
+    tensor: Option<Arc<QkvTensor>>,
+    bytes: usize,
+    checksum: u64,
+    refs: HashMap<PoolTenant, usize>,
+    freq: u64,
+}
+
+impl PoolEntry {
+    fn refcount(&self) -> usize {
+        self.refs.values().sum()
+    }
+}
+
+/// Global content-addressed, read-only slice pool.
+pub struct SlicePool {
+    dir: Option<PathBuf>,
+    cap_bytes: usize,
+    entries: HashMap<PoolKey, PoolEntry>,
+    bytes_used: usize,
+    /// Interns rejected because the pool was full of referenced entries.
+    pub rejected: u64,
+    /// Entries dropped for a payload checksum mismatch.
+    pub quarantined: u64,
+}
+
+impl SlicePool {
+    /// In-memory pool (the sim / single-process path).
+    pub fn memory(cap_bytes: usize) -> Self {
+        SlicePool {
+            dir: None,
+            cap_bytes,
+            entries: HashMap::new(),
+            bytes_used: 0,
+            rejected: 0,
+            quarantined: 0,
+        }
+    }
+
+    /// Open (or create) an on-disk pool.  An existing directory is
+    /// resumed from its manifest; every entry reopens at zero
+    /// references (shards re-acquire theirs as they reopen).  If the
+    /// cap shrank since the manifest was written, excess entries are
+    /// evicted LFU-first right away.
+    pub fn disk(dir: PathBuf, cap_bytes: usize) -> Result<Self> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating pool dir {}", dir.display()))?;
+        let mut pool = SlicePool {
+            dir: Some(dir),
+            cap_bytes,
+            entries: HashMap::new(),
+            bytes_used: 0,
+            rejected: 0,
+            quarantined: 0,
+        };
+        pool.open_dir()?;
+        Ok(pool)
+    }
+
+    /// Wrap a pool for sharing across shards.
+    pub fn shared(self) -> Arc<Mutex<SlicePool>> {
+        Arc::new(Mutex::new(self))
+    }
+
+    fn open_dir(&mut self) -> Result<()> {
+        let dir = match &self.dir {
+            None => return Ok(()),
+            Some(d) => d.clone(),
+        };
+        let manifest = dir.join(POOL_MANIFEST_FILE);
+        if manifest.exists() {
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading {}", manifest.display()))?;
+            self.load_manifest(&text)
+                .with_context(|| format!("invalid pool manifest {}", manifest.display()))?;
+        }
+        // drop entries whose payload file is missing or mis-sized, and
+        // payload files with no manifest entry
+        let keys: Vec<PoolKey> = self.entries.keys().copied().collect();
+        for key in keys {
+            let p = dir.join(pool_file_name(key));
+            let ok = match std::fs::metadata(&p) {
+                Ok(m) => m.len() as usize == self.entries[&key].bytes,
+                Err(_) => false,
+            };
+            if !ok {
+                let e = self.entries.remove(&key).expect("key from entries");
+                self.bytes_used -= e.bytes;
+                let _ = std::fs::remove_file(&p);
+            }
+        }
+        for entry in
+            std::fs::read_dir(&dir).with_context(|| format!("listing {}", dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(key) = parse_pool_file_name(&name) {
+                if !self.entries.contains_key(&key) {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        // a shrunk cap evicts (everything is zero-ref at open)
+        while self.bytes_used > self.cap_bytes {
+            if !self.evict_one() {
+                break;
+            }
+        }
+        if self.bytes_used != 0 {
+            crate::obs_gauge!("pool.resident_bytes").add(self.bytes_used as i64);
+            crate::obs_gauge!("pool.entries").add(self.entries.len() as i64);
+        }
+        self.write_manifest()
+    }
+
+    fn load_manifest(&mut self, text: &str) -> Result<()> {
+        let j = Json::parse(text).context("parsing json")?;
+        anyhow::ensure!(
+            j.get("magic").as_str() == Some(POOL_MANIFEST_MAGIC),
+            "missing or wrong magic (want {POOL_MANIFEST_MAGIC:?})"
+        );
+        let version = j.get("version").as_usize().context("missing version")?;
+        anyhow::ensure!(
+            version == POOL_MANIFEST_VERSION,
+            "unsupported pool manifest version {version} (reader supports {POOL_MANIFEST_VERSION})"
+        );
+        let entries = j.get("entries").as_arr().context("missing entries array")?;
+        for e in entries {
+            let key_hex = e.get("key").as_str().context("entry missing key")?;
+            let key = PoolKey::from_str_radix(key_hex, 16)
+                .with_context(|| format!("bad key hex {key_hex:?}"))?;
+            let bytes = e.get("bytes").as_usize().context("entry missing bytes")?;
+            let sum_hex = e.get("checksum").as_str().context("entry missing checksum")?;
+            let checksum = u64::from_str_radix(sum_hex, 16)
+                .with_context(|| format!("bad checksum hex {sum_hex:?}"))?;
+            let freq = e.get("freq").as_usize().unwrap_or(0) as u64;
+            anyhow::ensure!(
+                !self.entries.contains_key(&key),
+                "duplicate pool key {key:016x}"
+            );
+            self.entries.insert(
+                key,
+                PoolEntry {
+                    tensor: None,
+                    bytes,
+                    checksum,
+                    refs: HashMap::new(),
+                    freq,
+                },
+            );
+            self.bytes_used += bytes;
+        }
+        Ok(())
+    }
+
+    /// Atomically (tmp + rename) persist the manifest.  No-op in memory.
+    fn write_manifest(&self) -> Result<()> {
+        let dir = match &self.dir {
+            None => return Ok(()),
+            Some(d) => d,
+        };
+        let mut root = Json::obj();
+        root.insert("magic", POOL_MANIFEST_MAGIC);
+        root.insert("version", POOL_MANIFEST_VERSION);
+        let mut keys: Vec<PoolKey> = self.entries.keys().copied().collect();
+        keys.sort_unstable();
+        let entries: Vec<Json> = keys
+            .iter()
+            .map(|key| {
+                let e = &self.entries[key];
+                let mut o = Json::obj();
+                o.insert("key", format!("{key:016x}"));
+                o.insert("bytes", e.bytes);
+                o.insert("checksum", format!("{:016x}", e.checksum));
+                o.insert("freq", e.freq as usize);
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("entries", Json::Arr(entries));
+
+        let tmp = dir.join(format!("{POOL_MANIFEST_FILE}.tmp"));
+        let fin = dir.join(POOL_MANIFEST_FILE);
+        std::fs::write(&tmp, Json::Obj(root).to_string_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &fin)
+            .with_context(|| format!("committing {}", fin.display()))?;
+        Ok(())
+    }
+
+    /// Intern a slice under its content key for `tenant`.  Returns true
+    /// if the pool now holds a reference for the caller (existing entry
+    /// → refcount bump; new entry → admitted under the cap).  False
+    /// means rejected — the caller must keep a private copy.
+    pub fn intern(&mut self, key: PoolKey, tensor: &QkvTensor, tenant: PoolTenant) -> bool {
+        if let Some(e) = self.entries.get_mut(&key) {
+            *e.refs.entry(tenant).or_insert(0) += 1;
+            e.freq += 1;
+            crate::obs_counter!("pool.ref_hits").inc();
+            return true;
+        }
+        let bytes = tensor.byte_size() + 16;
+        while self.bytes_used + bytes > self.cap_bytes {
+            if !self.evict_one() {
+                self.rejected += 1;
+                crate::obs_counter!("pool.rejected").inc();
+                return false;
+            }
+        }
+        let payload = encode_pool_slice(tensor);
+        debug_assert_eq!(payload.len(), bytes);
+        let checksum = fnv1a64(&payload);
+        if let Some(dir) = &self.dir {
+            let p = dir.join(pool_file_name(key));
+            if std::fs::write(&p, &payload).is_err() {
+                let _ = std::fs::remove_file(&p);
+                self.rejected += 1;
+                crate::obs_counter!("pool.rejected").inc();
+                return false;
+            }
+        }
+        let mut refs = HashMap::new();
+        refs.insert(tenant, 1usize);
+        self.entries.insert(
+            key,
+            PoolEntry {
+                tensor: Some(Arc::new(tensor.clone())),
+                bytes,
+                checksum,
+                refs,
+                freq: 1,
+            },
+        );
+        self.bytes_used += bytes;
+        // best-effort: a failed manifest write self-heals at the next
+        // open (the payload file is adopted or GC'd there)
+        let _ = self.write_manifest();
+        crate::obs_counter!("pool.interns").inc();
+        crate::obs_gauge!("pool.resident_bytes").add(bytes as i64);
+        crate::obs_gauge!("pool.entries").add(1);
+        true
+    }
+
+    /// Re-acquire a reference to an existing entry without a payload
+    /// (the warm-restart refcount rebuild).  Returns the entry's byte
+    /// size, or None if the pool no longer holds the key.
+    pub fn acquire(&mut self, key: PoolKey, tenant: PoolTenant) -> Option<usize> {
+        let e = self.entries.get_mut(&key)?;
+        *e.refs.entry(tenant).or_insert(0) += 1;
+        Some(e.bytes)
+    }
+
+    /// Load a pooled slice (lazily from disk for on-disk pools, with
+    /// checksum verification; a corrupt payload is quarantined — entry
+    /// and file dropped — rather than left to fail forever).
+    pub fn get(&mut self, key: PoolKey) -> Option<Arc<QkvTensor>> {
+        let dir = self.dir.clone();
+        let e = self.entries.get_mut(&key)?;
+        e.freq += 1;
+        if let Some(t) = &e.tensor {
+            crate::obs_counter!("pool.ref_hits").inc();
+            return Some(Arc::clone(t));
+        }
+        let p = dir.as_deref()?.join(pool_file_name(key));
+        let buf = std::fs::read(&p).ok();
+        let decoded = buf.and_then(|buf| {
+            if fnv1a64(&buf) != e.checksum {
+                return None;
+            }
+            decode_pool_slice(&buf).ok()
+        });
+        match decoded {
+            Some(t) => {
+                let arc = Arc::new(t);
+                e.tensor = Some(Arc::clone(&arc));
+                crate::obs_counter!("pool.ref_hits").inc();
+                Some(arc)
+            }
+            None => {
+                // quarantine: a torn/corrupt payload must not wedge
+                // every referencing tenant forever
+                let e = self.entries.remove(&key).expect("entry exists");
+                self.bytes_used -= e.bytes;
+                let _ = std::fs::remove_file(&p);
+                let _ = self.write_manifest();
+                self.quarantined += 1;
+                crate::obs_gauge!("pool.resident_bytes").sub(e.bytes as i64);
+                crate::obs_gauge!("pool.entries").sub(1);
+                crate::obs::emit(
+                    crate::obs::Event::new("pool.quarantined")
+                        .field("key", key as f64)
+                        .field("bytes", e.bytes as f64),
+                );
+                None
+            }
+        }
+    }
+
+    /// Drop one of `tenant`'s references to `key`.  A zero-reference
+    /// entry stays resident (warm) until capacity pressure evicts it.
+    pub fn release(&mut self, key: PoolKey, tenant: PoolTenant) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            if let Some(n) = e.refs.get_mut(&tenant) {
+                *n -= 1;
+                if *n == 0 {
+                    e.refs.remove(&tenant);
+                }
+                crate::obs_counter!("pool.releases").inc();
+            }
+        }
+    }
+
+    /// Evict the least-frequently-used zero-reference entry.  Returns
+    /// false when every resident entry is still referenced.
+    fn evict_one(&mut self) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.refs.is_empty())
+            .min_by_key(|(k, e)| (e.freq, **k))
+            .map(|(k, _)| *k);
+        let key = match victim {
+            None => return false,
+            Some(k) => k,
+        };
+        let e = self.entries.remove(&key).expect("victim exists");
+        self.bytes_used -= e.bytes;
+        if let Some(dir) = &self.dir {
+            let _ = std::fs::remove_file(dir.join(pool_file_name(key)));
+            let _ = self.write_manifest();
+        }
+        crate::obs_counter!("pool.evictions").inc();
+        crate::obs_gauge!("pool.resident_bytes").sub(e.bytes as i64);
+        crate::obs_gauge!("pool.entries").sub(1);
+        crate::obs::emit(
+            crate::obs::Event::new("pool.evicted")
+                .field("key", key as f64)
+                .field("freed_bytes", e.bytes as f64),
+        );
+        true
+    }
+
+    /// Trim zero-reference entries until the pool fits its cap (called
+    /// after the cap shrinks or a big release wave, e.g. a demotion).
+    pub fn enforce(&mut self) {
+        while self.bytes_used > self.cap_bytes {
+            if !self.evict_one() {
+                break;
+            }
+        }
+    }
+
+    pub fn contains(&self, key: PoolKey) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Total references to `key` across all tenants (0 if absent).
+    pub fn refcount(&self, key: PoolKey) -> usize {
+        self.entries.get(&key).map(|e| e.refcount()).unwrap_or(0)
+    }
+
+    /// Total references `tenant` holds across all entries — must equal
+    /// the tenant store's live pooled-slice count at every quiescent
+    /// point (the no-leak/no-premature-free property tests key on it).
+    pub fn refs_of(&self, tenant: PoolTenant) -> usize {
+        self.entries
+            .values()
+            .map(|e| e.refs.get(&tenant).copied().unwrap_or(0))
+            .sum()
+    }
+
+    pub fn bytes_used(&self) -> usize {
+        self.bytes_used
+    }
+
+    /// Bytes of entries at least one tenant still references.
+    pub fn referenced_bytes(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|e| !e.refs.is_empty())
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn cap_bytes(&self) -> usize {
+        self.cap_bytes
+    }
+
+    /// Amortized per-tenant shares of referenced pool bytes: each entry
+    /// charges `bytes × tenant_refs / refcount` per tenant, rounded by
+    /// largest remainder (deterministic: ties to the lower tenant id)
+    /// so per-entry shares sum *exactly* to the entry's bytes — and the
+    /// map's values sum exactly to [`Self::referenced_bytes`].
+    pub fn amortized_shares(&self) -> HashMap<PoolTenant, usize> {
+        let mut shares: HashMap<PoolTenant, usize> = HashMap::new();
+        for e in self.entries.values() {
+            let total = e.refcount();
+            if total == 0 {
+                continue;
+            }
+            let mut tenants: Vec<(PoolTenant, usize)> =
+                e.refs.iter().map(|(&t, &n)| (t, n)).collect();
+            tenants.sort_unstable_by_key(|&(t, _)| t);
+            let mut assigned = 0usize;
+            // base share per tenant, remainder tracked for rounding
+            let mut rema: Vec<(usize, PoolTenant)> = Vec::with_capacity(tenants.len());
+            for &(t, n) in &tenants {
+                let exact = e.bytes * n;
+                let base = exact / total;
+                *shares.entry(t).or_insert(0) += base;
+                assigned += base;
+                rema.push((exact % total, t));
+            }
+            // largest remainder first; ties broken toward lower ids
+            rema.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+            let mut leftover = e.bytes - assigned;
+            for &(_, t) in &rema {
+                if leftover == 0 {
+                    break;
+                }
+                *shares.entry(t).or_insert(0) += 1;
+                leftover -= 1;
+            }
+        }
+        shares
+    }
+
+    /// Internal-consistency audit (tests + debug builds).
+    pub fn check_invariants(&self) -> Result<()> {
+        let sum: usize = self.entries.values().map(|e| e.bytes).sum();
+        anyhow::ensure!(
+            sum == self.bytes_used,
+            "pool bytes_used {} != entry sum {}",
+            self.bytes_used,
+            sum
+        );
+        for (k, e) in &self.entries {
+            anyhow::ensure!(
+                e.refs.values().all(|&n| n > 0),
+                "pool entry {k:016x} holds a zero refcount"
+            );
+        }
+        let shares: usize = self.amortized_shares().values().sum();
+        anyhow::ensure!(
+            shares == self.referenced_bytes(),
+            "amortized shares {} != referenced bytes {}",
+            shares,
+            self.referenced_bytes()
+        );
+        Ok(())
+    }
+}
+
+impl Drop for SlicePool {
+    fn drop(&mut self) {
+        // keep the global gauges consistent when a pool goes away
+        if self.bytes_used != 0 {
+            crate::obs_gauge!("pool.resident_bytes").sub(self.bytes_used as i64);
+            crate::obs_gauge!("pool.entries").sub(self.entries.len() as i64);
+        }
+    }
+}
+
+/// A tenant-scoped handle to the shared pool: what a [`SliceStore`]
+/// holds.  Cheap to clone; all methods lock internally (poison-
+/// recovering, per the crate-wide policy).
+///
+/// [`SliceStore`]: crate::cache::SliceStore
+#[derive(Clone)]
+pub struct PoolHandle {
+    pool: Arc<Mutex<SlicePool>>,
+    tenant: PoolTenant,
+}
+
+impl PoolHandle {
+    pub fn new(pool: Arc<Mutex<SlicePool>>, tenant: PoolTenant) -> Self {
+        PoolHandle { pool, tenant }
+    }
+
+    pub fn tenant(&self) -> PoolTenant {
+        self.tenant
+    }
+
+    pub fn intern(&self, key: PoolKey, tensor: &QkvTensor) -> bool {
+        lock_or_recover(&self.pool).intern(key, tensor, self.tenant)
+    }
+
+    pub fn acquire(&self, key: PoolKey) -> Option<usize> {
+        lock_or_recover(&self.pool).acquire(key, self.tenant)
+    }
+
+    pub fn get(&self, key: PoolKey) -> Option<Arc<QkvTensor>> {
+        lock_or_recover(&self.pool).get(key)
+    }
+
+    /// Position-aware reuse probe: is this chunk's KV resident and
+    /// composable, regardless of which offset it was cached at?
+    pub fn probe(&self, key: PoolKey) -> Option<Arc<QkvTensor>> {
+        lock_or_recover(&self.pool).get(key)
+    }
+
+    pub fn release(&self, key: PoolKey) {
+        lock_or_recover(&self.pool).release(key, self.tenant)
+    }
+}
+
+impl std::fmt::Debug for PoolHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolHandle").field("tenant", &self.tenant).finish()
+    }
+}
+
+fn pool_file_name(key: PoolKey) -> String {
+    format!("pool_{key:016x}.qkv")
+}
+
+fn parse_pool_file_name(name: &str) -> Option<PoolKey> {
+    let hex = name.strip_prefix("pool_")?.strip_suffix(".qkv")?;
+    PoolKey::from_str_radix(hex, 16).ok()
+}
+
+// Pool payload files reuse the slice store's wire format (16-byte
+// header + f32 LE data) via these thin wrappers so the two never drift.
+fn encode_pool_slice(tensor: &QkvTensor) -> Vec<u8> {
+    crate::cache::store::encode_slice(tensor)
+}
+
+fn decode_pool_slice(buf: &[u8]) -> Result<QkvTensor> {
+    crate::cache::store::decode_slice(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(seed: f32) -> QkvTensor {
+        let mut t = QkvTensor::zeros(1, 4, 8);
+        for (i, v) in t.data.iter_mut().enumerate() {
+            *v = seed + i as f32;
+        }
+        t
+    }
+
+    fn slice_bytes() -> usize {
+        tensor(0.0).byte_size() + 16
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("percache_pool_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn intern_dedups_and_refcounts() {
+        let mut p = SlicePool::memory(10 * slice_bytes());
+        let t = tensor(1.0);
+        assert!(p.intern(42, &t, 0));
+        assert!(p.intern(42, &t, 1));
+        assert!(p.intern(42, &t, 1));
+        assert_eq!(p.len(), 1, "same content stored once");
+        assert_eq!(p.refcount(42), 3);
+        assert_eq!(p.bytes_used(), slice_bytes());
+        p.release(42, 1);
+        assert_eq!(p.refcount(42), 2);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn get_shares_one_allocation() {
+        let mut p = SlicePool::memory(10 * slice_bytes());
+        p.intern(7, &tensor(2.0), 0);
+        let a = p.get(7).unwrap();
+        let b = p.get(7).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "gets must share the pooled payload");
+        assert_eq!(*a, tensor(2.0));
+    }
+
+    #[test]
+    fn referenced_entries_never_evict() {
+        let mut p = SlicePool::memory(2 * slice_bytes());
+        assert!(p.intern(1, &tensor(1.0), 0));
+        assert!(p.intern(2, &tensor(2.0), 0));
+        // full of referenced entries: a third intern is rejected
+        assert!(!p.intern(3, &tensor(3.0), 0));
+        assert_eq!(p.rejected, 1);
+        assert!(p.contains(1) && p.contains(2));
+        // release one → it becomes the LFU victim and 3 fits
+        p.release(1, 0);
+        assert!(p.intern(3, &tensor(3.0), 0));
+        assert!(!p.contains(1), "zero-ref LFU entry evicted");
+        assert!(p.contains(2) && p.contains(3));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lfu_picks_coldest_zero_ref_victim() {
+        let mut p = SlicePool::memory(2 * slice_bytes());
+        p.intern(1, &tensor(1.0), 0);
+        p.intern(2, &tensor(2.0), 0);
+        // heat up 2, then drop all refs
+        let _ = p.get(2);
+        let _ = p.get(2);
+        p.release(1, 0);
+        p.release(2, 0);
+        assert!(p.intern(3, &tensor(3.0), 0));
+        assert!(!p.contains(1), "colder entry is the victim");
+        assert!(p.contains(2));
+    }
+
+    #[test]
+    fn amortized_shares_sum_exactly() {
+        let mut p = SlicePool::memory(100 * slice_bytes());
+        // entry A: 3 tenants; entry B: 2 tenants (one twice); C: zero-ref
+        p.intern(1, &tensor(1.0), 0);
+        p.intern(1, &tensor(1.0), 1);
+        p.intern(1, &tensor(1.0), 2);
+        p.intern(2, &tensor(2.0), 0);
+        p.intern(2, &tensor(2.0), 0);
+        p.intern(2, &tensor(2.0), 3);
+        p.intern(3, &tensor(3.0), 5);
+        p.release(3, 5);
+        let shares = p.amortized_shares();
+        let total: usize = shares.values().sum();
+        assert_eq!(total, p.referenced_bytes());
+        assert_eq!(p.referenced_bytes(), 2 * slice_bytes());
+        // tenant 0 holds 1/3 of A and 2/3 of B → the largest share
+        assert!(shares[&0] > shares[&3]);
+        assert!(!shares.contains_key(&5), "zero-ref entry charges nobody");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn disk_pool_survives_reopen_at_zero_refs() {
+        let dir = tmp_dir("reopen");
+        let t = tensor(4.0);
+        {
+            let mut p = SlicePool::disk(dir.clone(), 10 * slice_bytes()).unwrap();
+            assert!(p.intern(0xAB, &t, 0));
+            assert_eq!(p.refcount(0xAB), 1);
+        }
+        let mut p = SlicePool::disk(dir.clone(), 10 * slice_bytes()).unwrap();
+        assert!(p.contains(0xAB));
+        assert_eq!(p.refcount(0xAB), 0, "refcounts are rebuilt by shards");
+        assert_eq!(p.acquire(0xAB, 3), Some(slice_bytes()));
+        assert_eq!(*p.get(0xAB).unwrap(), t, "payload reloads from disk");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_pool_quarantines_corrupt_payload() {
+        let dir = tmp_dir("corrupt");
+        {
+            let mut p = SlicePool::disk(dir.clone(), 10 * slice_bytes()).unwrap();
+            assert!(p.intern(9, &tensor(1.0), 0));
+        }
+        // corrupt the payload, keeping the length (reopen validates len)
+        let p_file = dir.join(pool_file_name(9));
+        let mut buf = std::fs::read(&p_file).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0xFF;
+        std::fs::write(&p_file, &buf).unwrap();
+        let mut p = SlicePool::disk(dir.clone(), 10 * slice_bytes()).unwrap();
+        assert!(p.get(9).is_none(), "corrupt payload must not decode");
+        assert_eq!(p.quarantined, 1);
+        assert!(!p.contains(9), "quarantined entry is gone");
+        assert!(!p_file.exists(), "quarantined payload file is GC'd");
+        assert!(p.get(9).is_none(), "and it stays gone");
+        p.check_invariants().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shrunk_cap_evicts_at_open() {
+        let dir = tmp_dir("shrink");
+        {
+            let mut p = SlicePool::disk(dir.clone(), 10 * slice_bytes()).unwrap();
+            for k in 0..4u64 {
+                assert!(p.intern(k, &tensor(k as f32), 0));
+            }
+        }
+        let p = SlicePool::disk(dir.clone(), 2 * slice_bytes()).unwrap();
+        assert_eq!(p.len(), 2, "reopen under a smaller cap trims LFU-first");
+        assert!(p.bytes_used() <= p.cap_bytes());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn handle_routes_tenant_identity() {
+        let pool = SlicePool::memory(10 * slice_bytes()).shared();
+        let h0 = PoolHandle::new(Arc::clone(&pool), 0);
+        let h1 = PoolHandle::new(Arc::clone(&pool), 1);
+        assert!(h0.intern(5, &tensor(0.5)));
+        assert!(h1.intern(5, &tensor(0.5)));
+        assert_eq!(lock_or_recover(&pool).refcount(5), 2);
+        h0.release(5);
+        assert_eq!(lock_or_recover(&pool).refcount(5), 1);
+        assert!(h1.probe(5).is_some());
+    }
+}

@@ -62,6 +62,11 @@ pub struct MemoryGovernor {
     /// Rebalances applied / skipped by hysteresis (reporting).
     pub rebalances: u64,
     pub skipped: u64,
+    /// Bytes reserved off the top of the global budget before planning —
+    /// the cross-tenant slice pool's capacity (DESIGN.md §15).  Private
+    /// allocations sum to exactly `global_qkv_bytes - reserved_bytes`,
+    /// so exclusive bytes + the pool reserve still sum to the budget.
+    reserved_bytes: usize,
 }
 
 impl MemoryGovernor {
@@ -70,7 +75,18 @@ impl MemoryGovernor {
             cfg,
             rebalances: 0,
             skipped: 0,
+            reserved_bytes: 0,
         }
+    }
+
+    /// Reserve `bytes` off the top of the global budget (the slice-pool
+    /// capacity); planning divides only the remainder across shards.
+    pub fn set_reserved_bytes(&mut self, bytes: usize) {
+        self.reserved_bytes = bytes.min(self.cfg.global_qkv_bytes);
+    }
+
+    pub fn reserved_bytes(&self) -> usize {
+        self.reserved_bytes
     }
 
     /// Pure allocation over (tenant, utility) pairs.  With no utility
@@ -80,7 +96,7 @@ impl MemoryGovernor {
         if n == 0 {
             return Vec::new();
         }
-        let global = self.cfg.global_qkv_bytes;
+        let global = self.cfg.global_qkv_bytes - self.reserved_bytes;
         if n == 1 {
             // single-tenant mode: the whole budget, always
             return vec![Allocation {
@@ -258,6 +274,22 @@ mod tests {
         for a in &plan {
             assert!(a.bytes >= 500, "{a:?} starved");
         }
+    }
+
+    #[test]
+    fn pool_reserve_shrinks_planning_budget_exactly() {
+        let mut g = governor(1000);
+        g.set_reserved_bytes(200);
+        let plan = g.plan_weights(&[(0, 1.0), (1, 3.0), (2, 0.0)]);
+        let total: usize = plan.iter().map(|a| a.bytes).sum();
+        assert_eq!(total, 800, "private allocations sum to global - reserve");
+        // single-tenant mode still hands over the whole (reduced) budget
+        let plan = g.plan_weights(&[(7, 0.0)]);
+        assert_eq!(plan[0].bytes, 800);
+        // a reserve can never exceed the global budget
+        g.set_reserved_bytes(usize::MAX);
+        assert_eq!(g.reserved_bytes(), 1000);
+        assert_eq!(g.plan_weights(&[(0, 1.0)])[0].bytes, 0);
     }
 
     #[test]

@@ -14,12 +14,16 @@
 //! resident shards, so demoting a shard returns its bytes to the global
 //! pool for the hot shards to absorb.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::config::TenancyConfig;
+use crate::pool::{PoolHandle, PoolTenant, SlicePool};
 use crate::tiering::Residency;
+use crate::util::sync::lock_or_recover;
 
 use super::governor::{Allocation, GovernorConfig, MemoryGovernor};
 use super::shard::{TenantId, TenantShard};
@@ -37,6 +41,9 @@ pub struct HydrationSpec {
     /// share through the LFU path.
     pub qkv_bytes: usize,
     pub utility_alpha: f64,
+    /// Tenant-scoped handle into the shared slice pool, when enabled —
+    /// the rebuild re-acquires the manifest's pooled references with it.
+    pub pool: Option<PoolHandle>,
 }
 
 /// One tenant's slot: residency state + the shard when resident, plus
@@ -112,17 +119,29 @@ pub struct TenantRegistry {
     pub demotions: u64,
     pub hydrations: u64,
     pub cold_evictions: u64,
+    /// Cross-tenant content-addressed slice pool (DESIGN.md §15), when
+    /// `cfg.pool.enabled`.  Every shard's store holds a [`PoolHandle`]
+    /// into this one pool; the governor reserves its capacity off the
+    /// top of the global budget.
+    pool: Option<Arc<Mutex<SlicePool>>>,
 }
 
 impl TenantRegistry {
     pub fn new(cfg: &TenancyConfig) -> Self {
+        let mut governor = MemoryGovernor::new(GovernorConfig {
+            global_qkv_bytes: cfg.global_qkv_bytes,
+            floor_frac: cfg.floor_frac,
+            hysteresis_frac: cfg.hysteresis_frac,
+        });
+        let pool = if cfg.pool.enabled {
+            governor.set_reserved_bytes(cfg.pool.pool_bytes);
+            Some(SlicePool::memory(cfg.pool.pool_bytes).shared())
+        } else {
+            None
+        };
         TenantRegistry {
             slots: Vec::new(),
-            governor: MemoryGovernor::new(GovernorConfig {
-                global_qkv_bytes: cfg.global_qkv_bytes,
-                floor_frac: cfg.floor_frac,
-                hysteresis_frac: cfg.hysteresis_frac,
-            }),
+            governor,
             cfg: cfg.clone(),
             serves_since_rebalance: 0,
             dir: None,
@@ -132,6 +151,7 @@ impl TenantRegistry {
             demotions: 0,
             hydrations: 0,
             cold_evictions: 0,
+            pool,
         }
     }
 
@@ -144,6 +164,13 @@ impl TenantRegistry {
             .with_context(|| format!("creating tenant dir {}", dir.display()))?;
         let mut reg = Self::new(cfg);
         reg.dir = Some(dir.clone());
+        // persistent registries get a persistent pool: payloads + manifest
+        // live in `pool/`, and resumed shard manifests below re-acquire
+        // their references (the per-tenant refcount rebuild)
+        if cfg.pool.enabled {
+            reg.pool =
+                Some(SlicePool::disk(dir.join("pool"), cfg.pool.pool_bytes)?.shared());
+        }
         let mut ids: Vec<u32> = Vec::new();
         for entry in
             std::fs::read_dir(&dir).with_context(|| format!("listing {}", dir.display()))?
@@ -172,6 +199,47 @@ impl TenantRegistry {
 
     pub fn config(&self) -> &TenancyConfig {
         &self.cfg
+    }
+
+    // -- the cross-tenant slice pool (DESIGN.md §15) ----------------------
+
+    /// The shared slice pool, when `cfg.pool.enabled`.
+    pub fn pool(&self) -> Option<&Arc<Mutex<SlicePool>>> {
+        self.pool.as_ref()
+    }
+
+    /// A tenant-scoped handle into the shared pool (None when disabled).
+    fn pool_handle(&self, id: TenantId) -> Option<PoolHandle> {
+        self.pool
+            .as_ref()
+            .map(|p| PoolHandle::new(Arc::clone(p), id))
+    }
+
+    /// Bytes resident in the pool (0 when disabled).
+    pub fn pool_bytes_used(&self) -> usize {
+        self.pool
+            .as_ref()
+            .map(|p| lock_or_recover(p).bytes_used())
+            .unwrap_or(0)
+    }
+
+    /// Each tenant's amortized share of the pooled bytes it references
+    /// (`bytes × tenant_refs / refcount`, largest-remainder rounded so
+    /// the shares sum exactly to the referenced pool bytes).  Empty when
+    /// the pool is disabled.
+    pub fn pool_shares(&self) -> HashMap<PoolTenant, usize> {
+        self.pool
+            .as_ref()
+            .map(|p| lock_or_recover(p).amortized_shares())
+            .unwrap_or_default()
+    }
+
+    /// What the governor charges one tenant: its exclusive bytes (QKV
+    /// tree including pooled-slice handles, plus QA bank) plus its
+    /// amortized share of the pooled bytes it references.
+    pub fn charged_bytes(&self, id: TenantId) -> usize {
+        let exclusive = self.shard(id).map(|s| s.bytes_used()).unwrap_or(0);
+        exclusive + self.pool_shares().get(&id).copied().unwrap_or(0)
     }
 
     /// Snapshot every resident shard's cache state (persistent
@@ -211,21 +279,23 @@ impl TenantRegistry {
         );
         let id = self.slots.len() as TenantId;
         let shard = match &self.dir {
-            None => TenantShard::new(
+            None => TenantShard::with_pool(
                 id,
                 self.cfg.qa_bytes_per_tenant,
                 0, // budget assigned by the forced rebalance below
                 self.cfg.utility_alpha,
+                self.pool_handle(id),
             ),
             // persistent shard: restore under the full global budget so a
             // warm tree is paged in intact, then let the forced rebalance
             // below shrink it to the governed share through the LFU path
-            Some(base) => TenantShard::open_or_create(
+            Some(base) => TenantShard::open_or_create_pooled(
                 id,
                 self.cfg.qa_bytes_per_tenant,
                 self.cfg.global_qkv_bytes,
                 self.cfg.utility_alpha,
                 base.join(format!("shard_{id}")),
+                self.pool_handle(id),
             )?,
         };
         self.slots.push(Slot {
@@ -341,23 +411,30 @@ impl TenantRegistry {
 
     /// Governor utility of one resident shard, boosted by its queue
     /// depth (the queueing signal from the router) and its SLO signal
-    /// (miss rate + queue delay, from the SLO monitor).
-    fn boosted_utility(&self, idx: usize, shard: &TenantShard) -> f64 {
+    /// (miss rate + queue delay, from the SLO monitor).  `pool_share` is
+    /// the tenant's amortized share of pooled bytes — pooled capacity is
+    /// charged into the utility denominator exactly like exclusive bytes,
+    /// so dedup makes a shard look (correctly) cheaper, not free.
+    fn boosted_utility(&self, idx: usize, shard: &TenantShard, pool_share: usize) -> f64 {
         let depth = self.queue_depths.get(idx).copied().unwrap_or(0);
-        shard.utility() * (1.0 + self.cfg.queue_weight * depth as f64) * self.slo_boost(idx)
+        shard.stats.utility(shard.bytes_used() + pool_share)
+            * (1.0 + self.cfg.queue_weight * depth as f64)
+            * self.slo_boost(idx)
     }
 
     /// Plan + apply budgets over the resident shards through the
     /// governor's shared hysteresis/shrink-first path.
     fn rebalance_resident(&mut self, force: bool) -> bool {
+        let shares = self.pool_shares();
         let entries: Vec<(TenantId, f64, usize)> = self
             .slots
             .iter()
             .enumerate()
             .filter_map(|(i, slot)| {
-                slot.shard
-                    .as_ref()
-                    .map(|s| (s.id, self.boosted_utility(i, s), s.qkv_budget()))
+                slot.shard.as_ref().map(|s| {
+                    let share = shares.get(&s.id).copied().unwrap_or(0);
+                    (s.id, self.boosted_utility(i, s, share), s.qkv_budget())
+                })
             })
             .collect();
         if crate::obs::enabled() {
@@ -406,14 +483,16 @@ impl TenantRegistry {
 
     /// Current governed plan over resident shards (reporting / tests).
     pub fn plan(&self) -> Vec<Allocation> {
+        let shares = self.pool_shares();
         let weights: Vec<(TenantId, f64)> = self
             .slots
             .iter()
             .enumerate()
             .filter_map(|(i, slot)| {
-                slot.shard
-                    .as_ref()
-                    .map(|s| (s.id, self.boosted_utility(i, s)))
+                slot.shard.as_ref().map(|s| {
+                    let share = shares.get(&s.id).copied().unwrap_or(0);
+                    (s.id, self.boosted_utility(i, s, share))
+                })
             })
             .collect();
         self.governor.plan_weights(&weights)
@@ -482,6 +561,12 @@ impl TenantRegistry {
                 );
                 // the freed budget flows to the remaining resident shards
                 self.rebalance_resident(true);
+                // dropping the shard's store released its pool refs (the
+                // manifest re-acquires them at hydration); entries it was
+                // the last holder of are zero-ref now, never stranded
+                if let Some(pool) = &self.pool {
+                    lock_or_recover(pool).enforce();
+                }
                 crate::obs_gauge!("tiering.resident_shards").set(self.resident_count() as i64);
                 crate::obs_gauge!("tiering.resident_bytes").set(self.resident_bytes() as i64);
                 crate::obs_gauge!("tiering.cold_bytes").set(self.cold_bytes() as i64);
@@ -575,12 +660,13 @@ impl TenantRegistry {
             "tenant {id} is {}, recreate_evicted is only for evicted cold tenants",
             slot.residency.label()
         );
-        let shard = TenantShard::open_or_create(
+        let shard = TenantShard::open_or_create_pooled(
             id,
             self.cfg.qa_bytes_per_tenant,
             self.cfg.global_qkv_bytes,
             self.cfg.utility_alpha,
             shard_dir,
+            self.pool_handle(id),
         )?;
         let slot = self
             .slots
@@ -627,6 +713,7 @@ impl TenantRegistry {
             qa_bytes: self.cfg.qa_bytes_per_tenant,
             qkv_bytes: self.cfg.global_qkv_bytes,
             utility_alpha: self.cfg.utility_alpha,
+            pool: self.pool_handle(id),
         })
     }
 
@@ -679,12 +766,14 @@ impl TenantRegistry {
     /// background worker (CLI paths, shutdown drains, tests).
     pub fn hydrate_tenant(&mut self, id: TenantId) -> Result<()> {
         let spec = self.begin_hydration(id)?;
-        match TenantShard::open_or_create(
+        let pool = spec.pool.clone();
+        match TenantShard::open_or_create_pooled(
             spec.tenant,
             spec.qa_bytes,
             spec.qkv_bytes,
             spec.utility_alpha,
             spec.dir,
+            pool,
         ) {
             Ok(shard) => self.finish_hydration(id, shard),
             Err(e) => {
@@ -721,6 +810,25 @@ impl TenantRegistry {
             self.total_qkv_used(),
             self.governor.cfg.global_qkv_bytes
         );
+        if let Some(pool) = &self.pool {
+            let p = lock_or_recover(pool);
+            p.check_invariants()?;
+            anyhow::ensure!(
+                p.bytes_used() <= p.cap_bytes(),
+                "pool residency {} exceeds its cap {}",
+                p.bytes_used(),
+                p.cap_bytes()
+            );
+            drop(p);
+            anyhow::ensure!(
+                self.total_qkv_budget() + self.governor.reserved_bytes()
+                    <= self.governor.cfg.global_qkv_bytes,
+                "shard budgets {} + pool reserve {} exceed global {}",
+                self.total_qkv_budget(),
+                self.governor.reserved_bytes(),
+                self.governor.cfg.global_qkv_bytes
+            );
+        }
         Ok(())
     }
 }
@@ -946,6 +1054,94 @@ mod tests {
             "uniformly saturated SLO signals must keep parity ({b0} vs {b1})"
         );
         reg.check_invariants().unwrap();
+    }
+
+    fn pooled_cfg(global: usize, pool: usize) -> TenancyConfig {
+        let mut tc = cfg(global);
+        tc.pool.enabled = true;
+        tc.pool.pool_bytes = pool;
+        tc
+    }
+
+    #[test]
+    fn pooled_registry_dedups_and_plans_to_reduced_budget() {
+        let tc = pooled_cfg(1 << 20, 1 << 18);
+        let mut reg = TenantRegistry::new(&tc);
+        for _ in 0..2 {
+            reg.create_tenant().unwrap();
+        }
+        let t = QkvTensor::zeros(1, 4, 64);
+        reg.shard_mut(0)
+            .unwrap()
+            .insert_path_shared(&[5], vec![t.clone()], &[true])
+            .unwrap();
+        reg.shard_mut(1)
+            .unwrap()
+            .insert_path_shared(&[5], vec![t], &[true])
+            .unwrap();
+        assert!(reg.pool_bytes_used() > 0, "shared slice landed in the pool");
+        let shares = reg.pool_shares();
+        let total_share: usize = shares.values().sum();
+        assert_eq!(
+            total_share,
+            reg.pool_bytes_used(),
+            "amortized shares sum exactly to the referenced pool bytes"
+        );
+        assert_eq!(shares.get(&0), shares.get(&1), "equal refs, equal shares");
+        assert!(reg.charged_bytes(0) > reg.shard(0).unwrap().bytes_used());
+        // private allocations + the pool reserve sum exactly to global
+        let planned: usize = reg.plan().iter().map(|a| a.bytes).sum();
+        assert_eq!(planned + reg.governor.reserved_bytes(), 1 << 20);
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pooled_refcounts_survive_demote_hydrate_and_restart() {
+        let dir = tmp("pool_restart");
+        let tc = pooled_cfg(1 << 20, 1 << 18);
+        {
+            let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+            reg.create_tenant().unwrap();
+            reg.create_tenant().unwrap();
+            let t = QkvTensor::zeros(1, 4, 64);
+            reg.shard_mut(0)
+                .unwrap()
+                .insert_path_shared(&[9], vec![t.clone()], &[true])
+                .unwrap();
+            reg.shard_mut(1)
+                .unwrap()
+                .insert_path_shared(&[9], vec![t], &[true])
+                .unwrap();
+            assert_eq!(
+                crate::util::sync::lock_or_recover(reg.pool().unwrap()).refcount(9),
+                2
+            );
+            reg.save_all().unwrap();
+        }
+        let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+        {
+            let p = crate::util::sync::lock_or_recover(reg.pool().unwrap());
+            assert_eq!(p.len(), 1, "one payload for both tenants after restart");
+            assert_eq!(p.refcount(9), 2, "manifests rebuilt both tenants' refs");
+        }
+        assert_eq!(reg.shard_mut(0).unwrap().prefix_match(&[9]).len(), 1);
+        reg.check_invariants().unwrap();
+
+        // demotion releases the reference; hydration re-acquires it
+        reg.demote_tenant(1).unwrap();
+        assert_eq!(
+            crate::util::sync::lock_or_recover(reg.pool().unwrap()).refcount(9),
+            1,
+            "demoted shard must not strand pool refs"
+        );
+        reg.hydrate_tenant(1).unwrap();
+        assert_eq!(
+            crate::util::sync::lock_or_recover(reg.pool().unwrap()).refcount(9),
+            2
+        );
+        assert_eq!(reg.shard_mut(1).unwrap().prefix_match(&[9]).len(), 1);
+        reg.check_invariants().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

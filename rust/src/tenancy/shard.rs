@@ -8,6 +8,7 @@ use crate::cache::{PrefixMatch, QaBank, QkvTree, SegKey, SliceStore, Snapshotter
 use crate::embedding::Embedding;
 use crate::llm::QkvTensor;
 use crate::metrics::{QueryRecord, ServePath};
+use crate::pool::PoolHandle;
 use crate::predict::QueryPredictor;
 use crate::util::json::Json;
 
@@ -137,11 +138,27 @@ pub struct TenantShard {
 
 impl TenantShard {
     pub fn new(id: TenantId, qa_bytes: usize, qkv_bytes: usize, utility_alpha: f64) -> Self {
+        Self::with_pool(id, qa_bytes, qkv_bytes, utility_alpha, None)
+    }
+
+    /// Like [`Self::new`], but the slice store interns shared-eligible
+    /// slices into the given cross-tenant pool (DESIGN.md §15).
+    pub fn with_pool(
+        id: TenantId,
+        qa_bytes: usize,
+        qkv_bytes: usize,
+        utility_alpha: f64,
+        pool: Option<PoolHandle>,
+    ) -> Self {
+        let store = match pool {
+            Some(handle) => SliceStore::memory_with_pool(handle),
+            None => SliceStore::memory(),
+        };
         TenantShard {
             id,
             qa: QaBank::new(qa_bytes),
             tree: QkvTree::new(qkv_bytes),
-            store: SliceStore::memory(),
+            store,
             // distinct deterministic stream per tenant
             predictor: QueryPredictor::new(0xCAC4E5EED ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             stats: ShardStats::new(utility_alpha),
@@ -160,8 +177,25 @@ impl TenantShard {
         utility_alpha: f64,
         dir: std::path::PathBuf,
     ) -> Result<Self> {
+        Self::open_or_create_pooled(id, qa_bytes, qkv_bytes, utility_alpha, dir, None)
+    }
+
+    /// [`Self::open_or_create`] with an optional cross-tenant pool: the
+    /// shard's manifest re-acquires its pooled references at open, which
+    /// is how per-tenant refcounts are rebuilt after a warm restart.
+    pub fn open_or_create_pooled(
+        id: TenantId,
+        qa_bytes: usize,
+        qkv_bytes: usize,
+        utility_alpha: f64,
+        dir: std::path::PathBuf,
+        pool: Option<PoolHandle>,
+    ) -> Result<Self> {
         let mut shard = Self::new(id, qa_bytes, qkv_bytes, utility_alpha);
-        let mut store = SliceStore::disk(dir.clone())?;
+        let mut store = match pool {
+            Some(handle) => SliceStore::disk_with_pool(dir.clone(), handle)?,
+            None => SliceStore::disk(dir.clone())?,
+        };
         if let Some((tree, qa, _report)) = crate::cache::load_state(
             &dir,
             &mut store,
@@ -241,6 +275,19 @@ impl TenantShard {
         self.tree.insert_path(keys, slices, &mut self.store)
     }
 
+    /// [`Self::insert_path`] with per-segment share-eligibility flags:
+    /// flagged slices intern into the cross-tenant pool (when one is
+    /// attached) instead of occupying private bytes.  `shared` may be
+    /// shorter than `keys`; missing entries mean private.
+    pub fn insert_path_shared(
+        &mut self,
+        keys: &[SegKey],
+        slices: Vec<QkvTensor>,
+        shared: &[bool],
+    ) -> Result<()> {
+        self.tree.insert_path_shared(keys, slices, shared, &mut self.store)
+    }
+
     // -- budgets (governor interface) ------------------------------------
 
     pub fn qkv_budget(&self) -> usize {
@@ -293,6 +340,44 @@ mod tests {
         assert_eq!(b.prefix_match(&[1, 2]).len(), 0, "no cross-tenant leakage");
         a.check_invariants().unwrap();
         b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pooled_shards_dedup_shared_slices() {
+        let pool = crate::pool::SlicePool::memory(1 << 20).shared();
+        let mut a = TenantShard::with_pool(
+            0,
+            4096,
+            1 << 20,
+            0.2,
+            Some(PoolHandle::new(pool.clone(), 0)),
+        );
+        let mut b = TenantShard::with_pool(
+            1,
+            4096,
+            1 << 20,
+            0.2,
+            Some(PoolHandle::new(pool.clone(), 1)),
+        );
+        a.insert_path_shared(&[1, 2], vec![tensor(), tensor()], &[true, true])
+            .unwrap();
+        b.insert_path_shared(&[1, 2], vec![tensor(), tensor()], &[true, true])
+            .unwrap();
+        {
+            let p = crate::util::sync::lock_or_recover(&pool);
+            assert_eq!(p.len(), 2, "identical content stored once");
+            assert_eq!(p.refcount(1), 2, "both tenants hold a reference");
+            assert_eq!(p.refcount(2), 2);
+        }
+        assert_eq!(a.prefix_match(&[1, 2]).len(), 2);
+        assert_eq!(b.prefix_match(&[1, 2]).len(), 2);
+        a.check_invariants().unwrap();
+        b.check_invariants().unwrap();
+        // evicting tenant B's handles releases, never strands, pool refs
+        b.set_qkv_budget(0);
+        let p = crate::util::sync::lock_or_recover(&pool);
+        assert_eq!(p.refcount(1), 1);
+        assert_eq!(p.refcount(2), 1);
     }
 
     #[test]

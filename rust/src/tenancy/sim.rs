@@ -33,6 +33,12 @@ pub struct SimConfig {
     /// Modeled device throughput (GFLOP/s) for latency conversion.
     pub gflops: f64,
     pub embed_dim: usize,
+    /// Position-aware reuse (RAGCache's reorder-vs-recompute): compose a
+    /// pooled segment's KV at a different prompt offset, paying
+    /// `reanchor_cost_frac` × one segment's full prefill instead of
+    /// recomputing it (mirrors `PoolConfig::{reanchor, reanchor_cost_frac}`).
+    pub reanchor: bool,
+    pub reanchor_cost_frac: f64,
 }
 
 impl Default for SimConfig {
@@ -50,6 +56,8 @@ impl Default for SimConfig {
             decode_tokens: 24,
             gflops: 50.0,
             embed_dim: 64,
+            reanchor: false,
+            reanchor_cost_frac: 0.25,
         }
     }
 }
@@ -69,6 +77,11 @@ pub struct Arrival {
     pub tenant: TenantId,
     pub query: String,
     pub seg_keys: Vec<u64>,
+    /// Per-segment share-eligibility, aligned with `seg_keys` (may be
+    /// shorter; missing = private).  Empty — the default everywhere a
+    /// workload has no public corpus — replays byte-identically to the
+    /// pre-pool path.
+    pub shared: Vec<bool>,
 }
 
 /// Replay result: one measurement stream per tenant + admission stats.
@@ -101,6 +114,21 @@ pub fn serve_one(
     query: &str,
     seg_keys: &[u64],
 ) -> Result<QueryRecord> {
+    serve_one_shared(cfg, shard, query, seg_keys, &[])
+}
+
+/// [`serve_one`] with per-segment share-eligibility flags: flagged
+/// slices populate through the cross-tenant pool, and (with
+/// `cfg.reanchor`) unmatched shared segments already pooled by *any*
+/// tenant compose at this prompt's offset for a modeled re-anchor
+/// surcharge instead of a full recompute (DESIGN.md §15).
+pub fn serve_one_shared(
+    cfg: &SimConfig,
+    shard: &mut TenantShard,
+    query: &str,
+    seg_keys: &[u64],
+    shared: &[bool],
+) -> Result<QueryRecord> {
     let mut rec = blank_record(shard.stats.serves as usize);
     rec.n_segments = seg_keys.len();
     let s_tokens = seg_keys.len() * SEGMENT_TOKENS;
@@ -132,15 +160,42 @@ pub fn serve_one(
         rec.tree_match_ms = t.ms();
     }
     rec.matched_segments = matched;
-    rec.path = if matched > 0 {
+
+    // position-aware reuse: an unmatched shared segment whose content is
+    // already pooled (interned by any tenant, at any prompt offset)
+    // composes here for a re-anchor surcharge instead of a recompute
+    let mut reanchored = 0usize;
+    if cfg.reanchor && seg_keys.len() > 1 && shard.store.has_pool() {
+        for (i, key) in seg_keys[..seg_keys.len() - 1]
+            .iter()
+            .enumerate()
+            .skip(matched)
+        {
+            if shared.get(i).copied().unwrap_or(false)
+                && shard.store.pool_probe(*key).is_some()
+            {
+                reanchored += 1;
+            }
+        }
+        if reanchored > 0 {
+            crate::obs_counter!("pool.reanchored").add(reanchored as u64);
+        }
+    }
+
+    rec.path = if matched + reanchored > 0 {
         ServePath::QkvHit
     } else {
         ServePath::Full
     };
 
-    let prefill_flops = if matched > 0 {
-        cfg.dims
-            .prefill_reuse_qkv(matched * SEGMENT_TOKENS, s_tokens)
+    let prefill_flops = if matched + reanchored > 0 {
+        let reuse = cfg
+            .dims
+            .prefill_reuse_qkv((matched + reanchored) * SEGMENT_TOKENS, s_tokens);
+        let surcharge = (reanchored as f64
+            * cfg.reanchor_cost_frac
+            * cfg.dims.prefill_full(SEGMENT_TOKENS) as f64) as u64;
+        reuse + surcharge
     } else {
         full_prefill
     };
@@ -158,7 +213,7 @@ pub fn serve_one(
             .iter()
             .map(|_| QkvTensor::zeros(1, 4, SEGMENT_TOKENS))
             .collect();
-        shard.insert_path(prefix, tensors)?;
+        shard.insert_path_shared(prefix, tensors, shared)?;
         rec.cache_load_ms = t.ms();
     }
     shard
@@ -199,7 +254,7 @@ pub fn replay(
             let shard = registry
                 .shard_mut(tenant)
                 .ok_or_else(|| anyhow::anyhow!("router/registry tenant mismatch"))?;
-            let rec = serve_one(cfg, shard, &a.query, &a.seg_keys)?;
+            let rec = serve_one_shared(cfg, shard, &a.query, &a.seg_keys, &a.shared)?;
             per_tenant[tenant as usize].push(rec);
             if registry.note_serve() {
                 rebalances += 1;
@@ -215,8 +270,11 @@ pub fn replay(
 }
 
 /// Expand a dataset-level multi-tenant workload into routed arrivals:
-/// the prompt path is `[sys, chunk_a(topic), chunk_b(topic), query]`
-/// with per-tenant chunk keys (tenants never share tree paths).
+/// the prompt path is `[sys, chunk_a(topic), chunk_b(topic), query]`.
+/// Private topics get per-tenant chunk keys (tenants never share tree
+/// paths); topics below `w.shared_topics` come from the public corpus —
+/// their chunk keys are tenant-independent and flagged share-eligible,
+/// the overlap the cross-tenant pool dedups.
 pub fn arrivals_from_workload(w: &MultiTenantWorkload) -> Vec<Arrival> {
     let sys = fnv1a64(b"sys");
     w.arrivals
@@ -224,16 +282,29 @@ pub fn arrivals_from_workload(w: &MultiTenantWorkload) -> Vec<Arrival> {
         .map(|&(tenant, seq)| {
             let trace = &w.tenants[tenant];
             let q = &trace.data.queries[seq % trace.data.queries.len()];
+            let public = q.topic < w.shared_topics;
             let tag = |part: &str| {
-                fnv1a64(
-                    format!("{}/{}/t{}/topic{}/{part}", trace.dataset, trace.user, tenant, q.topic)
+                if public {
+                    fnv1a64(format!("public/topic{}/{part}", q.topic).as_bytes())
+                } else {
+                    fnv1a64(
+                        format!(
+                            "{}/{}/t{}/topic{}/{part}",
+                            trace.dataset, trace.user, tenant, q.topic
+                        )
                         .as_bytes(),
-                )
+                    )
+                }
             };
             Arrival {
                 tenant: tenant as TenantId,
                 query: q.text.clone(),
                 seg_keys: vec![sys, tag("a"), tag("b"), fnv1a64(q.text.as_bytes())],
+                shared: if public {
+                    vec![false, true, true, false]
+                } else {
+                    Vec::new()
+                },
             }
         })
         .collect()
@@ -265,6 +336,7 @@ mod tests {
                 fnv1a64(format!("t{tenant}/c{topic}b").as_bytes()),
                 fnv1a64(q.as_bytes()),
             ],
+            shared: Vec::new(),
         }
     }
 
@@ -333,5 +405,78 @@ mod tests {
         assert_eq!(a1.len(), 32);
         assert_eq!(a1[0].seg_keys, a2[0].seg_keys);
         assert!(a1.iter().all(|a| a.seg_keys.len() == 4));
+        // no public corpus: nothing is flagged share-eligible
+        assert!(a1.iter().all(|a| a.shared.is_empty()));
+    }
+
+    #[test]
+    fn shared_workload_collides_public_chunk_keys_across_tenants() {
+        let w = crate::datasets::multi_tenant_shared(4, 200, 0.0, 7, 1.0);
+        assert!(w.shared_topics > 0, "frac 1.0 must mark topics public");
+        let arrivals = arrivals_from_workload(&w);
+        assert!(
+            arrivals
+                .iter()
+                .all(|a| a.shared == vec![false, true, true, false]),
+            "fully public workload: every chunk is share-eligible"
+        );
+        // the same public topic served to two tenants uses one chunk key
+        let mut owner = std::collections::HashMap::new();
+        let cross = arrivals.iter().any(|a| {
+            *owner.entry(a.seg_keys[1]).or_insert(a.tenant) != a.tenant
+        });
+        assert!(cross, "public chunk keys must collide across tenants");
+    }
+
+    #[test]
+    fn reanchor_composes_pooled_segments_across_tenants() {
+        let mut tc = TenancyConfig::default();
+        tc.global_qkv_bytes = 64 * sim_slice_bytes();
+        tc.pool.enabled = true;
+        tc.pool.pool_bytes = 16 * sim_slice_bytes();
+        let mut reg = TenantRegistry::new(&tc);
+        reg.create_tenant().unwrap();
+        reg.create_tenant().unwrap();
+        let mut cfg = SimConfig::default();
+        cfg.reanchor = true;
+
+        let pub_a = fnv1a64(b"public/x/a");
+        let pub_b = fnv1a64(b"public/x/b");
+        let shared = vec![false, true, true, false];
+        // tenant 0 populates the pool from its own prompt
+        let keys0 = vec![fnv1a64(b"sys"), pub_a, pub_b, fnv1a64(b"q one")];
+        serve_one_shared(
+            &cfg,
+            reg.shard_mut(0).unwrap(),
+            "question alpha one",
+            &keys0,
+            &shared,
+        )
+        .unwrap();
+        // tenant 1 places the same public chunks after a *different* sys
+        // segment: no tree prefix match, but the pooled KV re-anchors
+        let keys1 = vec![fnv1a64(b"sys-b"), pub_a, pub_b, fnv1a64(b"q two")];
+        let rec = serve_one_shared(
+            &cfg,
+            reg.shard_mut(1).unwrap(),
+            "question beta two",
+            &keys1,
+            &shared,
+        )
+        .unwrap();
+        assert_eq!(rec.path, ServePath::QkvHit, "re-anchored reuse is a hit");
+        let s_tokens = 4 * SEGMENT_TOKENS;
+        let full = cfg.dims.prefill_full(s_tokens)
+            + cfg.decode_tokens as u64 * cfg.dims.decode_step(s_tokens);
+        assert!(
+            rec.flops < full,
+            "re-anchoring must cost less than recompute ({} vs {full})",
+            rec.flops
+        );
+        // both tenants now hold references to the one pooled copy
+        let pool = reg.pool().unwrap();
+        let p = crate::util::sync::lock_or_recover(pool);
+        assert_eq!(p.refcount(pub_a), 2);
+        assert_eq!(p.refcount(pub_b), 2);
     }
 }

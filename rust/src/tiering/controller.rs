@@ -300,12 +300,13 @@ impl HydrationWorker {
             .spawn(move || {
                 while let Ok(spec) = jrx.recv() {
                     let tenant = spec.tenant;
-                    let built = TenantShard::open_or_create(
+                    let built = TenantShard::open_or_create_pooled(
                         spec.tenant,
                         spec.qa_bytes,
                         spec.qkv_bytes,
                         spec.utility_alpha,
                         spec.dir,
+                        spec.pool,
                     );
                     if rtx.send((tenant, built)).is_err() {
                         break;

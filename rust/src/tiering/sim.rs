@@ -178,6 +178,7 @@ mod tests {
                 fnv1a64(format!("t{tenant}/c{topic}b").as_bytes()),
                 fnv1a64(q.as_bytes()),
             ],
+            shared: Vec::new(),
         }
     }
 

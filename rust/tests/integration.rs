@@ -156,7 +156,7 @@ fn disk_store_roundtrips_through_engine_path() {
         ids.push(store.put(s.tensor.clone()).unwrap().0);
     }
     for (i, id) in ids.iter().enumerate() {
-        assert_eq!(store.get(*id).unwrap(), slices[i].tensor);
+        assert_eq!(*store.get(*id).unwrap(), slices[i].tensor);
     }
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,156 @@
+//! Cross-tenant slice-pool integration (DESIGN.md §15): pool refcounts
+//! must equal each tenant's live pooled references at every quiescent
+//! point — through interning, budget-squeeze eviction, demote/hydrate
+//! cycles and a full warm restart — and copy-on-write must never leave
+//! a private slice aliasing pooled bytes.
+//!
+//! Runs entirely at the cache level; no PJRT artifacts required.
+
+use std::sync::Arc;
+
+use percache::cache::SliceStore;
+use percache::config::TenancyConfig;
+use percache::llm::QkvTensor;
+use percache::pool::{PoolHandle, SlicePool};
+use percache::tenancy::sim::sim_slice_bytes;
+use percache::tenancy::{TenantId, TenantRegistry};
+use percache::tokenizer::{fnv1a64, SEGMENT_TOKENS};
+use percache::util::rng::Rng;
+use percache::util::sync::lock_or_recover;
+
+const N_TENANTS: usize = 3;
+const N_PUBLIC: usize = 4;
+
+fn tensor() -> QkvTensor {
+    QkvTensor::zeros(1, 4, SEGMENT_TOKENS)
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("percache_pooltest_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn pooled_cfg() -> TenancyConfig {
+    let mut tc = TenancyConfig::default();
+    tc.enabled = true;
+    tc.max_tenants = N_TENANTS;
+    tc.global_qkv_bytes = 64 * sim_slice_bytes();
+    tc.pool.enabled = true;
+    tc.pool.pool_bytes = 16 * sim_slice_bytes();
+    tc
+}
+
+fn public_key(i: usize) -> u64 {
+    fnv1a64(format!("public/chunk{i}").as_bytes())
+}
+
+/// The central property: for every tenant, the pool's reference count
+/// equals the number of pooled slices its store actually holds — no
+/// leak (pool refs > live) and no premature free (live > pool refs).
+fn assert_refs_consistent(reg: &TenantRegistry, ctx: &str) {
+    let pool = reg.pool().expect("pool must be enabled");
+    let p = lock_or_recover(pool);
+    for t in 0..N_TENANTS as TenantId {
+        let live = reg.shard(t).map(|s| s.store.pooled_count()).unwrap_or(0);
+        assert_eq!(
+            p.refs_of(t),
+            live,
+            "{ctx}: tenant {t} pool refs vs live pooled slices"
+        );
+    }
+    drop(p);
+    reg.check_invariants().unwrap();
+}
+
+#[test]
+fn refcounts_track_live_references_through_churn_and_restart() {
+    let dir = tmp("churn");
+    let tc = pooled_cfg();
+    let mut reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+    for _ in 0..N_TENANTS {
+        reg.create_tenant().unwrap();
+    }
+    assert_refs_consistent(&reg, "cold start");
+
+    let mut rng = Rng::new(0x5EED_F001);
+    for round in 0..60 {
+        let t = rng.below(N_TENANTS) as TenantId;
+        match rng.below(5) {
+            0 | 1 => {
+                // intern a shared path: private sys + two public chunks
+                if reg.shard(t).is_none() {
+                    reg.hydrate_tenant(t).unwrap();
+                }
+                let a = public_key(rng.below(N_PUBLIC));
+                let b = public_key(rng.below(N_PUBLIC));
+                let keys = vec![fnv1a64(format!("sys/t{t}").as_bytes()), a, b];
+                let shared = vec![false, true, true];
+                reg.shard_mut(t)
+                    .unwrap()
+                    .insert_path_shared(&keys, vec![tensor(), tensor(), tensor()], &shared)
+                    .unwrap();
+            }
+            2 => {
+                // budget squeeze evicts everything (releasing pool refs),
+                // then the budget comes back for later rounds
+                if let Some(s) = reg.shard_mut(t) {
+                    s.set_qkv_budget(0);
+                    s.set_qkv_budget(tc.global_qkv_bytes / N_TENANTS);
+                }
+            }
+            3 => {
+                if reg.shard(t).is_some() {
+                    reg.demote_tenant(t).unwrap();
+                }
+            }
+            _ => {
+                if reg.shard(t).is_none() {
+                    reg.hydrate_tenant(t).unwrap();
+                }
+            }
+        }
+        assert_refs_consistent(&reg, &format!("round {round}"));
+    }
+
+    // warm restart: refcounts are not persisted — they must be rebuilt
+    // exactly from the shard manifests on reopen
+    reg.save_all().unwrap();
+    let pool_entries_before = reg.pool().map(|p| lock_or_recover(p).len()).unwrap();
+    drop(reg);
+    let reg = TenantRegistry::open_or_create(&tc, dir.clone()).unwrap();
+    assert_refs_consistent(&reg, "after warm restart");
+    let p = reg.pool().unwrap();
+    assert_eq!(
+        lock_or_recover(p).len(),
+        pool_entries_before,
+        "pool contents must survive the restart"
+    );
+    drop(reg);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cow_never_aliases_pooled_bytes() {
+    let pool = SlicePool::memory(64 * sim_slice_bytes()).shared();
+    let mut s0 = SliceStore::memory_with_pool(PoolHandle::new(pool.clone(), 0));
+    let mut s1 = SliceStore::memory_with_pool(PoolHandle::new(pool.clone(), 1));
+    let key = fnv1a64(b"public/cow-chunk");
+    let (id0, _) = s0.put_keyed(key, tensor(), true).unwrap();
+    let (id1, _) = s1.put_keyed(key, tensor(), true).unwrap();
+    assert_eq!(lock_or_recover(&pool).refcount(key), 2);
+
+    // tenant 0 goes private ahead of a mutation: its bytes must be a
+    // fresh allocation, never a view into the shared entry
+    s0.make_private(id0).unwrap();
+    assert_eq!(lock_or_recover(&pool).refcount(key), 1, "COW must release the ref");
+    let private = s0.get(id0).unwrap();
+    let pooled = s1.get(id1).unwrap();
+    assert_eq!(*private, *pooled, "COW must preserve content");
+    assert!(
+        !Arc::ptr_eq(&private, &pooled),
+        "private copy must not alias pooled bytes"
+    );
+    assert_eq!(s0.pooled_count(), 0);
+    assert_eq!(s1.pooled_count(), 1);
+}

@@ -67,6 +67,7 @@ fn arrival(tenant: u32, serial: usize) -> Arrival {
             fnv1a64(query.as_bytes()),
         ],
         query,
+        shared: Vec::new(),
     }
 }
 
