@@ -15,6 +15,15 @@
 //! (`tiering.resident_*`) and `<ident>` placeholders
 //! (`engine.<stage>_ms`); single-word entries without a dot are label
 //! names, not metric families, and are ignored.
+//!
+//! A second conformance surface rides along when the design doc has a
+//! §16 section: the trace-dump JSON schema.  Every string key the
+//! trace exporter (`obs/trace.rs`, `obs/exemplar.rs`) `insert`s must
+//! appear in a §16 table whose header row contains the word `field`,
+//! and every documented field must still be written by the exporter —
+//! drift is an error in both directions, exactly like §12.  Designs
+//! without a §16 section (the unit-test mini-designs) skip this
+//! surface silently.
 
 use crate::analysis::lexer::Tok;
 use crate::analysis::source::SourceFile;
@@ -36,6 +45,8 @@ const METRIC_FNS: &[(&str, Kind)] = &[
     ("histogram", Kind::Histogram),
     ("histogram_labeled", Kind::Histogram),
     ("span", Kind::Histogram),
+    // synthesized snapshot-time series (obs/snapshot.rs `synth`)
+    ("synth", Kind::Counter),
 ];
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -257,6 +268,108 @@ pub fn pattern_matches(pattern: &str, name: &str) -> bool {
     match_from(&p, &n)
 }
 
+/// Files whose JSON `insert` string literals constitute the §16 trace
+/// dump schema (relative-path suffixes).
+const TRACE_DUMP_FILES: &[&str] = &["obs/trace.rs", "obs/exemplar.rs"];
+
+/// A documented trace-dump field from a §16 `field` table.
+pub struct DocField {
+    pub name: String,
+    pub line: usize,
+}
+
+/// A dump-field literal written by the trace exporter.
+pub struct FieldUse {
+    pub name: String,
+    pub file: String,
+    pub line: usize,
+}
+
+/// Snake-case JSON field shape: `[a-z][a-z0-9_]*`, no dots.
+fn is_field_shape(s: &str) -> bool {
+    let mut chars = s.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_lowercase())
+        && chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Parse the documented dump fields out of DESIGN.md §16: backticked
+/// snake-case entries on the body rows of tables whose header row
+/// contains the word `field`.  Returns `None` when the design has no
+/// §16 section at all (this surface is then skipped entirely).
+pub fn parse_doc_fields(design: &str) -> Option<Vec<DocField>> {
+    let mut out = Vec::new();
+    let mut in_section = false;
+    let mut seen_section = false;
+    let mut prev_was_row = false;
+    let mut in_field_table = false;
+    for (ln, line) in design.lines().enumerate() {
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("## ") {
+            in_section = trimmed.contains("§16");
+            seen_section |= in_section;
+            prev_was_row = false;
+            in_field_table = false;
+            continue;
+        }
+        if !in_section || !trimmed.starts_with('|') {
+            prev_was_row = false;
+            in_field_table = false;
+            continue;
+        }
+        if !prev_was_row {
+            // first `|` line of a table: the header row decides whether
+            // this table documents dump fields
+            in_field_table = trimmed.to_lowercase().contains("field");
+            prev_was_row = true;
+            continue;
+        }
+        if in_field_table {
+            for span in backticked(trimmed) {
+                let name = span.trim();
+                if is_field_shape(name) {
+                    out.push(DocField {
+                        name: name.to_string(),
+                        line: ln + 1,
+                    });
+                }
+            }
+        }
+    }
+    seen_section.then_some(out)
+}
+
+/// Extract the dump-field literals one trace-exporter file writes:
+/// every `insert("snake_case", …)` outside test code.
+pub fn extract_dump_fields(file: &SourceFile) -> Vec<FieldUse> {
+    if !TRACE_DUMP_FILES.iter().any(|t| file.rel.ends_with(t)) {
+        return Vec::new();
+    }
+    let toks = &file.tokens;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if file.in_test(i) {
+            continue;
+        }
+        if toks[i].kind.ident() != Some("insert") {
+            continue;
+        }
+        if !toks.get(i + 1).map(|t| t.kind.is_punct('(')).unwrap_or(false) {
+            continue;
+        }
+        let Some(Tok::Str(s)) = toks.get(i + 2).map(|t| &t.kind) else {
+            continue;
+        };
+        if is_field_shape(s) {
+            out.push(FieldUse {
+                name: s.clone(),
+                file: file.rel.clone(),
+                line: toks[i].line,
+            });
+        }
+    }
+    out
+}
+
 /// Run the full conformance check: code↔doc in both directions plus
 /// the naming-scheme and histogram-suffix rules.
 pub fn check_files(files: &[SourceFile], design: &str, design_rel: &str) -> Vec<Finding> {
@@ -320,6 +433,40 @@ pub fn check_files(files: &[SourceFile], design: &str, design_rel: &str) -> Vec<
                     p.pattern
                 ),
             ));
+        }
+    }
+    // trace-dump field surface (§16), both directions — skipped when
+    // the design has no §16 section
+    if let Some(fields) = parse_doc_fields(design) {
+        let mut writes: Vec<FieldUse> = Vec::new();
+        for f in files {
+            writes.extend(extract_dump_fields(f));
+        }
+        for w in &writes {
+            if !fields.iter().any(|d| d.name == w.name) {
+                findings.push(Finding::new(
+                    RULE_METRICS_SCHEMA,
+                    &w.file,
+                    w.line,
+                    format!(
+                        "trace dump field `{}` is not documented in the DESIGN.md §16 field table",
+                        w.name
+                    ),
+                ));
+            }
+        }
+        for d in &fields {
+            if !writes.iter().any(|w| w.name == d.name) {
+                findings.push(Finding::new(
+                    RULE_METRICS_SCHEMA,
+                    design_rel,
+                    d.line,
+                    format!(
+                        "documented trace dump field `{}` is never written by the trace exporter",
+                        d.name
+                    ),
+                ));
+            }
         }
     }
     findings
@@ -432,5 +579,74 @@ mod tests {
         assert!(fs.iter().any(|f| f.message.contains("router.rejected")));
         assert!(fs.iter().any(|f| f.message.contains("tiering.resident_*")));
         assert_eq!(fs.len(), 5, "{fs:?}");
+    }
+
+    const DOC16: &str = "\
+# Design
+## §12 Telemetry
+| family | kind |
+|---|---|
+| `router.admitted` | counter |
+## §16 Causal tracing
+Stage vocabulary (not a field table — header has no trigger word):
+| stage | meaning |
+|---|---|
+| `prefill` | engine prefill |
+Dump fields:
+| field | where |
+|---|---|
+| `trace` | dump + entry |
+| `spans` | dump |
+| `ghost_field` | nowhere |
+";
+
+    #[test]
+    fn doc_fields_parsed_only_from_field_tables() {
+        let fields: Vec<String> =
+            parse_doc_fields(DOC16).unwrap().into_iter().map(|d| d.name).collect();
+        assert_eq!(fields, vec!["trace", "spans", "ghost_field"]);
+        // no §16 heading at all → surface absent, not empty
+        assert!(parse_doc_fields(DOC).is_none());
+    }
+
+    #[test]
+    fn dump_field_extraction_is_scoped_to_exporter_files() {
+        let src = r#"
+            fn export() {
+                o.insert("trace", 1u64);
+                o.insert("spans", Json::Arr(v));
+                o.insert("NotAField", 2u64);
+            }
+            #[cfg(test)]
+            mod t { fn x() { o.insert("test_only", 0u64); } }
+        "#;
+        let tracer = SourceFile::parse("obs/trace.rs", "obs/trace.rs", src);
+        let names: Vec<String> =
+            extract_dump_fields(&tracer).into_iter().map(|u| u.name).collect();
+        assert_eq!(names, vec!["trace", "spans"]);
+        // identical source outside the exporter file set contributes nothing
+        let other = SourceFile::parse("util/json.rs", "util/json.rs", src);
+        assert!(extract_dump_fields(&other).is_empty());
+    }
+
+    #[test]
+    fn field_conformance_both_directions() {
+        let code = r#"
+            fn f() { crate::obs_counter!("router.admitted").inc(); }
+            fn export() {
+                o.insert("trace", 1u64);
+                o.insert("spans", Json::Arr(v));
+                o.insert("undocumented_field", 0u64);
+            }
+        "#;
+        let files = vec![SourceFile::parse("obs/trace.rs", "obs/trace.rs", code)];
+        let fs = check_files(&files, DOC16, "DESIGN.md");
+        // undocumented_field: written but undocumented; ghost_field:
+        // documented but never written.  `trace`/`spans` conform, and
+        // the stage-vocabulary table contributes nothing.
+        assert!(fs.iter().any(|f| f.message.contains("undocumented_field")));
+        assert!(fs.iter().any(|f| f.message.contains("ghost_field")));
+        assert!(!fs.iter().any(|f| f.message.contains("prefill")));
+        assert_eq!(fs.len(), 2, "{fs:?}");
     }
 }

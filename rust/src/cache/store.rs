@@ -402,6 +402,7 @@ impl SliceStore {
     ) -> Result<(SliceId, usize)> {
         if shared {
             if let Some(pool) = self.pool.clone() {
+                let _t = crate::obs::trace::child("pool_intern");
                 if pool.intern(key, &tensor) {
                     let id = self.next_id;
                     self.sizes.insert(id, HANDLE_BYTES);
@@ -495,6 +496,7 @@ impl SliceStore {
     /// can recharge its budget.  A no-op (returning the current size)
     /// for slices that are already private.
     pub fn make_private(&mut self, id: SliceId) -> Result<usize> {
+        let _t = crate::obs::trace::child("pool_cow");
         let key = match self.pooled.get(&id) {
             None => {
                 return self

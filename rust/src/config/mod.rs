@@ -149,6 +149,18 @@ pub struct ObsConfig {
     pub enabled: bool,
     /// Total event-journal capacity (records), split across stripes.
     pub journal_capacity: usize,
+    /// Request-scoped causal tracing (DESIGN.md §16).  Off by default:
+    /// a disabled tracer costs one relaxed atomic load per call site and
+    /// does no heap work.
+    pub trace_enabled: bool,
+    /// Trace 1-in-N requests (1 = every request).
+    pub trace_sample_every: u64,
+    /// Tail-exemplar reservoir: K slowest traces kept per tenant per
+    /// window.
+    pub trace_tail_k: usize,
+    /// Tail-exemplar reservoir: uniform-sample slots per tenant per
+    /// window.
+    pub trace_uniform_k: usize,
 }
 
 impl Default for ObsConfig {
@@ -156,6 +168,10 @@ impl Default for ObsConfig {
         ObsConfig {
             enabled: true,
             journal_capacity: 1024,
+            trace_enabled: false,
+            trace_sample_every: 8,
+            trace_tail_k: 4,
+            trace_uniform_k: 4,
         }
     }
 }
@@ -169,12 +185,29 @@ impl ObsConfig {
         if let Some(v) = j.get("journal_capacity").as_usize() {
             o.journal_capacity = v;
         }
+        if let Some(b) = j.get("trace_enabled").as_bool() {
+            o.trace_enabled = b;
+        }
+        if let Some(v) = j.get("trace_sample_every").as_usize() {
+            o.trace_sample_every = v as u64;
+        }
+        if let Some(v) = j.get("trace_tail_k").as_usize() {
+            o.trace_tail_k = v;
+        }
+        if let Some(v) = j.get("trace_uniform_k").as_usize() {
+            o.trace_uniform_k = v;
+        }
         o.validate()?;
         Ok(o)
     }
 
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.journal_capacity >= 1, "journal_capacity >= 1");
+        anyhow::ensure!(self.trace_sample_every >= 1, "trace_sample_every >= 1");
+        anyhow::ensure!(
+            !self.trace_enabled || self.trace_tail_k + self.trace_uniform_k >= 1,
+            "tracing needs at least one exemplar slot (trace_tail_k + trace_uniform_k >= 1)"
+        );
         Ok(())
     }
 
@@ -182,6 +215,10 @@ impl ObsConfig {
         let mut o = Json::obj();
         o.insert("enabled", self.enabled);
         o.insert("journal_capacity", self.journal_capacity);
+        o.insert("trace_enabled", self.trace_enabled);
+        o.insert("trace_sample_every", self.trace_sample_every);
+        o.insert("trace_tail_k", self.trace_tail_k);
+        o.insert("trace_uniform_k", self.trace_uniform_k);
         Json::Obj(o)
     }
 
@@ -190,6 +227,14 @@ impl ObsConfig {
     pub fn apply(&self) {
         crate::obs::set_enabled(self.enabled);
         crate::obs::registry().journal().set_capacity(self.journal_capacity);
+        let tracer = crate::obs::tracer();
+        tracer.set_sample_every(self.trace_sample_every);
+        tracer.set_exemplar_config(crate::obs::ExemplarConfig {
+            tail_k: self.trace_tail_k,
+            uniform_k: self.trace_uniform_k,
+            ..crate::obs::ExemplarConfig::default()
+        });
+        tracer.set_enabled(self.trace_enabled);
     }
 }
 
@@ -902,6 +947,37 @@ mod tests {
         // invalid capacity rejected
         let j = Json::parse(r#"{"obs": {"journal_capacity": 0}}"#).unwrap();
         assert!(PerCacheConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn trace_knobs_roundtrip_and_defaults() {
+        let mut c = PerCacheConfig::default();
+        assert!(!c.obs.trace_enabled, "tracing must default off");
+        assert_eq!(c.obs.trace_sample_every, 8);
+        assert_eq!(c.obs.trace_tail_k, 4);
+        assert_eq!(c.obs.trace_uniform_k, 4);
+        c.obs.trace_enabled = true;
+        c.obs.trace_sample_every = 2;
+        c.obs.trace_tail_k = 8;
+        c.obs.trace_uniform_k = 0;
+        let j = c.to_json();
+        let c2 = PerCacheConfig::from_json(&j).unwrap();
+        assert!(c2.obs.trace_enabled);
+        assert_eq!(c2.obs.trace_sample_every, 2);
+        assert_eq!(c2.obs.trace_tail_k, 8);
+        assert_eq!(c2.obs.trace_uniform_k, 0);
+
+        // invalid trace knobs rejected
+        let j = Json::parse(r#"{"obs": {"trace_sample_every": 0}}"#).unwrap();
+        assert!(PerCacheConfig::from_json(&j).is_err());
+        let j = Json::parse(
+            r#"{"obs": {"trace_enabled": true, "trace_tail_k": 0, "trace_uniform_k": 0}}"#,
+        )
+        .unwrap();
+        assert!(
+            PerCacheConfig::from_json(&j).is_err(),
+            "enabled tracing with zero exemplar slots"
+        );
     }
 
     #[test]

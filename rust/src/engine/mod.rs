@@ -228,6 +228,9 @@ impl<'rt> PerCache<'rt> {
 
     /// Serve one user query, returning the full stage-timed record.
     pub fn serve(&mut self, query: &str) -> Result<QueryRecord> {
+        // standalone engine use (no router in front) still gets stage
+        // attribution: root a trace here unless one is already attached
+        let _root = crate::obs::trace::root_if_unattached("engine.serve", None);
         let qid = self.query_counter;
         self.query_counter += 1;
         let mut rec = blank_record(qid);

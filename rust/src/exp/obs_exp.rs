@@ -2,12 +2,15 @@
 //! observability layer cost on the serve path?
 //!
 //! Replays the multi-tenant cache-level workload (real shards, router
-//! and governor — the same stream the tenancy experiment uses) twice:
-//! once with the global metrics registry **enabled** (every counter,
-//! histogram, span and journal emission live) and once **disabled**
-//! (every call site reduced to one relaxed atomic load).  Each arm
-//! times individual `serve_one` calls with a wall clock, so the delta
-//! isolates exactly the instrumentation riding the per-query path.
+//! and governor — the same stream the tenancy experiment uses) three
+//! times: once with the global metrics registry **enabled** (every
+//! counter, histogram, span and journal emission live), once
+//! **disabled** (every call site reduced to one relaxed atomic load),
+//! and once **traced** (registry enabled *plus* the request-scoped
+//! causal tracer sampling 1-in-[`TRACE_SAMPLE_EVERY`] requests with
+//! tail exemplars on, DESIGN.md §16).  Each arm times individual
+//! `serve_one` calls with a wall clock, so the deltas isolate exactly
+//! the instrumentation riding the per-query path.
 //!
 //! Arms are interleaved across several rounds and each arm keeps its
 //! best (lowest-p50) round, which suppresses scheduler noise on shared
@@ -34,7 +37,12 @@ use super::common::reports_dir;
 use super::tiering_exp::smoke_mode;
 
 /// Maximum tolerated enabled-vs-disabled p50 latency inflation (3%).
+/// The traced arm is held to the same budget.
 pub const GATE_P50_FRAC: f64 = 0.03;
+/// Trace sampling rate for the traced arm — the production default
+/// (`ObsConfig::trace_sample_every`); the per-request cost is amortised
+/// 1-in-N exactly as deployments would run it.
+pub const TRACE_SAMPLE_EVERY: u64 = 8;
 /// Global QKV budget in sim slices (roomy — hit behaviour identical
 /// across arms, so the wall-clock delta isolates the instrumentation).
 const GLOBAL_SLICES: usize = 96;
@@ -98,10 +106,14 @@ pub fn overhead_frac(on: f64, off: f64) -> f64 {
     }
 }
 
-/// Replay the workload once with the registry toggled to `enabled`;
-/// returns the sorted per-query serve wall-times in microseconds.
-fn run_arm(shape: &Shape, enabled: bool) -> Result<Vec<f64>> {
+/// Replay the workload once with the registry toggled to `enabled` and
+/// the causal tracer toggled to `traced`; returns the sorted per-query
+/// serve wall-times in microseconds.
+fn run_arm(shape: &Shape, enabled: bool, traced: bool) -> Result<Vec<f64>> {
     crate::obs::set_enabled(enabled);
+    let tracer = crate::obs::tracer();
+    tracer.set_sample_every(TRACE_SAMPLE_EVERY);
+    tracer.set_enabled(traced);
     let tc = TenancyConfig {
         enabled: true,
         max_tenants: shape.tenants,
@@ -135,7 +147,18 @@ fn run_arm(shape: &Shape, enabled: bool) -> Result<Vec<f64>> {
                 .shard_mut(tenant)
                 .ok_or_else(|| anyhow::anyhow!("router/registry tenant mismatch"))?;
             let t = Instant::now();
-            let rec = serve_one(&sim, shard, &a.query, &a.seg_keys)?;
+            let ctx = if traced {
+                tracer.begin_trace("request", Some(tenant), tracer.now_ns())
+            } else {
+                None
+            };
+            let rec = {
+                let _attached = crate::obs::trace::attach(ctx);
+                serve_one(&sim, shard, &a.query, &a.seg_keys)?
+            };
+            if let Some(ctx) = ctx {
+                tracer.end_trace(ctx, tracer.now_ns());
+            }
             samples.push(t.elapsed().as_secs_f64() * 1e6);
             black_box(rec);
             let _ = reg.note_serve();
@@ -146,36 +169,48 @@ fn run_arm(shape: &Shape, enabled: bool) -> Result<Vec<f64>> {
     Ok(samples)
 }
 
-/// Run both arms, interleaved; returns (enabled, disabled) best rounds.
-/// Restores the registry's prior enabled state even on error — the
-/// toggle is global, and the serving stack keeps running after `exp`.
-pub fn sweep(shape: &Shape) -> Result<(ObsCell, ObsCell)> {
+/// Run all three arms, interleaved; returns (enabled, disabled, traced)
+/// best rounds.  Restores the registry's and tracer's prior enabled
+/// state even on error — both toggles are global, and the serving stack
+/// keeps running after `exp`.
+pub fn sweep(shape: &Shape) -> Result<(ObsCell, ObsCell, ObsCell)> {
     let prior = crate::obs::enabled();
+    let tracer = crate::obs::tracer();
+    let trace_prior = tracer.enabled();
     let result = sweep_inner(shape);
     crate::obs::set_enabled(prior);
+    tracer.set_enabled(trace_prior);
     result
 }
 
-fn sweep_inner(shape: &Shape) -> Result<(ObsCell, ObsCell)> {
+fn sweep_inner(shape: &Shape) -> Result<(ObsCell, ObsCell, ObsCell)> {
     // one discarded warmup pass (allocator, page cache, branch history)
-    run_arm(shape, true)?;
+    run_arm(shape, true, false)?;
     let mut best_on: Option<ObsCell> = None;
     let mut best_off: Option<ObsCell> = None;
+    let mut best_traced: Option<ObsCell> = None;
     let better = |best: &Option<ObsCell>, c: &ObsCell| match best {
         None => true,
         Some(b) => c.p50_us < b.p50_us,
     };
     for _ in 0..shape.rounds.max(1) {
-        let on = cell("enabled", &run_arm(shape, true)?);
-        let off = cell("disabled", &run_arm(shape, false)?);
+        let on = cell("enabled", &run_arm(shape, true, false)?);
+        let off = cell("disabled", &run_arm(shape, false, false)?);
+        let traced = cell("traced", &run_arm(shape, true, true)?);
         if better(&best_on, &on) {
             best_on = Some(on);
         }
         if better(&best_off, &off) {
             best_off = Some(off);
         }
+        if better(&best_traced, &traced) {
+            best_traced = Some(traced);
+        }
     }
-    Ok((best_on.unwrap(), best_off.unwrap()))
+    match (best_on, best_off, best_traced) {
+        (Some(on), Some(off), Some(traced)) => Ok((on, off, traced)),
+        _ => anyhow::bail!("obs sweep produced no rounds"),
+    }
 }
 
 /// `percache exp obs` entry point (runtime unused: cache-level sim).
@@ -187,15 +222,17 @@ pub fn obs(_rt: &Runtime) -> Result<()> {
 /// report artifacts, then enforces the overhead gate.
 pub fn run_and_report() -> Result<()> {
     let shape = if smoke_mode() { Shape::smoke() } else { Shape::full() };
-    let (on, off) = sweep(&shape)?;
+    let (on, off, traced) = sweep(&shape)?;
     let d50 = overhead_frac(on.p50_us, off.p50_us);
     let d99 = overhead_frac(on.p99_us, off.p99_us);
+    let t50 = overhead_frac(traced.p50_us, off.p50_us);
+    let t99 = overhead_frac(traced.p99_us, off.p99_us);
 
     let mut table = Table::new(
         "obs: telemetry overhead on the tenancy workload",
         &["arm", "served", "p50 µs", "p99 µs", "mean µs"],
     );
-    for c in [&on, &off] {
+    for c in [&on, &off, &traced] {
         table.row(vec![
             c.label.clone(),
             c.served.to_string(),
@@ -211,11 +248,19 @@ pub fn run_and_report() -> Result<()> {
         GATE_P50_FRAC * 100.0,
         d99 * 100.0
     );
+    println!(
+        "[obs] traced (1-in-{} + exemplars) p50 overhead {:+.2}% (same {:.0}% budget), \
+         p99 overhead {:+.2}%",
+        TRACE_SAMPLE_EVERY,
+        t50 * 100.0,
+        GATE_P50_FRAC * 100.0,
+        t99 * 100.0
+    );
     let dir = reports_dir();
     table.emit(&dir, "obs");
     std::fs::create_dir_all(&dir)?;
     let path = dir.join("BENCH_obs.json");
-    std::fs::write(&path, bench_doc(&shape, &on, &off).to_string_pretty())?;
+    std::fs::write(&path, bench_doc(&shape, &on, &off, &traced).to_string_pretty())?;
     println!("[obs] wrote {}", path.display());
 
     anyhow::ensure!(
@@ -225,6 +270,15 @@ pub fn run_and_report() -> Result<()> {
         d50 * 100.0,
         GATE_P50_FRAC * 100.0,
         on.p50_us,
+        off.p50_us
+    );
+    anyhow::ensure!(
+        t50 <= GATE_P50_FRAC,
+        "tracing p50 overhead {:.2}% exceeds the {:.0}% budget \
+         (traced {:.2} µs vs disabled {:.2} µs)",
+        t50 * 100.0,
+        GATE_P50_FRAC * 100.0,
+        traced.p50_us,
         off.p50_us
     );
     Ok(())
@@ -242,7 +296,7 @@ fn cell_json(c: &ObsCell) -> Json {
 
 /// Build the `BENCH_obs.json` document (pure — unit-testable without
 /// touching the global registry).
-pub fn bench_doc(shape: &Shape, on: &ObsCell, off: &ObsCell) -> Json {
+pub fn bench_doc(shape: &Shape, on: &ObsCell, off: &ObsCell, traced: &ObsCell) -> Json {
     let mut root = Json::obj();
     root.insert("bench", "obs");
     root.insert("tenants", shape.tenants);
@@ -250,8 +304,18 @@ pub fn bench_doc(shape: &Shape, on: &ObsCell, off: &ObsCell) -> Json {
     root.insert("rounds", shape.rounds);
     root.insert("enabled", cell_json(on));
     root.insert("disabled", cell_json(off));
+    root.insert("traced", cell_json(traced));
+    root.insert("trace_sample_every", TRACE_SAMPLE_EVERY);
     root.insert("overhead_p50_frac", overhead_frac(on.p50_us, off.p50_us));
     root.insert("overhead_p99_frac", overhead_frac(on.p99_us, off.p99_us));
+    root.insert(
+        "overhead_trace_p50_frac",
+        overhead_frac(traced.p50_us, off.p50_us),
+    );
+    root.insert(
+        "overhead_trace_p99_frac",
+        overhead_frac(traced.p99_us, off.p99_us),
+    );
     root.insert("gate_p50_frac", GATE_P50_FRAC);
     Json::Obj(root)
 }
@@ -285,12 +349,20 @@ mod tests {
         let shape = Shape::smoke();
         let on = fake_cell("enabled", 10.2, 21.0);
         let off = fake_cell("disabled", 10.0, 20.0);
-        let j = Json::parse(&bench_doc(&shape, &on, &off).to_string_pretty()).unwrap();
+        let traced = fake_cell("traced", 10.1, 22.0);
+        let j = Json::parse(&bench_doc(&shape, &on, &off, &traced).to_string_pretty()).unwrap();
         assert_eq!(j.get("bench").as_str(), Some("obs"));
         assert_eq!(j.get("tenants").as_usize(), Some(shape.tenants));
         assert_eq!(j.get("enabled").get("label").as_str(), Some("enabled"));
+        assert_eq!(j.get("traced").get("label").as_str(), Some("traced"));
+        assert_eq!(
+            j.get("trace_sample_every").as_usize(),
+            Some(TRACE_SAMPLE_EVERY as usize)
+        );
         let d50 = j.get("overhead_p50_frac").as_f64().unwrap();
         assert!((d50 - 0.02).abs() < 1e-9, "got {d50}");
+        let t50 = j.get("overhead_trace_p50_frac").as_f64().unwrap();
+        assert!((t50 - 0.01).abs() < 1e-9, "got {t50}");
         assert_eq!(j.get("gate_p50_frac").as_f64(), Some(GATE_P50_FRAC));
     }
 

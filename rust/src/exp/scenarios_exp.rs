@@ -35,7 +35,7 @@ use crate::datasets::traces::{
     modeled_full_serve_ms, scenario, ScenarioTrace, TraceSpec, SCENARIOS,
 };
 use crate::metrics::ServePath;
-use crate::obs::MetricsRegistry;
+use crate::obs::{MetricsRegistry, Tracer};
 use crate::runtime::Runtime;
 use crate::tenancy::sim::{serve_one, sim_slice_bytes, SimConfig};
 use crate::tenancy::{
@@ -134,6 +134,23 @@ fn arm_name(slo_aware: bool, tiering: bool) -> &'static str {
     }
 }
 
+/// Milliseconds on the virtual clock → integer trace nanoseconds.
+fn ms_ns(ms: f64) -> u64 {
+    (ms * 1e6).round() as u64
+}
+
+/// A local tracer for one scenario's `slo_tiered` replay: virtual
+/// clock, every request sampled, default exemplar reservoir.  Local —
+/// the global tracer (and with it `percache serve`) is never touched,
+/// so `BENCH_scenarios.json` stays byte-deterministic and arm-neutral.
+fn scenario_tracer() -> Tracer {
+    let t = Tracer::new();
+    t.set_virtual_clock(true);
+    t.set_sample_every(1);
+    t.set_enabled(true);
+    t
+}
+
 /// Count per-tenant budget-direction reversals over the per-tick budget
 /// snapshots (zeros — non-resident ticks — and flat stretches ignored).
 fn budget_flips(series: &[Vec<usize>], tenants: usize) -> u64 {
@@ -173,12 +190,20 @@ fn budget_flips(series: &[Vec<usize>], tenants: usize) -> u64 {
 /// published to the governor and the shedding decision to the router;
 /// otherwise the monitor only measures.  After the trace ends the
 /// backlog drains on the same cadence with empty arrival batches.
+///
+/// When `tracer` is given, every serve also records a causal trace on
+/// the virtual clock (root `request`, plus `queue_wait`,
+/// `hydration_stall`, `prefill`, `decode` child spans — exactly the
+/// intervals that advance `clock`, so attribution is near-total); the
+/// tail-exemplar reservoir inside the tracer then holds the forensics
+/// that `percache trace` analyses.
 pub fn replay_scenario(
     trace: &ScenarioTrace,
     slo_aware: bool,
     tiering: bool,
     predictor_prefetch: bool,
     state_dir: &Path,
+    tracer: Option<&Tracer>,
 ) -> Result<ArmOutcome> {
     let arm = arm_name(slo_aware, tiering);
     let sim = SimConfig::default();
@@ -283,6 +308,10 @@ pub fn replay_scenario(
             let Some((tenant, (a, arr_ms))) = router.pop() else {
                 break;
             };
+            // snapshot the pop instant before any hydration stall so the
+            // trace splits queue_wait [arr, pop] from the stall interval
+            let pop_ms = clock;
+            let mut stalled = false;
             if registry.shard(tenant).is_none() {
                 if registry.cold_evicted(tenant) {
                     registry.recreate_evicted(tenant)?;
@@ -292,12 +321,14 @@ pub fn replay_scenario(
                     demand_stalls += 1;
                 }
                 clock += stall_ms;
+                stalled = true;
             }
             let queue_delay = (clock - arr_ms).max(0.0);
             let shard = registry
                 .shard_mut(tenant)
                 .ok_or_else(|| anyhow::anyhow!("tenant {tenant} not resident after hydration"))?;
             let rec = serve_one(&sim, shard, &a.query, &a.seg_keys)?;
+            let serve_start_ms = clock;
             clock += SERVE_OVERHEAD_MS + rec.prefill_ms + rec.decode_ms;
             match rec.path {
                 ServePath::QaHit => qa_hits += 1,
@@ -305,6 +336,45 @@ pub fn replay_scenario(
                 ServePath::Full => full_serves += 1,
             }
             let e2e_ms = clock - arr_ms;
+            if let Some(tr) = tracer {
+                if let Some(tctx) = tr.begin_trace("request", Some(tenant), ms_ns(arr_ms)) {
+                    let root = Some(tctx.span);
+                    if pop_ms > arr_ms {
+                        tr.add_span(tctx.trace, root, "queue_wait", ms_ns(arr_ms), ms_ns(pop_ms));
+                    }
+                    if stalled {
+                        tr.add_span(
+                            tctx.trace,
+                            root,
+                            "hydration_stall",
+                            ms_ns(pop_ms),
+                            ms_ns(pop_ms + stall_ms),
+                        );
+                    }
+                    let prefill_start = serve_start_ms + SERVE_OVERHEAD_MS;
+                    if rec.prefill_ms > 0.0 {
+                        tr.add_span(
+                            tctx.trace,
+                            root,
+                            "prefill",
+                            ms_ns(prefill_start),
+                            ms_ns(prefill_start + rec.prefill_ms),
+                        );
+                    }
+                    if rec.decode_ms > 0.0 {
+                        let decode_start = prefill_start + rec.prefill_ms;
+                        tr.add_span(
+                            tctx.trace,
+                            root,
+                            "decode",
+                            ms_ns(decode_start),
+                            ms_ns(decode_start + rec.decode_ms),
+                        );
+                    }
+                    tr.set_virtual_ns(ms_ns(clock));
+                    tr.end_trace(tctx, ms_ns(clock));
+                }
+            }
             monitor.record(tenant, e2e_ms, queue_delay);
             e2e[tenant as usize].push(e2e_ms);
             if registry.note_serve() {
@@ -385,6 +455,20 @@ pub fn replay_scenario(
 /// acceptance bar in-harness: on bursty and churn, the SLO arm's miss
 /// rate must be strictly below the static arm's (tiered pair included).
 pub fn sweep(smoke: bool, state_root: &Path) -> Result<Vec<ScenarioOutcome>> {
+    sweep_with_traces(smoke, state_root, None)
+}
+
+/// Like [`sweep`], but when `traces` is given the `slo_tiered` arm of
+/// each scenario also records causal traces on the virtual clock; the
+/// per-scenario `percache.trace/v1` dumps (tail exemplars only) are
+/// pushed onto `traces`.  The traced replay is byte-identical to the
+/// untraced one — the tracer only observes the virtual clock, never
+/// advances it.
+pub fn sweep_with_traces(
+    smoke: bool,
+    state_root: &Path,
+    mut traces: Option<&mut Vec<(String, Json)>>,
+) -> Result<Vec<ScenarioOutcome>> {
     let spec = if smoke {
         TraceSpec::smoke(TRACE_SEED)
     } else {
@@ -393,12 +477,16 @@ pub fn sweep(smoke: bool, state_root: &Path) -> Result<Vec<ScenarioOutcome>> {
     let mut out = Vec::new();
     for name in SCENARIOS {
         let trace = scenario(name, &spec)?;
+        let tracer = traces.is_some().then(scenario_tracer);
         let arms = vec![
-            replay_scenario(&trace, false, false, true, state_root)?,
-            replay_scenario(&trace, true, false, true, state_root)?,
-            replay_scenario(&trace, false, true, true, state_root)?,
-            replay_scenario(&trace, true, true, true, state_root)?,
+            replay_scenario(&trace, false, false, true, state_root, None)?,
+            replay_scenario(&trace, true, false, true, state_root, None)?,
+            replay_scenario(&trace, false, true, true, state_root, None)?,
+            replay_scenario(&trace, true, true, true, state_root, tracer.as_ref())?,
         ];
+        if let (Some(list), Some(t)) = (traces.as_deref_mut(), tracer.as_ref()) {
+            list.push((name.to_string(), t.export_json()));
+        }
         let sc = ScenarioOutcome {
             scenario: name.to_string(),
             tenants: trace.tenants,
@@ -483,6 +571,29 @@ pub fn bench_json(outcomes: &[ScenarioOutcome], smoke: bool) -> Json {
                 Json::Arr(sc.slo_p99_ms.iter().map(|&v| Json::from(v)).collect()),
             );
             o.insert("arms", Json::Arr(sc.arms.iter().map(arm_json).collect()));
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("scenarios", Json::Arr(list));
+    Json::Obj(root)
+}
+
+/// The `reports/TRACE_scenarios.json` document: one `percache.trace/v1`
+/// dump per scenario (the `slo_tiered` arm's tail exemplars).  Kept out
+/// of `BENCH_scenarios.json` so the committed baseline and its
+/// byte-equal determinism contract are untouched; `percache trace`
+/// consumes this file directly.
+pub fn trace_json(per_scenario: &[(String, Json)]) -> Json {
+    let mut root = Json::obj();
+    root.insert("bench", "scenarios_trace");
+    root.insert("arm", "slo_tiered");
+    root.insert("seed", TRACE_SEED);
+    let list = per_scenario
+        .iter()
+        .map(|(name, dump)| {
+            let mut o = Json::obj();
+            o.insert("scenario", name.as_str());
+            o.insert("trace", dump.clone());
             Json::Obj(o)
         })
         .collect();
@@ -589,7 +700,8 @@ pub fn run_and_report() -> Result<()> {
         "percache_scenarios_exp_{}",
         std::process::id()
     ));
-    let outcomes = sweep(smoke, &state_dir)?;
+    let mut scenario_traces: Vec<(String, Json)> = Vec::new();
+    let outcomes = sweep_with_traces(smoke, &state_dir, Some(&mut scenario_traces))?;
     let _ = std::fs::remove_dir_all(&state_dir);
 
     let mut table = Table::new(
@@ -629,6 +741,13 @@ pub fn run_and_report() -> Result<()> {
     let path = dir.join("BENCH_scenarios.json");
     std::fs::write(&path, doc.to_string_pretty())?;
     println!("[scenarios] wrote {}", path.display());
+    let trace_path = dir.join("TRACE_scenarios.json");
+    std::fs::write(&trace_path, trace_json(&scenario_traces).to_string_pretty())?;
+    println!(
+        "[scenarios] wrote {} (analyse with `percache trace {}`)",
+        trace_path.display(),
+        trace_path.display()
+    );
 
     if let Ok(baseline) = std::env::var("PERCACHE_BASELINE") {
         if !baseline.is_empty() {
@@ -707,6 +826,53 @@ mod tests {
         let mut empty_base = Json::obj();
         empty_base.insert("scenarios", Json::Arr(Vec::new()));
         assert!(baseline_violations(&fresh, &Json::Obj(empty_base)).is_empty());
+    }
+
+    #[test]
+    fn traced_replay_is_neutral_deterministic_and_attributes_the_tail() {
+        let mut ta: Vec<(String, Json)> = Vec::new();
+        let a = sweep_with_traces(true, &tmp("tr_a"), Some(&mut ta)).unwrap();
+        let mut tb: Vec<(String, Json)> = Vec::new();
+        let b = sweep_with_traces(true, &tmp("tr_b"), Some(&mut tb)).unwrap();
+        let plain = sweep(true, &tmp("tr_p")).unwrap();
+        for tag in ["tr_a", "tr_b", "tr_p"] {
+            let _ = std::fs::remove_dir_all(tmp(tag));
+        }
+        // the tracer only observes the virtual clock: bench output is
+        // byte-identical with and without capture
+        assert_eq!(
+            bench_json(&a, true).to_string_pretty(),
+            bench_json(&plain, true).to_string_pretty(),
+            "trace capture must not perturb the replay"
+        );
+        // the trace dump itself is byte-deterministic
+        assert_eq!(
+            trace_json(&ta).to_string_pretty(),
+            trace_json(&tb).to_string_pretty(),
+            "trace capture must be deterministic"
+        );
+        assert_eq!(bench_json(&a, true), bench_json(&b, true));
+        // every scenario captured exemplars, and every tail exemplar
+        // attributes >= 95% of its end-to-end time to named stages
+        assert_eq!(ta.len(), SCENARIOS.len());
+        for (name, dump) in &ta {
+            let entries = crate::obs::trace::parse_dump(dump).unwrap();
+            assert!(!entries.is_empty(), "{name}: no exemplars captured");
+            let mut tails = 0;
+            for e in entries.iter().filter(|e| e.kind == "tail") {
+                tails += 1;
+                let att = crate::obs::trace::attribute(&e.trace)
+                    .unwrap_or_else(|| panic!("{name}: empty trace"));
+                assert!(
+                    att.unattributed_frac() < 0.05,
+                    "{name}: trace {} unattributed {:.1}% of {:.3}ms",
+                    att.trace,
+                    att.unattributed_frac() * 100.0,
+                    att.e2e_ms
+                );
+            }
+            assert!(tails > 0, "{name}: no tail exemplars");
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //!                  [--out reports] [--smoke]
 //! percache tenants [--tenants 8] [--arrivals 0] [--zipf 1.0] [--sweep]
 //! percache metrics [path] [--prom]
+//! percache trace   [path] [--tenant N] [--p 99] [--max-unattributed 0.05]
 //! percache check   [--json reports/ANALYSIS.json]
 //! percache info
 //! ```
@@ -36,6 +37,7 @@ fn real_main() -> Result<()> {
         "exp" => cmd_exp(),
         "tenants" => cmd_tenants(),
         "metrics" => cmd_metrics(),
+        "trace" => cmd_trace(),
         "check" => cmd_check(),
         "info" => cmd_info(),
         _ => {
@@ -46,6 +48,7 @@ fn real_main() -> Result<()> {
                  exp      reproduce a paper figure/table (or `all`)\n  \
                  tenants  multi-tenant sharding demo/sweep (no artifacts needed)\n  \
                  metrics  pretty-print a metrics dump (see serve --metrics-file)\n  \
+                 trace    span-tree attribution over a causal trace dump\n  \
                  check    run the static analysis pass over the crate sources\n  \
                  info     print manifest / artifact summary\n\n\
                  run `percache <subcommand> --help` for flags"
@@ -476,6 +479,154 @@ fn cmd_metrics() -> Result<()> {
         ]);
     }
     print!("{}", hists.render());
+    Ok(())
+}
+
+/// Collect trace dumps out of any of the shapes `percache` writes: a
+/// bare `percache.trace/v1` document, a `--metrics-file` dump carrying
+/// a `trace` section, or the scenario suite's `TRACE_scenarios.json`
+/// (one dump per scenario under `scenarios[].trace`).
+fn collect_trace_dumps(
+    j: &percache::util::json::Json,
+    out: &mut Vec<percache::obs::trace::DumpEntry>,
+) -> Result<(), String> {
+    if j.get("traces").as_arr().is_some() {
+        out.extend(percache::obs::trace::parse_dump(j)?);
+        return Ok(());
+    }
+    if j.get("trace").as_obj().is_some() {
+        return collect_trace_dumps(j.get("trace"), out);
+    }
+    if let Some(scs) = j.get("scenarios").as_arr() {
+        for sc in scs {
+            collect_trace_dumps(sc, out)?;
+        }
+        return Ok(());
+    }
+    Err(
+        "no trace dump found (expected a 'traces' array, a 'trace' section, \
+         or a 'scenarios' list)"
+            .to_string(),
+    )
+}
+
+/// `percache trace <file>`: the causal-trace forensics analyzer
+/// (DESIGN.md §16).  Reconstructs each sampled request's span tree,
+/// prints the per-stage attribution table (p50 / p-hi self time, share
+/// of total end-to-end) and the slowest tail exemplars' critical
+/// paths, then exits non-zero when the file holds no traces or any
+/// tail exemplar leaves more than `--max-unattributed` of its
+/// end-to-end time unattributed.
+fn cmd_trace() -> Result<()> {
+    use anyhow::Context as _;
+    use percache::obs::trace::{attribute, critical_path_line, stage_rows, Attribution};
+    use percache::util::table::Table;
+
+    let cli = Cli::new("percache trace — span-tree attribution over a causal trace dump")
+        .flag("tenant", "", "only analyse this tenant's traces")
+        .flag("p", "99", "tail percentile column of the stage table")
+        .flag("top", "5", "critical-path lines to print (slowest tail exemplars)")
+        .flag(
+            "max-unattributed",
+            "0.05",
+            "fail when a tail exemplar's unattributed fraction exceeds this",
+        );
+    let a = cli.parse_env(1);
+    let path = a
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "reports/TRACE_scenarios.json".to_string());
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let j = percache::util::json::Json::parse(&text).context("parsing trace dump json")?;
+    let mut entries = Vec::new();
+    collect_trace_dumps(&j, &mut entries).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+
+    let tenant_filter = match a.get("tenant") {
+        "" => None,
+        t => Some(
+            t.parse::<u32>()
+                .map_err(|_| anyhow::anyhow!("--tenant must be an integer, got '{t}'"))?,
+        ),
+    };
+    if let Some(t) = tenant_filter {
+        entries.retain(|e| e.trace.tenant == Some(t));
+    }
+    anyhow::ensure!(
+        !entries.is_empty(),
+        "{path}: no traces to analyse{}",
+        tenant_filter
+            .map(|t| format!(" for tenant {t}"))
+            .unwrap_or_default()
+    );
+
+    let p_hi = a.get_f64("p").clamp(50.0, 100.0);
+    let mut tails: Vec<Attribution> = Vec::new();
+    let mut atts: Vec<Attribution> = Vec::new();
+    for e in &entries {
+        if let Some(att) = attribute(&e.trace) {
+            if e.kind == "tail" {
+                tails.push(att.clone());
+            }
+            atts.push(att);
+        }
+    }
+    anyhow::ensure!(!atts.is_empty(), "{path}: every trace was empty");
+
+    let e2e_total: f64 = atts.iter().map(|x| x.e2e_ms).sum();
+    let unattr_total: f64 = atts.iter().map(|x| x.unattributed_ms).sum();
+    println!(
+        "[trace] {}: {} traces ({} tail exemplars), total e2e {:.2}ms, \
+         unattributed {:.1}%",
+        path,
+        atts.len(),
+        tails.len(),
+        e2e_total,
+        if e2e_total > 0.0 {
+            unattr_total / e2e_total * 100.0
+        } else {
+            0.0
+        }
+    );
+    let mut table = Table::new(
+        "per-stage attribution (self time across all sampled traces)",
+        &["stage", "count", "total ms", "p50 ms", &format!("p{p_hi:.0} ms"), "share"],
+    );
+    for r in stage_rows(&atts, p_hi) {
+        table.row(vec![
+            r.stage,
+            r.count.to_string(),
+            format!("{:.3}", r.total_ms),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p_hi_ms),
+            format!("{:.1}%", r.frac * 100.0),
+        ]);
+    }
+    print!("{}", table.render());
+
+    tails.sort_by(|x, y| y.e2e_ms.total_cmp(&x.e2e_ms));
+    let top = a.get_usize("top").max(1);
+    if !tails.is_empty() {
+        println!("critical paths (slowest tail exemplars):");
+        for t in tails.iter().take(top) {
+            println!("  {}", critical_path_line(t));
+        }
+    }
+
+    let max_unattr = a.get_f64("max-unattributed");
+    let violations: Vec<String> = tails
+        .iter()
+        .filter(|t| t.unattributed_frac() > max_unattr)
+        .map(critical_path_line)
+        .collect();
+    anyhow::ensure!(
+        violations.is_empty(),
+        "{} tail exemplar(s) exceed the {:.0}% unattributed budget:\n  {}",
+        violations.len(),
+        max_unattr * 100.0,
+        violations.join("\n  ")
+    );
     Ok(())
 }
 

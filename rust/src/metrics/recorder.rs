@@ -185,6 +185,17 @@ pub fn record_query_obs(rec: &QueryRecord) {
         ServePath::Full => crate::obs_counter!("engine.full").inc(),
     }
     crate::obs_hist!("engine.total_ms").record(rec.total_ms());
+    // project the measured stages into the causal trace (no-op unless
+    // the global tracer is on and this thread carries a trace context)
+    crate::obs::trace::emit_stages_ending_now(&[
+        ("embed", rec.embed_ms),
+        ("qa_probe", rec.qa_match_ms),
+        ("retrieval", rec.retrieval_ms),
+        ("qkv_match", rec.tree_match_ms),
+        ("slice_load", rec.cache_load_ms),
+        ("prefill", rec.prefill_ms),
+        ("decode", rec.decode_ms),
+    ]);
     if STAGE_TICK.fetch_add(1, Ordering::Relaxed) % STAGE_SAMPLE_EVERY != 0 {
         return;
     }

@@ -1,0 +1,269 @@
+//! Per-window tail-exemplar reservoir (DESIGN.md §16).
+//!
+//! Keeps, per tenant and per export window, the K slowest completed
+//! traces plus a uniform reservoir sample of K more, so latency
+//! histograms can carry exemplar trace ids without unbounded memory.
+//! Sampling is driven by a seeded PCG32 stream per tenant, which makes
+//! the kept set a pure function of the offered sequence — deterministic
+//! under the virtual clock.  `roll_window` archives the current window
+//! so exports always cover the last complete window plus whatever has
+//! accumulated since.
+
+use std::collections::BTreeMap;
+
+use crate::obs::trace::Trace;
+use crate::util::rng::Rng;
+
+/// Reservoir sizing and seeding knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExemplarConfig {
+    /// Slowest-trace slots kept per tenant per window.
+    pub tail_k: usize,
+    /// Uniform reservoir slots kept per tenant per window.
+    pub uniform_k: usize,
+    /// Seed for the per-tenant sampling streams.
+    pub seed: u64,
+}
+
+impl Default for ExemplarConfig {
+    fn default() -> Self {
+        Self {
+            tail_k: 4,
+            uniform_k: 4,
+            seed: 0x7E1A_C0DE,
+        }
+    }
+}
+
+/// A trace selected for export, tagged with how it was kept.
+#[derive(Debug, Clone)]
+pub struct Exemplar {
+    /// `"tail"` (one of the K slowest) or `"uniform"` (reservoir pick).
+    pub kind: &'static str,
+    /// Root-span duration in milliseconds.
+    pub e2e_ms: f64,
+    pub trace: Trace,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    dur_ns: u64,
+    trace: Trace,
+}
+
+#[derive(Debug)]
+struct TenantWindow {
+    offered: u64,
+    rng: Rng,
+    tail: Vec<Entry>,
+    uniform: Vec<Entry>,
+}
+
+/// Bounded per-tenant exemplar store: `current` accumulates, `last`
+/// holds the previous window after a `roll_window`.
+#[derive(Debug)]
+pub struct ExemplarReservoir {
+    cfg: ExemplarConfig,
+    current: BTreeMap<Option<u32>, TenantWindow>,
+    last: BTreeMap<Option<u32>, TenantWindow>,
+}
+
+impl ExemplarReservoir {
+    pub fn new(cfg: ExemplarConfig) -> Self {
+        Self {
+            cfg,
+            current: BTreeMap::new(),
+            last: BTreeMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> ExemplarConfig {
+        self.cfg
+    }
+
+    /// Offer a completed trace to the current window.
+    pub fn offer(&mut self, trace: Trace) {
+        let dur_ns = root_dur_ns(&trace);
+        let cfg = self.cfg;
+        let window = self
+            .current
+            .entry(trace.tenant)
+            .or_insert_with(|| TenantWindow {
+                offered: 0,
+                rng: Rng::seeded(cfg.seed, tenant_stream(trace.tenant)),
+                tail: Vec::new(),
+                uniform: Vec::new(),
+            });
+        window.offered += 1;
+        let entry = Entry { dur_ns, trace };
+        if cfg.uniform_k > 0 {
+            if window.uniform.len() < cfg.uniform_k {
+                window.uniform.push(entry.clone());
+            } else {
+                // Algorithm R: the i-th offer replaces a slot with
+                // probability k/i; `offered` already counts this one.
+                let j = window.rng.below(window.offered as usize);
+                if let Some(slot) = window.uniform.get_mut(j) {
+                    *slot = entry.clone();
+                }
+            }
+        }
+        if cfg.tail_k > 0 {
+            window.tail.push(entry);
+            window
+                .tail
+                .sort_by(|a, b| b.dur_ns.cmp(&a.dur_ns).then(a.trace.trace.cmp(&b.trace.trace)));
+            window.tail.truncate(cfg.tail_k);
+        }
+    }
+
+    /// Archive the current window; exports now cover it as `last`.
+    pub fn roll_window(&mut self) {
+        self.last = std::mem::take(&mut self.current);
+    }
+
+    /// Drop all kept traces (both windows).
+    pub fn clear(&mut self) {
+        self.current.clear();
+        self.last.clear();
+    }
+
+    /// Union of the last and current windows, deduplicated by trace id
+    /// (tail membership wins over uniform), sorted by (tenant, trace).
+    pub fn export(&self) -> Vec<Exemplar> {
+        let mut picked: BTreeMap<(Option<u32>, u64), Exemplar> = BTreeMap::new();
+        for window in self.last.values().chain(self.current.values()) {
+            for e in &window.tail {
+                picked.insert((e.trace.tenant, e.trace.trace), to_exemplar("tail", e));
+            }
+        }
+        for window in self.last.values().chain(self.current.values()) {
+            for e in &window.uniform {
+                picked
+                    .entry((e.trace.tenant, e.trace.trace))
+                    .or_insert_with(|| to_exemplar("uniform", e));
+            }
+        }
+        picked.into_values().collect()
+    }
+}
+
+fn to_exemplar(kind: &'static str, e: &Entry) -> Exemplar {
+    Exemplar {
+        kind,
+        e2e_ms: e.dur_ns as f64 / 1e6,
+        trace: e.trace.clone(),
+    }
+}
+
+fn root_dur_ns(trace: &Trace) -> u64 {
+    trace
+        .spans
+        .first()
+        .map(|s| s.t_end_ns.saturating_sub(s.t_start_ns))
+        .unwrap_or(0)
+}
+
+fn tenant_stream(tenant: Option<u32>) -> u64 {
+    match tenant {
+        Some(t) => t as u64 + 2,
+        None => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::SpanRecord;
+
+    fn mk(trace: u64, tenant: Option<u32>, dur_ns: u64) -> Trace {
+        Trace {
+            trace,
+            tenant,
+            spans: vec![SpanRecord {
+                span: trace * 10,
+                parent: None,
+                stage: "request".to_string(),
+                t_start_ns: 0,
+                t_end_ns: dur_ns,
+            }],
+        }
+    }
+
+    #[test]
+    fn tail_keeps_the_k_slowest() {
+        let mut r = ExemplarReservoir::new(ExemplarConfig {
+            tail_k: 2,
+            uniform_k: 0,
+            seed: 1,
+        });
+        for (id, dur) in [(1u64, 5u64), (2, 50), (3, 10), (4, 40)] {
+            r.offer(mk(id, Some(0), dur));
+        }
+        let out = r.export();
+        let ids: Vec<u64> = out.iter().map(|e| e.trace.trace).collect();
+        assert_eq!(ids, vec![2, 4]);
+        assert!(out.iter().all(|e| e.kind == "tail"));
+    }
+
+    #[test]
+    fn deterministic_across_identical_runs() {
+        let cfg = ExemplarConfig {
+            tail_k: 2,
+            uniform_k: 2,
+            seed: 9,
+        };
+        let run = || {
+            let mut r = ExemplarReservoir::new(cfg);
+            for id in 0..100u64 {
+                r.offer(mk(id, Some((id % 3) as u32), (id * 37) % 101));
+            }
+            r.export()
+                .iter()
+                .map(|e| (e.trace.tenant, e.trace.trace, e.kind, e.e2e_ms.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn bounded_per_tenant_and_dedup_tail_wins() {
+        let cfg = ExemplarConfig {
+            tail_k: 3,
+            uniform_k: 3,
+            seed: 4,
+        };
+        let mut r = ExemplarReservoir::new(cfg);
+        for id in 0..1000u64 {
+            r.offer(mk(id, Some(7), id));
+        }
+        let out = r.export();
+        assert!(out.len() <= cfg.tail_k + cfg.uniform_k, "{}", out.len());
+        // the very slowest must be present and tagged tail even if the
+        // uniform reservoir also sampled it
+        let slowest = out.iter().find(|e| e.trace.trace == 999).expect("tail lost");
+        assert_eq!(slowest.kind, "tail");
+        let mut ids: Vec<u64> = out.iter().map(|e| e.trace.trace).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), out.len(), "duplicate trace ids in export");
+    }
+
+    #[test]
+    fn roll_window_archives_and_export_unions() {
+        let mut r = ExemplarReservoir::new(ExemplarConfig {
+            tail_k: 1,
+            uniform_k: 0,
+            seed: 2,
+        });
+        r.offer(mk(1, None, 100));
+        r.roll_window();
+        r.offer(mk(2, None, 50));
+        let ids: Vec<u64> = r.export().iter().map(|e| e.trace.trace).collect();
+        assert_eq!(ids, vec![1, 2]);
+        r.roll_window(); // window 2 becomes last, trace 1 ages out
+        let ids: Vec<u64> = r.export().iter().map(|e| e.trace.trace).collect();
+        assert_eq!(ids, vec![2]);
+        r.clear();
+        assert!(r.export().is_empty());
+    }
+}

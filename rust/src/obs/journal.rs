@@ -30,6 +30,17 @@ pub const JOURNAL_STRIPES: usize = 8;
 /// Default total capacity across all stripes.
 pub const DEFAULT_CAPACITY: usize = 1024;
 
+/// Causal-trace linkage carried by an event: which trace/span the
+/// emitting stage ran under and its parent span (DESIGN.md §16).
+/// Span events used to be flat name-only records; with this attached
+/// they can be joined back onto the request tree they belong to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRef {
+    pub trace: u64,
+    pub span: u64,
+    pub parent: Option<u64>,
+}
+
 /// One structured event as built at an instrumentation site.
 #[derive(Debug, Clone)]
 pub struct Event {
@@ -37,6 +48,7 @@ pub struct Event {
     pub tenant: Option<usize>,
     pub fields: Vec<(String, f64)>,
     pub msg: String,
+    pub trace: Option<TraceRef>,
 }
 
 impl Event {
@@ -46,11 +58,17 @@ impl Event {
             tenant: None,
             fields: Vec::new(),
             msg: String::new(),
+            trace: None,
         }
     }
 
     pub fn tenant(mut self, t: usize) -> Self {
         self.tenant = Some(t);
+        self
+    }
+
+    pub fn trace_ref(mut self, r: TraceRef) -> Self {
+        self.trace = Some(r);
         self
     }
 
@@ -75,6 +93,7 @@ pub struct EventRecord {
     pub tenant: Option<usize>,
     pub fields: Vec<(String, f64)>,
     pub msg: String,
+    pub trace: Option<TraceRef>,
 }
 
 impl EventRecord {
@@ -86,6 +105,12 @@ impl EventRecord {
         }
         for (k, v) in &self.fields {
             s.push_str(&format!(" {k}={v:.3}"));
+        }
+        if let Some(tr) = self.trace {
+            s.push_str(&format!(" trace={} span={}", tr.trace, tr.span));
+            if let Some(p) = tr.parent {
+                s.push_str(&format!(" parent={p}"));
+            }
         }
         if !self.msg.is_empty() {
             s.push_str(&format!(" — {}", self.msg));
@@ -109,6 +134,13 @@ impl EventRecord {
         if !self.msg.is_empty() {
             o.insert("msg", self.msg.as_str());
         }
+        if let Some(tr) = self.trace {
+            o.insert("trace", tr.trace);
+            o.insert("span", tr.span);
+            if let Some(p) = tr.parent {
+                o.insert("parent", p);
+            }
+        }
         Json::Obj(o)
     }
 
@@ -128,6 +160,11 @@ impl EventRecord {
             }
         }
         let msg = j.get("msg").as_str().unwrap_or("").to_string();
+        let trace = j.get("trace").as_i64().map(|t| TraceRef {
+            trace: t as u64,
+            span: j.get("span").as_i64().unwrap_or(0) as u64,
+            parent: j.get("parent").as_i64().map(|p| p as u64),
+        });
         Ok(EventRecord {
             seq,
             t_ms,
@@ -135,6 +172,7 @@ impl EventRecord {
             tenant,
             fields,
             msg,
+            trace,
         })
     }
 }
@@ -216,6 +254,7 @@ impl Journal {
             tenant: ev.tenant,
             fields: ev.fields,
             msg: ev.msg,
+            trace: ev.trace,
         };
         if self.echo() {
             eprintln!("{}", rec.render());
@@ -309,6 +348,43 @@ mod tests {
         let parsed = Json::parse(&rec.to_json().to_string()).unwrap();
         let back = EventRecord::from_json(&parsed).unwrap();
         assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn trace_ref_round_trips_and_renders() {
+        let j = Journal::new();
+        j.emit(
+            Event::new("span").field("ms", 1.25).msg("prefill").trace_ref(TraceRef {
+                trace: 11,
+                span: 12,
+                parent: Some(10),
+            }),
+        );
+        let rec = j.drain().remove(0);
+        assert_eq!(
+            rec.trace,
+            Some(TraceRef {
+                trace: 11,
+                span: 12,
+                parent: Some(10)
+            })
+        );
+        let line = rec.render();
+        assert!(line.contains("trace=11"));
+        assert!(line.contains("span=12"));
+        assert!(line.contains("parent=10"));
+        let parsed = Json::parse(&rec.to_json().to_string()).unwrap();
+        let back = EventRecord::from_json(&parsed).unwrap();
+        assert_eq!(back, rec);
+        // a ref without a parent (root span) also survives the trip
+        j.emit(Event::new("span").trace_ref(TraceRef {
+            trace: 3,
+            span: 4,
+            parent: None,
+        }));
+        let rec = j.drain().remove(0);
+        let back = EventRecord::from_json(&Json::parse(&rec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.trace, rec.trace);
     }
 
     #[test]

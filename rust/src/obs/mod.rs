@@ -18,24 +18,36 @@
 //! the end-to-end overhead on the tenancy workload and CI holds the
 //! enabled-vs-disabled p50 delta under 3%.
 
+pub mod exemplar;
 pub mod journal;
 pub mod metric;
 pub mod prometheus;
 pub mod registry;
 pub mod snapshot;
+pub mod trace;
 
 use std::sync::OnceLock;
 
-pub use journal::{Event, EventRecord, Journal};
+pub use exemplar::{Exemplar, ExemplarConfig, ExemplarReservoir};
+pub use journal::{Event, EventRecord, Journal, TraceRef};
 pub use metric::{bucket_bounds, bucket_index, Counter, Gauge, Histogram, N_BUCKETS};
 pub use registry::{CounterHandle, GaugeHandle, HistogramHandle, MetricsRegistry, SpanGuard};
 pub use snapshot::{CounterSnap, GaugeSnap, HistSnap, MetricsSnapshot};
+pub use trace::{TraceCtx, Tracer};
 
 /// The process-wide registry every instrumentation site records into.
 /// Tests that need isolation build their own [`MetricsRegistry`].
 pub fn registry() -> &'static MetricsRegistry {
     static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
     GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+/// The process-wide causal tracer (DESIGN.md §16).  Disabled by
+/// default; `ObsConfig::apply` or the traced experiment arm turn it
+/// on.  Tests and deterministic replays build local [`Tracer`]s.
+pub fn tracer() -> &'static Tracer {
+    static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+    GLOBAL.get_or_init(Tracer::new)
 }
 
 /// Enable/disable all recording on the global registry.
@@ -86,9 +98,15 @@ pub fn emit(ev: Event) {
     registry().emit(ev);
 }
 
-/// Snapshot the global registry.
+/// Snapshot the global registry, folding in the tracer's synthesized
+/// counter series (absent while zero, like all synth series).
 pub fn snapshot() -> MetricsSnapshot {
-    registry().snapshot()
+    let mut snap = registry().snapshot();
+    let stats = tracer().stats();
+    snapshot::merge_synth(&mut snap, snapshot::synth("trace.completed", stats.completed));
+    snapshot::merge_synth(&mut snap, snapshot::synth("trace.dropped", stats.dropped));
+    snapshot::merge_synth(&mut snap, snapshot::synth("trace.started", stats.started));
+    snap
 }
 
 /// Serialize the global registry's current state to `path`: the typed
@@ -104,6 +122,14 @@ pub fn dump_metrics_file(
     doc.insert("uptime_ms", registry().uptime_ms());
     doc.insert("metrics", snap.to_json());
     doc.insert("prometheus", prometheus::encode(&snap));
+    let tr = tracer();
+    if tr.enabled() {
+        // exemplar traces ride along with every dump; rolling the
+        // window afterwards means each dump covers the last complete
+        // window plus whatever accumulated since
+        doc.insert("trace", tr.export_json());
+        tr.roll_window();
+    }
     for (k, v) in extra {
         doc.insert(*k, v.clone());
     }

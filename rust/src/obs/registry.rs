@@ -16,8 +16,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
-use super::journal::{Event, Journal};
+use super::journal::{Event, Journal, TraceRef};
 use super::metric::{Counter, Gauge, Histogram};
+use super::trace::{ChildGuard, TraceCtx};
 
 /// A metric series identity: family name plus sorted labels.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
@@ -135,7 +136,10 @@ impl HistogramHandle {
 /// Times a stage, records the latency into a histogram on drop (or via
 /// [`SpanGuard::finish`] when the caller wants the measured value), and
 /// journals a `span` event when span tracing is on.  Generalizes
-/// `metrics::Stage`, which measures but records nowhere.
+/// `metrics::Stage`, which measures but records nowhere.  When the
+/// thread carries a causal-trace context the span also lands as a child
+/// in the request's trace tree, and the journal event carries the
+/// trace/span/parent ids instead of being a flat name-only record.
 pub struct SpanGuard {
     start: Instant,
     name: &'static str,
@@ -143,9 +147,27 @@ pub struct SpanGuard {
     journal: Arc<Journal>,
     trace: bool,
     done: bool,
+    child: Option<ChildGuard>,
 }
 
 impl SpanGuard {
+    /// Span on the global registry recorded as a trace child of an
+    /// explicit context — for work that runs on a different thread from
+    /// the request it serves (e.g. a hydration wait completed on behalf
+    /// of a parked tenant), where the thread-local context is absent.
+    pub fn child_of(name: &'static str, ctx: TraceCtx) -> SpanGuard {
+        let reg = crate::obs::registry();
+        SpanGuard {
+            start: Instant::now(),
+            name,
+            hist: reg.histogram(name),
+            journal: reg.journal().clone(),
+            trace: reg.enabled() && reg.journal().trace_spans(),
+            done: false,
+            child: Some(crate::obs::trace::child_under(name, ctx)),
+        }
+    }
+
     /// Stop the span explicitly and return the elapsed milliseconds.
     pub fn finish(mut self) -> f64 {
         self.end()
@@ -158,10 +180,21 @@ impl SpanGuard {
         self.done = true;
         let ms = self.start.elapsed().as_secs_f64() * 1e3;
         self.hist.record(ms);
+        let link = self.child.take();
         if self.trace {
-            self.journal
-                .emit(Event::new("span").field("ms", ms).msg(self.name));
+            let mut ev = Event::new("span").field("ms", ms).msg(self.name);
+            if let Some(guard) = &link {
+                if let (Some(ctx), Some(parent)) = (guard.ctx(), guard.parent()) {
+                    ev = ev.trace_ref(TraceRef {
+                        trace: ctx.trace,
+                        span: ctx.span,
+                        parent: Some(parent),
+                    });
+                }
+            }
+            self.journal.emit(ev);
         }
+        drop(link); // records the trace child span with its real end time
         ms
     }
 }
@@ -280,6 +313,8 @@ impl MetricsRegistry {
             journal: self.journal.clone(),
             trace: self.enabled() && self.journal.trace_spans(),
             done: false,
+            // inert unless the thread is inside a traced request
+            child: Some(crate::obs::trace::child(name)),
         }
     }
 

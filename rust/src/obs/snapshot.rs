@@ -69,6 +69,33 @@ pub struct MetricsSnapshot {
     pub hists: Vec<HistSnap>,
 }
 
+/// Synthesize a counter series for a value that lives outside the
+/// registry's own store (journal drop counts, tracer totals).  Returns
+/// `None` for zero so an untouched registry snapshots exactly its own
+/// series (tests pin that).
+pub fn synth(name: &str, value: u64) -> Option<CounterSnap> {
+    if value == 0 {
+        return None;
+    }
+    Some(CounterSnap {
+        name: name.to_string(),
+        labels: Vec::new(),
+        value,
+    })
+}
+
+/// Insert a synthesized counter at its sorted position (no-op for
+/// `None`), preserving the snapshot's series-for-series ordering.
+pub fn merge_synth(snap: &mut MetricsSnapshot, c: Option<CounterSnap>) {
+    let Some(c) = c else { return };
+    let pos = snap
+        .counters
+        .iter()
+        .position(|e| (e.name.as_str(), &e.labels) > (c.name.as_str(), &c.labels))
+        .unwrap_or(snap.counters.len());
+    snap.counters.insert(pos, c);
+}
+
 impl MetricsRegistry {
     /// Walk every series into a typed snapshot (sorted by key, so two
     /// snapshots of the same registry line up series-for-series).
@@ -111,6 +138,9 @@ impl MetricsRegistry {
                 });
             },
         );
+        // journal overflow drops were previously invisible outside the
+        // struct; surface them as a counter series (absent while zero)
+        merge_synth(&mut snap, synth("journal.dropped", self.journal().dropped()));
         snap
     }
 }
@@ -276,6 +306,29 @@ mod tests {
         assert_eq!(snap.hists[0].quantile(0.5), h.quantile(0.5));
         assert_eq!(snap.hists[0].p50, h.quantile(0.5));
         assert_eq!(snap.hists[0].p99, h.quantile(0.99));
+    }
+
+    #[test]
+    fn journal_drops_surface_as_sorted_synth_counter() {
+        use crate::obs::journal::{Event, JOURNAL_STRIPES};
+        let r = MetricsRegistry::new();
+        r.counter("a.first").inc();
+        r.counter("z.last").inc();
+        assert_eq!(
+            r.snapshot().counter_value("journal.dropped"),
+            0,
+            "absent while zero"
+        );
+        r.journal().set_capacity(JOURNAL_STRIPES);
+        for _ in 0..3 * JOURNAL_STRIPES {
+            r.journal().emit(Event::new("tick"));
+        }
+        let snap = r.snapshot();
+        assert!(snap.counter_value("journal.dropped") > 0);
+        let names: Vec<&str> = snap.counters.iter().map(|c| c.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "synth insert keeps sorted order");
     }
 
     #[test]

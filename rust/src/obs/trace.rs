@@ -1,0 +1,921 @@
+//! Request-scoped causal tracing (DESIGN.md §16).
+//!
+//! Each sampled request gets a trace id and a tree of spans — parent
+//! links, stage name, tenant, start/end nanoseconds — propagated from
+//! router admission through the engine serve stages, tiering hydration
+//! waits, and pool intern/re-anchor/COW.  The fast path is guarded by
+//! one relaxed atomic load: while tracing is disabled (the default)
+//! nothing allocates and no lock is taken.  Completed traces feed the
+//! per-tenant tail-exemplar reservoir (`obs::exemplar`) and export as
+//! a `percache.trace/v1` dump or Chrome `trace_event` JSON; the
+//! attribution helpers at the bottom back the `percache trace`
+//! analyzer subcommand.
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::obs::exemplar::{Exemplar, ExemplarConfig, ExemplarReservoir};
+use crate::util::json::Json;
+use crate::util::sync::lock_or_recover;
+
+/// Version tag written into every trace dump.
+pub const DUMP_VERSION: &str = "percache.trace/v1";
+
+/// Open-trace table cap; admissions beyond it are counted as dropped.
+const MAX_OPEN_TRACES: usize = 256;
+/// Per-trace span cap; spans beyond it are silently not recorded.
+const MAX_SPANS_PER_TRACE: usize = 64;
+
+/// Lightweight handle identifying "the span I am inside of".  Copied
+/// into thread-locals and across queue hand-offs; never heap-allocated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace: u64,
+    pub span: u64,
+    pub tenant: Option<u32>,
+}
+
+/// One completed span of a trace tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    pub span: u64,
+    /// `None` marks the root span of the trace.
+    pub parent: Option<u64>,
+    pub stage: String,
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+}
+
+/// A completed trace: the root span is always `spans[0]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub trace: u64,
+    pub tenant: Option<u32>,
+    pub spans: Vec<SpanRecord>,
+}
+
+/// Monotonic trace counters for snapshot export.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceStats {
+    pub started: u64,
+    pub completed: u64,
+    pub dropped: u64,
+}
+
+#[derive(Debug)]
+struct OpenTrace {
+    tenant: Option<u32>,
+    spans: Vec<SpanRecord>,
+}
+
+/// The tracing engine.  One global instance lives behind
+/// `obs::tracer()`; experiments that need deterministic ids build
+/// local instances with a virtual clock.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: AtomicBool,
+    sample_every: AtomicU64,
+    tick: AtomicU64,
+    next_id: AtomicU64,
+    virtual_mode: AtomicBool,
+    virtual_ns: AtomicU64,
+    t0: Instant,
+    started: AtomicU64,
+    completed: AtomicU64,
+    dropped: AtomicU64,
+    open: Mutex<BTreeMap<u64, OpenTrace>>,
+    reservoir: Mutex<ExemplarReservoir>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    /// Disabled tracer on the real clock with default sampling (1-in-8)
+    /// and exemplar sizing.
+    pub fn new() -> Self {
+        Self {
+            enabled: AtomicBool::new(false),
+            sample_every: AtomicU64::new(8),
+            tick: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+            virtual_mode: AtomicBool::new(false),
+            virtual_ns: AtomicU64::new(0),
+            t0: Instant::now(),
+            started: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            open: Mutex::new(BTreeMap::new()),
+            reservoir: Mutex::new(ExemplarReservoir::new(ExemplarConfig::default())),
+        }
+    }
+
+    // -- configuration -----------------------------------------------------
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Relaxed);
+    }
+
+    /// Trace 1 in `every` admitted requests (clamped to at least 1).
+    pub fn set_sample_every(&self, every: u64) {
+        self.sample_every.store(every.max(1), Relaxed);
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every.load(Relaxed).max(1)
+    }
+
+    /// Replace the exemplar reservoir (drops currently kept traces).
+    pub fn set_exemplar_config(&self, cfg: ExemplarConfig) {
+        *lock_or_recover(&self.reservoir) = ExemplarReservoir::new(cfg);
+    }
+
+    /// Switch between the process monotonic clock and an externally
+    /// driven virtual clock (`set_virtual_ns`).
+    pub fn set_virtual_clock(&self, on: bool) {
+        self.virtual_mode.store(on, Relaxed);
+    }
+
+    pub fn set_virtual_ns(&self, ns: u64) {
+        self.virtual_ns.store(ns, Relaxed);
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        if self.virtual_mode.load(Relaxed) {
+            self.virtual_ns.load(Relaxed)
+        } else {
+            self.t0.elapsed().as_nanos() as u64
+        }
+    }
+
+    pub fn stats(&self) -> TraceStats {
+        TraceStats {
+            started: self.started.load(Relaxed),
+            completed: self.completed.load(Relaxed),
+            dropped: self.dropped.load(Relaxed),
+        }
+    }
+
+    // -- span lifecycle ----------------------------------------------------
+
+    /// Start a new trace rooted at `stage`.  Returns `None` when
+    /// tracing is disabled, the request lost the sampling draw, or the
+    /// open-trace table is full (counted in `trace.dropped`).
+    pub fn begin_trace(
+        &self,
+        stage: &'static str,
+        tenant: Option<u32>,
+        t_start_ns: u64,
+    ) -> Option<TraceCtx> {
+        if !self.enabled.load(Relaxed) {
+            return None;
+        }
+        let every = self.sample_every();
+        let tick = self.tick.fetch_add(1, Relaxed);
+        if tick % every != 0 {
+            return None;
+        }
+        let trace = self.reserve_id();
+        let span = self.reserve_id();
+        {
+            let mut open = lock_or_recover(&self.open);
+            if open.len() >= MAX_OPEN_TRACES {
+                self.dropped.fetch_add(1, Relaxed);
+                return None;
+            }
+            open.insert(
+                trace,
+                OpenTrace {
+                    tenant,
+                    spans: vec![SpanRecord {
+                        span,
+                        parent: None,
+                        stage: stage.to_string(),
+                        t_start_ns,
+                        t_end_ns: t_start_ns,
+                    }],
+                },
+            );
+        }
+        self.started.fetch_add(1, Relaxed);
+        Some(TraceCtx {
+            trace,
+            span,
+            tenant,
+        })
+    }
+
+    /// Record a completed child span on an open trace.
+    pub fn add_span(
+        &self,
+        trace: u64,
+        parent: Option<u64>,
+        stage: &str,
+        t_start_ns: u64,
+        t_end_ns: u64,
+    ) -> Option<u64> {
+        if !self.enabled.load(Relaxed) {
+            return None;
+        }
+        let span = self.reserve_id();
+        if self.add_span_with_id(trace, parent, span, stage, t_start_ns, t_end_ns) {
+            Some(span)
+        } else {
+            None
+        }
+    }
+
+    /// Span-id allocation is split from recording so RAII guards can
+    /// expose their id to children before the span body has finished.
+    pub fn reserve_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Relaxed)
+    }
+
+    pub fn add_span_with_id(
+        &self,
+        trace: u64,
+        parent: Option<u64>,
+        span: u64,
+        stage: &str,
+        t_start_ns: u64,
+        t_end_ns: u64,
+    ) -> bool {
+        let mut open = lock_or_recover(&self.open);
+        let Some(entry) = open.get_mut(&trace) else {
+            return false;
+        };
+        if entry.spans.len() >= MAX_SPANS_PER_TRACE {
+            return false;
+        }
+        entry.spans.push(SpanRecord {
+            span,
+            parent,
+            stage: stage.to_string(),
+            t_start_ns,
+            t_end_ns: t_end_ns.max(t_start_ns),
+        });
+        true
+    }
+
+    /// Close a trace: fixes the root span's end time, removes it from
+    /// the open table, and offers it to the exemplar reservoir.
+    pub fn end_trace(&self, ctx: TraceCtx, t_end_ns: u64) {
+        let finished = lock_or_recover(&self.open).remove(&ctx.trace);
+        let Some(open_trace) = finished else {
+            return;
+        };
+        let mut spans = open_trace.spans;
+        if let Some(root) = spans.first_mut() {
+            root.t_end_ns = t_end_ns.max(root.t_start_ns);
+        }
+        self.completed.fetch_add(1, Relaxed);
+        lock_or_recover(&self.reservoir).offer(Trace {
+            trace: ctx.trace,
+            tenant: open_trace.tenant,
+            spans,
+        });
+    }
+
+    /// Archive the current exemplar window (called from the periodic
+    /// metrics dump so each dump covers a full window plus the tail).
+    pub fn roll_window(&self) {
+        lock_or_recover(&self.reservoir).roll_window();
+    }
+
+    pub fn exemplars(&self) -> Vec<Exemplar> {
+        lock_or_recover(&self.reservoir).export()
+    }
+
+    // -- export ------------------------------------------------------------
+
+    /// `percache.trace/v1` dump document.
+    pub fn export_json(&self) -> Json {
+        let stats = self.stats();
+        let mut doc = Json::obj();
+        doc.insert("version", DUMP_VERSION);
+        doc.insert(
+            "clock",
+            if self.virtual_mode.load(Relaxed) {
+                "virtual"
+            } else {
+                "real"
+            },
+        );
+        doc.insert("started", stats.started);
+        doc.insert("completed", stats.completed);
+        doc.insert("dropped", stats.dropped);
+        let mut arr: Vec<Json> = Vec::new();
+        for ex in self.exemplars() {
+            let mut t = Json::obj();
+            t.insert("trace", ex.trace.trace);
+            match ex.trace.tenant {
+                Some(n) => t.insert("tenant", n as u64),
+                None => t.insert("tenant", Json::Null),
+            }
+            t.insert("kind", ex.kind);
+            t.insert("e2e_ms", ex.e2e_ms);
+            let spans: Vec<Json> = ex.trace.spans.iter().map(span_json).collect();
+            t.insert("spans", spans);
+            arr.push(Json::from(t));
+        }
+        doc.insert("traces", arr);
+        Json::from(doc)
+    }
+
+    /// Chrome `trace_event` JSON (array form, complete events):
+    /// pid = tenant + 1 (0 for tenantless), tid = trace id, ts/dur µs.
+    pub fn export_chrome(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        for ex in self.exemplars() {
+            let pid = ex.trace.tenant.map(|t| t as u64 + 1).unwrap_or(0);
+            let mut spans = ex.trace.spans.clone();
+            spans.sort_by(|a, b| (a.t_start_ns, a.span).cmp(&(b.t_start_ns, b.span)));
+            for s in &spans {
+                let mut e = Json::obj();
+                e.insert("name", s.stage.as_str());
+                e.insert("cat", ex.kind);
+                e.insert("ph", "X");
+                e.insert("ts", s.t_start_ns as f64 / 1000.0);
+                e.insert("dur", dur_ns(s) as f64 / 1000.0);
+                e.insert("pid", pid);
+                e.insert("tid", ex.trace.trace);
+                let mut args = Json::obj();
+                args.insert("span", s.span);
+                match s.parent {
+                    Some(p) => args.insert("parent", p),
+                    None => args.insert("parent", Json::Null),
+                }
+                e.insert("args", args);
+                events.push(Json::from(e));
+            }
+        }
+        Json::Arr(events)
+    }
+}
+
+fn span_json(s: &SpanRecord) -> Json {
+    let mut o = Json::obj();
+    o.insert("span", s.span);
+    match s.parent {
+        Some(p) => o.insert("parent", p),
+        None => o.insert("parent", Json::Null),
+    }
+    o.insert("stage", s.stage.as_str());
+    o.insert("t_start_ns", s.t_start_ns);
+    o.insert("t_end_ns", s.t_end_ns);
+    Json::from(o)
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local current-span context + RAII guards
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CURRENT: Cell<Option<TraceCtx>> = const { Cell::new(None) };
+}
+
+/// The span context the current thread is inside of, if any.
+pub fn current() -> Option<TraceCtx> {
+    CURRENT.with(|c| c.get())
+}
+
+/// Make `ctx` the current span context for this thread until the guard
+/// drops (restores the previous context).  Used to hand a trace across
+/// queue/thread boundaries: the popping thread attaches the context
+/// that admission created.
+pub fn attach(ctx: Option<TraceCtx>) -> AttachGuard {
+    let prev = CURRENT.with(|c| c.replace(ctx));
+    AttachGuard { prev }
+}
+
+#[derive(Debug)]
+pub struct AttachGuard {
+    prev: Option<TraceCtx>,
+}
+
+impl Drop for AttachGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT.with(|c| c.set(prev));
+    }
+}
+
+#[derive(Debug)]
+struct ChildActive {
+    ctx: TraceCtx,
+    parent: u64,
+    stage: &'static str,
+    t_start_ns: u64,
+    prev: Option<TraceCtx>,
+}
+
+/// RAII child span on the global tracer.  Inert (no allocation, no
+/// lock) when tracing is disabled or the thread has no current context.
+#[derive(Debug)]
+pub struct ChildGuard {
+    active: Option<ChildActive>,
+}
+
+impl ChildGuard {
+    /// Context of the child span itself (None when inert).
+    pub fn ctx(&self) -> Option<TraceCtx> {
+        self.active.as_ref().map(|a| a.ctx)
+    }
+
+    /// Span id of the parent this child hangs off (None when inert).
+    pub fn parent(&self) -> Option<u64> {
+        self.active.as_ref().map(|a| a.parent)
+    }
+}
+
+/// Open a child span under the thread's current context.
+pub fn child(stage: &'static str) -> ChildGuard {
+    match current() {
+        Some(parent) => child_under(stage, parent),
+        None => ChildGuard { active: None },
+    }
+}
+
+/// Open a child span under an explicit parent context.
+pub fn child_under(stage: &'static str, parent: TraceCtx) -> ChildGuard {
+    let tracer = crate::obs::tracer();
+    if !tracer.enabled() {
+        return ChildGuard { active: None };
+    }
+    let span = tracer.reserve_id();
+    let ctx = TraceCtx {
+        trace: parent.trace,
+        span,
+        tenant: parent.tenant,
+    };
+    let prev = CURRENT.with(|c| c.replace(Some(ctx)));
+    ChildGuard {
+        active: Some(ChildActive {
+            ctx,
+            parent: parent.span,
+            stage,
+            t_start_ns: tracer.now_ns(),
+            prev,
+        }),
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        if let Some(a) = self.active.take() {
+            let tracer = crate::obs::tracer();
+            tracer.add_span_with_id(
+                a.ctx.trace,
+                Some(a.parent),
+                a.ctx.span,
+                a.stage,
+                a.t_start_ns,
+                tracer.now_ns(),
+            );
+            CURRENT.with(|c| c.set(a.prev));
+        }
+    }
+}
+
+/// Start a root trace on the global tracer if the thread is not already
+/// inside one — lets the standalone engine path get stage attribution
+/// without a router in front.  Ends the trace when the guard drops.
+pub fn root_if_unattached(stage: &'static str, tenant: Option<u32>) -> RootGuard {
+    let tracer = crate::obs::tracer();
+    if !tracer.enabled() || current().is_some() {
+        return RootGuard { active: None };
+    }
+    let now = tracer.now_ns();
+    let Some(ctx) = tracer.begin_trace(stage, tenant, now) else {
+        return RootGuard { active: None };
+    };
+    let prev = CURRENT.with(|c| c.replace(Some(ctx)));
+    RootGuard {
+        active: Some(RootActive { ctx, prev }),
+    }
+}
+
+#[derive(Debug)]
+struct RootActive {
+    ctx: TraceCtx,
+    prev: Option<TraceCtx>,
+}
+
+#[derive(Debug)]
+pub struct RootGuard {
+    active: Option<RootActive>,
+}
+
+impl Drop for RootGuard {
+    fn drop(&mut self) {
+        if let Some(a) = self.active.take() {
+            let tracer = crate::obs::tracer();
+            tracer.end_trace(a.ctx, tracer.now_ns());
+            CURRENT.with(|c| c.set(a.prev));
+        }
+    }
+}
+
+/// Record already-measured serve stages as children of the current
+/// context, laid back-to-back ending at "now".  The engine measures its
+/// stage durations itself (`QueryRecord`); this projects them into the
+/// trace without double instrumentation.  No-op unless the global
+/// tracer is enabled and the thread carries a context.
+pub fn emit_stages_ending_now(stages: &[(&'static str, f64)]) {
+    let tracer = crate::obs::tracer();
+    if !tracer.enabled() {
+        return;
+    }
+    let Some(ctx) = current() else {
+        return;
+    };
+    let mut cursor = tracer.now_ns();
+    for (stage, ms) in stages.iter().rev() {
+        if *ms <= 0.0 {
+            continue;
+        }
+        let ns = ((*ms * 1e6).round() as u64).max(1);
+        let start = cursor.saturating_sub(ns);
+        tracer.add_span(ctx.trace, Some(ctx.span), stage, start, cursor);
+        cursor = start;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dump parsing + attribution (the `percache trace` analyzer core)
+// ---------------------------------------------------------------------------
+
+/// One trace parsed back out of a `percache.trace/v1` dump.
+#[derive(Debug, Clone)]
+pub struct DumpEntry {
+    pub kind: String,
+    pub e2e_ms: f64,
+    pub trace: Trace,
+}
+
+/// Parse the `traces` array of a dump document.
+pub fn parse_dump(doc: &Json) -> Result<Vec<DumpEntry>, String> {
+    let traces = doc
+        .get("traces")
+        .as_arr()
+        .ok_or_else(|| "dump has no 'traces' array".to_string())?;
+    let mut out = Vec::new();
+    for t in traces {
+        let id = t
+            .get("trace")
+            .as_f64()
+            .ok_or_else(|| "trace entry missing 'trace' id".to_string())? as u64;
+        let tenant = t.get("tenant").as_f64().map(|v| v as u32);
+        let kind = t.get("kind").as_str().unwrap_or("tail").to_string();
+        let e2e_ms = t.get("e2e_ms").as_f64().unwrap_or(0.0);
+        let mut spans = Vec::new();
+        for s in t.get("spans").as_arr().unwrap_or(&[]) {
+            spans.push(SpanRecord {
+                span: s.get("span").as_f64().unwrap_or(0.0) as u64,
+                parent: s.get("parent").as_f64().map(|v| v as u64),
+                stage: s.get("stage").as_str().unwrap_or("?").to_string(),
+                t_start_ns: s.get("t_start_ns").as_f64().unwrap_or(0.0) as u64,
+                t_end_ns: s.get("t_end_ns").as_f64().unwrap_or(0.0) as u64,
+            });
+        }
+        out.push(DumpEntry {
+            kind,
+            e2e_ms,
+            trace: Trace {
+                trace: id,
+                tenant,
+                spans,
+            },
+        });
+    }
+    Ok(out)
+}
+
+/// Per-trace stage attribution: self time (duration minus children) per
+/// stage name, plus the root time no child covered.
+#[derive(Debug, Clone)]
+pub struct Attribution {
+    pub trace: u64,
+    pub tenant: Option<u32>,
+    pub e2e_ms: f64,
+    /// Per-stage self-time in ms, sorted by stage name.
+    pub stages: Vec<(String, f64)>,
+    pub unattributed_ms: f64,
+}
+
+impl Attribution {
+    pub fn unattributed_frac(&self) -> f64 {
+        if self.e2e_ms <= 0.0 {
+            0.0
+        } else {
+            self.unattributed_ms / self.e2e_ms
+        }
+    }
+}
+
+/// Attribute a trace's end-to-end time to its stages by self time.
+/// Spans whose parent id does not resolve within the trace are adopted
+/// by the root so their time is never lost.  Returns `None` for a
+/// trace with no spans.
+pub fn attribute(trace: &Trace) -> Option<Attribution> {
+    let root = trace.spans.first()?;
+    let root_id = root.span;
+    let ids: BTreeSet<u64> = trace.spans.iter().map(|s| s.span).collect();
+    let mut child_sum: BTreeMap<u64, u64> = BTreeMap::new();
+    for s in trace.spans.iter().skip(1) {
+        let parent = match s.parent {
+            Some(p) if ids.contains(&p) => p,
+            _ => root_id,
+        };
+        *child_sum.entry(parent).or_insert(0) += dur_ns(s);
+    }
+    let mut stages: BTreeMap<String, u64> = BTreeMap::new();
+    for s in trace.spans.iter().skip(1) {
+        let own = dur_ns(s);
+        let children = child_sum.get(&s.span).copied().unwrap_or(0).min(own);
+        *stages.entry(s.stage.clone()).or_insert(0) += own - children;
+    }
+    let root_dur = dur_ns(root);
+    let covered = child_sum.get(&root_id).copied().unwrap_or(0).min(root_dur);
+    Some(Attribution {
+        trace: trace.trace,
+        tenant: trace.tenant,
+        e2e_ms: root_dur as f64 / 1e6,
+        stages: stages
+            .into_iter()
+            .map(|(k, v)| (k, v as f64 / 1e6))
+            .collect(),
+        unattributed_ms: (root_dur - covered) as f64 / 1e6,
+    })
+}
+
+fn dur_ns(s: &SpanRecord) -> u64 {
+    s.t_end_ns.saturating_sub(s.t_start_ns)
+}
+
+/// One row of the per-stage attribution table.
+#[derive(Debug, Clone)]
+pub struct StageRow {
+    pub stage: String,
+    pub count: usize,
+    pub total_ms: f64,
+    pub p50_ms: f64,
+    pub p_hi_ms: f64,
+    /// Share of the summed end-to-end time across all traces.
+    pub frac: f64,
+}
+
+/// Aggregate attributions into per-stage rows (sorted by total time,
+/// largest first).  `p_hi` is the tail percentile column (e.g. 99).
+pub fn stage_rows(atts: &[Attribution], p_hi: f64) -> Vec<StageRow> {
+    let mut per_stage: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    let mut e2e_total = 0.0;
+    for a in atts {
+        e2e_total += a.e2e_ms;
+        for (stage, ms) in &a.stages {
+            per_stage.entry(stage.as_str()).or_default().push(*ms);
+        }
+    }
+    let mut rows = Vec::new();
+    for (stage, mut ms) in per_stage {
+        ms.sort_by(f64::total_cmp);
+        let total: f64 = ms.iter().sum();
+        rows.push(StageRow {
+            stage: stage.to_string(),
+            count: ms.len(),
+            total_ms: total,
+            p50_ms: crate::util::bench::percentile(&ms, 50.0),
+            p_hi_ms: crate::util::bench::percentile(&ms, p_hi),
+            frac: if e2e_total > 0.0 { total / e2e_total } else { 0.0 },
+        });
+    }
+    rows.sort_by(|a, b| b.total_ms.total_cmp(&a.total_ms));
+    rows
+}
+
+/// Human-readable critical-path line for one trace, e.g.
+/// `trace 17 (tenant 2, 41.03ms): 71% hydration_stall + 22% queue_wait`.
+pub fn critical_path_line(a: &Attribution) -> String {
+    let mut parts = a.stages.clone();
+    parts.sort_by(|x, y| y.1.total_cmp(&x.1));
+    let mut segs = Vec::new();
+    for (stage, ms) in parts.iter().take(3) {
+        if *ms <= 0.0 {
+            break;
+        }
+        let pct = if a.e2e_ms > 0.0 {
+            ms / a.e2e_ms * 100.0
+        } else {
+            0.0
+        };
+        segs.push(format!("{pct:.0}% {stage}"));
+    }
+    if segs.is_empty() {
+        segs.push("100% unattributed".to_string());
+    }
+    let tenant = a
+        .tenant
+        .map(|t| t.to_string())
+        .unwrap_or_else(|| "-".to_string());
+    format!(
+        "trace {} (tenant {}, {:.2}ms): {} (unattributed {:.0}%)",
+        a.trace,
+        tenant,
+        a.e2e_ms,
+        segs.join(" + "),
+        a.unattributed_frac() * 100.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms_ns(ms: f64) -> u64 {
+        (ms * 1e6).round() as u64
+    }
+
+    /// Local tracer, virtual clock, sample everything — never touches
+    /// the global tracer (parallel tests share it).
+    fn local_tracer() -> Tracer {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        t.set_sample_every(1);
+        t.set_virtual_clock(true);
+        t
+    }
+
+    #[test]
+    fn disabled_tracer_admits_nothing() {
+        let t = Tracer::new();
+        assert!(t.begin_trace("request", None, 0).is_none());
+        assert_eq!(t.stats().started, 0);
+        assert!(t.exemplars().is_empty());
+    }
+
+    #[test]
+    fn sampling_admits_one_in_n() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        t.set_sample_every(4);
+        t.set_virtual_clock(true);
+        let mut admitted = 0;
+        for _ in 0..16 {
+            if let Some(ctx) = t.begin_trace("request", None, 0) {
+                admitted += 1;
+                t.end_trace(ctx, 10);
+            }
+        }
+        assert_eq!(admitted, 4);
+        assert_eq!(t.stats().completed, 4);
+    }
+
+    #[test]
+    fn span_tree_round_trips_through_dump() {
+        let t = local_tracer();
+        let ctx = t.begin_trace("request", Some(3), ms_ns(0.0)).expect("sampled");
+        let queue = t
+            .add_span(ctx.trace, Some(ctx.span), "queue_wait", ms_ns(0.0), ms_ns(2.0))
+            .expect("span");
+        t.add_span(ctx.trace, Some(queue), "queue_poll", ms_ns(1.0), ms_ns(2.0))
+            .expect("span");
+        t.end_trace(ctx, ms_ns(5.0));
+
+        let dump = t.export_json();
+        assert_eq!(dump.get("version").as_str(), Some(DUMP_VERSION));
+        assert_eq!(dump.get("clock").as_str(), Some("virtual"));
+        let entries = parse_dump(&dump).expect("parse");
+        assert_eq!(entries.len(), 1);
+        let trace = &entries[0].trace;
+        assert_eq!(trace.tenant, Some(3));
+        assert_eq!(trace.spans.len(), 3);
+        // every non-root parent resolves
+        let ids: Vec<u64> = trace.spans.iter().map(|s| s.span).collect();
+        for s in trace.spans.iter().skip(1) {
+            let p = s.parent.expect("non-root span has a parent");
+            assert!(ids.contains(&p), "orphan span {}", s.span);
+        }
+    }
+
+    #[test]
+    fn attribution_self_time_and_unattributed_gap() {
+        let t = local_tracer();
+        let ctx = t.begin_trace("request", Some(0), 0).expect("sampled");
+        // 10ms request: 4ms queue_wait, 5ms prefill (1ms of it slice_load)
+        t.add_span(ctx.trace, Some(ctx.span), "queue_wait", 0, ms_ns(4.0));
+        let pf = t
+            .add_span(ctx.trace, Some(ctx.span), "prefill", ms_ns(4.0), ms_ns(9.0))
+            .expect("span");
+        t.add_span(ctx.trace, Some(pf), "slice_load", ms_ns(4.0), ms_ns(5.0));
+        t.end_trace(ctx, ms_ns(10.0));
+
+        let ex = t.exemplars();
+        let a = attribute(&ex[0].trace).expect("attribution");
+        let get = |name: &str| {
+            a.stages
+                .iter()
+                .find(|(s, _)| s == name)
+                .map(|(_, ms)| *ms)
+                .unwrap_or(0.0)
+        };
+        assert!((get("queue_wait") - 4.0).abs() < 1e-9);
+        assert!((get("prefill") - 4.0).abs() < 1e-9, "self time excludes child");
+        assert!((get("slice_load") - 1.0).abs() < 1e-9);
+        assert!((a.unattributed_ms - 1.0).abs() < 1e-9);
+        assert!((a.unattributed_frac() - 0.1).abs() < 1e-9);
+        let rows = stage_rows(&[a.clone()], 99.0);
+        assert_eq!(rows[0].stage, "queue_wait");
+        assert!(critical_path_line(&a).contains("queue_wait"));
+    }
+
+    #[test]
+    fn orphan_spans_adopt_the_root() {
+        let trace = Trace {
+            trace: 1,
+            tenant: None,
+            spans: vec![
+                SpanRecord {
+                    span: 1,
+                    parent: None,
+                    stage: "request".into(),
+                    t_start_ns: 0,
+                    t_end_ns: ms_ns(10.0),
+                },
+                SpanRecord {
+                    span: 2,
+                    parent: Some(99), // never recorded
+                    stage: "decode".into(),
+                    t_start_ns: 0,
+                    t_end_ns: ms_ns(6.0),
+                },
+            ],
+        };
+        let a = attribute(&trace).expect("attribution");
+        assert!((a.unattributed_ms - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_thread_spans_keep_parent_links() {
+        let t = std::sync::Arc::new(local_tracer());
+        let ctx = t.begin_trace("request", Some(1), 0).expect("sampled");
+        let t2 = std::sync::Arc::clone(&t);
+        std::thread::spawn(move || {
+            t2.add_span(ctx.trace, Some(ctx.span), "hydration_stall", 0, ms_ns(3.0));
+        })
+        .join()
+        .expect("worker");
+        t.end_trace(ctx, ms_ns(4.0));
+        let ex = t.exemplars();
+        let a = attribute(&ex[0].trace).expect("attribution");
+        assert_eq!(a.stages.len(), 1);
+        assert!((a.stages[0].1 - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn open_table_overflow_counts_dropped() {
+        let t = local_tracer();
+        let mut held = Vec::new();
+        for i in 0..(MAX_OPEN_TRACES as u64 + 5) {
+            if let Some(ctx) = t.begin_trace("request", None, i) {
+                held.push(ctx);
+            }
+        }
+        assert_eq!(held.len(), MAX_OPEN_TRACES);
+        assert_eq!(t.stats().dropped, 5);
+    }
+
+    #[test]
+    fn chrome_export_is_deterministic_for_identical_runs() {
+        let run = || {
+            let t = local_tracer();
+            for i in 0..10u64 {
+                let ctx = t
+                    .begin_trace("request", Some((i % 2) as u32), ms_ns(i as f64))
+                    .expect("sampled");
+                t.add_span(
+                    ctx.trace,
+                    Some(ctx.span),
+                    "prefill",
+                    ms_ns(i as f64),
+                    ms_ns(i as f64 + 1.5),
+                );
+                t.end_trace(ctx, ms_ns(i as f64 + 2.0));
+            }
+            t.export_chrome().to_string_pretty()
+        };
+        let a = run();
+        assert_eq!(a, run(), "chrome export not byte-stable");
+        assert!(a.contains("\"ph\": \"X\""));
+        assert!(a.contains("\"name\": \"prefill\""));
+    }
+}

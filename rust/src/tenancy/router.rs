@@ -440,13 +440,29 @@ pub fn run_tenant_loop_gated(
             Some((tenant, req)) => {
                 crate::obs_hist!("router.wait_ms")
                     .record(req.submitted.elapsed().as_secs_f64() * 1e3);
-                let record = serve_fn(tenant, &req.query).unwrap_or_else(|e| {
-                    let mut r = blank_record(req.id);
-                    r.answer = format!("error: {e:#}");
-                    r
-                });
+                // causal trace: root the request at submission time so
+                // the queue wait shows up as its own child span
+                let tracer = crate::obs::tracer();
+                let pop_ns = tracer.now_ns();
+                let start_ns =
+                    pop_ns.saturating_sub(req.submitted.elapsed().as_nanos() as u64);
+                let ctx = tracer.begin_trace("request", Some(tenant), start_ns);
+                if let Some(ctx) = ctx {
+                    tracer.add_span(ctx.trace, Some(ctx.span), "queue_wait", start_ns, pop_ns);
+                }
+                let record = {
+                    let _attached = crate::obs::trace::attach(ctx);
+                    serve_fn(tenant, &req.query).unwrap_or_else(|e| {
+                        let mut r = blank_record(req.id);
+                        r.answer = format!("error: {e:#}");
+                        r
+                    })
+                };
                 let e2e_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
                 crate::obs_hist!("router.e2e_ms").record(e2e_ms);
+                if let Some(ctx) = ctx {
+                    tracer.end_trace(ctx, tracer.now_ns());
+                }
                 let _ = req.respond.send(Response {
                     id: req.id,
                     record,

@@ -166,6 +166,7 @@ pub fn serve_one_shared(
     // composes here for a re-anchor surcharge instead of a recompute
     let mut reanchored = 0usize;
     if cfg.reanchor && seg_keys.len() > 1 && shard.store.has_pool() {
+        let _t = crate::obs::trace::child("pool_reanchor");
         for (i, key) in seg_keys[..seg_keys.len() - 1]
             .iter()
             .enumerate()

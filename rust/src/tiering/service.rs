@@ -149,7 +149,10 @@ impl State {
                 Some(Residency::Hot) | Some(Residency::Demoting) => return Ok(()),
                 Some(Residency::Cold) => return self.registry.hydrate_tenant(tenant),
                 Some(Residency::Hydrating) => {
-                    // the worker holds the shard; wait for it
+                    // the worker holds the shard; wait for it — if this
+                    // request is traced, the stall shows up as its own
+                    // span in the request tree
+                    let _stall = crate::obs::trace::child("hydration_stall");
                     match self.worker.wait_one() {
                         Some((t, Ok(shard))) => {
                             self.registry.finish_hydration(t, shard)?;

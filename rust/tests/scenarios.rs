@@ -140,8 +140,8 @@ fn diurnal_predictor_prefetch_cuts_demand_stalls() {
     let trace = scenario("diurnal", &spec).unwrap();
     let dir_off = tmp("pf_off");
     let dir_on = tmp("pf_on");
-    let no_prefetch = replay_scenario(&trace, false, true, false, &dir_off).unwrap();
-    let prefetched = replay_scenario(&trace, false, true, true, &dir_on).unwrap();
+    let no_prefetch = replay_scenario(&trace, false, true, false, &dir_off, None).unwrap();
+    let prefetched = replay_scenario(&trace, false, true, true, &dir_on, None).unwrap();
     let _ = std::fs::remove_dir_all(&dir_off);
     let _ = std::fs::remove_dir_all(&dir_on);
     assert_eq!(no_prefetch.prefetch_hydrations, 0);

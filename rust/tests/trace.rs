@@ -1,0 +1,209 @@
+//! Causal-tracing integration tests (DESIGN.md §16): span-tree
+//! assembly across a queue hand-off, exemplar-reservoir determinism
+//! under the virtual clock, and a byte-stable Chrome `trace_event`
+//! golden.  Everything runs on *local* `Tracer` instances — the global
+//! tracer is shared by the parallel test harness and is never touched.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use percache::obs::trace::{attach, attribute, current, parse_dump, DUMP_VERSION};
+use percache::obs::{ExemplarConfig, Tracer};
+
+fn ms_ns(ms: f64) -> u64 {
+    (ms * 1e6).round() as u64
+}
+
+/// Virtual-clock tracer that samples every request.
+fn local_tracer() -> Tracer {
+    let t = Tracer::new();
+    t.set_virtual_clock(true);
+    t.set_sample_every(1);
+    t.set_enabled(true);
+    t
+}
+
+#[test]
+fn span_tree_assembles_across_a_queue_handoff() {
+    // Admission thread starts the trace; a worker pops the request,
+    // attaches the carried context, and records the serve stages.
+    let tracer = Arc::new(local_tracer());
+    let ctx = tracer
+        .begin_trace("request", Some(2), ms_ns(0.0))
+        .expect("sampled");
+
+    let (tx, rx) = mpsc::channel();
+    tx.send(ctx).expect("enqueue");
+    let worker_tracer = Arc::clone(&tracer);
+    std::thread::spawn(move || {
+        let popped = rx.recv().expect("dequeue");
+        assert!(current().is_none(), "fresh thread must start unattached");
+        {
+            let _attached = attach(Some(popped));
+            let cur = current().expect("attached context visible");
+            assert_eq!(cur, popped, "attach must install the carried context");
+            worker_tracer.add_span(
+                cur.trace,
+                Some(cur.span),
+                "queue_wait",
+                ms_ns(0.0),
+                ms_ns(3.0),
+            );
+            worker_tracer.add_span(
+                cur.trace,
+                Some(cur.span),
+                "prefill",
+                ms_ns(3.0),
+                ms_ns(9.0),
+            );
+        }
+        assert!(current().is_none(), "guard drop must restore the context");
+    })
+    .join()
+    .expect("worker");
+    tracer.end_trace(ctx, ms_ns(10.0));
+
+    let dump = tracer.export_json();
+    assert_eq!(dump.get("version").as_str(), Some(DUMP_VERSION));
+    let entries = parse_dump(&dump).expect("parse dump");
+    assert_eq!(entries.len(), 1);
+    let trace = &entries[0].trace;
+    assert_eq!(trace.tenant, Some(2));
+    assert_eq!(trace.spans.len(), 3, "root + two handed-off children");
+    let root = trace.spans[0].span;
+    for s in trace.spans.iter().skip(1) {
+        assert_eq!(s.parent, Some(root), "cross-thread spans keep parent links");
+    }
+    let a = attribute(trace).expect("attribution");
+    let stage = |name: &str| {
+        a.stages
+            .iter()
+            .find(|(s, _)| s == name)
+            .map(|(_, ms)| *ms)
+            .unwrap_or(0.0)
+    };
+    assert!((stage("queue_wait") - 3.0).abs() < 1e-9);
+    assert!((stage("prefill") - 6.0).abs() < 1e-9);
+    assert!((a.unattributed_ms - 1.0).abs() < 1e-9);
+    assert!((a.unattributed_frac() - 0.1).abs() < 1e-9);
+}
+
+#[test]
+fn exemplar_selection_is_deterministic_and_keeps_the_slowest() {
+    // 40 requests across two tenants with a seeded duration pattern:
+    // two runs must export byte-identical dumps, and the tail slots
+    // must hold exactly the slowest traces per tenant.
+    let run = || {
+        let t = local_tracer();
+        t.set_exemplar_config(ExemplarConfig {
+            tail_k: 2,
+            uniform_k: 2,
+            ..ExemplarConfig::default()
+        });
+        for i in 0..40u64 {
+            let tenant = (i % 2) as u32;
+            let start = ms_ns(i as f64);
+            let dur_ms = 1.0 + ((i * 13) % 17) as f64;
+            let ctx = t
+                .begin_trace("request", Some(tenant), start)
+                .expect("sampled");
+            t.add_span(
+                ctx.trace,
+                Some(ctx.span),
+                "decode",
+                start,
+                start + ms_ns(dur_ms),
+            );
+            t.set_virtual_ns(start + ms_ns(dur_ms));
+            t.end_trace(ctx, start + ms_ns(dur_ms));
+        }
+        t.export_json()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(
+        a.to_string_pretty(),
+        b.to_string_pretty(),
+        "identical seeded runs must export byte-identical dumps"
+    );
+
+    let entries = parse_dump(&a).expect("parse dump");
+    for tenant in [0u32, 1u32] {
+        let tails: Vec<f64> = entries
+            .iter()
+            .filter(|e| e.kind == "tail" && e.trace.tenant == Some(tenant))
+            .map(|e| e.e2e_ms)
+            .collect();
+        assert_eq!(tails.len(), 2, "tenant {tenant} tail slots");
+        // slowest possible e2e under the pattern is 1 + 16 = 17ms
+        assert!(
+            tails.iter().all(|&ms| ms >= 16.0),
+            "tenant {tenant} tail exemplars {tails:?} are not the slowest"
+        );
+    }
+    // with no tail slots configured, every kept exemplar is a uniform
+    // reservoir pick
+    let t = local_tracer();
+    t.set_exemplar_config(ExemplarConfig {
+        tail_k: 0,
+        uniform_k: 2,
+        ..ExemplarConfig::default()
+    });
+    for i in 0..10u64 {
+        let start = ms_ns(i as f64);
+        let ctx = t.begin_trace("request", Some(0), start).expect("sampled");
+        t.end_trace(ctx, start + ms_ns(1.0));
+    }
+    let entries = parse_dump(&t.export_json()).expect("parse dump");
+    assert_eq!(entries.len(), 2, "uniform reservoir is bounded at its K");
+    assert!(entries.iter().all(|e| e.kind == "uniform"));
+}
+
+#[test]
+fn chrome_export_matches_the_golden_byte_for_byte() {
+    let t = local_tracer();
+    let ctx = t.begin_trace("request", Some(0), 0).expect("sampled");
+    t.add_span(
+        ctx.trace,
+        Some(ctx.span),
+        "prefill",
+        ms_ns(1.0),
+        ms_ns(2.5),
+    );
+    t.end_trace(ctx, ms_ns(3.0));
+
+    const GOLDEN: &str = r#"[
+  {
+    "name": "request",
+    "cat": "tail",
+    "ph": "X",
+    "ts": 0,
+    "dur": 3000,
+    "pid": 1,
+    "tid": 1,
+    "args": {
+      "span": 2,
+      "parent": null
+    }
+  },
+  {
+    "name": "prefill",
+    "cat": "tail",
+    "ph": "X",
+    "ts": 1000,
+    "dur": 1500,
+    "pid": 1,
+    "tid": 1,
+    "args": {
+      "span": 3,
+      "parent": 2
+    }
+  }
+]
+"#;
+    assert_eq!(
+        t.export_chrome().to_string_pretty(),
+        GOLDEN,
+        "chrome trace_event export drifted from the golden"
+    );
+}
